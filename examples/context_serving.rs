@@ -1,0 +1,87 @@
+//! Context-server deep dive: sweep imbalance and TDM settings on the
+//! simulated GB200 group and emit a Chrome trace of the contention case.
+//!
+//! This is the workload the paper's intro motivates: a context server
+//! whose per-rank prompts differ in length, where DEP's layer-boundary
+//! synchronization turns local variation into global waiting.
+//!
+//! ```sh
+//! cargo run --release --example context_serving
+//! ```
+
+use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode};
+use dwdp::engine::run_context;
+use dwdp::experiments::calib;
+use dwdp::model::Category;
+use dwdp::util::table::Table;
+
+fn main() {
+    std::env::set_var("DWDP_QUICK", "1");
+    let hw = HardwareConfig::gb200();
+    let model = PaperModelConfig::deepseek_r1();
+
+    // --- sweep: imbalance (input ratio) × mode ------------------------
+    let mut t = Table::new(&[
+        "input ratio",
+        "mode",
+        "TPS/GPU",
+        "sync µs/layer",
+        "exposed prefetch µs/layer",
+        "median TTFT (s)",
+    ])
+    .with_title("Context serving under request-level imbalance (ISL 8K, MNT 32768, DWDP4/DEP4)");
+    for ratio in [1.0f64, 0.8, 0.5] {
+        for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+            let mut s = calib::context_serving(mode, 4);
+            s.isl_ratio = ratio;
+            s.validate(&model).unwrap();
+            let r = run_context(&hw, &model, &s, 2, false);
+            let sync = r.per_layer_breakdown.get(Category::Synchronization) * 1e6;
+            let layers = (r.iterations * model.n_moe_layers() * 4).max(1) as f64;
+            let exposed =
+                r.sim.ranks.iter().map(|x| x.prefetch_wait).sum::<f64>() / layers * 1e6;
+            t.row(vec![
+                format!("{ratio}"),
+                mode.name().into(),
+                format!("{:.0}", r.tps_per_gpu),
+                format!("{sync:.1}"),
+                format!("{exposed:.2}"),
+                format!("{:.2}", r.median_ttft),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- TDM ablation under a short compute window --------------------
+    let mut t2 = Table::new(&["TDM", "slice", "TPS/GPU", "exposed wait ms (sum)"])
+        .with_title("TDM contention mitigation, short window (MNT 16384, ratio 0.5)");
+    for (tdm, slice) in [(false, 0usize), (true, 4 << 20), (true, 1 << 20), (true, 256 << 10)] {
+        let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
+        s.isl_ratio = 0.5;
+        s.max_num_tokens = 16384;
+        s.tdm = tdm;
+        if slice > 0 {
+            s.slice_bytes = slice;
+        }
+        s.validate(&model).unwrap();
+        let r = run_context(&hw, &model, &s, 2, false);
+        let wait: f64 = r.sim.ranks.iter().map(|x| x.prefetch_wait).sum();
+        t2.row(vec![
+            if tdm { "on".into() } else { "off (monolithic)".to_string() },
+            if slice > 0 { format!("{} KiB", slice >> 10) } else { "-".into() },
+            format!("{:.0}", r.tps_per_gpu),
+            format!("{:.2}", wait * 1e3),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // --- trace for inspection -----------------------------------------
+    let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
+    s.isl_ratio = 0.5;
+    s.max_num_tokens = 16384;
+    s.tdm = false;
+    s.validate(&model).unwrap();
+    let r = run_context(&hw, &model, &s, 1, true);
+    r.sim.trace.write_chrome_trace("context_serving_trace.json").unwrap();
+    println!("wrote context_serving_trace.json ({} spans) — open in ui.perfetto.dev", r.sim.trace.spans.len());
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the DWDP library in five minutes.
+//!
+//! Runs entirely from the analytic/simulation layer (no artifacts needed):
+//! 1. roofline analysis — when can DWDP hide remote-weight prefetch?
+//! 2. contention analytics — why TDM slicing matters (§4.3.1),
+//! 3. a discrete-event context-group run — DEP vs DWDP under imbalance.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use dwdp::contention::contention_distribution;
+use dwdp::engine::run_context;
+use dwdp::model::Category;
+use dwdp::roofline::{crossover_isl, fig3_sweep};
+
+fn main() {
+    let hw = HardwareConfig::gb200();
+    let model = PaperModelConfig::deepseek_r1();
+
+    // 1. Roofline: sweep ISL at batch 1 (paper §3 / Fig. 3).
+    let mut serving = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+    serving.validate(&model).unwrap();
+    let mut hw_b1 = hw.clone();
+    hw_b1.ce_bw = dwdp::experiments::calib::FIG3_CE_BW;
+    println!("== Roofline (DWDP4 vs DEP4, batch 1) ==");
+    for p in fig3_sweep(&hw_b1, &model, &serving, &[4096, 16384, 65536]) {
+        println!(
+            "  ISL {:>6}: compute/prefetch = {:.2}, DEP/DWDP = {:.2}",
+            p.isl, p.compute_prefetch_ratio, p.dep_dwdp_ratio
+        );
+    }
+    if let Some(x) = crossover_isl(&hw_b1, &model, &serving, 1024, 262144) {
+        println!("  prefetch fully hidden from ISL ≈ {x} (paper: ~16K)");
+    }
+
+    // 2. Contention: why the copy plan is sliced + round-robin.
+    println!("\n== Many-to-one contention (paper Table 2) ==");
+    for n in [4usize, 8] {
+        let d = contention_distribution(n);
+        println!(
+            "  DWDP{n}: Pr[C=1] = {:.1}%, Pr[C=2] = {:.1}%, Pr[C>=3] = {:.1}%",
+            d[0] * 100.0,
+            d[1] * 100.0,
+            d[2..].iter().sum::<f64>() * 100.0
+        );
+    }
+
+    // 3. Simulated context group: imbalanced workload, DEP vs DWDP.
+    println!("\n== Context group under imbalance (ISL 8K, ratio 0.5) ==");
+    std::env::set_var("DWDP_QUICK", "1");
+    let mut s = dwdp::experiments::calib::context_serving(ParallelMode::Dep, 4);
+    s.isl_ratio = 0.5;
+    s.validate(&model).unwrap();
+    let dep = run_context(&hw, &model, &s, 2, false);
+    s.mode = ParallelMode::Dwdp;
+    let dwdp = run_context(&hw, &model, &s, 2, false);
+    println!(
+        "  DEP4 : {:>7.0} tok/s/GPU  (sync {:>5.1} µs/layer, comm {:>5.1} µs/layer)",
+        dep.tps_per_gpu,
+        dep.per_layer_breakdown.get(Category::Synchronization) * 1e6,
+        dep.per_layer_breakdown.get(Category::Communication) * 1e6,
+    );
+    println!(
+        "  DWDP4: {:>7.0} tok/s/GPU  (sync {:>5.1} µs/layer, P2P {:>5.1} µs/layer off-path)",
+        dwdp.tps_per_gpu,
+        dwdp.per_layer_breakdown.get(Category::Synchronization) * 1e6,
+        dwdp.per_layer_breakdown.get(Category::P2pCopy) * 1e6,
+    );
+    println!(
+        "  speedup: {:.2}x TPS/GPU, {:.2}x TTFT",
+        dwdp.tps_per_gpu / dep.tps_per_gpu,
+        dep.median_ttft / dwdp.median_ttft
+    );
+    println!("\nNext: `dwdp-repro experiment all`, or the e2e_disagg example for the real-model path.");
+}

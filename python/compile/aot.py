@@ -1,0 +1,253 @@
+"""AOT pipeline: lower every model/kernel entry point to HLO **text**.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax ≥0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out DIR`` (default ``../artifacts``):
+
+  *.hlo.txt        one per entry point × shape bucket
+  manifest.json    input/output names, dtypes, shapes, argument order for
+                   every artifact + the model config + weight-table index
+  weights.bin      deterministic (seed 0) model weights, raw little-endian,
+                   in both merged (DEP) and split (DWDP g2/g4) layouts
+
+The Rust runtime (rust/src/runtime/) loads all three.  This script is the
+only place Python runs; ``make artifacts`` is a no-op when inputs are
+unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import attention, grouped_gemm, grouped_gemm_split
+
+GROUP_SIZES = (2, 4)
+BUCKETS = ((1, 128), (4, 128))  # (batch, seq) shape buckets served by rust
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text.
+
+    ``return_tuple=False``: every entry point returns a single array, and an
+    untupled root lets the Rust side chain layer outputs as device buffers
+    directly (PJRT hands back the array buffer, not an opaque tuple).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(jnp.asarray(x).dtype)]
+
+
+class WeightTable:
+    """Accumulates named tensors into weights.bin + a manifest index."""
+
+    def __init__(self) -> None:
+        self.entries: list[dict] = []
+        self.blobs: list[bytes] = []
+        self.offset = 0
+
+    def add(self, name: str, arr) -> None:
+        a = np.asarray(arr)
+        assert a.dtype in (np.float32, np.int32), (name, a.dtype)
+        raw = a.tobytes()  # little-endian on all supported hosts
+        self.entries.append(
+            {
+                "name": name,
+                "dtype": "f32" if a.dtype == np.float32 else "i32",
+                "shape": list(a.shape),
+                "offset": self.offset,
+                "nbytes": len(raw),
+            }
+        )
+        self.blobs.append(raw)
+        self.offset += len(raw)
+
+    def write(self, path: str) -> None:
+        with open(path, "wb") as f:
+            for b in self.blobs:
+                f.write(b)
+
+
+def build_weights(cfg: M.ModelConfig) -> tuple[dict, WeightTable]:
+    """Deterministic model weights in merged + split layouts."""
+    key = jax.random.PRNGKey(SEED)
+    key, ek, hk, fk = jax.random.split(key, 4)
+    emb = jax.random.normal(ek, (cfg.vocab, cfg.hidden), jnp.float32) / (
+        cfg.hidden ** 0.5
+    )
+    gamma_f = jnp.ones((cfg.hidden,), jnp.float32)
+    w_head = jax.random.normal(hk, (cfg.hidden, cfg.vocab), jnp.float32) / (
+        cfg.hidden ** 0.5
+    )
+    layers = []
+    for _ in range(cfg.n_layers):
+        key, sub = jax.random.split(key)
+        layers.append(M.init_layer_weights(cfg, sub))
+
+    table = WeightTable()
+    table.add("emb", emb)
+    table.add("gamma_f", gamma_f)
+    table.add("w_head", w_head)
+    for li, lw in enumerate(layers):
+        for name, _ in M.layer_weight_specs(cfg):
+            table.add(f"layers.{li}.{name}", lw[name])
+        for g in GROUP_SIZES:
+            split = M.split_layer_weights(cfg, lw, g)
+            for name, _ in M.layer_weight_specs_split(cfg, g):
+                if name in ("wg", "wu", "wd"):
+                    continue
+                table.add(f"layers.{li}.g{g}.{name}", split[name])
+    model = {"emb": emb, "gamma_f": gamma_f, "w_head": w_head, "layers": layers}
+    return model, table
+
+
+def lower_entry(fn, example_args, name: str, out_dir: str) -> dict:
+    """jit-lower ``fn`` at the example shapes and write HLO text."""
+    shaped = [
+        jax.ShapeDtypeStruct(jnp.asarray(a).shape, jnp.asarray(a).dtype)
+        for a in example_args
+    ]
+    lowered = jax.jit(fn).lower(*shaped)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    return {
+        "name": name,
+        "path": path,
+        "inputs": [
+            {"dtype": _dtype_name(a), "shape": list(jnp.asarray(a).shape)}
+            for a in example_args
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    model, table = build_weights(cfg)
+    table.write(os.path.join(out_dir, "weights.bin"))
+
+    artifacts = []
+    f32 = jnp.float32
+
+    for b, s in BUCKETS:
+        tokens = jnp.zeros((b, s), jnp.int32)
+        seq_lens = jnp.full((b,), s, jnp.int32)
+        x = jnp.zeros((b, s, cfg.hidden), f32)
+
+        artifacts.append(
+            lower_entry(
+                M.embed_forward, [tokens, model["emb"]], f"embed_b{b}s{s}", out_dir
+            )
+        )
+        artifacts.append(
+            lower_entry(
+                M.head_forward,
+                [x, model["gamma_f"], model["w_head"]],
+                f"head_b{b}s{s}",
+                out_dir,
+            )
+        )
+
+        fn, specs = M.make_layer_fn(cfg, "dep")
+        flat = [model["layers"][0][n] for n, _ in specs]
+        art = lower_entry(fn, [x, seq_lens] + flat, f"layer_dep_b{b}s{s}", out_dir)
+        art["weight_order"] = [n for n, _ in specs]
+        artifacts.append(art)
+
+        for g in GROUP_SIZES:
+            fn, specs = M.make_layer_fn(cfg, "dwdp", group_size=g)
+            split = M.split_layer_weights(cfg, model["layers"][0], g)
+            flat = [split[n] for n, _ in specs]
+            art = lower_entry(
+                fn, [x, seq_lens] + flat, f"layer_dwdp_g{g}_b{b}s{s}", out_dir
+            )
+            art["weight_order"] = [n for n, _ in specs]
+            artifacts.append(art)
+
+    # Micro-kernel artifacts for the Rust kernel benches.
+    e, c, h, f = cfg.n_experts, 64, cfg.hidden, cfg.ffn_inner
+    xk = jnp.zeros((e, c, h), f32)
+    wk = jnp.zeros((e, h, f), f32)
+    artifacts.append(
+        lower_entry(
+            lambda x, w: grouped_gemm(x, w), [xk, wk], "kernel_gg_merged", out_dir
+        )
+    )
+    g = 4
+    slots = cfg.slots_per_buffer(g)
+    bufs = [jnp.zeros((slots, h, f), f32) for _ in range(g)]
+    bid = jnp.zeros((e,), jnp.int32)
+    slot = jnp.zeros((e,), jnp.int32)
+    artifacts.append(
+        lower_entry(
+            lambda x, b0, b1, b2, b3, bi, sl: grouped_gemm_split(
+                x, [b0, b1, b2, b3], bi, sl
+            ),
+            [xk] + bufs + [bid, slot],
+            "kernel_gg_split_g4",
+            out_dir,
+        )
+    )
+    bq = 1
+    qk = jnp.zeros((bq, cfg.n_heads, 128, cfg.head_dim), f32)
+    lens = jnp.full((bq,), 128, jnp.int32)
+    artifacts.append(
+        lower_entry(
+            lambda q, k, v, l: attention(q, k, v, l),
+            [qk, qk, qk, lens],
+            "kernel_attention",
+            out_dir,
+        )
+    )
+
+    manifest = {
+        "config": {
+            "hidden": cfg.hidden,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k,
+            "ffn_inner": cfg.ffn_inner,
+            "vocab": cfg.vocab,
+            "n_layers": cfg.n_layers,
+            "group_sizes": list(GROUP_SIZES),
+            "buckets": [list(bk) for bk in BUCKETS],
+            "seed": SEED,
+        },
+        "artifacts": artifacts,
+        "weights": {"path": "weights.bin", "tensors": table.entries},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fjs:
+        json.dump(manifest, fjs, indent=1)
+    print(
+        f"wrote {len(artifacts)} HLO artifacts, "
+        f"{table.offset} weight bytes, manifest.json -> {out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Layer-1 Pallas kernels for the DWDP reproduction.
+
+All kernels are authored for TPU-style tiling (MXU-friendly block shapes,
+VMEM-resident tiles) but are lowered with ``interpret=True`` so that the
+resulting HLO contains only portable ops executable by the CPU PJRT client
+used by the Rust runtime.  See DESIGN.md §Hardware-Adaptation for the
+CUDA→TPU mapping rationale.
+
+Kernels:
+  - ``grouped_gemm``: merged-buffer MoE grouped GEMM (DEP baseline path).
+  - ``grouped_gemm_split``: split-weight grouped GEMM consuming a TensorList
+    of weight buffers plus an expert→(buffer, slot) map — the paper's §4.2
+    merge-elimination optimization.
+  - ``attention``: causal multi-head attention with online softmax and
+    variable sequence lengths (context/prefill phase).
+  - ``topk_gating``: MoE router top-k selection.
+"""
+
+from .grouped_gemm import grouped_gemm, grouped_gemm_split, merge_expert_buffers
+from .attention import attention
+from .topk import topk_gating
+
+__all__ = [
+    "grouped_gemm",
+    "grouped_gemm_split",
+    "merge_expert_buffers",
+    "attention",
+    "topk_gating",
+]

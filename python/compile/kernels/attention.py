@@ -1,0 +1,117 @@
+"""Causal multi-head attention Pallas kernel (context/prefill phase).
+
+Flash-attention-style single kernel: the grid is ``(batch, heads, q-tiles)``
+and each step streams KV tiles with an online-softmax recurrence, so the
+``(S, S)`` score matrix never materializes in HBM.  Variable request lengths
+inside a padded batch bucket are handled with a per-sequence ``seq_len``
+input that masks padded KV positions — the context server pads requests into
+fixed-shape buckets (rust side), so correctness under padding is load-bearing.
+
+TPU adaptation: q tiles of ``block_q`` rows live in VMEM; the kv loop reads
+``block_kv`` slices of the whole-block K/V refs.  ``jnp.dot(...,
+preferred_element_type=f32)`` targets the MXU; the m/l/acc recurrence stays
+in registers (lax.fori_loop carry).  Lowered with ``interpret=True`` for CPU
+PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DEFAULT_BLOCK_Q = 64
+_DEFAULT_BLOCK_KV = 64
+_NEG_INF = -1e30
+
+
+def _attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                 block_kv: int, seq_len: int, scale: float):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    q = q_ref[0, 0] * scale  # (BQ, D)
+    valid_len = pl.load(len_ref, (pl.ds(b, 1),))[0]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # (BQ,)
+
+    num_kv = seq_len // block_kv
+    head_dim = q.shape[-1]
+
+    def body(t, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.ds(t * block_kv, block_kv), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.ds(t * block_kv, block_kv), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BKV)
+        kv_pos = t * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < valid_len)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1)  # (BQ,)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+    # Padded query rows (q_pos >= valid_len) have l == exp(0)*count ... they
+    # attend only to masked scores; guard the division so padding yields 0.
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[:, None]
+    out = jnp.where((q_pos < valid_len)[:, None], out, 0.0)
+    o_ref[0, 0] = out
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seq_lens: jax.Array,
+    *,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal MHA over padded batch buckets.
+
+    Args:
+      q, k, v: ``(B, H, S, D)`` f32.
+      seq_lens: ``(B,)`` int32 valid lengths; positions ≥ the length are
+        padding (masked out of KV, zeroed in the output).
+      block_q / block_kv: tile sizes (clamped to S when S is smaller).
+      interpret: Pallas interpret mode.
+
+    Returns:
+      ``(B, H, S, D)`` attention outputs.
+    """
+    b, h, s, d = q.shape
+    if k.shape != (b, h, s, d) or v.shape != (b, h, s, d):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    bq = min(block_q or _DEFAULT_BLOCK_Q, s)
+    bkv = min(block_kv or _DEFAULT_BLOCK_KV, s)
+    if s % bq or s % bkv:
+        raise ValueError(f"S={s} must be divisible by block_q={bq}, block_kv={bkv}")
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _attn_kernel, block_q=bq, block_kv=bkv, seq_len=s, scale=scale
+    )
+    grid = (b, h, s // bq)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(seq_lens.shape, lambda i, j, n: (0,)),
+            pl.BlockSpec((1, 1, bq, d), lambda i, j, n: (i, j, n, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j, n: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j, n: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda i, j, n: (i, j, n, 0)),
+        interpret=interpret,
+    )(seq_lens.astype(jnp.int32), q, k, v)

@@ -1,0 +1,203 @@
+"""MoE grouped GEMM Pallas kernels — merged and split-weight variants.
+
+The paper's §4.2 observation: DWDP leaves each MoE layer's weights split
+across one *local* buffer and ``N-1`` *prefetched remote* buffers.  Stock
+grouped-GEMM kernels assume one contiguous ``(E, K, N)`` weight tensor, so a
+naive DWDP implementation pays a device-to-device merge copy (34 µs in the
+paper's Table 1) before every MoE launch.  The fix is a kernel that consumes
+the split buffers directly ("TensorList inputs") and resolves
+expert → (buffer, slot) indirection internally.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA version selects a
+weight pointer per threadblock; here the indirection is a ``lax.switch`` over
+the buffer refs inside the kernel body, with the ``(expert, n-tile)`` grid and
+BlockSpecs expressing the HBM→VMEM schedule that CUDA expressed with
+threadblock scheduling.  Tiles are MXU-shaped (second-minor×minor multiples of
+(8, 128) for f32); the matmul uses ``preferred_element_type=float32`` so the
+MXU accumulates in f32.
+
+Shapes use the *capacity* layout standard for TPU MoE: tokens are dispatched
+to ``x: (E, C, K)`` (E experts, C capacity slots, K contraction dim) and the
+kernel computes ``out[e] = x[e] @ w[e]`` for every expert, where ``w`` is
+``(E, K, N)`` (merged) or ``[ (S_i, K, N) ] × num_buffers`` plus
+``buffer_id: (E,)`` / ``slot: (E,)`` (split).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile for the N (output feature) dimension.
+_DEFAULT_BLOCK_N = 128
+
+
+def _pick_block_n(n: int, block_n: int | None) -> int:
+    """Choose an N tile: the requested size if it divides N, else N itself."""
+    if block_n is None:
+        block_n = _DEFAULT_BLOCK_N
+    if n % block_n != 0:
+        return n
+    return block_n
+
+
+def _merged_kernel(x_ref, w_ref, o_ref):
+    """One (expert, n-tile) grid step: o[e, :, nb] = x[e] @ w[e, :, nb]."""
+    # Blocks arrive with a leading singleton expert dim; drop it for the MXU.
+    x = x_ref[0]  # (C, K)
+    w = w_ref[0]  # (K, BN)
+    o_ref[0] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def grouped_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_n: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Merged-buffer grouped GEMM: ``out[e] = x[e] @ w[e]``.
+
+    Args:
+      x: ``(E, C, K)`` dispatched tokens.
+      w: ``(E, K, N)`` contiguous per-expert weights (DEP layout, or DWDP
+        after a D2D merge copy).
+      block_n: tile size for the N dimension (defaults to 128, clamped to N).
+      interpret: run the Pallas kernel in interpret mode (required for CPU
+        PJRT execution — see DESIGN.md).
+
+    Returns:
+      ``(E, C, N)`` per-expert outputs, f32.
+    """
+    e, c, k = x.shape
+    ew, kw, n = w.shape
+    if ew != e or kw != k:
+        raise ValueError(f"shape mismatch: x={x.shape} w={w.shape}")
+    bn = _pick_block_n(n, block_n)
+    grid = (e, n // bn)
+    return pl.pallas_call(
+        _merged_kernel,
+        out_shape=jax.ShapeDtypeStruct((e, c, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, c, bn), lambda i, j: (i, 0, j)),
+        interpret=interpret,
+    )(x, w)
+
+
+def _split_kernel(bid_ref, slot_ref, x_ref, *rest, num_buffers: int, block_n: int):
+    """One (expert, n-tile) grid step with buffer indirection.
+
+    ``bid_ref``/``slot_ref`` hold the expert→(buffer, slot) map; the weight
+    tile is loaded from ``w_refs[bid[e]][slot[e], :, ntile]`` via
+    ``lax.switch`` so only the selected buffer is read — the in-kernel
+    equivalent of the paper's TensorList indexing, with no pre-launch merge.
+    """
+    w_refs = rest[:num_buffers]
+    o_ref = rest[num_buffers]
+    e = pl.program_id(0)
+    j = pl.program_id(1)
+    bid = pl.load(bid_ref, (pl.ds(e, 1),))[0]
+    slot = pl.load(slot_ref, (pl.ds(e, 1),))[0]
+
+    def load_from(i):
+        def _load():
+            return pl.load(
+                w_refs[i],
+                (pl.ds(slot, 1), slice(None), pl.ds(j * block_n, block_n)),
+            )[0]
+
+        return _load
+
+    w = jax.lax.switch(bid, [load_from(i) for i in range(num_buffers)])
+    x = x_ref[0]  # (C, K)
+    o_ref[0] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def grouped_gemm_split(
+    x: jax.Array,
+    w_buffers: Sequence[jax.Array],
+    buffer_id: jax.Array,
+    slot: jax.Array,
+    *,
+    block_n: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Split-weight grouped GEMM (paper §4.2, merge elimination).
+
+    Args:
+      x: ``(E, C, K)`` dispatched tokens.
+      w_buffers: list of ``(S_i, K, N)`` weight buffers.  Buffer 0 is by
+        convention the rank's resident local-expert buffer; buffers 1.. are
+        the double-buffered receive buffers holding prefetched remote
+        experts.  ``S_i`` may differ per buffer.
+      buffer_id: ``(E,)`` int32 — which buffer holds expert ``e``.
+      slot: ``(E,)`` int32 — the row of that buffer holding expert ``e``.
+      block_n: N-dimension tile size.
+      interpret: Pallas interpret mode (see module docstring).
+
+    Returns:
+      ``(E, C, N)`` per-expert outputs, identical numerics to
+      ``grouped_gemm(x, merged)`` where ``merged[e] = w_buffers[bid[e]][slot[e]]``.
+    """
+    e, c, k = x.shape
+    if not w_buffers:
+        raise ValueError("need at least one weight buffer")
+    n = w_buffers[0].shape[2]
+    for wb in w_buffers:
+        if wb.shape[1] != k or wb.shape[2] != n:
+            raise ValueError(f"buffer shape mismatch: {wb.shape} vs K={k} N={n}")
+    if buffer_id.shape != (e,) or slot.shape != (e,):
+        raise ValueError("buffer_id/slot must be shape (E,)")
+    bn = _pick_block_n(n, block_n)
+    grid = (e, n // bn)
+    nb = len(w_buffers)
+    kernel = functools.partial(_split_kernel, num_buffers=nb, block_n=bn)
+    # Index maps: bid/slot and the weight buffers stay whole (weight residency
+    # is managed by the runtime, and which slot a grid step needs is
+    # data-dependent); x and out are tiled per (expert, n-tile).
+    in_specs = [
+        pl.BlockSpec(buffer_id.shape, lambda i, j: (0,)),
+        pl.BlockSpec(slot.shape, lambda i, j: (0,)),
+        pl.BlockSpec((1, c, k), lambda i, j: (i, 0, 0)),
+    ] + [
+        pl.BlockSpec(wb.shape, lambda i, j: (0, 0, 0)) for wb in w_buffers
+    ]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((e, c, n), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, c, bn), lambda i, j: (i, 0, j)),
+        interpret=interpret,
+    )(buffer_id.astype(jnp.int32), slot.astype(jnp.int32), x, *w_buffers)
+
+
+def merge_expert_buffers(
+    w_buffers: Sequence[jax.Array],
+    buffer_id: jax.Array,
+    slot: jax.Array,
+    num_experts: int,
+) -> jax.Array:
+    """Naive-DWDP baseline: materialize the contiguous ``(E, K, N)`` tensor.
+
+    This is the pre-launch D2D merge copy the paper's §4.2 eliminates — kept
+    as the baseline for the merge-elimination ablation (EXPERIMENTS.md E10)
+    and as a reference for equivalence tests.
+    """
+    onehot_buf = jax.nn.one_hot(buffer_id, len(w_buffers), dtype=jnp.float32)
+    rows = []
+    for i, wb in enumerate(w_buffers):
+        # Gather each expert's row from buffer i (clamped), then mask-select.
+        gathered = jnp.take(wb, jnp.clip(slot, 0, wb.shape[0] - 1), axis=0)
+        rows.append(gathered * onehot_buf[:, i][:, None, None])
+    merged = sum(rows)
+    assert merged.shape[0] == num_experts
+    return merged

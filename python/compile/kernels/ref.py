@@ -1,0 +1,86 @@
+"""Pure-jnp correctness oracles for every Pallas kernel and model block.
+
+These are the ground truth the pytest/hypothesis suites compare the Pallas
+kernels (and the AOT-lowered model variants) against.  Deliberately written
+in the most obvious dense form — no tiling, no online softmax, no buffer
+indirection — so a reviewer can audit them by eye.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_grouped_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``out[e] = x[e] @ w[e]`` for x (E, C, K), w (E, K, N)."""
+    return jnp.einsum("eck,ekn->ecn", x, w).astype(jnp.float32)
+
+
+def ref_grouped_gemm_split(
+    x: jax.Array,
+    w_buffers: Sequence[jax.Array],
+    buffer_id: jax.Array,
+    slot: jax.Array,
+) -> jax.Array:
+    """Split-weight oracle: gather each expert's weight row, then dense GEMM."""
+    e = x.shape[0]
+    rows = []
+    for i in range(e):
+        rows.append(w_buffers[int(buffer_id[i])][int(slot[i])])
+    merged = jnp.stack(rows, axis=0)
+    return ref_grouped_gemm(x, merged)
+
+
+def ref_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, seq_lens: jax.Array
+) -> jax.Array:
+    """Dense causal MHA with per-sequence valid-length masking.
+
+    q/k/v: (B, H, S, D); seq_lens: (B,).  Padded query rows return 0.
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    q_pos = jnp.arange(s)
+    kv_pos = jnp.arange(s)
+    causal = kv_pos[None, :] <= q_pos[:, None]  # (S, S)
+    valid = kv_pos[None, :] < seq_lens[:, None]  # (B, S)
+    mask = causal[None, None] & valid[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    q_valid = q_pos[None, :] < seq_lens[:, None]  # (B, S)
+    return jnp.where(q_valid[:, None, :, None], out, 0.0)
+
+
+def ref_topk_gating(
+    gates: jax.Array, k: int, renormalize: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """``jax.lax.top_k`` with the same renormalization as the kernel."""
+    topv, topi = jax.lax.top_k(gates, k)
+    if renormalize:
+        denom = jnp.sum(topv, axis=-1, keepdims=True)
+        topv = topv / jnp.where(denom == 0.0, 1.0, denom)
+    return topv.astype(jnp.float32), topi.astype(jnp.int32)
+
+
+def ref_swiglu_expert_ffn(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+) -> jax.Array:
+    """Per-expert SwiGLU FFN oracle over the capacity layout.
+
+    x: (E, C, H); w_gate/w_up: (E, H, F); w_down: (E, F, H).
+    """
+    g = jnp.einsum("ech,ehf->ecf", x, w_gate)
+    u = jnp.einsum("ech,ehf->ecf", x, w_up)
+    a = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efh->ech", a, w_down)
+
+
+def ref_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm oracle over the last dim."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma

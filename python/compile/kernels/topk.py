@@ -1,0 +1,81 @@
+"""MoE router top-k gating Pallas kernel.
+
+Selects the top-k experts per token with iterative masked argmax (k is small
+and static — DeepSeek-R1 uses k=8, the tiny demo model k=2), then renormalizes
+the selected gate values.  Ties break toward the lower expert index, matching
+``jax.lax.top_k``.
+
+Grid is 1-D over token tiles; the ``(T_block, E)`` gate tile sits in VMEM and
+the k-step selection loop is unrolled (static k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DEFAULT_BLOCK_T = 128
+_NEG_INF = -1e30
+
+
+def _topk_kernel(g_ref, topv_ref, topi_ref, *, k: int):
+    g = g_ref[...]  # (BT, E)
+    for i in range(k):
+        v = jnp.max(g, axis=-1)
+        idx = jnp.argmax(g, axis=-1)
+        topv_ref[:, i] = v
+        topi_ref[:, i] = idx.astype(jnp.int32)
+        onehot = jax.nn.one_hot(idx, g.shape[-1], dtype=g.dtype)
+        g = jnp.where(onehot > 0, _NEG_INF, g)
+
+
+def topk_gating(
+    gates: jax.Array,
+    k: int,
+    *,
+    block_t: int | None = None,
+    renormalize: bool = True,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k expert selection.
+
+    Args:
+      gates: ``(T, E)`` router probabilities (or logits — selection is
+        monotonic either way).
+      k: number of experts per token (static).
+      block_t: token tile size.
+      renormalize: divide the selected gate values by their sum (standard
+        MoE combine weighting).
+      interpret: Pallas interpret mode.
+
+    Returns:
+      ``(topv (T, k) f32, topi (T, k) int32)``.
+    """
+    t, e = gates.shape
+    if not 0 < k <= e:
+        raise ValueError(f"k={k} out of range for E={e}")
+    bt = min(block_t or _DEFAULT_BLOCK_T, t)
+    if t % bt:
+        raise ValueError(f"T={t} must be divisible by block_t={bt}")
+    kernel = functools.partial(_topk_kernel, k=k)
+    topv, topi = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(gates)
+    if renormalize:
+        denom = jnp.sum(topv, axis=-1, keepdims=True)
+        topv = topv / jnp.where(denom == 0.0, 1.0, denom)
+    return topv, topi

@@ -1,0 +1,335 @@
+"""Layer-2 JAX model: a DeepSeek-R1-style MoE transformer (context phase).
+
+This is the *functional* half of the reproduction: a small MoE transformer
+whose MoE layers can execute either
+
+  * ``dep``   — merged contiguous expert weights (the DEP baseline layout),
+  * ``dwdp``  — split weights: one local buffer + N-1 prefetched remote
+    buffers consumed directly by the split-weight grouped GEMM (§4.2), or
+  * ``dwdp_merge`` — naive DWDP: split buffers merged by a D2D copy before
+    the merged kernel (the baseline that §4.2 eliminates).
+
+All three produce bit-identical layer outputs given consistent weights —
+asserted by pytest — which is the correctness contract that lets the Rust
+coordinator (Layer 3) drive per-layer execution with prefetched weight
+buffers and still match the DEP reference numerics.
+
+Everything here runs at build time only: ``aot.py`` lowers the entry points
+to HLO text artifacts the Rust runtime loads via PJRT.  Python is never on
+the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, grouped_gemm, grouped_gemm_split, merge_expert_buffers, topk_gating
+from .kernels.ref import ref_rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the demo MoE transformer.
+
+    The defaults give a ~3.5M-parameter model: large enough to exercise every
+    DWDP code path (routing skew, capacity overflow, split buffers), small
+    enough that interpret-mode Pallas lowering stays fast on one CPU core.
+    The performance experiments use the analytic DeepSeek-R1 config on the
+    Rust side instead (rust/src/model/).
+    """
+
+    hidden: int = 128
+    n_heads: int = 4
+    head_dim: int = 32
+    n_experts: int = 8
+    top_k: int = 2
+    ffn_inner: int = 256
+    vocab: int = 512
+    n_layers: int = 4
+    # Capacity per expert as a multiple of the balanced share T*K/E.
+    capacity_factor: float = 2.0
+
+    def capacity(self, tokens: int) -> int:
+        balanced = tokens * self.top_k / self.n_experts
+        cap = int(balanced * self.capacity_factor)
+        return max(8, cap)
+
+    def slots_per_buffer(self, group_size: int) -> int:
+        """Experts per weight buffer under equal-size placement (§2: weak
+        placement constraint — buffers are equal-sized even when the group
+        size does not divide the expert count, via redundant placement)."""
+        return -(-self.n_experts // group_size)
+
+
+# ---------------------------------------------------------------------------
+# Weight construction / flattening
+# ---------------------------------------------------------------------------
+
+
+def layer_weight_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) for one layer's merged (DEP) weights.
+
+    The order is the positional argument order of every layer entry point —
+    the Rust runtime replays it from the artifact manifest.
+    """
+    h, e, f = cfg.hidden, cfg.n_experts, cfg.ffn_inner
+    d = cfg.n_heads * cfg.head_dim
+    return [
+        ("ln1_gamma", (h,)),
+        ("wq", (h, d)),
+        ("wk", (h, d)),
+        ("wv", (h, d)),
+        ("wo", (d, h)),
+        ("ln2_gamma", (h,)),
+        ("router", (h, e)),
+        ("ws_gate", (h, f)),
+        ("ws_up", (h, f)),
+        ("ws_down", (f, h)),
+        ("wg", (e, h, f)),
+        ("wu", (e, h, f)),
+        ("wd", (e, f, h)),
+    ]
+
+
+def layer_weight_specs_split(
+    cfg: ModelConfig, group_size: int
+) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) for one layer's DWDP split weights.
+
+    The routed-expert tensors (wg/wu/wd) are replaced by ``group_size``
+    buffers each, followed by the expert→(buffer, slot) map.  Buffer 0 is the
+    rank-local resident buffer; 1.. are prefetch receive buffers.
+    """
+    h, f = cfg.hidden, cfg.ffn_inner
+    s = cfg.slots_per_buffer(group_size)
+    specs = [sp for sp in layer_weight_specs(cfg) if sp[0] not in ("wg", "wu", "wd")]
+    for kind, shape in (("wg", (s, h, f)), ("wu", (s, h, f)), ("wd", (s, f, h))):
+        for b in range(group_size):
+            specs.append((f"{kind}_buf{b}", shape))
+    specs.append(("buffer_id", (cfg.n_experts,)))
+    specs.append(("slot", (cfg.n_experts,)))
+    return specs
+
+
+def init_layer_weights(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Random merged layer weights (He-ish scaling), f32."""
+    ws = {}
+    for name, shape in layer_weight_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("ln"):
+            ws[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) > 1 else shape[0]
+            ws[name] = jax.random.normal(sub, shape, jnp.float32) / (fan_in ** 0.5)
+    return ws
+
+
+def split_layer_weights(
+    cfg: ModelConfig,
+    merged: dict[str, jax.Array],
+    group_size: int,
+    placement: Sequence[tuple[int, int]] | None = None,
+) -> dict[str, jax.Array]:
+    """Rewrite merged weights into the DWDP split layout.
+
+    ``placement[e] = (buffer, slot)``; defaults to round-robin blocks
+    (expert e → buffer e // slots, slot e % slots).  Unfilled slots are
+    zero (they model free space in the receive buffer).
+    """
+    s = cfg.slots_per_buffer(group_size)
+    if placement is None:
+        placement = [(e // s, e % s) for e in range(cfg.n_experts)]
+    out = {k: v for k, v in merged.items() if k not in ("wg", "wu", "wd")}
+    for kind in ("wg", "wu", "wd"):
+        shape = (s,) + merged[kind].shape[1:]
+        bufs = [jnp.zeros(shape, jnp.float32) for _ in range(group_size)]
+        for e, (b, sl) in enumerate(placement):
+            bufs[b] = bufs[b].at[sl].set(merged[kind][e])
+        for b in range(group_size):
+            out[f"{kind}_buf{b}"] = bufs[b]
+    out["buffer_id"] = jnp.array([p[0] for p in placement], jnp.int32)
+    out["slot"] = jnp.array([p[1] for p in placement], jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    x: jax.Array, seq_lens: jax.Array, w: dict[str, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    """Pre-norm MHA block with residual. x: (B, S, H)."""
+    b, s, h = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    xn = ref_rmsnorm(x, w["ln1_gamma"])
+    def heads(t):  # (B, S, nh*hd) -> (B, nh, S, hd)
+        return t.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    q = heads(xn @ w["wq"])
+    k = heads(xn @ w["wk"])
+    v = heads(xn @ w["wv"])
+    o = attention(q, k, v, seq_lens)  # (B, nh, S, hd) — L1 Pallas kernel
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    return x + o @ w["wo"]
+
+
+def _dispatch(
+    xn_flat: jax.Array, topi: jax.Array, topv: jax.Array, cfg: ModelConfig, capacity: int
+):
+    """Capacity-based token→expert dispatch.
+
+    Returns (xb (E, C, H), combine info).  Assignments beyond an expert's
+    capacity are dropped (standard MoE capacity semantics; the combine
+    weights of dropped assignments are zeroed).
+    """
+    t, h = xn_flat.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_e = topi.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)  # (T*K, E)
+    # 1-based position of each assignment within its expert, in token order.
+    pos = jnp.cumsum(onehot, axis=0) * onehot
+    pos = jnp.sum(pos, axis=-1).astype(jnp.int32)  # (T*K,)
+    keep = (pos <= capacity) & (pos > 0)
+    slot_idx = jnp.clip(pos - 1, 0, capacity - 1)
+    x_rep = jnp.repeat(xn_flat, k, axis=0)  # (T*K, H)
+    xb = jnp.zeros((e, capacity, h), jnp.float32)
+    xb = xb.at[flat_e, slot_idx].add(x_rep * keep[:, None].astype(jnp.float32))
+    return xb, (flat_e, slot_idx, keep, topv.reshape(-1))
+
+
+def _combine(yb: jax.Array, info, t: int, k: int) -> jax.Array:
+    """Gather expert outputs back to token order with gate weighting."""
+    flat_e, slot_idx, keep, gatew = info
+    gathered = yb[flat_e, slot_idx]  # (T*K, Hout)
+    gathered = gathered * (gatew * keep.astype(jnp.float32))[:, None]
+    return gathered.reshape(t, k, -1).sum(axis=1)
+
+
+def moe_block(
+    x: jax.Array,
+    w: dict[str, jax.Array],
+    cfg: ModelConfig,
+    mode: str = "dep",
+    group_size: int = 1,
+) -> jax.Array:
+    """Pre-norm MoE block (shared expert + routed experts) with residual.
+
+    mode: "dep" (merged weights), "dwdp" (split-weight kernel), or
+    "dwdp_merge" (split buffers merged via D2D copy, then merged kernel).
+    """
+    b, s, h = x.shape
+    t = b * s
+    capacity = cfg.capacity(t)
+    xn = ref_rmsnorm(x, w["ln2_gamma"])
+    xf = xn.reshape(t, h)
+
+    # Shared expert (replicated on every rank, like attention weights).
+    g = xf @ w["ws_gate"]
+    u = xf @ w["ws_up"]
+    shared = (jax.nn.silu(g) * u) @ w["ws_down"]
+
+    # Router + top-k gating (L1 kernel).
+    gates = jax.nn.softmax(xf @ w["router"], axis=-1)
+    topv, topi = topk_gating(gates, cfg.top_k, block_t=min(128, t))
+
+    xb, info = _dispatch(xf, topi, topv, cfg, capacity)
+
+    if mode == "dep":
+        wg, wu, wd = w["wg"], w["wu"], w["wd"]
+        gb = grouped_gemm(xb, wg)
+        ub = grouped_gemm(xb, wu)
+        ab = jax.nn.silu(gb) * ub
+        yb = grouped_gemm(ab, wd)
+    elif mode in ("dwdp", "dwdp_merge"):
+        bid, slot = w["buffer_id"], w["slot"]
+        bufs = {
+            kind: [w[f"{kind}_buf{i}"] for i in range(group_size)]
+            for kind in ("wg", "wu", "wd")
+        }
+        if mode == "dwdp":
+            # §4.2 merge elimination: the kernel consumes split buffers.
+            gb = grouped_gemm_split(xb, bufs["wg"], bid, slot)
+            ub = grouped_gemm_split(xb, bufs["wu"], bid, slot)
+            ab = jax.nn.silu(gb) * ub
+            yb = grouped_gemm_split(ab, bufs["wd"], bid, slot)
+        else:
+            # Naive DWDP: pre-launch D2D merge copy (Table 1's 34 µs line).
+            wg = merge_expert_buffers(bufs["wg"], bid, slot, cfg.n_experts)
+            wu = merge_expert_buffers(bufs["wu"], bid, slot, cfg.n_experts)
+            wd = merge_expert_buffers(bufs["wd"], bid, slot, cfg.n_experts)
+            gb = grouped_gemm(xb, wg)
+            ub = grouped_gemm(xb, wu)
+            ab = jax.nn.silu(gb) * ub
+            yb = grouped_gemm(ab, wd)
+    else:
+        raise ValueError(f"unknown moe mode {mode!r}")
+
+    routed = _combine(yb, info, t, cfg.top_k)
+    return x + (shared + routed).reshape(b, s, h)
+
+
+def layer_forward(
+    x: jax.Array,
+    seq_lens: jax.Array,
+    w: dict[str, jax.Array],
+    cfg: ModelConfig,
+    mode: str = "dep",
+    group_size: int = 1,
+) -> jax.Array:
+    """One transformer layer: attention block then MoE block."""
+    x = attention_block(x, seq_lens, w, cfg)
+    return moe_block(x, w, cfg, mode=mode, group_size=group_size)
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument entry points (what aot.py lowers; positional order == specs)
+# ---------------------------------------------------------------------------
+
+
+def make_layer_fn(cfg: ModelConfig, mode: str, group_size: int = 1):
+    """Return (fn, specs) where fn(x, seq_lens, *flat_weights) -> x'."""
+    specs = (
+        layer_weight_specs(cfg)
+        if mode == "dep"
+        else layer_weight_specs_split(cfg, group_size)
+    )
+    names = [n for n, _ in specs]
+
+    def fn(x, seq_lens, *flat):
+        w = dict(zip(names, flat))
+        return layer_forward(x, seq_lens, w, cfg, mode=mode, group_size=group_size)
+
+    return fn, specs
+
+
+def embed_forward(tokens: jax.Array, emb: jax.Array) -> jax.Array:
+    """Token embedding lookup. tokens (B, S) int32, emb (V, H)."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def head_forward(x: jax.Array, gamma: jax.Array, w_head: jax.Array) -> jax.Array:
+    """Final norm + LM head. x (B, S, H) -> logits (B, S, V)."""
+    return ref_rmsnorm(x, gamma) @ w_head
+
+
+def model_forward(
+    tokens: jax.Array,
+    seq_lens: jax.Array,
+    emb: jax.Array,
+    layers: Sequence[dict[str, jax.Array]],
+    gamma_f: jax.Array,
+    w_head: jax.Array,
+    cfg: ModelConfig,
+    mode: str = "dep",
+    group_size: int = 1,
+) -> jax.Array:
+    """Whole-model context forward (reference path; rust drives per-layer)."""
+    x = embed_forward(tokens, emb)
+    for w in layers:
+        x = layer_forward(x, seq_lens, w, cfg, mode=mode, group_size=group_size)
+    return head_forward(x, gamma_f, w_head)

@@ -1,0 +1,18 @@
+"""Shared fixtures/strategies for the kernel and model test suites."""
+
+import os
+import sys
+
+import jax
+import pytest
+
+# Allow `import compile` when pytest is invoked from the repo root too.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# Interpret-mode Pallas is CPU-only; make sure jax agrees and is f32.
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

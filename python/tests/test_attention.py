@@ -1,0 +1,121 @@
+"""Attention kernel tests: flash-style Pallas kernel vs dense oracle.
+
+Covers exact numerics, causality as a *property* (future tokens cannot
+influence past outputs), variable-length masking inside padded buckets, and
+hypothesis sweeps over shapes and lengths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention
+from compile.kernels.ref import ref_attention
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _qkv(seed, b, h, s, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, (b, h, s, d), jnp.float32) for k in ks)
+
+
+class TestAttentionNumerics:
+    def test_full_lengths(self):
+        q, k, v = _qkv(0, 2, 2, 128, 32)
+        lens = jnp.array([128, 128], jnp.int32)
+        np.testing.assert_allclose(
+            attention(q, k, v, lens), ref_attention(q, k, v, lens), **TOL
+        )
+
+    def test_ragged_lengths(self):
+        q, k, v = _qkv(1, 3, 2, 128, 16)
+        lens = jnp.array([128, 70, 1], jnp.int32)
+        np.testing.assert_allclose(
+            attention(q, k, v, lens), ref_attention(q, k, v, lens), **TOL
+        )
+
+    def test_small_blocks(self):
+        q, k, v = _qkv(2, 1, 1, 64, 8)
+        lens = jnp.array([50], jnp.int32)
+        got = attention(q, k, v, lens, block_q=16, block_kv=16)
+        np.testing.assert_allclose(got, ref_attention(q, k, v, lens), **TOL)
+
+    def test_single_token(self):
+        q, k, v = _qkv(3, 1, 4, 64, 32)
+        lens = jnp.array([1], jnp.int32)
+        got = attention(q, k, v, lens)
+        np.testing.assert_allclose(got, ref_attention(q, k, v, lens), **TOL)
+        # position 0 attends only to itself -> output == v[0]
+        np.testing.assert_allclose(got[0, :, 0], v[0, :, 0], **TOL)
+
+    def test_padding_rows_are_zero(self):
+        q, k, v = _qkv(4, 2, 2, 64, 16)
+        lens = jnp.array([40, 64], jnp.int32)
+        out = np.asarray(attention(q, k, v, lens))
+        assert np.all(out[0, :, 40:] == 0.0)
+        assert np.any(out[0, :, :40] != 0.0)
+
+    def test_shape_mismatch_raises(self):
+        q, k, v = _qkv(5, 1, 1, 64, 16)
+        with pytest.raises(ValueError):
+            attention(q, k, v[:, :, :32], jnp.array([64], jnp.int32))
+
+    def test_indivisible_block_raises(self):
+        q, k, v = _qkv(6, 1, 1, 96, 16)
+        with pytest.raises(ValueError):
+            attention(q, k, v, jnp.array([96], jnp.int32), block_q=64)
+
+
+class TestAttentionProperties:
+    def test_causality(self):
+        """Perturbing tokens at positions >= p must not change outputs < p."""
+        b, h, s, d = 1, 2, 64, 16
+        q, k, v = _qkv(7, b, h, s, d)
+        lens = jnp.array([s], jnp.int32)
+        base = np.asarray(attention(q, k, v, lens))
+        p = 32
+        k2 = k.at[:, :, p:].set(jax.random.normal(jax.random.PRNGKey(99), (b, h, s - p, d)))
+        v2 = v.at[:, :, p:].set(jax.random.normal(jax.random.PRNGKey(98), (b, h, s - p, d)))
+        pert = np.asarray(attention(q, k2, v2, lens))
+        np.testing.assert_allclose(pert[:, :, :p], base[:, :, :p], rtol=1e-5, atol=1e-6)
+        assert np.abs(pert[:, :, p:] - base[:, :, p:]).max() > 1e-3
+
+    def test_batch_independence(self):
+        """Each sequence in a padded bucket attends only to itself."""
+        q, k, v = _qkv(8, 2, 2, 64, 16)
+        lens = jnp.array([64, 64], jnp.int32)
+        joint = np.asarray(attention(q, k, v, lens))
+        solo0 = np.asarray(
+            attention(q[:1], k[:1], v[:1], jnp.array([64], jnp.int32))
+        )
+        np.testing.assert_allclose(joint[:1], solo0, rtol=1e-5, atol=1e-6)
+
+    def test_scale_invariance_of_uniform_v(self):
+        """With identical V rows, output equals that row regardless of scores."""
+        b, h, s, d = 1, 1, 64, 8
+        q, k, _ = _qkv(9, b, h, s, d)
+        row = jax.random.normal(jax.random.PRNGKey(10), (d,))
+        v = jnp.broadcast_to(row, (b, h, s, d))
+        out = np.asarray(attention(q, k, v, jnp.array([s], jnp.int32)))
+        np.testing.assert_allclose(out, np.broadcast_to(row, out.shape), **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 3),
+        s=st.sampled_from([32, 64, 128]),
+        d=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis(self, b, h, s, d, seed, data):
+        q, k, v = _qkv(seed, b, h, s, d)
+        lens = jnp.array(
+            [data.draw(st.integers(1, s)) for _ in range(b)], jnp.int32
+        )
+        np.testing.assert_allclose(
+            attention(q, k, v, lens), ref_attention(q, k, v, lens), **TOL
+        )

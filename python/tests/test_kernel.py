@@ -1,0 +1,186 @@
+"""Grouped-GEMM kernel tests: Pallas vs pure-jnp oracle.
+
+The split-weight kernel (paper §4.2 merge elimination) is the L1 core of the
+reproduction: its contract is *bit-compatible output with the merged kernel*
+for every legal expert→(buffer, slot) placement, including the weak
+(redundant) placements §2 allows.  Hypothesis sweeps shapes and placements.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    grouped_gemm,
+    grouped_gemm_split,
+    merge_expert_buffers,
+)
+from compile.kernels import ref
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestMergedGroupedGemm:
+    def test_basic(self):
+        x, w = _rand(0, (4, 16, 32)), _rand(1, (4, 32, 64))
+        np.testing.assert_allclose(
+            grouped_gemm(x, w), ref.ref_grouped_gemm(x, w), **TOL
+        )
+
+    def test_single_expert(self):
+        x, w = _rand(2, (1, 8, 16)), _rand(3, (1, 16, 8))
+        np.testing.assert_allclose(
+            grouped_gemm(x, w), ref.ref_grouped_gemm(x, w), **TOL
+        )
+
+    def test_n_not_multiple_of_block(self):
+        # N=96 is not a multiple of the 128 default tile -> falls back to N.
+        x, w = _rand(4, (2, 8, 16)), _rand(5, (2, 16, 96))
+        np.testing.assert_allclose(
+            grouped_gemm(x, w), ref.ref_grouped_gemm(x, w), **TOL
+        )
+
+    def test_n_multiple_tiles(self):
+        x, w = _rand(6, (2, 8, 16)), _rand(7, (2, 16, 256))
+        np.testing.assert_allclose(
+            grouped_gemm(x, w), ref.ref_grouped_gemm(x, w), **TOL
+        )
+
+    def test_explicit_block_n(self):
+        x, w = _rand(8, (2, 8, 16)), _rand(9, (2, 16, 64))
+        np.testing.assert_allclose(
+            grouped_gemm(x, w, block_n=32), ref.ref_grouped_gemm(x, w), **TOL
+        )
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((3, 4, 8))
+        w = _rand(10, (3, 8, 16))
+        assert not np.any(np.asarray(grouped_gemm(x, w)))
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            grouped_gemm(_rand(0, (2, 4, 8)), _rand(1, (3, 8, 4)))
+        with pytest.raises(ValueError):
+            grouped_gemm(_rand(0, (2, 4, 8)), _rand(1, (2, 6, 4)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        e=st.integers(1, 6),
+        c=st.sampled_from([4, 16, 33]),
+        k=st.sampled_from([8, 32]),
+        n=st.sampled_from([8, 64, 128, 160]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, e, c, k, n, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (e, c, k))
+        w = jax.random.normal(jax.random.PRNGKey(seed + 1), (e, k, n))
+        np.testing.assert_allclose(
+            grouped_gemm(x, w), ref.ref_grouped_gemm(x, w), **TOL
+        )
+
+
+def _random_placement(draw, e, nbuf, slots):
+    """Any placement where every expert maps to some (buffer, slot); slots
+    may collide across *unused* entries but each expert's own (b, s) must be
+    where its weights actually live — we construct buffers from placement."""
+    return [
+        (draw(st.integers(0, nbuf - 1)), draw(st.integers(0, slots - 1)))
+        for _ in range(e)
+    ]
+
+
+class TestSplitGroupedGemm:
+    def _check(self, e, c, k, n, nbuf, placement, seed=0):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (e, c, k))
+        w = jax.random.normal(jax.random.PRNGKey(seed + 1), (e, k, n))
+        slots = max(s for _, s in placement) + 1
+        bufs = [jnp.zeros((slots, k, n)) for _ in range(nbuf)]
+        for ei, (b, s) in enumerate(placement):
+            bufs[b] = bufs[b].at[s].set(w[ei])
+        bid = jnp.array([p[0] for p in placement], jnp.int32)
+        slot = jnp.array([p[1] for p in placement], jnp.int32)
+        got = grouped_gemm_split(x, bufs, bid, slot)
+        np.testing.assert_allclose(got, ref.ref_grouped_gemm(x, w), **TOL)
+        # And the merge-copy path reconstructs the contiguous tensor.
+        merged = merge_expert_buffers(bufs, bid, slot, e)
+        np.testing.assert_allclose(merged, w, rtol=1e-6, atol=1e-6)
+
+    def test_block_partition_g2(self):
+        self._check(4, 8, 16, 32, 2, [(0, 0), (0, 1), (1, 0), (1, 1)])
+
+    def test_block_partition_g4(self):
+        self._check(8, 8, 16, 32, 4, [(i // 2, i % 2) for i in range(8)])
+
+    def test_uneven_group3_with_redundancy(self):
+        # 8 experts over 3 buffers of 3 slots: weak placement (§2).
+        pl = [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 0), (2, 1)]
+        self._check(8, 8, 16, 32, 3, pl)
+
+    def test_all_experts_in_one_buffer(self):
+        self._check(4, 8, 16, 32, 3, [(1, i) for i in range(4)])
+
+    def test_single_buffer_degenerates_to_merged(self):
+        self._check(4, 8, 16, 32, 1, [(0, i) for i in range(4)])
+
+    def test_permuted_slots(self):
+        self._check(4, 8, 16, 32, 2, [(0, 1), (1, 1), (0, 0), (1, 0)])
+
+    def test_buffers_with_different_slot_counts(self):
+        e, c, k, n = 4, 8, 16, 32
+        x = _rand(20, (e, c, k))
+        w = _rand(21, (e, k, n))
+        b0 = jnp.stack([w[0], w[1], w[2]])  # 3 slots
+        b1 = w[3:4]  # 1 slot
+        bid = jnp.array([0, 0, 0, 1], jnp.int32)
+        slot = jnp.array([0, 1, 2, 0], jnp.int32)
+        got = grouped_gemm_split(x, [b0, b1], bid, slot)
+        np.testing.assert_allclose(got, ref.ref_grouped_gemm(x, w), **TOL)
+
+    def test_empty_buffer_list_raises(self):
+        with pytest.raises(ValueError):
+            grouped_gemm_split(_rand(0, (2, 4, 8)), [], jnp.zeros(2, jnp.int32),
+                               jnp.zeros(2, jnp.int32))
+
+    def test_bad_map_shape_raises(self):
+        with pytest.raises(ValueError):
+            grouped_gemm_split(
+                _rand(0, (2, 4, 8)),
+                [_rand(1, (2, 8, 4))],
+                jnp.zeros(3, jnp.int32),
+                jnp.zeros(2, jnp.int32),
+            )
+
+    def test_buffer_k_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            grouped_gemm_split(
+                _rand(0, (2, 4, 8)),
+                [_rand(1, (2, 6, 4))],
+                jnp.zeros(2, jnp.int32),
+                jnp.zeros(2, jnp.int32),
+            )
+
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data())
+    def test_hypothesis_placements(self, data):
+        e = data.draw(st.integers(2, 8), label="experts")
+        nbuf = data.draw(st.integers(1, 4), label="buffers")
+        slots = data.draw(st.integers(1, e), label="slots")
+        # every expert needs a distinct home unless redundancy; allow any map,
+        # buffers are built *from* the placement so duplicates just mean two
+        # experts share identical weights — still a legal configuration.
+        placement = [
+            (data.draw(st.integers(0, nbuf - 1)), data.draw(st.integers(0, slots - 1)))
+            for _ in range(e)
+        ]
+        # When two experts land on the same (buffer, slot) the later write
+        # wins; skip those to keep the oracle well-defined.
+        if len(set(placement)) != e:
+            return
+        seed = data.draw(st.integers(0, 2**16))
+        self._check(e, 8, 16, 32, nbuf, placement, seed=seed)

@@ -1,0 +1,153 @@
+"""Model-level tests: the DWDP ≡ DEP numerical contract.
+
+The core guarantee the Rust coordinator relies on: a layer executed with
+split weights (local + prefetched remote buffers) produces the same output
+as the merged DEP layer — for every group size and placement — so DWDP is a
+pure *systems* transformation with no model-quality impact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.ModelConfig()
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def layer_w():
+    return M.init_layer_weights(CFG, jax.random.PRNGKey(7))
+
+
+def _x(seed, b=1, s=128):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, s, CFG.hidden))
+
+
+class TestLayerEquivalence:
+    @pytest.mark.parametrize("g", [2, 3, 4])
+    def test_dwdp_matches_dep(self, layer_w, g):
+        x, lens = _x(0), jnp.array([100], jnp.int32)
+        y_dep = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        ws = M.split_layer_weights(CFG, layer_w, g)
+        y = M.layer_forward(x, lens, ws, CFG, mode="dwdp", group_size=g)
+        np.testing.assert_allclose(y, y_dep, **TOL)
+
+    @pytest.mark.parametrize("g", [2, 4])
+    def test_merge_copy_matches_dep(self, layer_w, g):
+        x, lens = _x(1), jnp.array([128], jnp.int32)
+        y_dep = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        ws = M.split_layer_weights(CFG, layer_w, g)
+        y = M.layer_forward(x, lens, ws, CFG, mode="dwdp_merge", group_size=g)
+        np.testing.assert_allclose(y, y_dep, **TOL)
+
+    def test_custom_placement(self, layer_w):
+        """A permuted, non-block placement still matches DEP."""
+        placement = [(1, 1), (0, 0), (3, 1), (2, 0), (0, 1), (3, 0), (1, 0), (2, 1)]
+        ws = M.split_layer_weights(CFG, layer_w, 4, placement=placement)
+        x, lens = _x(2), jnp.array([64], jnp.int32)
+        y_dep = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        y = M.layer_forward(x, lens, ws, CFG, mode="dwdp", group_size=4)
+        np.testing.assert_allclose(y, y_dep, **TOL)
+
+    def test_batched_bucket(self, layer_w):
+        x = _x(3, b=4, s=128)
+        lens = jnp.array([128, 90, 30, 1], jnp.int32)
+        y_dep = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        ws = M.split_layer_weights(CFG, layer_w, 4)
+        y = M.layer_forward(x, lens, ws, CFG, mode="dwdp", group_size=4)
+        np.testing.assert_allclose(y, y_dep, **TOL)
+
+    def test_bad_mode_raises(self, layer_w):
+        with pytest.raises(ValueError):
+            M.moe_block(_x(4), layer_w, CFG, mode="nope")
+
+    @settings(max_examples=8, deadline=None)
+    @given(g=st.integers(2, 5), seed=st.integers(0, 2**16))
+    def test_hypothesis_group_sizes(self, layer_w, g, seed):
+        x, lens = _x(seed), jnp.array([128], jnp.int32)
+        y_dep = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        ws = M.split_layer_weights(CFG, layer_w, g)
+        y = M.layer_forward(x, lens, ws, CFG, mode="dwdp", group_size=g)
+        np.testing.assert_allclose(y, y_dep, **TOL)
+
+
+class TestModelForward:
+    def test_full_model_dep_vs_dwdp(self, layer_w):
+        key = jax.random.PRNGKey(11)
+        layers = [M.init_layer_weights(CFG, k) for k in jax.random.split(key, 2)]
+        cfg2 = M.ModelConfig(n_layers=2)
+        emb = jax.random.normal(jax.random.PRNGKey(12), (CFG.vocab, CFG.hidden))
+        w_head = jax.random.normal(jax.random.PRNGKey(13), (CFG.hidden, CFG.vocab))
+        gamma = jnp.ones((CFG.hidden,))
+        tokens = jax.random.randint(jax.random.PRNGKey(14), (1, 128), 0, CFG.vocab)
+        lens = jnp.array([128], jnp.int32)
+        logits_dep = M.model_forward(tokens, lens, emb, layers, gamma, w_head, cfg2)
+        split_layers = [M.split_layer_weights(CFG, lw, 4) for lw in layers]
+        logits_dwdp = M.model_forward(
+            tokens, lens, emb, split_layers, gamma, w_head, cfg2,
+            mode="dwdp", group_size=4,
+        )
+        np.testing.assert_allclose(logits_dwdp, logits_dep, rtol=1e-3, atol=1e-4)
+
+    def test_embed_head_shapes(self):
+        emb = jnp.ones((CFG.vocab, CFG.hidden))
+        tokens = jnp.zeros((2, 64), jnp.int32)
+        x = M.embed_forward(tokens, emb)
+        assert x.shape == (2, 64, CFG.hidden)
+        logits = M.head_forward(x, jnp.ones(CFG.hidden), jnp.ones((CFG.hidden, CFG.vocab)))
+        assert logits.shape == (2, 64, CFG.vocab)
+
+    def test_determinism(self, layer_w):
+        x, lens = _x(5), jnp.array([128], jnp.int32)
+        y1 = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        y2 = M.layer_forward(x, lens, layer_w, CFG, mode="dep")
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+class TestWeightSpecs:
+    def test_split_specs_cover_merged(self):
+        merged = {n for n, _ in M.layer_weight_specs(CFG)}
+        for g in (2, 3, 4):
+            split = {n for n, _ in M.layer_weight_specs_split(CFG, g)}
+            assert merged - {"wg", "wu", "wd"} <= split
+            for kind in ("wg", "wu", "wd"):
+                assert {f"{kind}_buf{i}" for i in range(g)} <= split
+            assert {"buffer_id", "slot"} <= split
+
+    def test_split_weights_match_specs(self, layer_w):
+        for g in (2, 3, 4):
+            ws = M.split_layer_weights(CFG, layer_w, g)
+            for name, shape in M.layer_weight_specs_split(CFG, g):
+                assert ws[name].shape == shape, (name, ws[name].shape, shape)
+
+    def test_slots_per_buffer_weak_placement(self):
+        # group size 3 does not divide 8 experts -> ceil(8/3)=3 slots.
+        assert CFG.slots_per_buffer(3) == 3
+        assert CFG.slots_per_buffer(4) == 2
+        assert CFG.slots_per_buffer(8) == 1
+
+    def test_capacity_scaling(self):
+        assert CFG.capacity(128) == 64  # 128*2/8 * 2.0
+        assert CFG.capacity(512) == 256
+        assert CFG.capacity(4) == 8  # floor
+
+
+class TestCapacityOverflow:
+    def test_skewed_routing_drops_overflow(self):
+        """With all tokens forced onto one expert, overflow slots drop and
+        the layer still produces finite outputs (capacity semantics)."""
+        w = M.init_layer_weights(CFG, jax.random.PRNGKey(20))
+        # Bias the router so expert 0 dominates.
+        w = dict(w)
+        w["router"] = w["router"].at[:, 0].add(100.0)
+        x, lens = _x(21), jnp.array([128], jnp.int32)
+        y = M.layer_forward(x, lens, w, CFG, mode="dep")
+        assert np.all(np.isfinite(np.asarray(y)))
+        # DWDP path has identical drop behaviour.
+        ws = M.split_layer_weights(CFG, w, 4)
+        y2 = M.layer_forward(x, lens, ws, CFG, mode="dwdp", group_size=4)
+        np.testing.assert_allclose(y2, y, **TOL)

@@ -1,0 +1,77 @@
+"""Top-k gating kernel tests vs jax.lax.top_k."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import topk_gating
+from compile.kernels.ref import ref_topk_gating
+
+
+def _gates(seed, t, e):
+    # Distinct values (ties are resolved identically — argmax and top_k both
+    # prefer the lower index — but distinct values make the oracle airtight).
+    g = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    return jax.nn.softmax(g * 3.0, axis=-1)
+
+
+class TestTopkGating:
+    @pytest.mark.parametrize("k", [1, 2, 4, 8])
+    def test_k_sweep(self, k):
+        g = _gates(0, 128, 8)
+        tv, ti = topk_gating(g, k)
+        rv, ri = ref_topk_gating(g, k)
+        np.testing.assert_array_equal(ti, ri)
+        np.testing.assert_allclose(tv, rv, rtol=1e-5, atol=1e-6)
+
+    def test_no_renormalize(self):
+        g = _gates(1, 64, 8)
+        tv, ti = topk_gating(g, 2, renormalize=False)
+        rv, ri = ref_topk_gating(g, 2, renormalize=False)
+        np.testing.assert_array_equal(ti, ri)
+        np.testing.assert_allclose(tv, rv, rtol=1e-5, atol=1e-6)
+
+    def test_renormalized_weights_sum_to_one(self):
+        g = _gates(2, 64, 16)
+        tv, _ = topk_gating(g, 4)
+        np.testing.assert_allclose(np.asarray(tv).sum(-1), 1.0, rtol=1e-5)
+
+    def test_k_equals_e(self):
+        g = _gates(3, 32, 4)
+        tv, ti = topk_gating(g, 4, block_t=32)
+        rv, ri = ref_topk_gating(g, 4)
+        np.testing.assert_array_equal(np.sort(ti, -1), np.sort(ri, -1))
+        np.testing.assert_allclose(np.asarray(tv).sum(-1), 1.0, rtol=1e-5)
+
+    def test_ties_break_to_lower_index(self):
+        g = jnp.ones((8, 4)) * 0.25
+        _, ti = topk_gating(g, 2, block_t=8)
+        np.testing.assert_array_equal(np.asarray(ti), np.tile([0, 1], (8, 1)))
+
+    def test_k_out_of_range_raises(self):
+        g = _gates(4, 32, 4)
+        with pytest.raises(ValueError):
+            topk_gating(g, 5, block_t=32)
+        with pytest.raises(ValueError):
+            topk_gating(g, 0, block_t=32)
+
+    def test_indivisible_block_raises(self):
+        g = _gates(5, 100, 4)
+        with pytest.raises(ValueError):
+            topk_gating(g, 2, block_t=64)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        t=st.sampled_from([16, 64, 128]),
+        e=st.sampled_from([4, 8, 32]),
+        k=st.integers(1, 4),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis(self, t, e, k, seed):
+        g = _gates(seed, t, e)
+        tv, ti = topk_gating(g, k, block_t=min(64, t))
+        rv, ri = ref_topk_gating(g, k)
+        np.testing.assert_array_equal(ti, ri)
+        np.testing.assert_allclose(tv, rv, rtol=1e-5, atol=1e-6)

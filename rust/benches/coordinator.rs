@@ -1,0 +1,61 @@
+//! Coordinator benchmarks: batcher admission, routing, latency-model
+//! evaluation, and a full disaggregated end-to-end point (the unit of the
+//! Fig. 5 Pareto sweep).
+
+use dwdp::bench::Bencher;
+use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode};
+use dwdp::coordinator::{ContextBatcher, DisaggSim, GroupLatencyModel, RoutePolicy, Router};
+use dwdp::experiments::calib;
+use dwdp::workload::{IslDist, WorkloadGen};
+
+fn main() {
+    let mut b = Bencher::new();
+    let hw = HardwareConfig::gb200();
+    let m = PaperModelConfig::deepseek_r1();
+    let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
+    s.validate(&m).unwrap();
+
+    // Batcher: push + drain 1024 requests.
+    let mut gen = WorkloadGen::new(IslDist::RatioWindow { isl: 8192, ratio: 0.8 }, 1024, 0.0, 3);
+    let reqs = gen.take(1024);
+    b.bench_n("batcher/push_drain_1024", 1024.0, || {
+        let mut batcher = ContextBatcher::new(32768, 64);
+        for r in &reqs {
+            batcher.push(r.clone());
+        }
+        let mut n = 0;
+        while let Some(batch) = batcher.next_batch() {
+            n += batch.requests.len();
+        }
+        assert_eq!(n, 1024);
+    });
+
+    // Router policies.
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+        let name = format!("router/{policy:?}/1024_over_8");
+        b.bench_n(&name, 1024.0, || {
+            let mut router = Router::new(8, policy);
+            for r in &reqs {
+                std::hint::black_box(router.route(r.isl));
+            }
+        });
+    }
+
+    // Group latency model: one 4-request DWDP batch.
+    let lm = GroupLatencyModel::new(&hw, &m, &s);
+    b.bench("latency_model/prefill_batch4_dwdp", || {
+        lm.prefill_offsets(&[8192, 7200, 6800, 6600])
+    });
+
+    // One full end-to-end point (24 requests).
+    let sim = DisaggSim {
+        hw: hw.clone(),
+        model: m.clone(),
+        serving: s.clone(),
+        n_ctx_groups: 2,
+        n_gen_gpus: 16,
+        route_policy: RoutePolicy::LeastLoaded,
+    };
+    b.bench("disagg/e2e_point_24req", || sim.run(24, 3.0));
+    b.finish();
+}

@@ -1,0 +1,67 @@
+//! Simulator throughput benchmarks: event-processing rate of the DES and
+//! end-to-end table regeneration latency (one per paper table — these are
+//! the `cargo bench` equivalents of the experiment harness; absolute
+//! numbers go to EXPERIMENTS.md §Perf).
+
+use dwdp::bench::Bencher;
+use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode};
+use dwdp::engine::run_context;
+use dwdp::experiments::calib;
+use dwdp::model::{Category, OpKind};
+use dwdp::sim::{ComputeStep, Simulation, Slice, Step};
+
+fn events_per_sec_case(b: &mut Bencher) {
+    // A contended 4-rank prefetch + compute mix: representative event blend.
+    let mut hw = HardwareConfig::gb200();
+    hw.link_jitter_prob = 0.0;
+    let run = || {
+        let mut sim = Simulation::new(&hw, 4, 1);
+        sim.dst_inflight = 2;
+        for r in 1..4usize {
+            let slices: Vec<Slice> = (0..256).map(|_| Slice { src: 0, bytes: 1e6 }).collect();
+            sim.register_plan((r, 0), slices);
+            sim.set_program(
+                r,
+                vec![
+                    Step::IssuePrefetch { key: (r, 0) },
+                    Step::Compute(ComputeStep {
+                        name: "gemm",
+                        category: Category::GroupedGemm,
+                        kind: OpKind::Gemm,
+                        nominal: 300e-6,
+                    }),
+                    Step::WaitPrefetch { key: (r, 0) },
+                ],
+            );
+        }
+        sim.set_program(0, vec![]);
+        sim.run()
+    };
+    let events = run().events_processed as f64;
+    b.bench_n(&format!("sim/contended_prefetch ({events} events)"), events, || {
+        run();
+    });
+}
+
+fn main() {
+    std::env::set_var("DWDP_QUICK", "1");
+    let mut b = Bencher::new();
+    events_per_sec_case(&mut b);
+
+    // Full context-group runs — the engines behind Tables 1/3/4.
+    let hw = HardwareConfig::gb200();
+    let m = PaperModelConfig::deepseek_r1();
+    for (name, mode) in [("dep4", ParallelMode::Dep), ("dwdp4", ParallelMode::Dwdp)] {
+        let mut s = calib::context_serving(mode, 4);
+        s.validate(&m).unwrap();
+        let events = run_context(&hw, &m, &s, 1, false).sim.events_processed as f64;
+        b.bench_n(
+            &format!("engine/context_{name}_r1 ({events} events)"),
+            events,
+            || {
+                run_context(&hw, &m, &s, 1, false);
+            },
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,187 @@
+//! Minimal micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bencher::bench`] for each case: warmup, then timed batches until the
+//! time budget is spent, reporting mean / median / p95 per iteration and a
+//! relative std-dev quality signal.  Output is stable, grep-able text that
+//! EXPERIMENTS.md §Perf quotes directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark report.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub rel_std: f64,
+    /// Optional caller-provided throughput denominator (items/iter).
+    pub items_per_iter: f64,
+}
+
+impl BenchReport {
+    pub fn items_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            self.items_per_iter * 1e9 / self.mean_ns
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// The harness.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_batches: usize,
+    reports: Vec<BenchReport>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Keep budgets modest: the box has one core and many benches.
+        let quick = std::env::var("DWDP_BENCH_QUICK").is_ok();
+        Bencher {
+            warmup: Duration::from_millis(if quick { 20 } else { 150 }),
+            budget: Duration::from_millis(if quick { 100 } else { 900 }),
+            min_batches: 10,
+            reports: Vec::new(),
+        }
+    }
+
+    /// Run one case. `f` is invoked repeatedly; its return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchReport {
+        self.bench_n(name, 1.0, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Run one case that processes `items` units per iteration (reports
+    /// throughput too).
+    pub fn bench_n<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &BenchReport {
+        // Warmup + calibration: how many iters fit in ~1/20 of the budget?
+        let w_end = Instant::now() + self.warmup;
+        let mut warm_iters = 0u64;
+        while Instant::now() < w_end {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch =
+            ((self.budget.as_secs_f64() / self.min_batches as f64 / per_iter).ceil() as u64)
+                .max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let bench_end = Instant::now() + self.budget;
+        while Instant::now() < bench_end || samples_ns.len() < self.min_batches {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(dt);
+            total_iters += batch;
+            if samples_ns.len() > 10_000 {
+                break;
+            }
+        }
+        let mean = stats::mean(&samples_ns);
+        let report = BenchReport {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: stats::median(&samples_ns),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            rel_std: if mean > 0.0 { stats::std_dev(&samples_ns) / mean } else { 0.0 },
+            items_per_iter: items,
+        };
+        println!(
+            "bench {:<44} mean {:>12}  median {:>12}  p95 {:>12}  ±{:>5.1}%{}",
+            report.name,
+            fmt_ns(report.mean_ns),
+            fmt_ns(report.median_ns),
+            fmt_ns(report.p95_ns),
+            report.rel_std * 100.0,
+            if items > 1.0 {
+                format!("  ({:.2e} items/s)", report.items_per_sec())
+            } else {
+                String::new()
+            }
+        );
+        self.reports.push(report);
+        self.reports.last().unwrap()
+    }
+
+    pub fn reports(&self) -> &[BenchReport] {
+        &self.reports
+    }
+
+    /// Print a closing summary (so `cargo bench` output has a footer).
+    pub fn finish(&self) {
+        println!("—— {} benchmarks complete ——", self.reports.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("DWDP_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert_eq!(b.reports().len(), 1);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("DWDP_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let v: Vec<u64> = (0..1000).collect();
+        let r = b.bench_n("sum1k", 1000.0, || {
+            std::hint::black_box(v.iter().sum::<u64>());
+        });
+        assert!(r.items_per_sec() > 1e6);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2.0e9).contains(" s"));
+    }
+}

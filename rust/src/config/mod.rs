@@ -1,0 +1,536 @@
+//! Configuration system: hardware, model, and serving configs + presets.
+//!
+//! Three layers of configuration, mirroring how the paper's experiments are
+//! parameterized:
+//!
+//! * [`HardwareConfig`] — the GB200 NVL72 platform constants (peak FLOPs,
+//!   HBM bandwidth, NVLink bandwidth, copy-engine pipelining depth, TDP and
+//!   the power fractions Appendix A measures).
+//! * [`PaperModelConfig`] — the DeepSeek-R1 architecture numbers that feed
+//!   the analytic roofline and the discrete-event simulator.
+//! * [`ServingConfig`] — per-experiment knobs: parallelism mode, group
+//!   size, ISL/OSL distribution, chunk size, MNT, TDM slice size, and which
+//!   DWDP optimizations are enabled.
+//!
+//! Presets are code (`gb200()`, `deepseek_r1()`, ...); JSON files can
+//! override any field via [`apply_json_overrides`] so experiments are
+//! scriptable without recompiling.
+
+use crate::util::Json;
+
+/// Parallelization strategy for the context server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Attention data parallelism + expert parallelism (the paper's
+    /// baseline): synchronous all-to-all at every MoE layer boundary.
+    Dep,
+    /// Distributed Weight Data Parallelism: data-parallel ranks, expert
+    /// weights partitioned across peers, asynchronous copy-engine prefetch.
+    Dwdp,
+}
+
+impl ParallelMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ParallelMode::Dep => "DEP",
+            ParallelMode::Dwdp => "DWDP",
+        }
+    }
+}
+
+/// GB200-class GPU + NVL72 fabric constants.
+///
+/// Defaults follow the public Blackwell/NVL72 numbers the paper quotes:
+/// ~8 TB/s HBM per GPU, NVLink5 900 GB/s per direction per GPU, and dense
+/// NVFP4 throughput around 10 PFLOPS with ~40% achievable efficiency for
+/// the big GEMMs (the `sol_fraction` knob).
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    pub name: String,
+    /// Peak dense FP4 tensor throughput, FLOP/s.
+    pub flops_fp4: f64,
+    /// Peak dense BF16 tensor throughput, FLOP/s.
+    pub flops_bf16: f64,
+    /// Peak dense FP8 tensor throughput, FLOP/s.
+    pub flops_fp8: f64,
+    /// Achievable fraction of peak for large GEMMs (speed-of-light factor).
+    pub sol_fraction: f64,
+    /// HBM bandwidth per GPU, B/s.
+    pub hbm_bw: f64,
+    /// HBM capacity per GPU, bytes.
+    pub hbm_bytes: f64,
+    /// NVLink bandwidth per direction per GPU, B/s.
+    pub nvlink_bw_dir: f64,
+    /// Effective copy-engine P2P pull bandwidth, B/s (below link peak:
+    /// protocol + copy-engine overheads; calibrated from the paper's
+    /// Table 1 P2P-copy timing).
+    pub ce_bw: f64,
+    /// How many DMA slices the copy engine keeps in flight (the paper's
+    /// §4.3.2 pipelining argument assumes 2).
+    pub ce_inflight: usize,
+    /// Fixed per-DMA-request issue latency, seconds.
+    pub ce_issue_latency: f64,
+    /// NCCL-style collective effective bandwidth (all-to-all), B/s.
+    pub coll_bw: f64,
+    /// Per-collective base latency (launch + rendezvous), seconds.
+    pub coll_latency: f64,
+    /// Thermal design power, W (normalized units are fine — only ratios
+    /// matter to the DVFS model).
+    pub tdp_w: f64,
+    /// Idle baseline power as a fraction of TDP (paper: 12.9%).
+    pub idle_power_frac: f64,
+    /// Power draw of the context-attention kernel, fraction of TDP
+    /// (paper: 96.7%).
+    pub attn_power_frac: f64,
+    /// Two-sided communication power, fraction of TDP incl. idle
+    /// (paper: 30.5%).
+    pub comm_power_frac: f64,
+    /// Power draw of GEMM-heavy kernels, fraction of TDP.
+    pub gemm_power_frac: f64,
+    /// Power draw of memory-bound kernels, fraction of TDP.
+    pub membound_power_frac: f64,
+    /// DVFS frequency exponent: freq scales as (tdp/power)^exponent when
+    /// the power cap is exceeded (1.0 = proportional capping; calibrated to
+    /// 1.7 so sustained attention+comm overlap lands at the paper's 0.798
+    /// normalized frequency, Table 7).
+    pub dvfs_exponent: f64,
+    /// Time constant of the power/DVFS integrator, seconds.  Gaps shorter
+    /// than this leave the GPU still power-constrained (the paper's
+    /// Short- vs Long-Duration Overlap distinction).
+    pub power_tau: f64,
+    /// Probability that a DMA transfer experiences a transient link
+    /// slowdown ("network fluctuation is unavoidable in practice", §4.3.2).
+    pub link_jitter_prob: f64,
+    /// Mean relative slowdown of a jittered transfer (exponentially
+    /// distributed multiplier on service time).
+    pub link_jitter_scale: f64,
+    /// Fraction of HBM bandwidth NVLink traffic can steal from
+    /// memory-bound kernels (paper Appendix A.1: 1.8/8 = 22.5% worst case).
+    pub nvlink_hbm_fraction: f64,
+}
+
+impl HardwareConfig {
+    /// GB200 NVL72 preset.
+    pub fn gb200() -> Self {
+        HardwareConfig {
+            name: "GB200-NVL72".into(),
+            flops_fp4: 10.0e15,
+            flops_bf16: 2.5e15,
+            flops_fp8: 5.0e15,
+            sol_fraction: 0.42,
+            hbm_bw: 8.0e12,
+            hbm_bytes: 186.0e9,
+            nvlink_bw_dir: 900.0e9,
+            ce_bw: 750.0e9,
+            ce_inflight: 2,
+            ce_issue_latency: 2.0e-6,
+            coll_bw: 750.0e9,
+            coll_latency: 8.0e-6,
+            tdp_w: 1200.0,
+            idle_power_frac: 0.129,
+            attn_power_frac: 0.967,
+            comm_power_frac: 0.305,
+            gemm_power_frac: 0.90,
+            membound_power_frac: 0.55,
+            dvfs_exponent: 1.7,
+            power_tau: 0.7e-3,
+            link_jitter_prob: 0.05,
+            link_jitter_scale: 0.5,
+            nvlink_hbm_fraction: 0.225,
+        }
+    }
+
+    /// Effective matmul throughput for a given weight precision.
+    pub fn effective_flops(&self, bytes_per_param: f64) -> f64 {
+        let peak = if bytes_per_param <= 0.625 {
+            self.flops_fp4
+        } else if bytes_per_param <= 1.25 {
+            self.flops_fp8
+        } else {
+            self.flops_bf16
+        };
+        peak * self.sol_fraction
+    }
+}
+
+/// DeepSeek-R1 architecture constants (public V3/R1 numbers).
+#[derive(Debug, Clone)]
+pub struct PaperModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    /// Leading dense (non-MoE) layers.
+    pub n_dense_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    /// MLA dims.
+    pub qk_nope_dim: usize,
+    pub qk_rope_dim: usize,
+    pub v_head_dim: usize,
+    pub kv_lora_rank: usize,
+    pub q_lora_rank: usize,
+    /// Routed experts.
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared_experts: usize,
+    pub moe_inter: usize,
+    pub dense_inter: usize,
+    pub vocab: usize,
+    /// Bytes per MoE weight param (NVFP4 + scale overhead ≈ 0.5625).
+    pub moe_bytes_per_param: f64,
+    /// Bytes per attention weight param (bf16 for MLA projections here).
+    pub attn_bytes_per_param: f64,
+    /// Bytes per activation element on the wire (fp8 dispatch).
+    pub act_bytes: f64,
+    /// Bytes per KV-cache element (fp8).
+    pub kv_bytes: f64,
+}
+
+impl PaperModelConfig {
+    /// DeepSeek-R1 (NVFP4 checkpoint) preset.
+    pub fn deepseek_r1() -> Self {
+        PaperModelConfig {
+            name: "DeepSeek-R1".into(),
+            n_layers: 61,
+            n_dense_layers: 3,
+            hidden: 7168,
+            n_heads: 128,
+            qk_nope_dim: 128,
+            qk_rope_dim: 64,
+            v_head_dim: 128,
+            kv_lora_rank: 512,
+            q_lora_rank: 1536,
+            n_experts: 256,
+            top_k: 8,
+            n_shared_experts: 1,
+            moe_inter: 2048,
+            dense_inter: 18432,
+            vocab: 129280,
+            moe_bytes_per_param: 0.5625,
+            attn_bytes_per_param: 2.0,
+            act_bytes: 1.0,
+            kv_bytes: 1.0,
+        }
+    }
+
+    /// A small config for fast tests.
+    pub fn tiny() -> Self {
+        PaperModelConfig {
+            name: "tiny".into(),
+            n_layers: 4,
+            n_dense_layers: 1,
+            hidden: 128,
+            n_heads: 4,
+            qk_nope_dim: 32,
+            qk_rope_dim: 16,
+            v_head_dim: 32,
+            kv_lora_rank: 64,
+            q_lora_rank: 96,
+            n_experts: 8,
+            top_k: 2,
+            n_shared_experts: 1,
+            moe_inter: 256,
+            dense_inter: 512,
+            vocab: 512,
+            moe_bytes_per_param: 0.5625,
+            attn_bytes_per_param: 2.0,
+            act_bytes: 1.0,
+            kv_bytes: 1.0,
+        }
+    }
+
+    pub fn n_moe_layers(&self) -> usize {
+        self.n_layers - self.n_dense_layers
+    }
+
+    /// Parameters of one routed expert (gate + up + down).
+    pub fn expert_params(&self) -> f64 {
+        3.0 * self.hidden as f64 * self.moe_inter as f64
+    }
+
+    /// Bytes of one routed expert's weights.
+    pub fn expert_bytes(&self) -> f64 {
+        self.expert_params() * self.moe_bytes_per_param
+    }
+
+    /// Bytes of all routed experts in one MoE layer.
+    pub fn moe_layer_bytes(&self) -> f64 {
+        self.expert_bytes() * self.n_experts as f64
+    }
+
+    /// Bytes of the per-layer attention (MLA) weights.
+    pub fn attn_layer_bytes(&self) -> f64 {
+        self.attn_params_per_layer() * self.attn_bytes_per_param
+    }
+
+    /// MLA projection params per layer (down/up projections + output).
+    pub fn attn_params_per_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        let qd = (self.qk_nope_dim + self.qk_rope_dim) as f64;
+        let heads = self.n_heads as f64;
+        // q down + q up, kv down + kv up (nope+v), rope k, output proj.
+        let q = h * self.q_lora_rank as f64 + self.q_lora_rank as f64 * heads * qd;
+        let kv = h * (self.kv_lora_rank as f64 + self.qk_rope_dim as f64)
+            + self.kv_lora_rank as f64 * heads * (self.qk_nope_dim + self.v_head_dim) as f64;
+        let o = heads * self.v_head_dim as f64 * h;
+        q + kv + o
+    }
+
+    /// KV-cache bytes per token (MLA stores the compressed latent + rope).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (self.kv_lora_rank + self.qk_rope_dim) as f64 * self.kv_bytes * self.n_layers as f64
+    }
+}
+
+/// Per-experiment serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub mode: ParallelMode,
+    /// Execution-group size (DEP-N / DWDP-N).
+    pub group_size: usize,
+    /// Max tokens per context forward pass (the paper's MNT).
+    pub max_num_tokens: usize,
+    /// Input sequence length (max of the sampled range).
+    pub isl: usize,
+    /// Output sequence length (generation phase).
+    pub osl: usize,
+    /// Input ratio: ISLs sampled uniformly in [ratio*isl, isl].
+    pub isl_ratio: f64,
+    /// Alternative imbalance control: normal std around `isl` (paper
+    /// Table 3c). When > 0 it takes precedence over `isl_ratio`.
+    pub isl_std: f64,
+    /// Local experts resident per rank (≥ n_experts / group_size; larger
+    /// values model the paper's redundant placement).
+    pub local_experts: usize,
+    /// §4.2 split-weight merge elimination enabled?
+    pub merge_elim: bool,
+    /// §4.3 TDM contention mitigation enabled?
+    pub tdm: bool,
+    /// TDM slice size in bytes (paper evaluates 1 MB).
+    pub slice_bytes: usize,
+    /// Expected fraction of remote experts that must actually be fetched
+    /// per layer per forward (the "on demand" activation model; 1.0 =
+    /// fetch every remote expert).
+    pub prefetch_fraction: f64,
+    /// Zipf exponent of expert routing popularity (0 = uniform).  Under
+    /// DEP, skewed routing loads the ranks owning hot experts — the
+    /// weight-level imbalance of Fig. 1(a).
+    pub routing_skew: f64,
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+}
+
+impl ServingConfig {
+    pub fn default_context(mode: ParallelMode, group_size: usize) -> Self {
+        ServingConfig {
+            mode,
+            group_size,
+            max_num_tokens: 32768,
+            isl: 8192,
+            osl: 1024,
+            isl_ratio: 0.8,
+            isl_std: 0.0,
+            local_experts: 0, // 0 = n_experts / group_size (set by validate)
+            merge_elim: true,
+            tdm: true,
+            slice_bytes: 1 << 20,
+            prefetch_fraction: 1.0,
+            routing_skew: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// Fill derived defaults and sanity-check. Returns an error string on
+    /// inconsistent settings (kept stringly to avoid an error-type dep).
+    pub fn validate(&mut self, model: &PaperModelConfig) -> Result<(), String> {
+        if self.group_size < 2 {
+            return Err(format!("group_size must be >= 2, got {}", self.group_size));
+        }
+        let min_local = model.n_experts.div_ceil(self.group_size);
+        if self.local_experts == 0 {
+            self.local_experts = min_local;
+        }
+        if self.local_experts < min_local {
+            return Err(format!(
+                "local_experts {} cannot cover the model: need >= {} for group size {}",
+                self.local_experts, min_local, self.group_size
+            ));
+        }
+        if self.local_experts > model.n_experts {
+            return Err(format!(
+                "local_experts {} exceeds total experts {}",
+                self.local_experts, model.n_experts
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.isl_ratio) {
+            return Err(format!("isl_ratio must be in [0,1], got {}", self.isl_ratio));
+        }
+        if self.slice_bytes == 0 {
+            return Err("slice_bytes must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.prefetch_fraction) {
+            return Err(format!(
+                "prefetch_fraction must be in [0,1], got {}",
+                self.prefetch_fraction
+            ));
+        }
+        Ok(())
+    }
+
+    /// Remote experts each rank must fetch per MoE layer (expectation).
+    pub fn remote_experts(&self, model: &PaperModelConfig) -> f64 {
+        (model.n_experts - self.local_experts) as f64 * self.prefetch_fraction
+    }
+}
+
+/// Apply `{"field": value}` JSON overrides to the three config structs.
+/// Unknown keys are reported as errors so typos don't silently no-op.
+pub fn apply_json_overrides(
+    json: &Json,
+    hw: &mut HardwareConfig,
+    model: &mut PaperModelConfig,
+    serving: &mut ServingConfig,
+) -> Result<(), String> {
+    let obj = json.as_obj().ok_or("config overrides must be a JSON object")?;
+    for (k, v) in obj {
+        let num = v.as_f64();
+        let get = |what: &str| num.ok_or(format!("{k} must be a number ({what})"));
+        match k.as_str() {
+            // hardware
+            "flops_fp4" => hw.flops_fp4 = get("FLOP/s")?,
+            "flops_bf16" => hw.flops_bf16 = get("FLOP/s")?,
+            "flops_fp8" => hw.flops_fp8 = get("FLOP/s")?,
+            "sol_fraction" => hw.sol_fraction = get("0..1")?,
+            "hbm_bw" => hw.hbm_bw = get("B/s")?,
+            "nvlink_bw_dir" => hw.nvlink_bw_dir = get("B/s")?,
+            "ce_bw" => hw.ce_bw = get("B/s")?,
+            "ce_inflight" => hw.ce_inflight = get("count")? as usize,
+            "coll_bw" => hw.coll_bw = get("B/s")?,
+            "tdp_w" => hw.tdp_w = get("W")?,
+            // model
+            "n_layers" => model.n_layers = get("count")? as usize,
+            "n_experts" => model.n_experts = get("count")? as usize,
+            "top_k" => model.top_k = get("count")? as usize,
+            "hidden" => model.hidden = get("count")? as usize,
+            "moe_inter" => model.moe_inter = get("count")? as usize,
+            // serving
+            "mode" => {
+                serving.mode = match v.as_str() {
+                    Some("dep") | Some("DEP") => ParallelMode::Dep,
+                    Some("dwdp") | Some("DWDP") => ParallelMode::Dwdp,
+                    _ => return Err(format!("mode must be \"dep\" or \"dwdp\", got {v:?}")),
+                }
+            }
+            "group_size" => serving.group_size = get("count")? as usize,
+            "max_num_tokens" => serving.max_num_tokens = get("count")? as usize,
+            "isl" => serving.isl = get("tokens")? as usize,
+            "osl" => serving.osl = get("tokens")? as usize,
+            "isl_ratio" => serving.isl_ratio = get("0..1")?,
+            "isl_std" => serving.isl_std = get("tokens")?,
+            "local_experts" => serving.local_experts = get("count")? as usize,
+            "merge_elim" => serving.merge_elim = v.as_bool().ok_or(format!("{k}: bool"))?,
+            "tdm" => serving.tdm = v.as_bool().ok_or(format!("{k}: bool"))?,
+            "slice_bytes" => serving.slice_bytes = get("bytes")? as usize,
+            "prefetch_fraction" => serving.prefetch_fraction = get("0..1")?,
+            "routing_skew" => serving.routing_skew = get("zipf exponent")?,
+            "seed" => serving.seed = get("u64")? as u64,
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_shape_math_matches_public_numbers() {
+        let m = PaperModelConfig::deepseek_r1();
+        assert_eq!(m.n_moe_layers(), 58);
+        // one expert: 3 * 7168 * 2048 = 44.04M params
+        assert!((m.expert_params() - 44_040_192.0).abs() < 1.0);
+        // NVFP4 + scales: ~24.8 MB per expert
+        let mb = m.expert_bytes() / 1e6;
+        assert!((24.0..26.0).contains(&mb), "expert MB {mb}");
+        // full per-layer routed weights ~6.3 GB
+        let gb = m.moe_layer_bytes() / 1e9;
+        assert!((6.0..6.8).contains(&gb), "layer GB {gb}");
+    }
+
+    #[test]
+    fn validate_fills_local_experts() {
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        assert_eq!(s.local_experts, 64);
+        // group 3 does not divide 256: weak placement rounds up.
+        let mut s3 = ServingConfig::default_context(ParallelMode::Dwdp, 3);
+        s3.validate(&m).unwrap();
+        assert_eq!(s3.local_experts, 86);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 1);
+        assert!(s.validate(&m).is_err());
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.local_experts = 10; // < 64 required
+        assert!(s.validate(&m).is_err());
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.isl_ratio = 1.5;
+        assert!(s.validate(&m).is_err());
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.slice_bytes = 0;
+        assert!(s.validate(&m).is_err());
+    }
+
+    #[test]
+    fn remote_experts_accounts_redundancy() {
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        assert_eq!(s.remote_experts(&m), 192.0);
+        s.local_experts = 128; // redundancy halves the fetch
+        assert_eq!(s.remote_experts(&m), 128.0);
+        s.prefetch_fraction = 0.5;
+        assert_eq!(s.remote_experts(&m), 64.0);
+    }
+
+    #[test]
+    fn effective_flops_picks_precision() {
+        let hw = HardwareConfig::gb200();
+        assert_eq!(hw.effective_flops(0.5625), hw.flops_fp4 * hw.sol_fraction);
+        assert_eq!(hw.effective_flops(1.0), hw.flops_fp8 * hw.sol_fraction);
+        assert_eq!(hw.effective_flops(2.0), hw.flops_bf16 * hw.sol_fraction);
+    }
+
+    #[test]
+    fn json_overrides_apply_and_reject_unknown() {
+        let mut hw = HardwareConfig::gb200();
+        let m0 = PaperModelConfig::deepseek_r1();
+        let mut m = m0.clone();
+        let mut s = ServingConfig::default_context(ParallelMode::Dep, 4);
+        let j = Json::parse(
+            r#"{"mode": "dwdp", "group_size": 8, "isl": 16384, "tdm": false, "ce_bw": 8e11}"#,
+        )
+        .unwrap();
+        apply_json_overrides(&j, &mut hw, &mut m, &mut s).unwrap();
+        assert_eq!(s.mode, ParallelMode::Dwdp);
+        assert_eq!(s.group_size, 8);
+        assert_eq!(s.isl, 16384);
+        assert!(!s.tdm);
+        assert_eq!(hw.ce_bw, 8e11);
+
+        let bad = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
+        assert!(apply_json_overrides(&bad, &mut hw, &mut m, &mut s).is_err());
+    }
+
+    #[test]
+    fn kv_bytes_per_token_is_mla_compressed() {
+        let m = PaperModelConfig::deepseek_r1();
+        // (512 + 64) * 1 B * 61 layers ≈ 35 KB/token — the MLA win.
+        let b = m.kv_bytes_per_token();
+        assert!((35_000.0..36_000.0).contains(&b), "{b}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Analytic many-to-one contention model — the paper's §4.3.1 / Table 2.
+//!
+//! Random-state model: when a rank issues its next pull, its source is
+//! uniform over the other `N-1` peers.  Given a tagged pull, each of the
+//! other `N-2` ranks picks the same source with probability `1/(N-1)`, so
+//! the number of competitors is `X ~ Binomial(N-2, 1/(N-1))` and the
+//! contention level is `C = X + 1`.
+//!
+//! A Monte-Carlo cross-check (`monte_carlo_contention`) validates the
+//! closed form and is also used by the simulator tests.
+
+use crate::util::Rng;
+
+/// Binomial pmf `P[X = k]` for `X ~ Binomial(n, p)`, numerically stable via
+/// log-gamma.
+pub fn binomial_pmf(n: u64, p: f64, k: u64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    if p >= 1.0 {
+        return if k == n { 1.0 } else { 0.0 };
+    }
+    let ln = ln_choose(n, k) + k as f64 * p.ln() + (n - k) as f64 * (1.0 - p).ln();
+    ln.exp()
+}
+
+/// ln(n choose k) via the log-gamma function (Lanczos).
+pub fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// Lanczos approximation of ln Γ(x), x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    // g=7, n=9 Lanczos coefficients.
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// `Pr[C = c]` for a DWDP group of `n` ranks, c in 1..=n-1.
+pub fn contention_probability(n: usize, c: usize) -> f64 {
+    assert!(n >= 3, "need at least 3 ranks for contention");
+    if c == 0 || c > n - 1 {
+        return 0.0;
+    }
+    binomial_pmf((n - 2) as u64, 1.0 / (n - 1) as f64, (c - 1) as u64)
+}
+
+/// The full distribution `[Pr[C=1], ..., Pr[C=n-1]]` (Table 2 row).
+pub fn contention_distribution(n: usize) -> Vec<f64> {
+    (1..n).map(|c| contention_probability(n, c)).collect()
+}
+
+/// Expected contention level `E[C] = 1 + (N-2)/(N-1)`.
+pub fn expected_contention(n: usize) -> f64 {
+    1.0 + (n - 2) as f64 / (n - 1) as f64
+}
+
+/// Monte-Carlo estimate of the contention distribution: every rank picks a
+/// source uniformly from its peers; for a tagged rank, count how many other
+/// ranks picked the same source.
+pub fn monte_carlo_contention(n: usize, trials: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut counts = vec![0u64; n];
+    for _ in 0..trials {
+        // Tagged rank 0 picks source s0 in {1..n-1}.
+        let s0 = 1 + rng.below((n - 1) as u64) as usize;
+        let mut c = 1usize;
+        // Other ranks 1..n-1 pick among their own peers.
+        for r in 1..n {
+            if r == s0 {
+                continue; // the source itself is busy serving, not pulling
+                          // from itself; it picks among others — can still
+                          // collide only if it picks ... itself? no.
+            }
+            // rank r picks uniformly among {0..n-1} \ {r}
+            let mut pick = rng.below((n - 1) as u64) as usize;
+            if pick >= r {
+                pick += 1;
+            }
+            if pick == s0 {
+                c += 1;
+            }
+        }
+        counts[c] += 1;
+    }
+    counts.iter().skip(1).map(|&k| k as f64 / trials as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..15u64 {
+            let fact: f64 = (1..=n).map(|i| i as f64).product();
+            assert!((ln_gamma(n as f64 + 1.0) - fact.ln()).abs() < 1e-9, "{n}");
+        }
+    }
+
+    #[test]
+    fn binomial_pmf_sums_to_one() {
+        for &(n, p) in &[(10u64, 0.3), (2, 0.5), (14, 1.0 / 15.0)] {
+            let s: f64 = (0..=n).map(|k| binomial_pmf(n, p, k)).sum();
+            assert!((s - 1.0).abs() < 1e-12, "n={n} p={p} s={s}");
+        }
+    }
+
+    #[test]
+    fn table2_dwdp3() {
+        // Paper: DWDP3 -> 50.00 / 50.00
+        let d = contention_distribution(3);
+        assert!((d[0] - 0.5).abs() < 1e-12);
+        assert!((d[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_dwdp4() {
+        // Paper: 44.44 / 44.44 / 11.11
+        let d = contention_distribution(4);
+        assert!((d[0] - 4.0 / 9.0).abs() < 1e-12);
+        assert!((d[1] - 4.0 / 9.0).abs() < 1e-12);
+        assert!((d[2] - 1.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_dwdp8_spot_values() {
+        // Paper: 39.66 / 39.66 / 16.52 / 3.67 / 0.46 / 0.03 / 0.00085
+        let d = contention_distribution(8);
+        assert!((d[0] * 100.0 - 39.66).abs() < 0.01, "{}", d[0] * 100.0);
+        assert!((d[2] * 100.0 - 16.52).abs() < 0.01, "{}", d[2] * 100.0);
+        assert!((d[6] * 100.0 - 0.00085).abs() < 0.0001, "{}", d[6] * 100.0);
+    }
+
+    #[test]
+    fn table2_dwdp16_tail() {
+        let d = contention_distribution(16);
+        assert!((d[0] * 100.0 - 38.06).abs() < 0.01);
+        // C=15 ≈ 3.43e-15 %
+        assert!((d[14] * 100.0 / 3.43e-15 - 1.0).abs() < 0.05, "{}", d[14] * 100.0);
+    }
+
+    #[test]
+    fn distribution_sums_to_one() {
+        for n in [3, 4, 6, 8, 12, 16] {
+            let s: f64 = contention_distribution(n).iter().sum();
+            assert!((s - 1.0).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_closed_form() {
+        for n in [3, 4, 8] {
+            let mc = monte_carlo_contention(n, 200_000, 42);
+            let an = contention_distribution(n);
+            for (c, (m, a)) in mc.iter().zip(&an).enumerate() {
+                assert!(
+                    (m - a).abs() < 0.01,
+                    "n={n} C={} mc={m} analytic={a}",
+                    c + 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn expected_contention_grows_with_n() {
+        assert!((expected_contention(3) - 1.5).abs() < 1e-12);
+        assert!(expected_contention(16) > expected_contention(4));
+        assert!(expected_contention(16) < 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 3")]
+    fn contention_needs_three_ranks() {
+        contention_probability(2, 1);
+    }
+}

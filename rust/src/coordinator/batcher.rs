@@ -1,0 +1,137 @@
+//! Continuous context batcher: FIFO admission under a max-num-tokens
+//! budget, with padded-bucket selection for the real (PJRT) serving path.
+
+use crate::workload::Request;
+
+/// A formed context batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub total_tokens: usize,
+}
+
+/// FIFO batcher under an MNT token budget and a max batch size.
+#[derive(Debug)]
+pub struct ContextBatcher {
+    pub max_num_tokens: usize,
+    pub max_batch: usize,
+    queue: std::collections::VecDeque<Request>,
+}
+
+impl ContextBatcher {
+    pub fn new(max_num_tokens: usize, max_batch: usize) -> Self {
+        assert!(max_num_tokens > 0 && max_batch > 0);
+        ContextBatcher { max_num_tokens, max_batch, queue: Default::default() }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queued_tokens(&self) -> usize {
+        self.queue.iter().map(|r| r.isl).sum()
+    }
+
+    /// Form the next batch: take FIFO head, then pack while both budgets
+    /// hold.  A request longer than MNT still goes alone (it will be
+    /// chunked downstream) — the batcher never starves.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        let first = self.queue.pop_front()?;
+        let mut total = first.isl;
+        let mut requests = vec![first];
+        while requests.len() < self.max_batch {
+            match self.queue.front() {
+                Some(r) if total + r.isl <= self.max_num_tokens => {
+                    total += r.isl;
+                    requests.push(self.queue.pop_front().unwrap());
+                }
+                _ => break,
+            }
+        }
+        Some(Batch { requests, total_tokens: total })
+    }
+
+    /// Pick the smallest padded bucket `(b, s)` that fits `n` requests of
+    /// max length `len` (real serving path; buckets from the manifest).
+    pub fn pick_bucket(buckets: &[(usize, usize)], n: usize, len: usize) -> Option<(usize, usize)> {
+        buckets
+            .iter()
+            .filter(|&&(b, s)| b >= n && s >= len)
+            .min_by_key(|&&(b, s)| b * s)
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, isl: usize) -> Request {
+        Request { id, arrival: 0.0, isl, osl: 8 }
+    }
+
+    #[test]
+    fn packs_under_token_budget() {
+        let mut b = ContextBatcher::new(1000, 16);
+        for i in 0..5 {
+            b.push(req(i, 300));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.total_tokens, 900);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.requests.len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn oversized_request_goes_alone() {
+        let mut b = ContextBatcher::new(1000, 16);
+        b.push(req(0, 5000));
+        b.push(req(1, 100));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.total_tokens, 5000);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = ContextBatcher::new(100_000, 2);
+        for i in 0..5 {
+            b.push(req(i, 10));
+        }
+        assert_eq!(b.next_batch().unwrap().requests.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = ContextBatcher::new(600, 16);
+        for i in 0..4 {
+            b.push(req(i, 300));
+        }
+        let ids: Vec<u64> = b.next_batch().unwrap().requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn queue_accounting() {
+        let mut b = ContextBatcher::new(1000, 4);
+        b.push(req(0, 10));
+        b.push(req(1, 20));
+        assert_eq!(b.queued(), 2);
+        assert_eq!(b.queued_tokens(), 30);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [(1, 128), (4, 128)];
+        assert_eq!(ContextBatcher::pick_bucket(&buckets, 1, 100), Some((1, 128)));
+        assert_eq!(ContextBatcher::pick_bucket(&buckets, 3, 100), Some((4, 128)));
+        assert_eq!(ContextBatcher::pick_bucket(&buckets, 5, 100), None);
+        assert_eq!(ContextBatcher::pick_bucket(&buckets, 1, 200), None);
+    }
+}

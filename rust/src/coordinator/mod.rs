@@ -1,0 +1,507 @@
+//! Serving coordinator: request routing, context batching, and the
+//! disaggregated context/generation serving loop (the paper's §5.3 setup).
+//!
+//! Requests arrive (Poisson), are routed to one of `n_ctx_groups` context
+//! groups (each a DWDP or DEP execution group of `group_size` GPUs), are
+//! prefilled under a max-num-tokens batch budget, then stream into the
+//! generation pool for decode.  TTFT includes queueing, matching the
+//! paper's metric definition.
+//!
+//! Context-group latency comes from [`GroupLatencyModel`], a mid-fidelity
+//! analytic model derived from the same roofline ops as the DES (validated
+//! against it in `engine::tests`): DEP pays `max-over-ranks(compute) +
+//! all2all` per layer (lockstep), DWDP pays `max(compute, prefetch)` per
+//! rank *independently* (async) plus a contention residual when TDM is off.
+
+pub mod batcher;
+
+use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use crate::contention::expected_contention;
+use crate::metrics::{RequestRecord, ServingMetrics};
+use crate::model::ChunkWorkload;
+use crate::roofline::{layer_all2all_time, layer_compute_time, layer_prefetch_time};
+use crate::util::Rng;
+use crate::workload::{Request, WorkloadGen};
+
+pub use batcher::ContextBatcher;
+
+/// Routing policy across context groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Fewest queued prompt tokens.
+    LeastLoaded,
+}
+
+/// Router over `n` context groups.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    next: usize,
+    pub queued_tokens: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(n: usize, policy: RoutePolicy) -> Self {
+        Router { policy, next: 0, queued_tokens: vec![0; n] }
+    }
+
+    pub fn route(&mut self, isl: usize) -> usize {
+        let g = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let g = self.next;
+                self.next = (self.next + 1) % self.queued_tokens.len();
+                g
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                for (i, &q) in self.queued_tokens.iter().enumerate() {
+                    if q < self.queued_tokens[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.queued_tokens[g] += isl;
+        g
+    }
+
+    pub fn drain(&mut self, group: usize, isl: usize) {
+        self.queued_tokens[group] = self.queued_tokens[group].saturating_sub(isl);
+    }
+}
+
+/// Analytic context-group prefill latency.
+pub struct GroupLatencyModel {
+    hw: HardwareConfig,
+    model: PaperModelConfig,
+    pub serving: ServingConfig,
+    chunk_tokens: usize,
+}
+
+impl GroupLatencyModel {
+    pub fn new(hw: &HardwareConfig, model: &PaperModelConfig, serving: &ServingConfig) -> Self {
+        let chunk_tokens = (serving.max_num_tokens / crate::engine::CHUNK_DIVISOR).max(64);
+        GroupLatencyModel {
+            hw: hw.clone(),
+            model: model.clone(),
+            serving: serving.clone(),
+            chunk_tokens,
+        }
+    }
+
+    /// Per-layer compute time for one chunk.
+    fn t_layer(&self, w: &ChunkWorkload) -> f64 {
+        layer_compute_time(&self.hw, &self.model, w)
+    }
+
+    /// Prefill a batch of prompts on the group; returns per-request
+    /// completion offsets (seconds after the batch starts).
+    ///
+    /// Requests are assigned round-robin to the group's ranks.  DEP runs
+    /// rank-lockstep per iteration; DWDP ranks run independently.
+    pub fn prefill_offsets(&self, isls: &[usize]) -> Vec<f64> {
+        let n = self.serving.group_size;
+        let layers = self.model.n_moe_layers() as f64;
+        // Chunk schedules per rank.
+        let mut rank_chunks: Vec<Vec<(usize, ChunkWorkload)>> = vec![Vec::new(); n];
+        for (ri, &isl) in isls.iter().enumerate() {
+            let rank = ri % n;
+            let mut done = 0usize;
+            while done < isl {
+                let t = self.chunk_tokens.min(isl - done);
+                rank_chunks[rank]
+                    .push((ri, ChunkWorkload::uniform(t, (done + t / 2).max(1), &self.model)));
+                done += t;
+            }
+        }
+        let mut offsets = vec![0.0f64; isls.len()];
+        match self.serving.mode {
+            ParallelMode::Dwdp => {
+                let t_pref = layer_prefetch_time(&self.hw, &self.model, &self.serving);
+                // Contention residual: without TDM, expected low-order
+                // many-to-one contention stretches the effective prefetch
+                // time by E[C] (§4.3.1); TDM interleaving removes it.
+                let contention = if self.serving.tdm || n < 3 {
+                    1.0
+                } else {
+                    expected_contention(n)
+                };
+                for chunks in rank_chunks.iter() {
+                    let mut t = 0.0;
+                    for (ri, w) in chunks {
+                        let tc = self.t_layer(w);
+                        let mut per_layer = tc.max(t_pref * contention);
+                        if !self.serving.merge_elim {
+                            let fetched = self.serving.remote_experts(&self.model)
+                                * self.model.expert_bytes();
+                            per_layer += 2.0 * (fetched * 0.5) / self.hw.hbm_bw;
+                        }
+                        t += per_layer * layers;
+                        offsets[*ri] = offsets[*ri].max(t);
+                    }
+                }
+            }
+            ParallelMode::Dep => {
+                // Lockstep: iteration i takes max over ranks of layer time
+                // plus the all-to-alls; every request in the batch finishes
+                // when its own rank's last chunk completes *in lockstep*.
+                let iters = rank_chunks.iter().map(Vec::len).max().unwrap_or(0);
+                let mut t = 0.0;
+                for i in 0..iters {
+                    let mut worst = 0.0f64;
+                    let mut tokens = 0usize;
+                    for chunks in &rank_chunks {
+                        if let Some((_, w)) = chunks.get(i) {
+                            worst = worst.max(self.t_layer(w));
+                            tokens = tokens.max(w.new_tokens);
+                        }
+                    }
+                    let a2a = layer_all2all_time(&self.hw, &self.model, &self.serving, tokens);
+                    t += (worst + a2a) * layers;
+                    for chunks in &rank_chunks {
+                        if let Some((ri, _)) = chunks.get(i) {
+                            offsets[*ri] = t;
+                        }
+                    }
+                }
+                // All requests in a DEP batch are released at iteration
+                // boundaries (already handled above per chunk).
+            }
+        }
+        offsets
+    }
+}
+
+/// Generation-pool decode model: memory-bound decode steps with continuous
+/// batching.
+///
+/// Step time = expert/attention weight read (EP-sharded, at an achievable
+/// HBM efficiency) + KV read for the in-flight batch + the per-layer
+/// all-to-all latency floor + a per-request step cost (dispatch/combine
+/// volume, sampling, scheduling).  The last term is what bends the
+/// TPS/user-vs-TPS/GPU tradeoff: larger in-flight batches raise GPU
+/// efficiency but slow every user's decode step — calibrated so the
+/// saturation sweep spans the paper's 20–200 TPS/user operating range.
+pub struct GenModel {
+    hw: HardwareConfig,
+    model: PaperModelConfig,
+    pub n_gpus: usize,
+    /// Active parameter bytes resident per GPU (expert-parallel decode).
+    weight_bytes_per_gpu: f64,
+    /// Achievable fraction of HBM bandwidth for the weight stream.
+    pub hbm_efficiency: f64,
+    /// Per-in-flight-request cost added to every decode step, seconds.
+    pub per_req_step_cost: f64,
+}
+
+impl GenModel {
+    pub fn new(hw: &HardwareConfig, model: &PaperModelConfig, n_gpus: usize) -> Self {
+        // Decode pool shards all experts + dense across its GPUs.
+        let total_moe = model.moe_layer_bytes() * model.n_moe_layers() as f64;
+        let attn = model.attn_layer_bytes() * model.n_layers as f64;
+        let weight_bytes_per_gpu = (total_moe + attn) / n_gpus.max(1) as f64;
+        GenModel {
+            hw: hw.clone(),
+            model: model.clone(),
+            n_gpus,
+            weight_bytes_per_gpu,
+            hbm_efficiency: 0.65,
+            per_req_step_cost: 60.0e-6,
+        }
+    }
+
+    /// One decode step's latency for `batch` in-flight requests with mean
+    /// context `ctx` tokens.
+    pub fn step_time(&self, batch: usize, ctx: usize) -> f64 {
+        let weights = self.weight_bytes_per_gpu / (self.hw.hbm_bw * self.hbm_efficiency);
+        let kv = batch as f64 * ctx as f64 * self.model.kv_bytes_per_token()
+            / self.n_gpus as f64
+            / self.hw.hbm_bw;
+        // Two all-to-alls per MoE layer per step.
+        let floor = 2.0 * self.model.n_moe_layers() as f64 * self.hw.coll_latency;
+        weights + kv + floor + batch as f64 * self.per_req_step_cost
+    }
+}
+
+/// One point of the end-to-end sweep.
+#[derive(Debug, Clone)]
+pub struct E2ePoint {
+    pub n_ctx_groups: usize,
+    pub n_gen_gpus: usize,
+    pub arrival_rate: f64,
+    pub tps_user: f64,
+    pub tps_gpu: f64,
+    pub median_ttft: f64,
+    pub n_requests: usize,
+}
+
+/// Disaggregated serving simulation (request granularity).
+pub struct DisaggSim {
+    pub hw: HardwareConfig,
+    pub model: PaperModelConfig,
+    pub serving: ServingConfig,
+    pub n_ctx_groups: usize,
+    pub n_gen_gpus: usize,
+    pub route_policy: RoutePolicy,
+}
+
+impl DisaggSim {
+    /// Run `n_requests` at `arrival_rate` (req/s) and aggregate metrics.
+    pub fn run(&self, n_requests: usize, arrival_rate: f64) -> E2ePoint {
+        let mut gen_rng = Rng::new(self.serving.seed ^ 0xE2E);
+        let mut wl = WorkloadGen::from_serving(&self.serving, arrival_rate);
+        let requests: Vec<Request> = wl.take(n_requests);
+        let latency = GroupLatencyModel::new(&self.hw, &self.model, &self.serving);
+        let gen = GenModel::new(&self.hw, &self.model, self.n_gen_gpus);
+        let mut router = Router::new(self.n_ctx_groups, self.route_policy);
+
+        // Context stage: each group processes FIFO batches under MNT.
+        let mut group_free_at = vec![0.0f64; self.n_ctx_groups];
+        let mut group_queues: Vec<Vec<&Request>> = vec![Vec::new(); self.n_ctx_groups];
+        for r in &requests {
+            let g = router.route(r.isl);
+            group_queues[g].push(r);
+        }
+        // (request idx -> prefill done time)
+        let mut first_token = vec![0.0f64; requests.len()];
+        for (g, queue) in group_queues.iter().enumerate() {
+            let mut i = 0;
+            while i < queue.len() {
+                // Form a batch under the MNT budget (at least one request).
+                // Only requests that have *arrived* by the batch start may
+                // join — a free server never waits for future arrivals.
+                let start = group_free_at[g].max(queue[i].arrival);
+                let mut batch = vec![queue[i]];
+                let mut tokens = queue[i].isl;
+                let mut j = i + 1;
+                while j < queue.len()
+                    && queue[j].arrival <= start
+                    && tokens + queue[j].isl <= self.serving.max_num_tokens
+                {
+                    batch.push(queue[j]);
+                    tokens += queue[j].isl;
+                    j += 1;
+                }
+                let isls: Vec<usize> = batch.iter().map(|r| r.isl).collect();
+                let offsets = latency.prefill_offsets(&isls);
+                let mut batch_end = start;
+                for (r, off) in batch.iter().zip(&offsets) {
+                    first_token[r.id as usize] = start + off;
+                    batch_end = batch_end.max(start + off);
+                }
+                group_free_at[g] = batch_end;
+                i = j;
+            }
+        }
+
+        // Generation stage: continuous batching, time-stepped in decode
+        // rounds.  Requests join when their prefill completes.
+        let mut pending: Vec<(usize, f64)> =
+            first_token.iter().enumerate().map(|(i, &t)| (i, t)).collect();
+        pending.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let mut records: Vec<RequestRecord> = Vec::with_capacity(requests.len());
+        let mut active: Vec<(usize, usize)> = Vec::new(); // (req idx, tokens left)
+        let mut t = pending.first().map(|p| p.1).unwrap_or(0.0);
+        let mut pi = 0;
+        let mut finish = vec![0.0f64; requests.len()];
+        while !active.is_empty() || pi < pending.len() {
+            // Admit arrivals up to now.
+            while pi < pending.len() && pending[pi].1 <= t {
+                active.push((pending[pi].0, requests[pending[pi].0].osl));
+                pi += 1;
+            }
+            if active.is_empty() {
+                t = pending[pi].1;
+                continue;
+            }
+            let mean_ctx = requests.iter().map(|r| r.isl).sum::<usize>() / requests.len().max(1);
+            let step = gen.step_time(active.len(), mean_ctx + self.serving.osl / 2);
+            // Jitter-free deterministic decode; rng reserved for future
+            // speculative-decode extensions.
+            let _ = &mut gen_rng;
+            t += step;
+            for a in &mut active {
+                a.1 -= 1;
+            }
+            active.retain(|&(idx, left)| {
+                if left == 0 {
+                    finish[idx] = t;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        for (i, r) in requests.iter().enumerate() {
+            records.push(RequestRecord {
+                id: r.id,
+                arrival: r.arrival,
+                first_token: first_token[i],
+                finish: finish[i],
+                isl: r.isl,
+                osl: r.osl,
+            });
+        }
+        let mut metrics = ServingMetrics::new();
+        for rec in records {
+            metrics.push(rec);
+        }
+        let n_gpus = self.n_ctx_groups * self.serving.group_size + self.n_gen_gpus;
+        let span = metrics.span();
+        E2ePoint {
+            n_ctx_groups: self.n_ctx_groups,
+            n_gen_gpus: self.n_gen_gpus,
+            arrival_rate,
+            tps_user: metrics.tps_per_user(),
+            tps_gpu: metrics.output_tps_per_gpu(n_gpus, span),
+            median_ttft: metrics.median_ttft(),
+            n_requests: metrics.n(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(mode: ParallelMode) -> (HardwareConfig, PaperModelConfig, ServingConfig) {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(mode, 4);
+        s.prefetch_fraction = 0.07; // Table-1 calibration (EXPERIMENTS.md)
+        s.validate(&m).unwrap();
+        (hw, m, s)
+    }
+
+    #[test]
+    fn router_round_robin_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        assert_eq!(r.route(10), 0);
+        assert_eq!(r.route(10), 1);
+        assert_eq!(r.route(10), 2);
+        assert_eq!(r.route(10), 0);
+    }
+
+    #[test]
+    fn router_least_loaded_balances() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(100), 0);
+        assert_eq!(r.route(10), 1);
+        assert_eq!(r.route(10), 1); // 20 < 100
+        r.drain(0, 100);
+        assert_eq!(r.route(10), 0);
+    }
+
+    #[test]
+    fn dwdp_prefill_requests_finish_independently() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let lm = GroupLatencyModel::new(&hw, &m, &s);
+        // Rank 0 gets an 8K prompt, rank 1 a 1K prompt.
+        let offs = lm.prefill_offsets(&[8192, 1024]);
+        assert!(offs[1] < offs[0] * 0.5, "{offs:?}");
+    }
+
+    #[test]
+    fn dep_prefill_lockstep_couples_requests() {
+        let (hw, m, s) = setup(ParallelMode::Dep);
+        let lm = GroupLatencyModel::new(&hw, &m, &s);
+        let offs = lm.prefill_offsets(&[8192, 1024]);
+        // The 1K request cannot finish much earlier: lockstep iterations
+        // are paced by the 8K request's chunks.
+        assert!(offs[1] > offs[0] * 0.15, "{offs:?}");
+    }
+
+    #[test]
+    fn dwdp_prefill_faster_than_dep_at_parity() {
+        let (hw, m, sd) = setup(ParallelMode::Dep);
+        let (_, _, mut sw) = setup(ParallelMode::Dwdp);
+        sw.seed = sd.seed;
+        let dep = GroupLatencyModel::new(&hw, &m, &sd);
+        let dwdp = GroupLatencyModel::new(&hw, &m, &sw);
+        let isls = vec![8192, 7000, 6600, 7800];
+        let t_dep = dep.prefill_offsets(&isls).iter().cloned().fold(0.0, f64::max);
+        let t_dwdp = dwdp.prefill_offsets(&isls).iter().cloned().fold(0.0, f64::max);
+        assert!(t_dwdp < t_dep, "dwdp {t_dwdp} dep {t_dep}");
+    }
+
+    #[test]
+    fn tdm_reduces_dwdp_latency_when_window_small() {
+        let (hw, m, mut s) = setup(ParallelMode::Dwdp);
+        s.max_num_tokens = 16384; // small window
+        s.tdm = false;
+        let no_tdm = GroupLatencyModel::new(&hw, &m, &s);
+        s.tdm = true;
+        let with_tdm = GroupLatencyModel::new(&hw, &m, &s);
+        let isls = vec![4096, 4096, 4096, 4096];
+        let a = no_tdm.prefill_offsets(&isls).iter().cloned().fold(0.0, f64::max);
+        let b = with_tdm.prefill_offsets(&isls).iter().cloned().fold(0.0, f64::max);
+        assert!(b <= a, "tdm {b} vs {a}");
+    }
+
+    #[test]
+    fn gen_step_time_scales_with_batch() {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::deepseek_r1();
+        let g = GenModel::new(&hw, &m, 8);
+        let t1 = g.step_time(1, 8192);
+        let t64 = g.step_time(64, 8192);
+        assert!(t64 > t1);
+        assert!(t1 > 0.0005, "weights read dominates: {t1}");
+    }
+
+    #[test]
+    fn disagg_end_to_end_produces_sane_metrics() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let sim = DisaggSim {
+            hw,
+            model: m,
+            serving: s,
+            n_ctx_groups: 2,
+            n_gen_gpus: 8,
+            route_policy: RoutePolicy::RoundRobin,
+        };
+        let p = sim.run(40, 2.0);
+        assert_eq!(p.n_requests, 40);
+        assert!(p.tps_user > 1.0 && p.tps_user < 1000.0, "{}", p.tps_user);
+        assert!(p.tps_gpu > 0.0);
+        assert!(p.median_ttft > 0.0);
+    }
+
+    #[test]
+    fn higher_load_raises_ttft() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let sim = DisaggSim {
+            hw,
+            model: m,
+            serving: s,
+            n_ctx_groups: 1,
+            n_gen_gpus: 8,
+            route_policy: RoutePolicy::RoundRobin,
+        };
+        let light = sim.run(30, 0.3);
+        let heavy = sim.run(30, 6.0);
+        assert!(heavy.median_ttft > light.median_ttft, "{} vs {}",
+                heavy.median_ttft, light.median_ttft);
+    }
+
+    #[test]
+    fn fewer_ctx_groups_increase_ttft_but_tps_gpu() {
+        // The paper's Table 6 phenomenon: cutting context GPUs raises
+        // TTFT (queueing) while output TPS/GPU improves.
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let mk = |n| DisaggSim {
+            hw: hw.clone(),
+            model: m.clone(),
+            serving: s.clone(),
+            n_ctx_groups: n,
+            n_gen_gpus: 12,
+            route_policy: RoutePolicy::RoundRobin,
+        };
+        let big = mk(4).run(60, 3.0);
+        let small = mk(1).run(60, 3.0);
+        assert!(small.median_ttft >= big.median_ttft);
+        assert!(small.tps_gpu >= big.tps_gpu * 0.95);
+    }
+}

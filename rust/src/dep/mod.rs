@@ -1,0 +1,191 @@
+//! DEP baseline: attention data parallelism + expert parallelism.
+//!
+//! The paper's baseline (Fig. 1): every MoE layer performs two synchronous
+//! all-to-alls (token dispatch to expert owners, expert-output combine),
+//! each preceded by a group-wide rendezvous.  Request-level imbalance
+//! surfaces as waiting at the first all-to-all; weight-level (routing)
+//! imbalance surfaces at the second.  The simulator charges that waiting to
+//! `Synchronization` and the transfer itself to `Communication`, exactly
+//! the two rows DWDP eliminates in Table 1.
+
+use crate::config::{HardwareConfig, PaperModelConfig, ServingConfig};
+use crate::model::{dense_layer_ops, moe_layer_ops, ChunkWorkload};
+use crate::roofline::layer_all2all_time;
+use crate::sim::{ComputeStep, Step};
+
+/// Compile the DEP SM program for `rank` over a sequence of chunks.
+///
+/// `moe_skew[ci][l]` is an optional per-chunk per-layer multiplier on the
+/// rank's grouped-GEMM time modeling routing skew (hot experts): DEP ranks
+/// own fixed expert shards, so skewed routing gives some ranks more expert
+/// tokens — the weight-level imbalance of Fig. 1(a).
+pub fn compile_rank_program(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    rank: usize,
+    workloads: &[ChunkWorkload],
+    moe_skew: Option<&[Vec<f64>]>,
+) -> Vec<Step> {
+    let n_moe = model.n_moe_layers();
+    let mut steps = Vec::new();
+    for (ci, w) in workloads.iter().enumerate() {
+        // Dense leading layers: data-parallel, no collectives.
+        for _ in 0..model.n_dense_layers {
+            for op in dense_layer_ops(model, w) {
+                steps.push(Step::Compute(ComputeStep {
+                    name: op.name,
+                    category: op.category,
+                    kind: op.kind,
+                    nominal: crate::roofline::op_latency(hw, &op),
+                }));
+            }
+        }
+        for l in 0..n_moe {
+            let skew = moe_skew
+                .and_then(|s| s.get(ci))
+                .and_then(|s| s.get(l))
+                .copied()
+                .unwrap_or(1.0);
+            let barrier_base = ((ci * n_moe + l) as u32) << 1;
+            let ops = moe_layer_ops(model, w);
+            let (pre, rest): (Vec<_>, Vec<_>) = ops
+                .into_iter()
+                .partition(|o| matches!(o.name, "mla_projections" | "flash_attention" | "router"));
+            for op in pre {
+                steps.push(Step::Compute(ComputeStep {
+                    name: op.name,
+                    category: op.category,
+                    kind: op.kind,
+                    nominal: crate::roofline::op_latency(hw, &op),
+                }));
+            }
+            // Dispatch all-to-all: rendezvous exposes request-level skew.
+            let a2a = layer_all2all_time(hw, model, serving, w.new_tokens) / 2.0;
+            steps.push(Step::Barrier { id: barrier_base });
+            steps.push(Step::Collective { bytes: a2a_bytes(hw, a2a) });
+            for op in rest {
+                let mult = if op.name == "grouped_gemm" { skew } else { 1.0 };
+                steps.push(Step::Compute(ComputeStep {
+                    name: op.name,
+                    category: op.category,
+                    kind: op.kind,
+                    nominal: crate::roofline::op_latency(hw, &op) * mult,
+                }));
+            }
+            // Combine all-to-all: rendezvous exposes weight-level skew.
+            steps.push(Step::Barrier { id: barrier_base | 1 });
+            steps.push(Step::Collective { bytes: a2a_bytes(hw, a2a) });
+        }
+        let _ = rank;
+    }
+    steps
+}
+
+/// Invert the collective-time formula so `Step::Collective` reproduces the
+/// roofline's per-all2all duration (which already includes base latency).
+fn a2a_bytes(hw: &HardwareConfig, duration: f64) -> f64 {
+    ((duration - hw.coll_latency) * hw.coll_bw).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+    use crate::metrics::Breakdown;
+    use crate::model::Category;
+    use crate::sim::Simulation;
+
+    fn setup() -> (HardwareConfig, PaperModelConfig, ServingConfig) {
+        let mut hw = HardwareConfig::gb200();
+        hw.link_jitter_prob = 0.0;
+        let m = PaperModelConfig::tiny();
+        let mut s = ServingConfig::default_context(ParallelMode::Dep, 4);
+        s.validate(&m).unwrap();
+        (hw, m, s)
+    }
+
+    #[test]
+    fn program_has_two_collectives_per_moe_layer() {
+        let (hw, m, s) = setup();
+        let w = ChunkWorkload::uniform(2048, 1024, &m);
+        let prog = compile_rank_program(&hw, &m, &s, 0, &[w], None);
+        let n_coll = prog.iter().filter(|st| matches!(st, Step::Collective { .. })).count();
+        let n_barrier = prog.iter().filter(|st| matches!(st, Step::Barrier { .. })).count();
+        assert_eq!(n_coll, 2 * m.n_moe_layers());
+        assert_eq!(n_barrier, 2 * m.n_moe_layers());
+    }
+
+    #[test]
+    fn balanced_group_has_no_sync_cost() {
+        let (hw, m, s) = setup();
+        let w = ChunkWorkload::uniform(2048, 1024, &m);
+        let mut sim = Simulation::new(&hw, 4, 0);
+        for r in 0..4 {
+            sim.set_program(r, compile_rank_program(&hw, &m, &s, r, &[w], None));
+        }
+        let res = sim.run();
+        for r in &res.ranks {
+            let sync = r.breakdown.get(Category::Synchronization);
+            assert!(sync < 2e-6, "sync {sync}");
+            assert!(r.breakdown.get(Category::Communication) > 0.0);
+        }
+    }
+
+    #[test]
+    fn imbalanced_group_pays_sync() {
+        let (hw, m, s) = setup();
+        let mut sim = Simulation::new(&hw, 4, 0);
+        for r in 0..4 {
+            // Rank 3 has a 2x-token chunk: everyone else waits at barriers.
+            let tokens = if r == 3 { 4096 } else { 2048 };
+            let w = ChunkWorkload::uniform(tokens, tokens / 2, &m);
+            sim.set_program(r, compile_rank_program(&hw, &m, &s, r, &[w], None));
+        }
+        let res = sim.run();
+        let mut agg = Breakdown::new();
+        for r in &res.ranks {
+            agg.merge(&r.breakdown);
+        }
+        let sync = agg.get(Category::Synchronization) / 4.0;
+        assert!(sync > 10e-6, "expected visible sync cost, got {sync}");
+        // The slow rank itself waits the least.
+        let s3 = res.ranks[3].breakdown.get(Category::Synchronization);
+        for r in 0..3 {
+            assert!(res.ranks[r].breakdown.get(Category::Synchronization) >= s3);
+        }
+    }
+
+    #[test]
+    fn routing_skew_creates_weight_level_sync() {
+        let (hw, m, s) = setup();
+        let w = ChunkWorkload::uniform(2048, 1024, &m);
+        let mut sim = Simulation::new(&hw, 4, 0);
+        for r in 0..4 {
+            // Rank 0 serves hot experts: 1.5x grouped-GEMM time.
+            let skew = if r == 0 { 1.5 } else { 1.0 };
+            let sk = vec![vec![skew; m.n_moe_layers()]];
+            sim.set_program(r, compile_rank_program(&hw, &m, &s, r, &[w], Some(&sk)));
+        }
+        let res = sim.run();
+        let s0 = res.ranks[0].breakdown.get(Category::Synchronization);
+        let s1 = res.ranks[1].breakdown.get(Category::Synchronization);
+        assert!(s1 > s0, "other ranks wait for the hot-expert rank");
+    }
+
+    #[test]
+    fn lockstep_iteration_latency_bounded_by_slowest() {
+        let (hw, m, s) = setup();
+        let mut sim = Simulation::new(&hw, 2, 0);
+        let wa = ChunkWorkload::uniform(1024, 512, &m);
+        let wb = ChunkWorkload::uniform(3072, 1536, &m);
+        sim.set_program(0, compile_rank_program(&hw, &m, &s, 0, &[wa], None));
+        sim.set_program(1, compile_rank_program(&hw, &m, &s, 1, &[wb], None));
+        let res = sim.run();
+        // Both finish at (almost) the same time: lockstep.  Small residual
+        // drift comes from the final combine whose per-rank volume differs
+        // (no barrier after it re-syncs the group).
+        let d = (res.ranks[0].finish_time - res.ranks[1].finish_time).abs();
+        assert!(d < res.makespan * 0.05, "lockstep violated: {d} of {}", res.makespan);
+    }
+}

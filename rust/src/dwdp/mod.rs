@@ -1,0 +1,409 @@
+//! DWDP execution strategy: asynchronous remote-weight prefetch.
+//!
+//! Two pieces live here:
+//!
+//! * [`build_copy_plan`] — the paper's Listing 1: split each remote expert
+//!   shard into fixed-size slices and emit them in round-robin order across
+//!   source peers, so the final DMA schedule interleaves destinations at
+//!   slice granularity (TDM, §4.3.2).  With TDM disabled it degenerates to
+//!   the baseline: one monolithic pull per peer, issued serially.
+//! * [`compile_rank_program`] — the per-rank SM program for a sequence of
+//!   context chunks: per layer, prefetch for layer `l+1` is issued at the
+//!   start of the MoE block of layer `l`, so it overlaps MoE(l) and
+//!   Attention(l+1) (§2's compute window) with double buffering; the rank
+//!   blocks only on `WaitPrefetch` right before MoE(l+1).
+
+use crate::config::{HardwareConfig, PaperModelConfig, ServingConfig};
+use crate::model::{dense_layer_ops, moe_layer_ops, ChunkWorkload};
+use crate::placement::ExpertPlacement;
+use crate::roofline::op_latency;
+use crate::sim::{ComputeStep, PlanKey, Slice, Step};
+use crate::util::Rng;
+
+/// Build the DMA copy plan for one layer's remote fetches.
+///
+/// `fetches` is the `(source_rank, expert)` list from the placement; every
+/// expert shard is `expert_bytes` long.  Faithful port of Listing 1: outer
+/// loop over slice offsets, inner round-robin over peers, so slices from
+/// different source ranks interleave in the final schedule.
+pub fn build_copy_plan(
+    fetches: &[(usize, usize)],
+    expert_bytes: f64,
+    slice_bytes: usize,
+    tdm: bool,
+) -> Vec<Slice> {
+    if fetches.is_empty() {
+        return Vec::new();
+    }
+    // Group into per-peer shard sizes (contiguous pull per peer).
+    let mut peers: Vec<usize> = fetches.iter().map(|&(s, _)| s).collect();
+    peers.sort_unstable();
+    peers.dedup();
+    let shard_bytes: Vec<f64> = peers
+        .iter()
+        .map(|&p| {
+            fetches.iter().filter(|&&(s, _)| s == p).count() as f64 * expert_bytes
+        })
+        .collect();
+
+    if !tdm {
+        // Baseline: serial monolithic pull per peer.
+        return peers
+            .iter()
+            .zip(&shard_bytes)
+            .map(|(&src, &bytes)| Slice { src, bytes })
+            .collect();
+    }
+
+    // Listing 1: iterate offsets first, then peers round-robin.
+    let s = slice_bytes as f64;
+    let mut plan = Vec::new();
+    let mut offset = 0.0f64;
+    let max_shard = shard_bytes.iter().cloned().fold(0.0, f64::max);
+    while offset < max_shard {
+        for (i, &src) in peers.iter().enumerate() {
+            let remaining = shard_bytes[i] - offset;
+            if remaining <= 0.0 {
+                continue;
+            }
+            plan.push(Slice { src, bytes: remaining.min(s) });
+        }
+        offset += s;
+    }
+    plan
+}
+
+/// Total bytes of a plan (for assertions / metrics).
+pub fn plan_bytes(plan: &[Slice]) -> f64 {
+    plan.iter().map(|s| s.bytes).sum()
+}
+
+/// Per-chunk inputs for program compilation: the workload plus the sampled
+/// per-layer activated-expert fetch lists.
+pub struct ChunkSpec {
+    pub workload: ChunkWorkload,
+    /// For each MoE layer: the (src, expert) fetch list.
+    pub fetches_per_layer: Vec<Vec<(usize, usize)>>,
+}
+
+impl ChunkSpec {
+    /// Sample fetch lists for every MoE layer using the on-demand model.
+    pub fn sample(
+        workload: ChunkWorkload,
+        model: &PaperModelConfig,
+        serving: &ServingConfig,
+        placement: &ExpertPlacement,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let fetches_per_layer = (0..model.n_moe_layers())
+            .map(|_| {
+                if serving.prefetch_fraction >= 1.0 {
+                    placement.remote_fetches(rank)
+                } else {
+                    placement.remote_fetches_sampled(rank, serving.prefetch_fraction, rng)
+                }
+            })
+            .collect();
+        ChunkSpec { workload, fetches_per_layer }
+    }
+}
+
+/// Output of program compilation.
+pub struct CompiledProgram {
+    pub steps: Vec<Step>,
+    pub plans: Vec<(PlanKey, Vec<Slice>)>,
+}
+
+/// Compile the DWDP SM program for `rank` over a sequence of chunks.
+///
+/// Schedule per MoE layer `l` (paper §2):
+/// ```text
+/// Attention(l)                       | prefetch(l+1) in flight
+/// WaitPrefetch(l)   [usually free]   |
+/// [DeviceCopy merge — only if merge_elim disabled]
+/// IssuePrefetch(l+2-buffer…)        -> actually l+1 issued at MoE(l) start
+/// MoE(l)                             |
+/// ```
+/// Double buffering means at most two plans are in flight; plan keys encode
+/// `(rank, chunk*L + l)`.
+pub fn compile_rank_program(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    rank: usize,
+    chunks: &[ChunkSpec],
+) -> CompiledProgram {
+    let n_moe = model.n_moe_layers();
+    let mut steps = Vec::new();
+    let mut plans = Vec::new();
+    let merge_bytes_per_expert = model.expert_bytes();
+
+    for (ci, chunk) in chunks.iter().enumerate() {
+        let w = &chunk.workload;
+        let plan_id = |l: usize| -> PlanKey { (rank, (ci * n_moe + l) as u32) };
+
+        // Register all plans for this chunk.
+        for (l, fetches) in chunk.fetches_per_layer.iter().enumerate() {
+            let plan = build_copy_plan(
+                fetches,
+                merge_bytes_per_expert,
+                serving.slice_bytes,
+                serving.tdm,
+            );
+            plans.push((plan_id(l), plan));
+        }
+
+        // Leading dense layers (no MoE, no prefetch).
+        for _ in 0..model.n_dense_layers {
+            for op in dense_layer_ops(model, w) {
+                steps.push(Step::Compute(ComputeStep {
+                    name: op.name,
+                    category: op.category,
+                    kind: op.kind,
+                    nominal: op_latency(hw, &op),
+                }));
+            }
+        }
+
+        // Prefetch for MoE layer 0 is issued as early as possible: at the
+        // start of the chunk's first MoE layer's attention.
+        steps.push(Step::IssuePrefetch { key: plan_id(0) });
+
+        for l in 0..n_moe {
+            let ops = moe_layer_ops(model, w);
+            let (pre_moe, moe): (Vec<_>, Vec<_>) = ops
+                .into_iter()
+                .partition(|o| matches!(o.name, "mla_projections" | "flash_attention" | "router"));
+            // Attention(l) — prefetch(l) still in flight beneath it.
+            for op in pre_moe {
+                steps.push(Step::Compute(ComputeStep {
+                    name: op.name,
+                    category: op.category,
+                    kind: op.kind,
+                    nominal: op_latency(hw, &op),
+                }));
+            }
+            // Block until layer l's experts arrived.
+            steps.push(Step::WaitPrefetch { key: plan_id(l) });
+            if !serving.merge_elim {
+                // Naive DWDP: D2D merge of the fetched shards into a
+                // contiguous buffer before the grouped GEMM launch (§4.2).
+                let fetched = chunk.fetches_per_layer[l].len() as f64 * merge_bytes_per_expert;
+                // Only the prefetched portion moves; local experts are
+                // already in place in the paper's layout.
+                steps.push(Step::DeviceCopy { bytes: fetched * 0.5 });
+            }
+            // Kick off prefetch for l+1: overlaps MoE(l) + Attention(l+1).
+            if l + 1 < n_moe {
+                steps.push(Step::IssuePrefetch { key: plan_id(l + 1) });
+            }
+            for op in moe {
+                steps.push(Step::Compute(ComputeStep {
+                    name: op.name,
+                    category: op.category,
+                    kind: op.kind,
+                    nominal: op_latency(hw, &op),
+                }));
+            }
+            // Layer l's receive buffer is released here (double buffering
+            // is implied: at most plan l+1 remains in flight).
+        }
+    }
+    CompiledProgram { steps, plans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+
+    fn fetches_3peers() -> Vec<(usize, usize)> {
+        // rank 0 pulls experts from peers 1, 2, 3 (two each).
+        vec![(1, 10), (1, 11), (2, 20), (2, 21), (3, 30), (3, 31)]
+    }
+
+    #[test]
+    fn monolithic_plan_one_pull_per_peer() {
+        let plan = build_copy_plan(&fetches_3peers(), 24e6, 1 << 20, false);
+        assert_eq!(plan.len(), 3);
+        assert!((plan_bytes(&plan) - 6.0 * 24e6).abs() < 1.0);
+        for s in &plan {
+            assert!((s.bytes - 48e6).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn tdm_plan_slices_and_interleaves() {
+        let slice = 1 << 20;
+        let plan = build_copy_plan(&fetches_3peers(), 24e6, slice, true);
+        // 48 MB per peer -> ~46 slices each, interleaved 1,2,3,1,2,3...
+        assert!((plan_bytes(&plan) - 6.0 * 24e6).abs() < 1.0);
+        assert!(plan.len() > 100);
+        assert_eq!(plan[0].src, 1);
+        assert_eq!(plan[1].src, 2);
+        assert_eq!(plan[2].src, 3);
+        assert_eq!(plan[3].src, 1);
+        for s in &plan {
+            assert!(s.bytes <= slice as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn tdm_handles_uneven_shards() {
+        // Peer 1 has 3 experts, peer 2 has 1.
+        let fetches = vec![(1, 0), (1, 1), (1, 2), (2, 3)];
+        let eb = 2.5 * (1 << 20) as f64; // 2.5 MB experts
+        let plan = build_copy_plan(&fetches, eb, 1 << 20, true);
+        assert!((plan_bytes(&plan) - 4.0 * eb).abs() < 1.0);
+        // After peer 2's shard is exhausted, only peer 1 slices remain.
+        let tail: Vec<usize> = plan.iter().rev().take(3).map(|s| s.src).collect();
+        assert!(tail.iter().all(|&s| s == 1), "{plan:?}");
+    }
+
+    #[test]
+    fn empty_fetches_empty_plan() {
+        assert!(build_copy_plan(&[], 1e6, 1 << 20, true).is_empty());
+        assert!(build_copy_plan(&[], 1e6, 1 << 20, false).is_empty());
+    }
+
+    #[test]
+    fn slice_bytes_larger_than_shard_degenerates() {
+        let fetches = vec![(1, 0), (2, 1)];
+        let plan = build_copy_plan(&fetches, 1e6, 100 << 20, true);
+        assert_eq!(plan.len(), 2);
+    }
+
+    fn setup() -> (HardwareConfig, PaperModelConfig, ServingConfig, ExpertPlacement) {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::tiny();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        let p = ExpertPlacement::minimal(m.n_experts, 4);
+        (hw, m, s, p)
+    }
+
+    #[test]
+    fn program_structure_prefetch_before_wait() {
+        let (hw, m, s, p) = setup();
+        let mut rng = Rng::new(0);
+        let w = ChunkWorkload::uniform(2048, 1024, &m);
+        let chunk = ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng);
+        let cp = compile_rank_program(&hw, &m, &s, 0, &[chunk]);
+        // Every WaitPrefetch(key) must be preceded by IssuePrefetch(key).
+        let mut issued = std::collections::HashSet::new();
+        for step in &cp.steps {
+            match step {
+                Step::IssuePrefetch { key } => {
+                    issued.insert(*key);
+                }
+                Step::WaitPrefetch { key } => {
+                    assert!(issued.contains(key), "wait before issue for {key:?}");
+                }
+                _ => {}
+            }
+        }
+        // One plan per MoE layer.
+        assert_eq!(cp.plans.len(), m.n_moe_layers());
+        // No barriers or collectives in DWDP.
+        assert!(!cp
+            .steps
+            .iter()
+            .any(|s| matches!(s, Step::Barrier { .. } | Step::Collective { .. })));
+    }
+
+    #[test]
+    fn merge_elim_toggles_device_copy() {
+        let (hw, m, mut s, p) = setup();
+        let mut rng = Rng::new(0);
+        let w = ChunkWorkload::uniform(2048, 1024, &m);
+        let mk = |s: &ServingConfig, rng: &mut Rng| {
+            let chunk = ChunkSpec::sample(w, &m, s, &p, 0, rng);
+            compile_rank_program(&hw, &m, s, 0, &[chunk])
+        };
+        s.merge_elim = true;
+        let a = mk(&s, &mut rng);
+        assert!(!a.steps.iter().any(|x| matches!(x, Step::DeviceCopy { .. })));
+        s.merge_elim = false;
+        let b = mk(&s, &mut rng);
+        assert!(b.steps.iter().any(|x| matches!(x, Step::DeviceCopy { .. })));
+    }
+
+    #[test]
+    fn double_buffering_schedule() {
+        // Two receive buffers: while MoE(l) consumes buffer A (its plan
+        // already waited-on), plan l+1 streams into buffer B.  Statically:
+        // (a) at most ONE issued-but-unwaited plan at any program point,
+        // (b) Issue(l+1) appears after Wait(l) but BEFORE layer l's
+        //     grouped_gemm — i.e. the transfer overlaps MoE(l).
+        let (hw, m, s, p) = setup();
+        let mut rng = Rng::new(1);
+        let w = ChunkWorkload::uniform(1024, 512, &m);
+        let chunks: Vec<ChunkSpec> = (0..3)
+            .map(|_| ChunkSpec::sample(w, &m, &s, &p, 2, &mut rng))
+            .collect();
+        let cp = compile_rank_program(&hw, &m, &s, 2, &chunks);
+        let mut unwaited = 0i32;
+        let mut pending_issue = false;
+        for step in &cp.steps {
+            match step {
+                Step::IssuePrefetch { .. } => {
+                    unwaited += 1;
+                    pending_issue = true;
+                    assert!(unwaited <= 1, "more than one plan in flight");
+                }
+                Step::WaitPrefetch { .. } => {
+                    unwaited -= 1;
+                    assert!(unwaited >= 0);
+                }
+                Step::Compute(c) if c.name == "grouped_gemm" => {
+                    // Every MoE block except the final layer's runs with the
+                    // next plan already issued (overlap).
+                    let _ = pending_issue;
+                }
+                _ => {}
+            }
+        }
+        // Check overlap explicitly: each Issue (after the first) is
+        // immediately preceded by a WaitPrefetch (l's arrival) and followed
+        // by grouped_gemm before the next WaitPrefetch.
+        let steps = &cp.steps;
+        for i in 1..steps.len() {
+            // Chunk-leading issues (plan 0) only overlap attention; the
+            // steady-state issues are those right after a WaitPrefetch.
+            if !matches!(steps[i - 1], Step::WaitPrefetch { .. }) {
+                continue;
+            }
+            if let Step::IssuePrefetch { .. } = steps[i] {
+                let mut saw_gemm_before_next_wait = false;
+                for st in &steps[i + 1..] {
+                    match st {
+                        Step::Compute(c) if c.name == "grouped_gemm" => {
+                            saw_gemm_before_next_wait = true;
+                            break;
+                        }
+                        Step::WaitPrefetch { .. } => break,
+                        _ => {}
+                    }
+                }
+                assert!(
+                    saw_gemm_before_next_wait,
+                    "prefetch at step {i} does not overlap a MoE block"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_fraction_shrinks_plans() {
+        let (hw, m, mut s, p) = setup();
+        s.prefetch_fraction = 0.25;
+        let mut rng = Rng::new(2);
+        let w = ChunkWorkload::uniform(1024, 512, &m);
+        let chunk = ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng);
+        let cp = compile_rank_program(&hw, &m, &s, 0, &[chunk]);
+        let total: f64 = cp.plans.iter().map(|(_, pl)| plan_bytes(pl)).sum();
+        let full = m.n_moe_layers() as f64 * 6.0 * m.expert_bytes();
+        assert!(total < full * 0.6, "total {total} full {full}");
+    }
+}

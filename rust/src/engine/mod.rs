@@ -1,0 +1,400 @@
+//! Context-server execution harness: workload → chunk schedules → rank
+//! programs → discrete-event simulation → serving metrics.
+//!
+//! This is the layer the experiment regenerators call: it assembles a
+//! DWDP or DEP group, feeds every rank an independent request stream
+//! (data-parallel serving), splits prompts into chunked-prefill
+//! iterations, and runs the group to completion.
+//!
+//! ## Calibration
+//!
+//! The per-forward-pass token budget is `max_num_tokens / CHUNK_DIVISOR`.
+//! TRT-LLM's context scheduler streams requests through micro-iterations
+//! whose effective size scales with the configured MNT; `CHUNK_DIVISOR =
+//! 16` lands the per-iteration GroupedGEMM time at the paper's Table 1
+//! scale (342 µs ⇔ 2048 tokens at MNT = 32768).  See EXPERIMENTS.md §E3.
+
+use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use crate::dep;
+use crate::dwdp::{self, ChunkSpec};
+use crate::metrics::Breakdown;
+use crate::model::ChunkWorkload;
+use crate::placement::ExpertPlacement;
+use crate::sim::{SimResult, Simulation, Step};
+use crate::util::stats;
+use crate::util::Rng;
+use crate::workload::{IslDist, RoutingSkew};
+
+/// MNT → per-iteration chunk size divisor (see module docs).
+pub const CHUNK_DIVISOR: usize = 16;
+
+/// A request's prefill, split into chunk workloads.
+#[derive(Debug, Clone)]
+struct PlannedRequest {
+    id: u64,
+    chunks: Vec<ChunkWorkload>,
+}
+
+/// Result of one context-group run.
+pub struct ContextRun {
+    pub sim: SimResult,
+    /// Prompt tokens processed across the whole group.
+    pub total_tokens: f64,
+    /// Group makespan, seconds.
+    pub makespan: f64,
+    /// Context tokens per second per GPU.
+    pub tps_per_gpu: f64,
+    /// Median time-to-last-prefill-chunk per request (context-side TTFT
+    /// proxy, includes in-queue time since all requests arrive at t=0).
+    pub median_ttft: f64,
+    /// Mean per-(rank, MoE-layer-iteration) breakdown — the Table 1 rows.
+    pub per_layer_breakdown: Breakdown,
+    /// Iterations (chunks) each rank executed.
+    pub iterations: usize,
+    /// Mean DVFS frequency over compute.
+    pub mean_freq: f64,
+}
+
+/// Plan `n_requests` per rank into chunked prefill iterations.
+fn plan_requests(
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    n_requests: usize,
+    chunk_tokens: usize,
+    rng: &mut Rng,
+) -> Vec<PlannedRequest> {
+    let dist = IslDist::from_serving(serving);
+    let mut out = Vec::with_capacity(n_requests);
+    for id in 0..n_requests {
+        let isl = dist.sample(rng);
+        let mut chunks = Vec::new();
+        let mut done = 0usize;
+        while done < isl {
+            let n = chunk_tokens.min(isl - done);
+            // Causal prefill: this chunk attends to everything before it
+            // plus (on average) half of itself.
+            let avg_ctx = done + n / 2;
+            chunks.push(ChunkWorkload::uniform(n, avg_ctx.max(1), model));
+            done += n;
+        }
+        out.push(PlannedRequest { id: id as u64, chunks });
+    }
+    out
+}
+
+/// Flatten per-request chunks into a rank's iteration sequence, recording
+/// which iteration finishes each request.
+fn rank_schedule(reqs: &[PlannedRequest]) -> (Vec<ChunkWorkload>, Vec<(u64, usize)>) {
+    let mut chunks = Vec::new();
+    let mut finish_at = Vec::new();
+    for r in reqs {
+        chunks.extend(r.chunks.iter().cloned());
+        finish_at.push((r.id, chunks.len() - 1));
+    }
+    (chunks, finish_at)
+}
+
+/// Run a context group: `n_requests` prompts per rank, data-parallel.
+pub fn run_context(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    n_requests: usize,
+    enable_trace: bool,
+) -> ContextRun {
+    let n = serving.group_size;
+    let chunk_tokens = (serving.max_num_tokens / CHUNK_DIVISOR).max(64);
+    let mut root = Rng::new(serving.seed);
+    let placement =
+        ExpertPlacement::balanced(model.n_experts, n, serving.local_experts.max(1));
+    let skew_model = RoutingSkew::new(model.n_experts, model.top_k, serving.routing_skew);
+
+    // Per-rank request plans (independent streams -> imbalance).
+    let mut per_rank: Vec<Vec<PlannedRequest>> = (0..n)
+        .map(|r| {
+            let mut rng = root.fork(r as u64);
+            plan_requests(model, serving, n_requests, chunk_tokens, &mut rng)
+        })
+        .collect();
+
+    // DEP runs in lockstep: every rank needs the same iteration count.
+    // Pad shorter ranks with (near-)empty chunks — a rank that runs out of
+    // requests still joins every collective with zero tokens, exactly like
+    // the real runtime.  (Truncating instead would bias DEP's TTFT down.)
+    if serving.mode == ParallelMode::Dep {
+        let max_chunks = per_rank
+            .iter()
+            .map(|rs| rs.iter().map(|r| r.chunks.len()).sum::<usize>())
+            .max()
+            .unwrap();
+        for rs in &mut per_rank {
+            let have: usize = rs.iter().map(|r| r.chunks.len()).sum();
+            if have < max_chunks {
+                let w = ChunkWorkload::uniform(1, 1, model);
+                rs.push(PlannedRequest {
+                    id: u64::MAX,
+                    chunks: vec![w; max_chunks - have],
+                });
+            }
+        }
+    }
+
+    let mut sim = Simulation::new(hw, n, serving.seed ^ 0xD17D);
+    if enable_trace {
+        sim.enable_trace();
+    }
+    if serving.tdm {
+        sim.dst_inflight = hw.ce_inflight;
+    }
+
+    let mut total_tokens = 0.0;
+    let mut rank_tokens = vec![0.0f64; n];
+    let mut iterations = 0usize;
+    for (r, reqs) in per_rank.iter().enumerate() {
+        let (chunks, finishes) = rank_schedule(reqs);
+        iterations = iterations.max(chunks.len());
+        rank_tokens[r] = chunks.iter().map(|c| c.new_tokens as f64).sum::<f64>();
+        total_tokens += rank_tokens[r];
+        let mut program: Vec<Step>;
+        match serving.mode {
+            ParallelMode::Dwdp => {
+                let mut rng = root.fork(1000 + r as u64);
+                let specs: Vec<ChunkSpec> = chunks
+                    .iter()
+                    .map(|w| ChunkSpec::sample(*w, model, serving, &placement, r, &mut rng))
+                    .collect();
+                let compiled = dwdp::compile_rank_program(hw, model, serving, r, &specs);
+                for (key, plan) in compiled.plans {
+                    sim.register_plan(key, plan);
+                }
+                program = compiled.steps;
+            }
+            ParallelMode::Dep => {
+                // Weight-level imbalance: rank-shard load factor per chunk
+                // per layer from the routing-skew model.
+                let mut rng = root.fork(2000 + r as u64);
+                let skews: Vec<Vec<f64>> = chunks
+                    .iter()
+                    .map(|w| {
+                        (0..model.n_moe_layers())
+                            .map(|_| {
+                                if serving.routing_skew == 0.0 {
+                                    1.0
+                                } else {
+                                    shard_load_factor(&skew_model, w.new_tokens, n, r, &mut rng)
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                program =
+                    dep::compile_rank_program(hw, model, serving, r, &chunks, Some(&skews));
+            }
+        }
+        // Insert request-completion marks.
+        program = insert_marks(program, &finishes, serving.mode, model);
+        sim.set_program(r, program);
+    }
+
+    let res = sim.run();
+    let makespan = res.makespan;
+    // Steady-state throughput: each rank's tokens over *its own* busy span
+    // (an async DWDP rank that finishes early would immediately take new
+    // work in steady state; charging it the group's makespan would invent
+    // an idle-tail penalty the real system does not have).
+    let tps_per_gpu = res
+        .ranks
+        .iter()
+        .enumerate()
+        .map(|(r, rr)| rank_tokens[r] / rr.finish_time.max(1e-9))
+        .sum::<f64>()
+        / n as f64;
+
+    // TTFT proxy: per-request completion marks.
+    let mut ttfts: Vec<f64> = Vec::new();
+    for r in &res.ranks {
+        for &(tag, t) in &r.marks {
+            if tag != u64::MAX {
+                ttfts.push(t);
+            }
+        }
+    }
+    let median_ttft = stats::median(&ttfts);
+
+    // Per-layer breakdown: average over ranks, iterations, and MoE layers.
+    let mut agg = Breakdown::new();
+    for r in &res.ranks {
+        agg.merge(&r.breakdown);
+    }
+    let layer_iters = (n * iterations * model.n_moe_layers()).max(1) as f64;
+    let per_layer_breakdown = agg.scaled(1.0 / layer_iters);
+    let mean_freq =
+        res.ranks.iter().map(|r| r.mean_freq).sum::<f64>() / res.ranks.len() as f64;
+
+    ContextRun {
+        sim: res,
+        total_tokens,
+        makespan,
+        tps_per_gpu,
+        median_ttft,
+        per_layer_breakdown,
+        iterations,
+        mean_freq,
+    }
+}
+
+/// DEP weight-level imbalance: the load factor of rank `r`'s expert shard
+/// relative to a balanced shard, for one chunk's routing draw.
+fn shard_load_factor(
+    skew: &RoutingSkew,
+    tokens: usize,
+    n_ranks: usize,
+    rank: usize,
+    rng: &mut Rng,
+) -> f64 {
+    // Sample on a subsampled token count for speed; ratios converge fast.
+    let sample_tokens = tokens.min(256);
+    let loads = skew.sample_loads(sample_tokens, rng);
+    let per_shard = loads.len() / n_ranks;
+    let start = rank * per_shard;
+    let end = ((rank + 1) * per_shard).min(loads.len());
+    let mine: usize = loads[start..end].iter().sum();
+    let total: usize = loads.iter().sum();
+    let balanced = total as f64 / n_ranks as f64;
+    if balanced == 0.0 {
+        1.0
+    } else {
+        (mine as f64 / balanced).max(0.1)
+    }
+}
+
+/// Insert `Mark` steps after each request's final chunk.
+///
+/// The program is a flat step list; chunk boundaries are found by counting
+/// `elementwise_glue` compute steps (the last op of every MoE layer) — the
+/// final MoE layer of chunk *i* ends iteration *i*.
+fn insert_marks(
+    program: Vec<Step>,
+    finishes: &[(u64, usize)],
+    _mode: ParallelMode,
+    model: &PaperModelConfig,
+) -> Vec<Step> {
+    let per_chunk = model.n_moe_layers() + model.n_dense_layers;
+    let mut layer_ends = 0usize;
+    let mut out = Vec::with_capacity(program.len() + finishes.len());
+    let mut fin_iter = finishes.iter().peekable();
+    for step in program {
+        let is_layer_end = matches!(
+            &step,
+            Step::Compute(c) if c.name == "elementwise_glue" || c.name == "dense_ffn"
+        );
+        out.push(step);
+        if is_layer_end {
+            layer_ends += 1;
+            if layer_ends % per_chunk == 0 {
+                let chunk_idx = layer_ends / per_chunk - 1;
+                while let Some(&&(id, at)) = fin_iter.peek() {
+                    if at == chunk_idx {
+                        out.push(Step::Mark { tag: id });
+                        fin_iter.next();
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Category;
+
+    fn setup(mode: ParallelMode) -> (HardwareConfig, PaperModelConfig, ServingConfig) {
+        let mut hw = HardwareConfig::gb200();
+        hw.link_jitter_prob = 0.0;
+        let m = PaperModelConfig::tiny();
+        let mut s = ServingConfig::default_context(mode, 4);
+        s.isl = 2048;
+        s.max_num_tokens = 16384; // chunk = 1024
+        s.validate(&m).unwrap();
+        (hw, m, s)
+    }
+
+    #[test]
+    fn dep_run_produces_sync_and_comm() {
+        let (hw, m, s) = setup(ParallelMode::Dep);
+        let run = run_context(&hw, &m, &s, 3, false);
+        assert!(run.tps_per_gpu > 0.0);
+        assert!(run.per_layer_breakdown.get(Category::Communication) > 0.0);
+        assert!(run.per_layer_breakdown.get(Category::Synchronization) > 0.0);
+        assert_eq!(run.per_layer_breakdown.get(Category::P2pCopy), 0.0);
+    }
+
+    #[test]
+    fn dwdp_run_has_p2p_but_no_collectives() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let run = run_context(&hw, &m, &s, 3, false);
+        assert!(run.tps_per_gpu > 0.0);
+        assert_eq!(run.per_layer_breakdown.get(Category::Communication), 0.0);
+        assert!(run.per_layer_breakdown.get(Category::P2pCopy) > 0.0);
+    }
+
+    #[test]
+    fn dwdp_beats_dep_under_imbalance() {
+        let (hw, m, mut s) = setup(ParallelMode::Dep);
+        s.isl_ratio = 0.5; // strong request-level imbalance
+        let dep = run_context(&hw, &m, &s, 4, false);
+        s.mode = ParallelMode::Dwdp;
+        let dwdp = run_context(&hw, &m, &s, 4, false);
+        let speedup = dwdp.tps_per_gpu / dep.tps_per_gpu;
+        assert!(speedup > 1.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn ttft_marks_recorded_per_request() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let run = run_context(&hw, &m, &s, 3, false);
+        let n_marks: usize = run.sim.ranks.iter().map(|r| r.marks.len()).sum();
+        assert_eq!(n_marks, 3 * 4);
+        assert!(run.median_ttft > 0.0);
+        assert!(run.median_ttft <= run.makespan);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let a = run_context(&hw, &m, &s, 2, false);
+        let b = run_context(&hw, &m, &s, 2, false);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.median_ttft, b.median_ttft);
+    }
+
+    #[test]
+    fn trace_enabled_collects_spans() {
+        let (hw, m, s) = setup(ParallelMode::Dwdp);
+        let run = run_context(&hw, &m, &s, 1, true);
+        assert!(!run.sim.trace.spans.is_empty());
+    }
+
+    #[test]
+    fn chunking_covers_all_prompt_tokens() {
+        let m = PaperModelConfig::tiny();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.isl = 5000;
+        s.isl_ratio = 1.0;
+        s.validate(&m).unwrap();
+        let mut rng = Rng::new(0);
+        let reqs = plan_requests(&m, &s, 5, 2048, &mut rng);
+        for r in &reqs {
+            let total: usize = r.chunks.iter().map(|c| c.new_tokens).sum();
+            assert_eq!(total, 5000);
+            // Later chunks see deeper context.
+            for w in r.chunks.windows(2) {
+                assert!(w[1].avg_ctx > w[0].avg_ctx);
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Experiment regenerators — one entry point per table/figure in the
+//! paper's evaluation (DESIGN.md §5 maps each to its modules).
+//!
+//! Every function returns a [`Table`] whose rows mirror the paper's
+//! artifact; `dwdp-repro experiment <id>` prints it (and optionally CSV).
+//! Calibration constants that tie the simulator to the paper's measured
+//! scale are centralized in [`calib`] and documented in EXPERIMENTS.md.
+
+pub mod context;
+pub mod e2e;
+pub mod power;
+
+use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use crate::contention::{contention_distribution, monte_carlo_contention};
+use crate::roofline::{crossover_isl, fig3_sweep};
+use crate::util::table::{pct, speedup, us, Table};
+
+/// Calibration presets (see EXPERIMENTS.md §Calibration for derivations).
+pub mod calib {
+    use super::*;
+
+    /// The paper's context-server deployment evidently fetches ~320 MB of
+    /// remote expert weights per layer per rank (Table 1: 429 µs of P2P at
+    /// ~750 GB/s), i.e. ~13 of 192 remote experts — strong EPLB locality +
+    /// on-demand fetch.  This fraction reproduces that operating point.
+    pub const TABLE1_PREFETCH_FRACTION: f64 = 0.07;
+
+    /// Fig. 3's batch-1 crossover at ~16K ISL implies an effective
+    /// batch-1 pull bandwidth near 300 GB/s (single in-flight pull chain,
+    /// no batching of transfers).
+    pub const FIG3_CE_BW: f64 = 300.0e9;
+
+    /// Context-ablation serving config (Table 1/3/4 base).
+    pub fn context_serving(mode: ParallelMode, group: usize) -> ServingConfig {
+        let mut s = ServingConfig::default_context(mode, group);
+        s.prefetch_fraction = TABLE1_PREFETCH_FRACTION;
+        s.seed = 7;
+        s
+    }
+
+    /// Requests per rank for context experiments (quick mode for tests).
+    pub fn n_requests() -> usize {
+        if std::env::var("DWDP_QUICK").is_ok() {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// E2 — Figure 3: roofline compute/prefetch and DEP/DWDP ratios vs ISL.
+pub fn fig3() -> Table {
+    let mut hw = HardwareConfig::gb200();
+    hw.ce_bw = calib::FIG3_CE_BW;
+    let model = PaperModelConfig::deepseek_r1();
+    let mut serving = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+    serving.validate(&model).unwrap();
+    let isls = [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072, 262144];
+    let pts = fig3_sweep(&hw, &model, &serving, &isls);
+    let mut t = Table::new(&[
+        "ISL",
+        "T_compute (µs)",
+        "T_prefetch (µs)",
+        "T_all2all (µs)",
+        "compute/prefetch",
+        "T_DEP/T_DWDP",
+    ])
+    .with_title("Figure 3 — roofline analysis, DeepSeek-R1 context phase, DWDP4 vs DEP4, bs=1");
+    for p in &pts {
+        t.row(vec![
+            p.isl.to_string(),
+            us(p.t_compute_us),
+            us(p.t_prefetch_us),
+            us(p.t_all2all_us),
+            format!("{:.3}", p.compute_prefetch_ratio),
+            format!("{:.3}", p.dep_dwdp_ratio),
+        ]);
+    }
+    if let Some(x) = crossover_isl(&hw, &model, &serving, 1024, 262144) {
+        t.row(vec![
+            format!("crossover ≈ {x}"),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "1.000".into(),
+            "-".into(),
+        ]);
+    }
+    t
+}
+
+/// E4 — Table 2: contention probabilities under the random model, with a
+/// Monte-Carlo cross-check column.
+pub fn table2() -> Table {
+    let mut t = Table::new(&[
+        "Config", "C = 1", "C = 2", "C = 3", "C = 4", "C = 5", "C = 6", "C = 7", "C = 8",
+        "max |MC-analytic|",
+    ])
+    .with_title("Table 2 — Pr[C = c] (%) under the random asynchronous model");
+    for n in [3usize, 4, 6, 8, 12, 16] {
+        let d = contention_distribution(n);
+        let mc = monte_carlo_contention(n, 100_000, 42);
+        let max_err = d
+            .iter()
+            .zip(&mc)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let mut row = vec![format!("DWDP{n}")];
+        for c in 0..8 {
+            row.push(d.get(c).map(|&p| pct(p)).unwrap_or_else(|| "-".into()));
+        }
+        row.push(format!("{max_err:.4}"));
+        t.row(row);
+    }
+    t
+}
+
+/// Convenience: a ratio formatted like the paper's speedup tables.
+pub(crate) fn ratio(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        "-".into()
+    } else {
+        speedup(a / b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_table_has_crossover_row() {
+        let t = fig3();
+        let s = t.render();
+        assert!(s.contains("crossover"));
+        assert!(t.n_rows() >= 9);
+    }
+
+    #[test]
+    fn table2_matches_paper_spot_values() {
+        let s = table2().render();
+        // DWDP3: 50 / 50; DWDP4: 44.44 / 44.44 / 11.11
+        assert!(s.contains("DWDP3"));
+        assert!(s.contains("44.44"));
+        assert!(s.contains("11.11"));
+        assert!(s.contains("DWDP16"));
+    }
+
+    #[test]
+    fn ratio_formats() {
+        assert_eq!(ratio(1.1, 1.0), "1.10");
+        assert_eq!(ratio(1.0, 0.0), "-");
+    }
+}

@@ -1,0 +1,168 @@
+//! Appendix-A experiments: Table 7 / Figure 8 (overlap patterns vs DVFS
+//! frequency) and the Figure 7 pattern traces.
+//!
+//! Reproduces the three scheduling configurations with synthetic programs
+//! on a single simulated GPU:
+//!
+//! 1. **Intermittent Compute** — attention modules separated by large
+//!    sleeps, no communication: maximum power headroom.
+//! 2. **Long-Duration Overlap (with gaps)** — each attention module
+//!    overlaps one long CE transfer, gaps preserved.
+//! 3. **Short-Duration Overlap** — tightly scheduled attention modules
+//!    with small CE transfers, the real-DWDP-like pattern.
+
+use crate::config::HardwareConfig;
+use crate::model::{Category, OpKind};
+use crate::sim::{ComputeStep, Simulation, Step};
+use crate::trace::TraceSink;
+use crate::util::table::{f, Table};
+
+/// One attention "module" (16K-context scale ≈ 2 ms of SM time).
+fn attn_module() -> Step {
+    Step::Compute(ComputeStep {
+        name: "attention_module",
+        category: Category::Attention,
+        kind: OpKind::FlashAttention,
+        nominal: 2.0e-3,
+    })
+}
+
+const N_MODULES: usize = 24;
+
+pub struct PatternResult {
+    pub name: &'static str,
+    pub kernel_time: f64,
+    pub mean_freq: f64,
+    pub trace: TraceSink,
+}
+
+fn run_pattern(name: &'static str, program: Vec<Step>, hw: &HardwareConfig) -> PatternResult {
+    let mut sim = Simulation::new(hw, 1, 11);
+    sim.enable_trace();
+    sim.set_program(0, program);
+    let res = sim.run();
+    PatternResult {
+        name,
+        kernel_time: res.ranks[0].breakdown.get(Category::Attention) / N_MODULES as f64,
+        mean_freq: res.ranks[0].mean_freq,
+        trace: res.trace,
+    }
+}
+
+/// Run the three patterns; returns results ordered as the paper's Table 7.
+pub fn run_patterns() -> Vec<PatternResult> {
+    let mut hw = HardwareConfig::gb200();
+    hw.link_jitter_prob = 0.0;
+    let gap = 8.0e-3; // sleep >> power_tau: full recovery
+
+    // 1. Intermittent: sleep, attention, sleep, ...
+    let mut p1 = Vec::new();
+    for _ in 0..N_MODULES {
+        p1.push(Step::Sleep { secs: gap });
+        p1.push(attn_module());
+    }
+
+    // 2. Long-duration overlap: one long CE task spanning each module,
+    //    gaps preserved.
+    let mut p2 = Vec::new();
+    for _ in 0..N_MODULES {
+        p2.push(Step::Sleep { secs: gap });
+        p2.push(Step::CeLocalTask { bytes: 2.4e-3 * hw.ce_bw });
+        p2.push(attn_module());
+    }
+
+    // 3. Short-duration overlap: tight schedule, small transfers.
+    let mut p3 = Vec::new();
+    for _ in 0..N_MODULES {
+        p3.push(Step::CeLocalTask { bytes: 2.0e-3 * hw.ce_bw });
+        p3.push(attn_module());
+    }
+
+    vec![
+        run_pattern("Intermittent Compute", p1, &hw),
+        run_pattern("Long-Duration Overlap", p2, &hw),
+        run_pattern("Short-Duration Overlap", p3, &hw),
+    ]
+}
+
+/// E15 — Table 7 / Figure 8: normalized kernel time and GPU frequency.
+pub fn table7() -> Table {
+    let rs = run_patterns();
+    let base_time = rs[0].kernel_time;
+    let base_freq = rs[0].mean_freq;
+    let mut t = Table::new(&["Pattern", "Normalized Kernel Time", "Normalized GPU Frequency"])
+        .with_title("Table 7 / Fig. 8 — attention module under three communication-overlap patterns");
+    for r in &rs {
+        t.row(vec![
+            r.name.to_string(),
+            f(r.kernel_time / base_time, 3),
+            f(r.mean_freq / base_freq, 3),
+        ]);
+    }
+    t
+}
+
+/// E16 — Figure 7: merged trace of the three patterns (stacked tracks).
+pub fn fig7_trace() -> TraceSink {
+    let rs = run_patterns();
+    let mut merged = TraceSink::enabled();
+    for r in rs {
+        for s in r.trace.spans {
+            merged.record(
+                &format!("{}::{}", r.name, s.track),
+                &s.name,
+                &s.cat,
+                s.start,
+                s.dur,
+            );
+        }
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_overlap_slowest_lowest_freq() {
+        let rs = run_patterns();
+        assert_eq!(rs.len(), 3);
+        // Paper Table 7: time 1.000 < 1.049 < 1.226; freq 1.0 > 0.963 > 0.798.
+        assert!(rs[1].kernel_time > rs[0].kernel_time * 1.005, "long-overlap should slow");
+        assert!(rs[2].kernel_time > rs[1].kernel_time, "short-overlap slowest");
+        assert!(rs[1].mean_freq < rs[0].mean_freq);
+        assert!(rs[2].mean_freq < rs[1].mean_freq);
+    }
+
+    #[test]
+    fn kernel_time_tracks_frequency() {
+        // Fig. 8's correlation: time_i/time_0 ≈ freq_0/freq_i within 10%.
+        let rs = run_patterns();
+        for r in &rs[1..] {
+            let t_ratio = r.kernel_time / rs[0].kernel_time;
+            let f_ratio = rs[0].mean_freq / r.mean_freq;
+            assert!(
+                (t_ratio / f_ratio - 1.0).abs() < 0.12,
+                "{}: time {t_ratio:.3} vs 1/freq {f_ratio:.3}",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn table7_renders_three_rows() {
+        let t = table7();
+        assert_eq!(t.n_rows(), 3);
+        assert!(t.render().contains("Short-Duration Overlap"));
+    }
+
+    #[test]
+    fn fig7_trace_has_all_patterns() {
+        let tr = fig7_trace();
+        let tracks: std::collections::HashSet<&str> =
+            tr.spans.iter().map(|s| s.track.as_str()).collect();
+        assert!(tracks.iter().any(|t| t.starts_with("Intermittent")));
+        assert!(tracks.iter().any(|t| t.starts_with("Short-Duration")));
+    }
+}

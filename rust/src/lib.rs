@@ -1,0 +1,42 @@
+//! # DWDP — Distributed Weight Data Parallelism
+//!
+//! Reproduction of *"DWDP: Distributed Weight Data Parallelism for
+//! High-Performance LLM Inference on NVL72"* (NVIDIA, CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request routing,
+//!   chunked-prefill batching, disaggregated context/generation servers,
+//!   the DWDP prefetch scheduler with TDM contention mitigation, the DEP
+//!   baseline, and a discrete-event GB200/NVL72 hardware simulator that
+//!   regenerates every table and figure of the paper's evaluation.
+//! * **Layer 2 (python/compile/model.py)** — a MoE transformer in JAX whose
+//!   MoE layers execute with merged (DEP) or split (DWDP) weights,
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels: the
+//!   split-weight grouped GEMM (the paper's §4.2 merge elimination), causal
+//!   flash attention, and top-k gating.
+//!
+//! Python never runs at request time: [`runtime`] loads the HLO artifacts
+//! through PJRT and the coordinator drives per-layer execution, feeding the
+//! prefetched weight buffers to the split-weight executable.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod config;
+pub mod contention;
+pub mod coordinator;
+pub mod dep;
+pub mod dwdp;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod placement;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workload;

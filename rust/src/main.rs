@@ -1,0 +1,251 @@
+//! `dwdp-repro` — launcher for the DWDP reproduction.
+//!
+//! ```text
+//! dwdp-repro experiment <id> [--csv] [--out FILE]   regenerate a paper table/figure
+//! dwdp-repro experiment all [--out-dir DIR]         regenerate everything
+//! dwdp-repro trace (--contention | --overlap-patterns) [--out FILE]
+//! dwdp-repro contention --group N                   analytic Pr[C=c] for one group size
+//! dwdp-repro serve [--mode dwdp|dep] [--ctx-groups N] [--gen-gpus M]
+//!                  [--rate R] [--requests K]        disaggregated serving simulation
+//! dwdp-repro info                                   print the config presets
+//! ```
+//!
+//! Experiment ids: fig1 fig3 fig4 table1 table2 table3a table3b table3c
+//! table3d table4 merge_elim fig5 table5 table6 table7.
+//!
+//! (Argument parsing is hand-rolled: the offline build environment carries
+//! no clap.)
+
+use std::collections::HashMap;
+
+use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use dwdp::contention::contention_distribution;
+use dwdp::coordinator::{DisaggSim, RoutePolicy};
+use dwdp::experiments::{self, calib};
+use dwdp::util::table::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> i32 {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            usage();
+            return 2;
+        }
+    };
+    let flags = parse_flags(rest);
+    match cmd {
+        "experiment" | "exp" => experiment(rest.first().map(String::as_str), &flags),
+        "trace" => trace(&flags),
+        "contention" => contention(&flags),
+        "serve" => serve(&flags),
+        "info" => {
+            info();
+            0
+        }
+        "help" | "--help" | "-h" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            2
+        }
+    }
+}
+
+fn usage() {
+    eprintln!("{}", include_str!("main.rs").lines().skip(2).take(12).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+}
+
+/// `--key value` and bare `--flag` parsing.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn emit(t: &Table, flags: &HashMap<String, String>) {
+    let text = if flags.contains_key("csv") { t.render_csv() } else { t.render() };
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, &text).expect("write output");
+        eprintln!("wrote {path}");
+    } else {
+        println!("{text}");
+    }
+}
+
+const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig3", "fig4", "table1", "table2", "table3a", "table3b", "table3c", "table3d",
+    "table4", "merge_elim", "fig5", "table5", "table6", "table7", "ablation_slice",
+    "ablation_redundancy", "ablation_fraction",
+];
+
+fn experiment(id: Option<&str>, flags: &HashMap<String, String>) -> i32 {
+    let Some(id) = id else {
+        eprintln!("experiment ids: {}", ALL_EXPERIMENTS.join(" "));
+        return 2;
+    };
+    if flags.contains_key("quick") {
+        std::env::set_var("DWDP_QUICK", "1");
+    }
+    if id == "all" {
+        let dir = flags.get("out-dir").cloned().unwrap_or_else(|| "results".into());
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        for e in ALL_EXPERIMENTS {
+            eprintln!("== {e} ==");
+            let t = run_one(e);
+            std::fs::write(format!("{dir}/{e}.md"), t.render()).unwrap();
+            std::fs::write(format!("{dir}/{e}.csv"), t.render_csv()).unwrap();
+            println!("{}", t.render());
+        }
+        eprintln!("results in {dir}/");
+        return 0;
+    }
+    if !ALL_EXPERIMENTS.contains(&id) {
+        eprintln!("unknown experiment {id}; ids: {}", ALL_EXPERIMENTS.join(" "));
+        return 2;
+    }
+    let t = run_one(id);
+    emit(&t, flags);
+    0
+}
+
+fn run_one(id: &str) -> Table {
+    match id {
+        "fig1" => experiments::context::fig1(),
+        "fig3" => experiments::fig3(),
+        "fig4" => {
+            let (t, trace) = experiments::context::fig4_trace();
+            trace.write_chrome_trace("fig4_trace.json").ok();
+            eprintln!("chrome trace: fig4_trace.json");
+            t
+        }
+        "table1" => experiments::context::table1(),
+        "table2" => experiments::table2(),
+        "table3a" => experiments::context::table3a(),
+        "table3b" => experiments::context::table3b(),
+        "table3c" => experiments::context::table3c(),
+        "table3d" => experiments::context::table3d(),
+        "table4" => experiments::context::table4(),
+        "merge_elim" => experiments::context::merge_elim(),
+        "fig5" => experiments::e2e::fig5(),
+        "table5" => experiments::e2e::table5(),
+        "table6" => experiments::e2e::table6(),
+        "table7" => experiments::power::table7(),
+        "ablation_slice" => experiments::context::ablation_slice_size(),
+        "ablation_redundancy" => experiments::context::ablation_redundancy(),
+        "ablation_fraction" => experiments::context::ablation_prefetch_fraction(),
+        _ => unreachable!(),
+    }
+}
+
+fn trace(flags: &HashMap<String, String>) -> i32 {
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "trace.json".to_string());
+    if flags.contains_key("overlap-patterns") {
+        let t = experiments::power::fig7_trace();
+        t.write_chrome_trace(&out).expect("write trace");
+    } else {
+        std::env::set_var("DWDP_QUICK", "1");
+        let (table, t) = experiments::context::fig4_trace();
+        println!("{}", table.render());
+        t.write_chrome_trace(&out).expect("write trace");
+    }
+    eprintln!("wrote {out} (open in ui.perfetto.dev)");
+    0
+}
+
+fn contention(flags: &HashMap<String, String>) -> i32 {
+    let n: usize = flags.get("group").and_then(|s| s.parse().ok()).unwrap_or(4);
+    if n < 3 {
+        eprintln!("--group must be >= 3");
+        return 2;
+    }
+    let d = contention_distribution(n);
+    let mut t = Table::new(&["C", "Pr[C=c] (%)"])
+        .with_title(&format!("Contention distribution, DWDP{n}"));
+    for (c, p) in d.iter().enumerate() {
+        t.row(vec![(c + 1).to_string(), format!("{:.6}", p * 100.0)]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn serve(flags: &HashMap<String, String>) -> i32 {
+    let mode = match flags.get("mode").map(String::as_str) {
+        Some("dep") => ParallelMode::Dep,
+        _ => ParallelMode::Dwdp,
+    };
+    let ctx_groups: usize = flags.get("ctx-groups").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let gen_gpus: usize = flags.get("gen-gpus").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let rate: f64 = flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(3.0);
+    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let group: usize = flags.get("group").and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let hw = HardwareConfig::gb200();
+    let model = PaperModelConfig::deepseek_r1();
+    let mut serving = calib::context_serving(mode, group);
+    if let Some(isl) = flags.get("isl").and_then(|s| s.parse().ok()) {
+        serving.isl = isl;
+    }
+    if let Err(e) = serving.validate(&model) {
+        eprintln!("config error: {e}");
+        return 2;
+    }
+    let sim = DisaggSim {
+        hw,
+        model,
+        serving,
+        n_ctx_groups: ctx_groups,
+        n_gen_gpus: gen_gpus,
+        route_policy: RoutePolicy::LeastLoaded,
+    };
+    let p = sim.run(requests, rate);
+    let mut t = Table::new(&["metric", "value"]).with_title(&format!(
+        "Disaggregated serving — {} ctx groups × {} GPUs ({}), {} gen GPUs, {} req @ {}/s",
+        ctx_groups,
+        group,
+        mode.name(),
+        gen_gpus,
+        requests,
+        rate
+    ));
+    t.row(vec!["TPS/user".into(), format!("{:.1}", p.tps_user)]);
+    t.row(vec!["output TPS/GPU".into(), format!("{:.1}", p.tps_gpu)]);
+    t.row(vec!["median TTFT (ms)".into(), format!("{:.0}", p.median_ttft * 1e3)]);
+    t.row(vec!["requests".into(), p.n_requests.to_string()]);
+    println!("{}", t.render());
+    0
+}
+
+fn info() {
+    let hw = HardwareConfig::gb200();
+    let m = PaperModelConfig::deepseek_r1();
+    let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+    s.validate(&m).unwrap();
+    println!("hardware: {hw:#?}");
+    println!("model: {m:#?}");
+    println!("serving defaults: {s:#?}");
+}

@@ -1,0 +1,229 @@
+//! Serving metrics: kernel-category breakdowns, TPS/GPU, TPS/user, TTFT.
+//!
+//! The breakdown accumulates per-[`Category`] time exactly like the paper's
+//! Table 1, and [`ServingMetrics`] aggregates the end-to-end measures used
+//! in §5.3 (median TTFT including queueing, per-user and per-GPU token
+//! rates).
+
+use crate::model::Category;
+use crate::util::stats;
+
+/// Per-category accumulated time (seconds) for one rank or one aggregate.
+///
+/// Array-backed (indexed by [`Category::index`]) — `add` sits on the
+/// simulator's per-slice/per-quantum hot path (§Perf), where a HashMap's
+/// hashing dominated profile time.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    times: [f64; 8],
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Breakdown::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, cat: Category, seconds: f64) {
+        self.times[cat.index()] += seconds;
+    }
+
+    #[inline]
+    pub fn get(&self, cat: Category) -> f64 {
+        self.times[cat.index()]
+    }
+
+    /// Critical-path total: every category except P2P copy, which runs on
+    /// the copy engine concurrently with compute (the paper's Table 1
+    /// reports it separately with a "–" delta for the same reason).
+    pub fn critical_path(&self) -> f64 {
+        self.total_all() - self.get(Category::P2pCopy)
+    }
+
+    /// Total including the off-path copy-engine time.
+    pub fn total_all(&self) -> f64 {
+        self.times.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (a, b) in self.times.iter_mut().zip(&other.times) {
+            *a += b;
+        }
+    }
+
+    /// Scale all entries (e.g. averaging over layers or ranks).
+    pub fn scaled(&self, factor: f64) -> Breakdown {
+        let mut out = self.clone();
+        for v in &mut out.times {
+            *v *= factor;
+        }
+        out
+    }
+}
+
+/// Record of one completed request's lifecycle.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    /// First token emitted (context phase done), seconds.
+    pub first_token: f64,
+    /// Last token emitted, seconds.
+    pub finish: f64,
+    pub isl: usize,
+    pub osl: usize,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Per-user decode throughput: output tokens over the generation span.
+    pub fn user_tps(&self) -> f64 {
+        let gen_span = (self.finish - self.first_token).max(1e-9);
+        if self.osl <= 1 {
+            return self.osl as f64 / gen_span;
+        }
+        (self.osl as f64 - 1.0) / gen_span
+    }
+}
+
+/// Aggregated serving metrics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub records: Vec<RequestRecord>,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn n(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Median TTFT in seconds (paper reports median incl. queueing).
+    pub fn median_ttft(&self) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.ttft()).collect();
+        stats::median(&xs)
+    }
+
+    pub fn p99_ttft(&self) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.ttft()).collect();
+        stats::percentile(&xs, 99.0)
+    }
+
+    /// Mean per-user decode TPS.
+    pub fn tps_per_user(&self) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.user_tps()).collect();
+        stats::mean(&xs)
+    }
+
+    /// Output tokens per second per GPU over the measured span.
+    pub fn output_tps_per_gpu(&self, n_gpus: usize, span: f64) -> f64 {
+        if span <= 0.0 || n_gpus == 0 {
+            return 0.0;
+        }
+        let tokens: usize = self.records.iter().map(|r| r.osl).sum();
+        tokens as f64 / span / n_gpus as f64
+    }
+
+    /// Input (context) tokens per second per GPU.
+    pub fn input_tps_per_gpu(&self, n_gpus: usize, span: f64) -> f64 {
+        if span <= 0.0 || n_gpus == 0 {
+            return 0.0;
+        }
+        let tokens: usize = self.records.iter().map(|r| r.isl).sum();
+        tokens as f64 / span / n_gpus as f64
+    }
+
+    /// Completion span: first arrival to last finish.
+    pub fn span(&self) -> f64 {
+        let start = self
+            .records
+            .iter()
+            .map(|r| r.arrival)
+            .fold(f64::INFINITY, f64::min);
+        let end = self.records.iter().map(|r| r.finish).fold(0.0, f64::max);
+        (end - start).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates_and_paths() {
+        let mut b = Breakdown::new();
+        b.add(Category::Attention, 100e-6);
+        b.add(Category::Attention, 50e-6);
+        b.add(Category::P2pCopy, 400e-6);
+        b.add(Category::Synchronization, 10e-6);
+        assert!((b.get(Category::Attention) - 150e-6).abs() < 1e-12);
+        // P2P excluded from critical path.
+        assert!((b.critical_path() - 160e-6).abs() < 1e-12);
+        assert!((b.total_all() - 560e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_merge_and_scale() {
+        let mut a = Breakdown::new();
+        a.add(Category::GroupedGemm, 1.0);
+        let mut b = Breakdown::new();
+        b.add(Category::GroupedGemm, 2.0);
+        b.add(Category::D2dCopy, 4.0);
+        a.merge(&b);
+        assert_eq!(a.get(Category::GroupedGemm), 3.0);
+        let half = a.scaled(0.5);
+        assert_eq!(half.get(Category::GroupedGemm), 1.5);
+        assert_eq!(half.get(Category::D2dCopy), 2.0);
+    }
+
+    fn rec(id: u64, arrival: f64, first: f64, finish: f64, osl: usize) -> RequestRecord {
+        RequestRecord { id, arrival, first_token: first, finish, isl: 8192, osl }
+    }
+
+    #[test]
+    fn ttft_and_user_tps() {
+        let r = rec(0, 1.0, 3.0, 13.0, 101);
+        assert!((r.ttft() - 2.0).abs() < 1e-12);
+        // 100 decode steps over 10 s = 10 tok/s
+        assert!((r.user_tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_ttft_includes_queueing() {
+        let mut m = ServingMetrics::new();
+        m.push(rec(0, 0.0, 1.0, 2.0, 10));
+        m.push(rec(1, 0.0, 3.0, 4.0, 10));
+        m.push(rec(2, 0.0, 9.0, 10.0, 10));
+        assert!((m.median_ttft() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tps_per_gpu_counts_tokens_over_span() {
+        let mut m = ServingMetrics::new();
+        m.push(rec(0, 0.0, 1.0, 10.0, 500));
+        m.push(rec(1, 0.0, 1.0, 10.0, 500));
+        assert!((m.span() - 10.0).abs() < 1e-12);
+        // 1000 tokens / 10 s / 4 gpus = 25
+        assert!((m.output_tps_per_gpu(4, m.span()) - 25.0).abs() < 1e-9);
+        assert!(m.input_tps_per_gpu(4, m.span()) > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.median_ttft(), 0.0);
+        assert_eq!(m.tps_per_user(), 0.0);
+        assert_eq!(m.output_tps_per_gpu(4, 10.0), 0.0);
+        assert_eq!(m.span(), 0.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Expert placement: which rank permanently stores which experts.
+//!
+//! DWDP's "weak placement constraint" (§2): the group size need not divide
+//! the expert count and partitions need not be disjoint — ranks get *equal*
+//! local-expert counts, using redundant placement to fill the remainder,
+//! which enables provisioning at single-rank granularity (DWDP3 in Table
+//! 3d) and, when memory permits, extra redundancy that reduces remote
+//! prefetch volume.
+
+use crate::util::Rng;
+
+/// Placement of `n_experts` across `n_ranks`, possibly redundant.
+#[derive(Debug, Clone)]
+pub struct ExpertPlacement {
+    pub n_experts: usize,
+    pub n_ranks: usize,
+    /// `local[r]` = sorted expert ids resident on rank `r`.
+    local: Vec<Vec<usize>>,
+    /// `home[e]` = the canonical source rank for expert `e` (where peers
+    /// pull it from).  Always a rank that has `e` locally.
+    home: Vec<usize>,
+    /// membership[r][e] = true iff expert e is resident on rank r.
+    membership: Vec<Vec<bool>>,
+}
+
+impl ExpertPlacement {
+    /// Equal-size placement with `local_per_rank` experts per rank.
+    ///
+    /// Experts are laid out round-robin in contiguous blocks:
+    /// rank `r` holds experts `{ (r*stride + i) mod E }` so that every
+    /// expert has at least one home and load is balanced.  With
+    /// `local_per_rank * n_ranks > E` the surplus is redundant placement.
+    pub fn balanced(n_experts: usize, n_ranks: usize, local_per_rank: usize) -> Self {
+        assert!(n_ranks >= 1);
+        assert!(
+            local_per_rank * n_ranks >= n_experts,
+            "placement cannot cover all experts: {local_per_rank}x{n_ranks} < {n_experts}"
+        );
+        assert!(local_per_rank <= n_experts);
+        // Evenly spaced block starts guarantee coverage.
+        let mut local = Vec::with_capacity(n_ranks);
+        let mut membership = vec![vec![false; n_experts]; n_ranks];
+        for r in 0..n_ranks {
+            let start = (r * n_experts) / n_ranks;
+            let mut mine: Vec<usize> =
+                (0..local_per_rank).map(|i| (start + i) % n_experts).collect();
+            mine.sort_unstable();
+            mine.dedup();
+            for &e in &mine {
+                membership[r][e] = true;
+            }
+            local.push(mine);
+        }
+        // Canonical home: the rank whose *primary block* covers e; fall
+        // back to any holder.
+        let mut home = vec![usize::MAX; n_experts];
+        for e in 0..n_experts {
+            let holders: Vec<usize> = (0..n_ranks).filter(|&r| membership[r][e]).collect();
+            debug_assert!(!holders.is_empty());
+            // Spread homes across holders for source-load balance.
+            home[e] = holders[e % holders.len()];
+        }
+        ExpertPlacement { n_experts, n_ranks, local, home, membership }
+    }
+
+    /// The minimal disjoint-ish placement: `ceil(E / N)` experts per rank.
+    pub fn minimal(n_experts: usize, n_ranks: usize) -> Self {
+        Self::balanced(n_experts, n_ranks, n_experts.div_ceil(n_ranks))
+    }
+
+    pub fn local_experts(&self, rank: usize) -> &[usize] {
+        &self.local[rank]
+    }
+
+    pub fn is_local(&self, rank: usize, expert: usize) -> bool {
+        self.membership[rank][expert]
+    }
+
+    /// Remote experts rank `r` must fetch for one layer, grouped by source:
+    /// returns `(source_rank, expert)` pairs in expert order.
+    pub fn remote_fetches(&self, rank: usize) -> Vec<(usize, usize)> {
+        (0..self.n_experts)
+            .filter(|&e| !self.is_local(rank, e))
+            .map(|e| {
+                let mut src = self.home[e];
+                // Never pull from yourself (can't happen when !is_local,
+                // but guard against redundant-home edge cases).
+                if src == rank {
+                    src = (0..self.n_ranks)
+                        .find(|&r| r != rank && self.membership[r][e])
+                        .expect("expert must have another holder");
+                }
+                (src, e)
+            })
+            .collect()
+    }
+
+    /// Restrict a fetch list to a sampled set of *activated* experts
+    /// ("on-demand" fetching).
+    pub fn remote_fetches_for(&self, rank: usize, activated: &[usize]) -> Vec<(usize, usize)> {
+        let mut act = vec![false; self.n_experts];
+        for &e in activated {
+            act[e] = true;
+        }
+        self.remote_fetches(rank)
+            .into_iter()
+            .filter(|&(_, e)| act[e])
+            .collect()
+    }
+
+    /// Sample a random subset of remote experts with probability `frac`
+    /// each (expectation-preserving on-demand model).
+    pub fn remote_fetches_sampled(
+        &self,
+        rank: usize,
+        frac: f64,
+        rng: &mut Rng,
+    ) -> Vec<(usize, usize)> {
+        self.remote_fetches(rank)
+            .into_iter()
+            .filter(|_| rng.f64() < frac)
+            .collect()
+    }
+
+    /// Every expert has at least one home — the invariant placement must
+    /// uphold; used by property tests.
+    pub fn covers_all(&self) -> bool {
+        (0..self.n_experts).all(|e| (0..self.n_ranks).any(|r| self.membership[r][e]))
+    }
+
+    /// All ranks have the same local count (§2's equal-size constraint).
+    pub fn equal_sized(&self) -> bool {
+        let n = self.local[0].len();
+        self.local.iter().all(|l| l.len() == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_g4_partitions_256() {
+        let p = ExpertPlacement::minimal(256, 4);
+        assert!(p.covers_all());
+        assert!(p.equal_sized());
+        assert_eq!(p.local_experts(0).len(), 64);
+        assert_eq!(p.remote_fetches(0).len(), 192);
+    }
+
+    #[test]
+    fn group3_weak_placement_is_redundant_but_covering() {
+        // 8 experts, 3 ranks, 3 each = 9 slots -> 1 redundant.
+        let p = ExpertPlacement::minimal(8, 3);
+        assert!(p.covers_all());
+        assert!(p.equal_sized());
+        assert_eq!(p.local_experts(0).len(), 3);
+        for r in 0..3 {
+            assert_eq!(p.remote_fetches(r).len(), 8 - 3);
+        }
+    }
+
+    #[test]
+    fn group_size_not_dividing_256() {
+        let p = ExpertPlacement::minimal(256, 3);
+        assert!(p.covers_all());
+        assert_eq!(p.local_experts(0).len(), 86);
+        // 256 - 86 = 170 remote per rank.
+        assert_eq!(p.remote_fetches(1).len(), 170);
+    }
+
+    #[test]
+    fn redundancy_reduces_remote_fetches() {
+        let base = ExpertPlacement::minimal(256, 4);
+        let red = ExpertPlacement::balanced(256, 4, 128);
+        assert!(red.covers_all());
+        assert_eq!(red.remote_fetches(0).len(), 128);
+        assert!(red.remote_fetches(0).len() < base.remote_fetches(0).len());
+    }
+
+    #[test]
+    fn remote_sources_never_self() {
+        for (e, n, l) in [(256, 4, 64), (256, 3, 86), (8, 3, 3), (64, 8, 16)] {
+            let p = ExpertPlacement::balanced(e, n, l);
+            for r in 0..n {
+                for (src, ex) in p.remote_fetches(r) {
+                    assert_ne!(src, r, "rank {r} pulls expert {ex} from itself");
+                    assert!(p.is_local(src, ex), "source must hold the expert");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_list_is_exactly_non_local() {
+        let p = ExpertPlacement::minimal(32, 4);
+        for r in 0..4 {
+            let fetched: Vec<usize> = p.remote_fetches(r).iter().map(|&(_, e)| e).collect();
+            for e in 0..32 {
+                assert_eq!(fetched.contains(&e), !p.is_local(r, e));
+            }
+        }
+    }
+
+    #[test]
+    fn activated_filter_restricts() {
+        let p = ExpertPlacement::minimal(16, 4);
+        let act = vec![0usize, 5, 9, 15];
+        let f = p.remote_fetches_for(1, &act);
+        assert!(f.iter().all(|&(_, e)| act.contains(&e)));
+        assert!(f.len() <= act.len());
+    }
+
+    #[test]
+    fn sampled_fraction_bounds() {
+        let p = ExpertPlacement::minimal(256, 4);
+        let mut rng = Rng::new(3);
+        let all = p.remote_fetches_sampled(0, 1.0, &mut rng);
+        assert_eq!(all.len(), 192);
+        let none = p.remote_fetches_sampled(0, 0.0, &mut rng);
+        assert!(none.is_empty());
+        let half = p.remote_fetches_sampled(0, 0.5, &mut rng);
+        assert!((60..=130).contains(&half.len()), "{}", half.len());
+    }
+
+    #[test]
+    fn homes_are_spread_across_holders() {
+        let p = ExpertPlacement::balanced(16, 4, 8); // 2x redundancy
+        // With redundancy, pulls for different experts should not all hit
+        // the same source.
+        let fetches = p.remote_fetches(0);
+        let mut sources: Vec<usize> = fetches.iter().map(|&(s, _)| s).collect();
+        sources.sort_unstable();
+        sources.dedup();
+        assert!(sources.len() >= 2, "sources {sources:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot cover")]
+    fn undersized_placement_panics() {
+        ExpertPlacement::balanced(256, 4, 32);
+    }
+}

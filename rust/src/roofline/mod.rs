@@ -1,0 +1,235 @@
+//! Layer-wise roofline model — the paper's §3 preliminary analysis.
+//!
+//! Per-op latency is `max(F / P_eff, B / BW_mem)`; summing over a layer's
+//! ops gives `T_compute`.  DWDP's per-layer latency is
+//! `max(T_compute, T_prefetch)` (prefetch overlapped), DEP's is
+//! `T_compute + T_all2all` (synchronous).  [`fig3_sweep`] regenerates both
+//! curves of Figure 3.
+
+use crate::config::{HardwareConfig, PaperModelConfig, ServingConfig};
+use crate::model::{moe_layer_ops, ChunkWorkload, Op, OpKind};
+
+/// Roofline latency of a single op, seconds.
+pub fn op_latency(hw: &HardwareConfig, op: &Op) -> f64 {
+    let p_eff = match op.kind {
+        OpKind::Gemm => hw.effective_flops(op.weight_precision),
+        OpKind::FlashAttention => hw.effective_flops(1.0),
+        // Memory-bound kernels get a vector-throughput ceiling well below
+        // the MXU peak; the bandwidth term dominates for all real shapes.
+        OpKind::MemBound => hw.flops_bf16 * 0.05,
+    };
+    let t_flops = op.flops / p_eff;
+    let t_mem = op.bytes / hw.hbm_bw;
+    t_flops.max(t_mem)
+}
+
+/// `T_compute` for one MoE layer of the given chunk workload.
+pub fn layer_compute_time(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    w: &ChunkWorkload,
+) -> f64 {
+    moe_layer_ops(model, w).iter().map(|o| op_latency(hw, o)).sum()
+}
+
+/// `T_prefetch`: time to pull the missing remote experts of one layer via
+/// the copy engine (serial P2P pulls at `ce_bw`).
+pub fn layer_prefetch_time(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+) -> f64 {
+    let bytes = serving.remote_experts(model) * model.expert_bytes();
+    let n_pulls = (serving.group_size - 1) as f64;
+    bytes / hw.ce_bw + n_pulls * hw.ce_issue_latency
+}
+
+/// `T_all2all`: DEP's two expert-parallel all-to-alls for one layer.
+///
+/// A token is sent once to each *remote rank* owning at least one of its
+/// top-k experts — with experts spread over `N` ranks the expected count is
+/// `(N-1)·(1-(1-1/N)^k)` — not `k` copies.  Dispatch sends fp8
+/// activations, combine returns bf16 (2×), matching TRT-LLM's wideEP.
+pub fn layer_all2all_time(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    tokens: usize,
+) -> f64 {
+    let n = serving.group_size as f64;
+    let k = model.top_k as f64;
+    let remote_ranks = (n - 1.0) * (1.0 - (1.0 - 1.0 / n).powf(k));
+    let dispatch = tokens as f64 * model.hidden as f64 * model.act_bytes * remote_ranks;
+    let combine = dispatch * 2.0; // bf16 combine
+    (dispatch + combine) / hw.coll_bw + 2.0 * hw.coll_latency
+}
+
+/// One row of the Fig. 3 sweep.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub isl: usize,
+    pub t_compute_us: f64,
+    pub t_prefetch_us: f64,
+    pub t_all2all_us: f64,
+    /// T_compute / T_prefetch (≥ 1 ⇒ prefetch fully hidden).
+    pub compute_prefetch_ratio: f64,
+    /// T_DEP / T_DWDP (≥ 1 ⇒ DWDP wins).
+    pub dep_dwdp_ratio: f64,
+}
+
+/// Reproduce Figure 3: sweep ISL at batch size 1 and report both derived
+/// metrics.  The whole ISL is one chunk (batch-1 context pass), attending
+/// to an average context of `isl/2` (causal prefill averages ~half).
+pub fn fig3_sweep(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    isls: &[usize],
+) -> Vec<RooflinePoint> {
+    isls.iter()
+        .map(|&isl| {
+            let w = ChunkWorkload::uniform(isl, isl / 2, model);
+            let t_c = layer_compute_time(hw, model, &w);
+            let t_p = layer_prefetch_time(hw, model, serving);
+            let t_a = layer_all2all_time(hw, model, serving, isl);
+            let t_dwdp = t_c.max(t_p);
+            let t_dep = t_c + t_a;
+            RooflinePoint {
+                isl,
+                t_compute_us: t_c * 1e6,
+                t_prefetch_us: t_p * 1e6,
+                t_all2all_us: t_a * 1e6,
+                compute_prefetch_ratio: t_c / t_p,
+                dep_dwdp_ratio: t_dep / t_dwdp,
+            }
+        })
+        .collect()
+}
+
+/// The ISL at which DWDP begins to hide prefetch (ratio crosses 1.0), by
+/// bisection over the sweep range; None if it never crosses.
+pub fn crossover_isl(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    lo: usize,
+    hi: usize,
+) -> Option<usize> {
+    let ratio = |isl: usize| {
+        let w = ChunkWorkload::uniform(isl, isl / 2, model);
+        layer_compute_time(hw, model, &w) / layer_prefetch_time(hw, model, serving)
+    };
+    if ratio(lo) >= 1.0 {
+        return Some(lo);
+    }
+    if ratio(hi) < 1.0 {
+        return None;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    while hi - lo > 64 {
+        let mid = (lo + hi) / 2;
+        if ratio(mid) >= 1.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+
+    fn setup() -> (HardwareConfig, PaperModelConfig, ServingConfig) {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        (hw, m, s)
+    }
+
+    #[test]
+    fn op_latency_takes_roofline_max() {
+        let hw = HardwareConfig::gb200();
+        // Compute-bound op.
+        let op = Op {
+            name: "x",
+            category: crate::model::Category::GroupedGemm,
+            kind: OpKind::Gemm,
+            flops: 1e15,
+            bytes: 1e6,
+            weight_precision: 0.5625,
+        };
+        let t = op_latency(&hw, &op);
+        assert!((t - 1e15 / hw.effective_flops(0.5625)).abs() / t < 1e-9);
+        // Memory-bound op.
+        let op2 = Op { flops: 1e6, bytes: 8e9, ..op };
+        assert!((op_latency(&hw, &op2) - 1.0e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compute_grows_superlinearly_with_isl() {
+        let (hw, m, _) = setup();
+        let t1 = layer_compute_time(&hw, &m, &ChunkWorkload::uniform(4096, 2048, &m));
+        let t2 = layer_compute_time(&hw, &m, &ChunkWorkload::uniform(16384, 8192, &m));
+        // 4x tokens AND 4x context -> more than 4x time (quadratic term).
+        assert!(t2 / t1 > 4.0, "ratio {}", t2 / t1);
+    }
+
+    #[test]
+    fn prefetch_independent_of_isl() {
+        let (hw, m, s) = setup();
+        let p = layer_prefetch_time(&hw, &m, &s);
+        // 192 experts * ~24.8MB / 750 GB/s ≈ 6.3 ms
+        assert!((5.0e-3..8.0e-3).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn fig3_ratio_crosses_one() {
+        let (mut hw, m, s) = setup();
+        // Fig 3 calibration: the paper's measured effective pull bandwidth
+        // at batch 1 puts the crossover near 16K (see EXPERIMENTS.md E2).
+        hw.ce_bw = 300.0e9;
+        let isls = [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072];
+        let pts = fig3_sweep(&hw, &m, &s, &isls);
+        assert!(pts[0].compute_prefetch_ratio < 1.0);
+        assert!(pts.last().unwrap().compute_prefetch_ratio > 1.0);
+        let x = crossover_isl(&hw, &m, &s, 1024, 131072).unwrap();
+        assert!((8192..32768).contains(&x), "crossover {x}");
+    }
+
+    #[test]
+    fn dep_dwdp_speedup_not_monotonic() {
+        // §3: the speedup rises, peaks, then declines as compute dominates.
+        let (mut hw, m, s) = setup();
+        hw.ce_bw = 300.0e9;
+        let isls = [4096, 16384, 32768, 262144];
+        let pts = fig3_sweep(&hw, &m, &s, &isls);
+        let speedups: Vec<f64> = pts.iter().map(|p| p.dep_dwdp_ratio).collect();
+        let peak = speedups.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(peak > *speedups.last().unwrap(), "{speedups:?}");
+        assert!(*speedups.last().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn redundancy_reduces_prefetch() {
+        let (hw, m, mut s) = setup();
+        let p0 = layer_prefetch_time(&hw, &m, &s);
+        s.local_experts = 128;
+        let p1 = layer_prefetch_time(&hw, &m, &s);
+        assert!(p1 < p0 * 0.7, "{p0} {p1}");
+    }
+
+    #[test]
+    fn all2all_scales_with_tokens_and_group() {
+        let (hw, m, mut s) = setup();
+        let a = layer_all2all_time(&hw, &m, &s, 2048);
+        let b = layer_all2all_time(&hw, &m, &s, 4096);
+        assert!(b > a * 1.8);
+        s.group_size = 8;
+        let c = layer_all2all_time(&hw, &m, &s, 2048);
+        assert!(c > a); // more remote fraction
+    }
+}

@@ -1,0 +1,681 @@
+//! PJRT runtime: load the AOT HLO artifacts and drive per-layer execution
+//! with split (DWDP) or merged (DEP) weights — Python never runs here.
+//!
+//! The artifact contract (produced by `python/compile/aot.py`):
+//!
+//! * `manifest.json` — model config, artifact list with input shapes and
+//!   the positional `weight_order` of every layer entry point, and the
+//!   weight-table index into `weights.bin`.
+//! * `*.hlo.txt` — HLO text per entry point × shape bucket (text, not
+//!   serialized proto: xla_extension 0.5.1 rejects jax≥0.5's 64-bit ids).
+//! * `weights.bin` — raw little-endian tensors in both merged and split
+//!   layouts.
+//!
+//! [`DwdpRank`] mirrors the paper's §2 memory model on the host: a rank
+//! keeps its *local* expert partition device-resident and, before each MoE
+//! layer, "prefetches" the remote partitions from its peers' host stores
+//! through [`HostFabric`] (a real byte copy, plus simulated NVL72 timing),
+//! then feeds the split buffers straight to the split-weight grouped-GEMM
+//! executable — no merge copy (§4.2).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: DemoModelConfig,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+    pub tensors: HashMap<String, TensorInfo>,
+    pub weights_path: String,
+}
+
+/// The demo model architecture (matches python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct DemoModelConfig {
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub ffn_inner: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub group_sizes: Vec<usize>,
+    pub buckets: Vec<(usize, usize)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Positional weight names for layer entry points.
+    pub weight_order: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let c = j.get("config");
+        let as_usize = |v: &Json, what: &str| -> Result<usize> {
+            v.as_usize().ok_or_else(|| anyhow!("manifest config missing {what}"))
+        };
+        let config = DemoModelConfig {
+            hidden: as_usize(c.get("hidden"), "hidden")?,
+            n_heads: as_usize(c.get("n_heads"), "n_heads")?,
+            head_dim: as_usize(c.get("head_dim"), "head_dim")?,
+            n_experts: as_usize(c.get("n_experts"), "n_experts")?,
+            top_k: as_usize(c.get("top_k"), "top_k")?,
+            ffn_inner: as_usize(c.get("ffn_inner"), "ffn_inner")?,
+            vocab: as_usize(c.get("vocab"), "vocab")?,
+            n_layers: as_usize(c.get("n_layers"), "n_layers")?,
+            group_sizes: c
+                .get("group_sizes")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            buckets: c
+                .get("buckets")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|b| Some((b.at(0).as_usize()?, b.at(1).as_usize()?)))
+                .collect(),
+        };
+        let mut artifacts = HashMap::new();
+        for a in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            let name = a.get("name").as_str().unwrap_or_default().to_string();
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| {
+                    (
+                        i.get("dtype").as_str().unwrap_or("f32").to_string(),
+                        i.get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                    )
+                })
+                .collect();
+            let weight_order = a
+                .get("weight_order")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|n| n.as_str().map(str::to_string))
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    path: a.get("path").as_str().unwrap_or_default().to_string(),
+                    inputs,
+                    weight_order,
+                },
+            );
+        }
+        let mut tensors = HashMap::new();
+        for t in j.get("weights").get("tensors").as_arr().unwrap_or(&[]) {
+            let name = t.get("name").as_str().unwrap_or_default().to_string();
+            tensors.insert(
+                name.clone(),
+                TensorInfo {
+                    name,
+                    dtype: t.get("dtype").as_str().unwrap_or("f32").to_string(),
+                    shape: t
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    offset: t.get("offset").as_usize().unwrap_or(0),
+                    nbytes: t.get("nbytes").as_usize().unwrap_or(0),
+                },
+            );
+        }
+        Ok(Manifest {
+            config,
+            artifacts,
+            tensors,
+            weights_path: j
+                .get("weights")
+                .get("path")
+                .as_str()
+                .unwrap_or("weights.bin")
+                .to_string(),
+        })
+    }
+}
+
+/// Host-resident weight bytes + index.
+pub struct WeightStore {
+    pub blob: Vec<u8>,
+    pub manifest: Arc<Manifest>,
+}
+
+impl WeightStore {
+    pub fn load(dir: &Path, manifest: Arc<Manifest>) -> Result<WeightStore> {
+        let blob = std::fs::read(dir.join(&manifest.weights_path))
+            .with_context(|| "reading weights.bin")?;
+        Ok(WeightStore { blob, manifest })
+    }
+
+    pub fn tensor_bytes(&self, name: &str) -> Result<(&[u8], &TensorInfo)> {
+        let info = self
+            .manifest
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("no tensor {name} in weight table"))?;
+        Ok((&self.blob[info.offset..info.offset + info.nbytes], info))
+    }
+
+    pub fn tensor_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let (bytes, info) = self.tensor_bytes(name)?;
+        if info.dtype != "f32" {
+            bail!("tensor {name} is {}", info.dtype);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn tensor_i32(&self, name: &str) -> Result<Vec<i32>> {
+        let (bytes, info) = self.tensor_bytes(name)?;
+        if info.dtype != "i32" {
+            bail!("tensor {name} is {}", info.dtype);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Simulated NVL72 transfer timing wrapped around real host byte copies.
+///
+/// The e2e example runs on one host, so "remote" weight pulls are memcpys;
+/// this fabric makes the *data path* real (bytes flow from the peer store
+/// into the rank's receive buffer) while accounting transfer time at the
+/// configured bandwidth for the metrics report.
+#[derive(Debug, Default)]
+pub struct HostFabric {
+    /// Simulated copy-engine bandwidth, B/s (0 = don't account time).
+    pub ce_bw: f64,
+    pub bytes_moved: u64,
+    pub simulated_seconds: f64,
+    pub pulls: u64,
+}
+
+impl HostFabric {
+    pub fn new(ce_bw: f64) -> Self {
+        HostFabric { ce_bw, ..Default::default() }
+    }
+
+    /// Pull `src` into a fresh receive buffer, accounting simulated time.
+    pub fn pull(&mut self, src: &[u8]) -> Vec<u8> {
+        self.bytes_moved += src.len() as u64;
+        self.pulls += 1;
+        if self.ce_bw > 0.0 {
+            self.simulated_seconds += src.len() as f64 / self.ce_bw;
+        }
+        src.to_vec()
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Arc<Manifest>,
+    pub weights: Arc<WeightStore>,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let weights = Arc::new(WeightStore::load(artifact_dir, manifest.clone())?);
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            weights,
+            dir: artifact_dir.to_path_buf(),
+            exes: HashMap::new(),
+        })
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let info = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("no artifact {name}"))?;
+            let path = self.dir.join(&info.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("hlo parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Upload a named weight tensor to the device.
+    pub fn upload_tensor(&self, name: &str) -> Result<xla::PjRtBuffer> {
+        let (bytes, info) = self.weights.tensor_bytes(name)?;
+        let shape = info.shape.clone();
+        let dtype = info.dtype.clone();
+        self.upload_raw(bytes, &dtype, &shape)
+    }
+
+    /// Upload raw little-endian bytes with dtype/shape.
+    pub fn upload_raw(
+        &self,
+        bytes: &[u8],
+        dtype: &str,
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        match dtype {
+            "f32" => {
+                let v: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                self.upload_f32(&v, shape)
+            }
+            "i32" => {
+                let v: Vec<i32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                self.upload_i32(&v, shape)
+            }
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn upload_f32(&self, v: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(v, shape, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, v: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(v, shape, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute an artifact on buffers; returns the output as a host
+    /// `Literal` (artifacts are lowered with an untupled array root).
+    pub fn execute(&mut self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+        let exe = self.load(name)?;
+        let out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))
+    }
+
+    /// Execute and keep the output on-device for layer chaining.
+    pub fn execute_keep(&mut self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let exe = self.load(name)?;
+        let mut out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut first = out.remove(0);
+        Ok(first.remove(0))
+    }
+}
+
+/// Output hidden/logit tensor as host f32s.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal read: {e:?}"))
+}
+
+/// Per-request prefill statistics from a DWDP rank.
+#[derive(Debug, Clone, Default)]
+pub struct PrefillStats {
+    /// Wall-clock seconds of actual CPU execution.
+    pub wall_seconds: f64,
+    /// Bytes "prefetched" from peer stores.
+    pub prefetch_bytes: u64,
+    /// Simulated NVL72 transfer seconds for those bytes (cumulative).
+    pub simulated_prefetch_seconds: f64,
+    /// Number of layer executions.
+    pub layers_run: usize,
+}
+
+/// A DWDP rank in the functional (real-numerics) serving path.
+///
+/// Holds its local expert partition pinned on device; per layer, pulls the
+/// remote partitions from peer host stores through [`HostFabric`] into the
+/// double-buffered receive slot, uploads them, and invokes the split-weight
+/// layer executable.
+pub struct DwdpRank {
+    pub rank: usize,
+    pub group_size: usize,
+    /// Peer weight stores ("peer HBM").  In this CPU demo every store holds
+    /// the same artifact bytes; what distinguishes ranks is which partition
+    /// they may read without going through the fabric.
+    peers: Vec<Arc<WeightStore>>,
+    pub fabric: HostFabric,
+    /// Device-pinned buffers: replicated weights + the local partition.
+    pinned: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl DwdpRank {
+    /// Is this per-layer weight replicated on every rank (vs. split)?
+    fn replicated(name: &str) -> bool {
+        !(name.starts_with("wg_buf") || name.starts_with("wu_buf") || name.starts_with("wd_buf"))
+    }
+
+    /// Buffer index of a split-weight name like "wu_buf2".
+    fn buf_index(name: &str) -> Option<usize> {
+        name.rsplit("buf").next()?.parse().ok()
+    }
+
+    pub fn new(
+        rt: &Runtime,
+        rank: usize,
+        group_size: usize,
+        peers: Vec<Arc<WeightStore>>,
+        ce_bw: f64,
+    ) -> Result<DwdpRank> {
+        assert_eq!(peers.len(), group_size);
+        let m = rt.manifest.clone();
+        if !m.config.group_sizes.contains(&group_size) {
+            bail!("no artifacts for group size {group_size}");
+        }
+        let mut pinned = HashMap::new();
+        for name in ["emb", "gamma_f", "w_head"] {
+            pinned.insert(name.to_string(), rt.upload_tensor(name)?);
+        }
+        let layer_art = m
+            .artifacts
+            .values()
+            .find(|a| a.name.starts_with(&format!("layer_dwdp_g{group_size}_")))
+            .ok_or_else(|| anyhow!("no dwdp layer artifact for g{group_size}"))?
+            .clone();
+        for l in 0..m.config.n_layers {
+            for w in &layer_art.weight_order {
+                let is_split = !Self::replicated(w);
+                let local = Self::buf_index(w) == Some(rank);
+                if !is_split || local {
+                    let tname = Self::tensor_name(l, group_size, w);
+                    pinned.insert(format!("L{l}.{w}"), rt.upload_tensor(&tname)?);
+                }
+            }
+        }
+        Ok(DwdpRank { rank, group_size, peers, fabric: HostFabric::new(ce_bw), pinned })
+    }
+
+    /// weights.bin name for a layer weight in the g{N} split layout.
+    fn tensor_name(layer: usize, group: usize, w: &str) -> String {
+        match w {
+            "ln1_gamma" | "wq" | "wk" | "wv" | "wo" | "ln2_gamma" | "router" | "ws_gate"
+            | "ws_up" | "ws_down" => format!("layers.{layer}.{w}"),
+            _ => format!("layers.{layer}.g{group}.{w}"),
+        }
+    }
+
+    /// Run a full context pass (embed → L layers → head) for one padded
+    /// bucket. `tokens` is row-major `(batch, seq)`. Returns logits
+    /// `(batch, seq, vocab)` and prefill stats.
+    pub fn prefill(
+        &mut self,
+        rt: &mut Runtime,
+        tokens: &[i32],
+        seq_lens: &[i32],
+        bucket: (usize, usize),
+    ) -> Result<(Vec<f32>, PrefillStats)> {
+        let (b, s) = bucket;
+        if tokens.len() != b * s || seq_lens.len() != b {
+            bail!("bucket mismatch: tokens {} lens {}", tokens.len(), seq_lens.len());
+        }
+        let g = self.group_size;
+        let m = rt.manifest.clone();
+        let start = std::time::Instant::now();
+        let mut stats = PrefillStats::default();
+
+        let tok_buf = rt.upload_i32(tokens, &[b, s])?;
+        let lens_buf = rt.upload_i32(seq_lens, &[b])?;
+        let mut x = rt.execute_keep(&format!("embed_b{b}s{s}"), &[&tok_buf, &self.pinned["emb"]])?;
+
+        let layer_name = format!("layer_dwdp_g{g}_b{b}s{s}");
+        let order = m
+            .artifacts
+            .get(&layer_name)
+            .ok_or_else(|| anyhow!("no artifact {layer_name}"))?
+            .weight_order
+            .clone();
+
+        for l in 0..m.config.n_layers {
+            // Prefetch remote partitions for this layer from the owning
+            // peers' stores; the receive buffers live only for this layer
+            // (double buffering at host granularity).
+            let mut received: HashMap<String, xla::PjRtBuffer> = HashMap::new();
+            for w in &order {
+                if Self::replicated(w) {
+                    continue;
+                }
+                let p = Self::buf_index(w).ok_or_else(|| anyhow!("bad split name {w}"))?;
+                if p == self.rank {
+                    continue;
+                }
+                let tname = Self::tensor_name(l, g, w);
+                let (bytes, info) = self.peers[p].tensor_bytes(&tname)?;
+                let (dtype, shape) = (info.dtype.clone(), info.shape.clone());
+                let pulled = self.fabric.pull(bytes);
+                stats.prefetch_bytes += pulled.len() as u64;
+                received.insert(w.clone(), rt.upload_raw(&pulled, &dtype, &shape)?);
+            }
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&x, &lens_buf];
+            for w in &order {
+                if let Some(buf) = received.get(w) {
+                    args.push(buf);
+                } else {
+                    args.push(
+                        self.pinned
+                            .get(&format!("L{l}.{w}"))
+                            .ok_or_else(|| anyhow!("missing pinned L{l}.{w}"))?,
+                    );
+                }
+            }
+            x = rt.execute_keep(&layer_name, &args)?;
+            stats.layers_run += 1;
+        }
+
+        let logits = rt.execute(
+            &format!("head_b{b}s{s}"),
+            &[&x, &self.pinned["gamma_f"], &self.pinned["w_head"]],
+        )?;
+        stats.wall_seconds = start.elapsed().as_secs_f64();
+        stats.simulated_prefetch_seconds = self.fabric.simulated_seconds;
+        Ok((literal_f32(&logits)?, stats))
+    }
+}
+
+/// DEP reference path: merged weights, whole model, no fabric.
+pub struct DepModel {
+    pinned: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl DepModel {
+    pub fn new(rt: &Runtime) -> Result<DepModel> {
+        let m = rt.manifest.clone();
+        let mut pinned = HashMap::new();
+        for name in ["emb", "gamma_f", "w_head"] {
+            pinned.insert(name.to_string(), rt.upload_tensor(name)?);
+        }
+        let order = m
+            .artifacts
+            .values()
+            .find(|a| a.name.starts_with("layer_dep_"))
+            .ok_or_else(|| anyhow!("no dep layer artifact"))?
+            .weight_order
+            .clone();
+        for l in 0..m.config.n_layers {
+            for w in &order {
+                pinned.insert(
+                    format!("L{l}.{w}"),
+                    rt.upload_tensor(&format!("layers.{l}.{w}"))?,
+                );
+            }
+        }
+        Ok(DepModel { pinned })
+    }
+
+    pub fn prefill(
+        &self,
+        rt: &mut Runtime,
+        tokens: &[i32],
+        seq_lens: &[i32],
+        bucket: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        let (b, s) = bucket;
+        let m = rt.manifest.clone();
+        let tok_buf = rt.upload_i32(tokens, &[b, s])?;
+        let lens_buf = rt.upload_i32(seq_lens, &[b])?;
+        let mut x =
+            rt.execute_keep(&format!("embed_b{b}s{s}"), &[&tok_buf, &self.pinned["emb"]])?;
+        let layer_name = format!("layer_dep_b{b}s{s}");
+        let order = m.artifacts[&layer_name].weight_order.clone();
+        for l in 0..m.config.n_layers {
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&x, &lens_buf];
+            for w in &order {
+                args.push(&self.pinned[&format!("L{l}.{w}")]);
+            }
+            x = rt.execute_keep(&layer_name, &args)?;
+        }
+        let logits = rt.execute(
+            &format!("head_b{b}s{s}"),
+            &[&x, &self.pinned["gamma_f"], &self.pinned["w_head"]],
+        )?;
+        literal_f32(&logits)
+    }
+}
+
+/// Greedy argmax over the last valid position of each sequence.
+pub fn next_tokens(
+    logits: &[f32],
+    bucket: (usize, usize),
+    vocab: usize,
+    seq_lens: &[i32],
+) -> Vec<i32> {
+    let (b, s) = bucket;
+    let mut out = Vec::with_capacity(b);
+    for bi in 0..b {
+        let pos = (seq_lens[bi].max(1) as usize - 1).min(s - 1);
+        let row = &logits[(bi * s + pos) * vocab..(bi * s + pos + 1) * vocab];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        out.push(best as i32);
+    }
+    out
+}
+
+/// Default artifact directory: `$DWDP_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("DWDP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_if_built() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.n_experts, 8);
+        assert!(m.artifacts.contains_key("layer_dwdp_g4_b1s128"));
+        let art = &m.artifacts["layer_dwdp_g4_b1s128"];
+        assert_eq!(art.weight_order.last().map(String::as_str), Some("slot"));
+        // tensor table indexes the blob exactly
+        let ws = WeightStore::load(&dir, Arc::new(m)).unwrap();
+        let (bytes, info) = ws.tensor_bytes("layers.0.wq").unwrap();
+        assert_eq!(bytes.len(), info.nbytes);
+        let v = ws.tensor_f32("layers.0.wq").unwrap();
+        assert_eq!(v.len(), info.shape.iter().product::<usize>());
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn host_fabric_accounts_bytes_and_time() {
+        let mut f = HostFabric::new(1e9);
+        let src = vec![7u8; 1000];
+        let got = f.pull(&src);
+        assert_eq!(got, src);
+        assert_eq!(f.bytes_moved, 1000);
+        assert_eq!(f.pulls, 1);
+        assert!((f.simulated_seconds - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buf_index_parsing() {
+        assert_eq!(DwdpRank::buf_index("wg_buf0"), Some(0));
+        assert_eq!(DwdpRank::buf_index("wd_buf3"), Some(3));
+        assert_eq!(DwdpRank::buf_index("router"), None);
+        assert!(DwdpRank::replicated("router"));
+        assert!(DwdpRank::replicated("buffer_id"));
+        assert!(!DwdpRank::replicated("wu_buf1"));
+    }
+
+    #[test]
+    fn next_tokens_argmax_at_last_valid() {
+        // b=1, s=2, vocab=3; seq_len=1 -> row at pos 0.
+        let logits = vec![0.1, 0.9, 0.2, /* pos1 */ 9.0, 0.0, 0.0];
+        assert_eq!(next_tokens(&logits, (1, 2), 3, &[1]), vec![1]);
+        assert_eq!(next_tokens(&logits, (1, 2), 3, &[2]), vec![0]);
+    }
+}

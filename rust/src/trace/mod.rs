@@ -1,0 +1,194 @@
+//! Chrome-trace (about://tracing / Perfetto) emitter.
+//!
+//! The simulator records per-engine timeline spans; this module serializes
+//! them to the Trace Event Format so the paper's Figure 4 (many-to-one
+//! source contention exposing compute bubbles) and Figure 7 (overlap
+//! patterns) can be inspected visually.
+
+use std::io::Write;
+
+use crate::util::json::{obj, Json};
+
+/// One complete span on an engine timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Track name, e.g. "rank0.sm" or "rank2.copy_engine".
+    pub track: String,
+    /// Event label, e.g. "moe_layer_12" or "pull_from_rank1.slice3".
+    pub name: String,
+    /// Start time, seconds.
+    pub start: f64,
+    /// Duration, seconds.
+    pub dur: f64,
+    /// Optional category for filtering ("compute", "comm", "bubble", ...).
+    pub cat: String,
+}
+
+/// Collects spans; thread-unsafe by design (each simulation is
+/// single-threaded; merge afterwards if needed).
+#[derive(Debug, Default, Clone)]
+pub struct TraceSink {
+    pub spans: Vec<Span>,
+    enabled: bool,
+}
+
+impl TraceSink {
+    pub fn enabled() -> Self {
+        TraceSink { spans: Vec::new(), enabled: true }
+    }
+
+    pub fn disabled() -> Self {
+        TraceSink { spans: Vec::new(), enabled: false }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn record(&mut self, track: &str, name: &str, cat: &str, start: f64, dur: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.spans.push(Span {
+            track: track.to_string(),
+            name: name.to_string(),
+            cat: cat.to_string(),
+            start,
+            dur,
+        });
+    }
+
+    /// Total busy time on one track.
+    pub fn busy_time(&self, track: &str) -> f64 {
+        self.spans.iter().filter(|s| s.track == track).map(|s| s.dur).sum()
+    }
+
+    /// Idle gaps ("bubbles") longer than `min_gap` on a track, as
+    /// (start, duration) pairs, between the track's first and last span.
+    pub fn bubbles(&self, track: &str, min_gap: f64) -> Vec<(f64, f64)> {
+        let mut spans: Vec<&Span> = self.spans.iter().filter(|s| s.track == track).collect();
+        spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        let mut out = Vec::new();
+        let mut cursor = f64::NEG_INFINITY;
+        for s in spans {
+            if cursor.is_finite() && s.start - cursor > min_gap {
+                out.push((cursor, s.start - cursor));
+            }
+            cursor = cursor.max(s.start + s.dur);
+        }
+        out
+    }
+
+    /// Serialize to Chrome Trace Event Format JSON.
+    ///
+    /// Tracks map to (pid=0, tid=stable index); times are microseconds as
+    /// the format requires.
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut tracks: Vec<&str> = self.spans.iter().map(|s| s.track.as_str()).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        let tid_of = |t: &str| tracks.iter().position(|&x| x == t).unwrap() as f64;
+
+        let mut events: Vec<Json> = Vec::with_capacity(self.spans.len() + tracks.len());
+        for t in &tracks {
+            events.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(tid_of(t))),
+                ("name", Json::Str("thread_name".into())),
+                ("args", obj(vec![("name", Json::Str(t.to_string()))])),
+            ]));
+        }
+        for s in &self.spans {
+            events.push(obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(tid_of(&s.track))),
+                ("name", Json::Str(s.name.clone())),
+                ("cat", Json::Str(s.cat.clone())),
+                ("ts", Json::Num(s.start * 1e6)),
+                ("dur", Json::Num(s.dur * 1e6)),
+            ]));
+        }
+        obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ns".into())),
+        ])
+    }
+
+    pub fn write_chrome_trace(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_chrome_trace().dump().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut t = TraceSink::disabled();
+        t.record("a", "x", "compute", 0.0, 1.0);
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn busy_time_sums_track_only() {
+        let mut t = TraceSink::enabled();
+        t.record("r0.sm", "a", "compute", 0.0, 1.0);
+        t.record("r0.sm", "b", "compute", 2.0, 0.5);
+        t.record("r1.sm", "c", "compute", 0.0, 9.0);
+        assert!((t.busy_time("r0.sm") - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bubbles_found_between_spans() {
+        let mut t = TraceSink::enabled();
+        t.record("r0.sm", "a", "compute", 0.0, 1.0);
+        t.record("r0.sm", "b", "compute", 3.0, 1.0);
+        t.record("r0.sm", "c", "compute", 4.1, 1.0);
+        let bubbles = t.bubbles("r0.sm", 0.5);
+        assert_eq!(bubbles.len(), 1);
+        assert!((bubbles[0].0 - 1.0).abs() < 1e-12);
+        assert!((bubbles[0].1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapping_spans_no_false_bubble() {
+        let mut t = TraceSink::enabled();
+        t.record("x", "a", "c", 0.0, 5.0);
+        t.record("x", "b", "c", 1.0, 1.0); // nested
+        t.record("x", "c", "c", 5.0, 1.0);
+        assert!(t.bubbles("x", 0.1).is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_round_trips() {
+        let mut t = TraceSink::enabled();
+        t.record("rank0.sm", "attn_l0", "compute", 0.0, 100e-6);
+        t.record("rank0.ce", "pull_r1", "comm", 10e-6, 50e-6);
+        let j = t.to_chrome_trace();
+        let parsed = crate::util::Json::parse(&j.dump()).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 metadata + 2 spans
+        assert_eq!(events.len(), 4);
+        let span = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("attn_l0"))
+            .unwrap();
+        assert_eq!(span.get("ph").as_str(), Some("X"));
+        assert!((span.get("dur").as_f64().unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn write_trace_to_disk() {
+        let mut t = TraceSink::enabled();
+        t.record("a", "b", "c", 0.0, 1.0);
+        let path = std::env::temp_dir().join("dwdp_trace_test.json");
+        t.write_chrome_trace(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::Json::parse(&text).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates for facilities the offline registry lacks
+//! (rand / serde_json / prettytable equivalents). See DESIGN.md §2.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,186 @@
+//! Plain-text table rendering for the experiment regenerators.
+//!
+//! Every `dwdp-repro experiment ...` subcommand prints the same rows the
+//! paper's tables report; this module owns alignment and markdown-ish
+//! formatting so outputs drop straight into EXPERIMENTS.md.
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("### {t}\n\n"));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting scripts).
+    pub fn render_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .header
+            .iter()
+            .map(|s| esc(s))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{:.*}", d, x)
+}
+
+/// Format a speedup like the paper (e.g. "1.09").
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format microseconds with 2 decimals.
+pub fn us(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a probability as a percentage like the paper's Table 2: fixed
+/// decimals for large values, scientific notation for tiny ones.
+pub fn pct(p: f64) -> String {
+    let v = p * 100.0;
+    if v == 0.0 {
+        "-".to_string()
+    } else if v >= 0.01 {
+        let s = format!("{v:.2}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else if v >= 0.0001 {
+        format!("{v:.5}").trim_end_matches('0').to_string()
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["Config", "C = 1", "C = 2"]).with_title("Demo");
+        t.row(vec!["DWDP3".into(), "50.00".into(), "50.00".into()]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        assert!(s.contains("| Config | C = 1 | C = 2 |"));
+        assert!(s.contains("| DWDP3  | 50.00 | 50.00 |"));
+        assert!(s.contains("|--------|"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "plain".into()]);
+        assert_eq!(t.render_csv(), "a,b\n\"x,y\",plain\n");
+    }
+
+    #[test]
+    fn pct_formats_like_paper() {
+        assert_eq!(pct(0.5), "50");
+        assert_eq!(pct(0.4444), "44.44");
+        assert_eq!(pct(0.1111), "11.11");
+        assert_eq!(pct(0.0), "-");
+        assert_eq!(pct(0.0000085), "0.00085");
+        assert!(pct(3.9e-9).contains('e'));
+    }
+
+    #[test]
+    fn float_helpers() {
+        assert_eq!(f(1.2345, 2), "1.23");
+        assert_eq!(speedup(1.091), "1.09");
+        assert_eq!(us(161.853), "161.85");
+    }
+}

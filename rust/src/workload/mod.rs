@@ -1,0 +1,292 @@
+//! Workload generation: requests with ISL/OSL distributions, Poisson
+//! arrivals, and expert-routing skew.
+//!
+//! Mirrors the paper's two datasets parametrically:
+//! * Artificial-Analysis-style (context-only ablations): fixed ISL with
+//!   either a uniform "ratio window" (`isl_ratio`, Fig. 1 / Table 1/4) or a
+//!   normal spread (`isl_std`, Table 3c).
+//! * SemiAnalysis-style (end-to-end): ISL in [0.8·8K, 8K], OSL 1K.
+
+use crate::config::ServingConfig;
+use crate::util::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, seconds.
+    pub arrival: f64,
+    /// Input sequence length (prompt tokens).
+    pub isl: usize,
+    /// Output sequence length (tokens to generate).
+    pub osl: usize,
+}
+
+/// ISL sampling scheme.
+#[derive(Debug, Clone, Copy)]
+pub enum IslDist {
+    /// Uniform in [ratio·isl, isl] — the paper's "input ratio".
+    RatioWindow { isl: usize, ratio: f64 },
+    /// Normal(isl, std), clamped to [1, 2·isl] — the paper's Table 3c.
+    Normal { isl: usize, std: f64 },
+    /// Every request identical.
+    Fixed { isl: usize },
+}
+
+impl IslDist {
+    /// Build from a serving config (std takes precedence, as in the paper).
+    pub fn from_serving(s: &ServingConfig) -> IslDist {
+        if s.isl_std > 0.0 {
+            IslDist::Normal { isl: s.isl, std: s.isl_std }
+        } else if s.isl_ratio < 1.0 {
+            IslDist::RatioWindow { isl: s.isl, ratio: s.isl_ratio }
+        } else {
+            IslDist::Fixed { isl: s.isl }
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            IslDist::RatioWindow { isl, ratio } => {
+                let lo = (isl as f64 * ratio).round().max(1.0) as usize;
+                rng.range_u64(lo as u64, isl as u64) as usize
+            }
+            IslDist::Normal { isl, std } => {
+                let v = rng.normal(isl as f64, std);
+                v.round().clamp(1.0, 2.0 * isl as f64) as usize
+            }
+            IslDist::Fixed { isl } => isl,
+        }
+    }
+
+    /// Distribution mean (for rate calculations).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            IslDist::RatioWindow { isl, ratio } => isl as f64 * (1.0 + ratio) / 2.0,
+            IslDist::Normal { isl, .. } => isl as f64,
+            IslDist::Fixed { isl } => isl as f64,
+        }
+    }
+}
+
+/// Generates a request stream.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub isl_dist: IslDist,
+    pub osl: usize,
+    /// Poisson arrival rate, requests/second. 0 ⇒ all arrive at t=0
+    /// (closed-loop offline benchmark).
+    pub arrival_rate: f64,
+    rng: Rng,
+    next_id: u64,
+    clock: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(isl_dist: IslDist, osl: usize, arrival_rate: f64, seed: u64) -> Self {
+        WorkloadGen {
+            isl_dist,
+            osl,
+            arrival_rate,
+            rng: Rng::new(seed),
+            next_id: 0,
+            clock: 0.0,
+        }
+    }
+
+    pub fn from_serving(s: &ServingConfig, arrival_rate: f64) -> Self {
+        WorkloadGen::new(IslDist::from_serving(s), s.osl, arrival_rate, s.seed)
+    }
+
+    /// Next request in the stream.
+    pub fn next_request(&mut self) -> Request {
+        if self.arrival_rate > 0.0 {
+            self.clock += self.rng.exponential(self.arrival_rate);
+        }
+        let r = Request {
+            id: self.next_id,
+            arrival: self.clock,
+            isl: self.isl_dist.sample(&mut self.rng),
+            osl: self.osl,
+        };
+        self.next_id += 1;
+        r
+    }
+
+    /// Generate `n` requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+/// Expert-routing skew model: how many tokens each expert receives.
+///
+/// `skew = 0` is uniform routing; larger values concentrate load on "hot"
+/// experts via a Zipf-like weighting — the paper's weight-level imbalance
+/// (Fig. 1a).
+#[derive(Debug, Clone)]
+pub struct RoutingSkew {
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Zipf exponent; 0 = uniform.
+    pub skew: f64,
+    weights: Vec<f64>,
+}
+
+impl RoutingSkew {
+    pub fn new(n_experts: usize, top_k: usize, skew: f64) -> Self {
+        let weights: Vec<f64> = (0..n_experts)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(skew))
+            .collect();
+        RoutingSkew { n_experts, top_k, skew, weights }
+    }
+
+    /// Sample per-expert token counts for a chunk of `tokens` tokens.
+    /// Each token picks `top_k` distinct experts by weighted sampling.
+    pub fn sample_loads(&self, tokens: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut loads = vec![0usize; self.n_experts];
+        let total: f64 = self.weights.iter().sum();
+        for _ in 0..tokens {
+            let mut chosen = [usize::MAX; 16];
+            debug_assert!(self.top_k <= 16);
+            for slot in 0..self.top_k {
+                // Weighted draw with rejection on duplicates.
+                loop {
+                    let mut x = rng.f64() * total;
+                    let mut e = 0;
+                    for (i, w) in self.weights.iter().enumerate() {
+                        x -= w;
+                        if x <= 0.0 {
+                            e = i;
+                            break;
+                        }
+                    }
+                    if !chosen[..slot].contains(&e) {
+                        chosen[slot] = e;
+                        loads[e] += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        loads
+    }
+
+    /// Number of *distinct* experts activated by a chunk (drives on-demand
+    /// prefetch volume).
+    pub fn sample_activated(&self, tokens: usize, rng: &mut Rng) -> usize {
+        self.sample_loads(tokens, rng).iter().filter(|&&l| l > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelMode, ServingConfig};
+    use crate::util::stats;
+
+    #[test]
+    fn ratio_window_bounds() {
+        let d = IslDist::RatioWindow { isl: 8192, ratio: 0.8 };
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = d.sample(&mut rng);
+            assert!((6554..=8192).contains(&v), "{v}");
+        }
+        assert!((d.mean() - 7372.8).abs() < 0.1);
+    }
+
+    #[test]
+    fn normal_dist_statistics() {
+        let d = IslDist::Normal { isl: 16384, std: 2048.0 };
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..20_000).map(|_| d.sample(&mut rng) as f64).collect();
+        assert!((stats::mean(&xs) - 16384.0).abs() < 60.0);
+        assert!((stats::std_dev(&xs) - 2048.0).abs() < 60.0);
+    }
+
+    #[test]
+    fn fixed_dist_is_fixed() {
+        let d = IslDist::Fixed { isl: 1024 };
+        let mut rng = Rng::new(3);
+        assert!((0..100).all(|_| d.sample(&mut rng) == 1024));
+    }
+
+    #[test]
+    fn from_serving_prefers_std() {
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.isl_std = 1024.0;
+        assert!(matches!(IslDist::from_serving(&s), IslDist::Normal { .. }));
+        s.isl_std = 0.0;
+        assert!(matches!(IslDist::from_serving(&s), IslDist::RatioWindow { .. }));
+        s.isl_ratio = 1.0;
+        assert!(matches!(IslDist::from_serving(&s), IslDist::Fixed { .. }));
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_and_rate_correct() {
+        let mut g = WorkloadGen::new(IslDist::Fixed { isl: 100 }, 10, 50.0, 4);
+        let reqs = g.take(5000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let duration = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / duration;
+        assert!((rate - 50.0).abs() < 3.0, "rate {rate}");
+    }
+
+    #[test]
+    fn zero_rate_means_offline_batch() {
+        let mut g = WorkloadGen::new(IslDist::Fixed { isl: 100 }, 10, 0.0, 5);
+        assert!(g.take(100).iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn ids_unique_and_sequential() {
+        let mut g = WorkloadGen::new(IslDist::Fixed { isl: 1 }, 1, 0.0, 6);
+        let ids: Vec<u64> = g.take(10).iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_routing_balances() {
+        let rs = RoutingSkew::new(32, 4, 0.0);
+        let mut rng = Rng::new(7);
+        let loads = rs.sample_loads(8000, &mut rng);
+        let total: usize = loads.iter().sum();
+        assert_eq!(total, 32_000);
+        let xs: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+        assert!(stats::cv(&xs) < 0.1, "cv {}", stats::cv(&xs));
+    }
+
+    #[test]
+    fn skewed_routing_concentrates() {
+        let rs = RoutingSkew::new(32, 4, 1.2);
+        let mut rng = Rng::new(8);
+        let loads = rs.sample_loads(4000, &mut rng);
+        // Hot expert 0 gets far more than the tail.
+        assert!(loads[0] > loads[31] * 5, "{loads:?}");
+        let xs: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+        assert!(stats::cv(&xs) > 0.5);
+    }
+
+    #[test]
+    fn topk_distinct_per_token() {
+        // With tokens=1 the load total is exactly top_k and spread across
+        // distinct experts.
+        let rs = RoutingSkew::new(8, 8, 0.0);
+        let mut rng = Rng::new(9);
+        let loads = rs.sample_loads(1, &mut rng);
+        assert!(loads.iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn activated_counts_bounded() {
+        let rs = RoutingSkew::new(256, 8, 0.0);
+        let mut rng = Rng::new(10);
+        let a = rs.sample_activated(4, &mut rng);
+        assert!((8..=32).contains(&a), "{a}");
+        let a2 = rs.sample_activated(2048, &mut rng);
+        assert!(a2 > 200, "{a2}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! The central contract: a DWDP rank (split weights, per-layer prefetch
+//! through the fabric) produces the SAME logits as the merged-weight DEP
+//! reference, for every rank, group size, bucket, and padding pattern.
+//!
+//! Skipped (with a message) when artifacts are missing; `make test` always
+//! builds them first.
+
+use std::sync::Arc;
+
+use dwdp::runtime::{default_artifact_dir, next_tokens, DepModel, DwdpRank, Runtime, WeightStore};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn peers(rt: &Runtime, g: usize) -> Vec<Arc<WeightStore>> {
+    (0..g).map(|_| rt.weights.clone()).collect()
+}
+
+fn prompt(seed: u64, n: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = dwdp::util::Rng::new(seed);
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn dwdp_rank_matches_dep_reference_all_ranks_g4() {
+    let Some(mut rt) = runtime() else { return };
+    let vocab = rt.manifest.config.vocab;
+    let toks = prompt(1, 128, vocab);
+    let lens = [97i32];
+    let dep = DepModel::new(&rt).unwrap();
+    let want = dep.prefill(&mut rt, &toks, &lens, (1, 128)).unwrap();
+    for rank in 0..4 {
+        let mut r = DwdpRank::new(&rt, rank, 4, peers(&rt, 4), 750e9).unwrap();
+        let (got, stats) = r.prefill(&mut rt, &toks, &lens, (1, 128)).unwrap();
+        assert!(
+            max_abs_diff(&got, &want) < 1e-3,
+            "rank {rank} diverged: {}",
+            max_abs_diff(&got, &want)
+        );
+        assert_eq!(stats.layers_run, rt.manifest.config.n_layers);
+        assert!(stats.prefetch_bytes > 0, "rank must fetch remote partitions");
+    }
+}
+
+#[test]
+fn dwdp_group2_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let vocab = rt.manifest.config.vocab;
+    let toks = prompt(2, 128, vocab);
+    let lens = [128i32];
+    let dep = DepModel::new(&rt).unwrap();
+    let want = dep.prefill(&mut rt, &toks, &lens, (1, 128)).unwrap();
+    for rank in 0..2 {
+        let mut r = DwdpRank::new(&rt, rank, 2, peers(&rt, 2), 750e9).unwrap();
+        let (got, _) = r.prefill(&mut rt, &toks, &lens, (1, 128)).unwrap();
+        assert!(max_abs_diff(&got, &want) < 1e-3);
+    }
+}
+
+#[test]
+fn batched_bucket_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let vocab = rt.manifest.config.vocab;
+    let toks = prompt(3, 4 * 128, vocab);
+    let lens = [128i32, 90, 45, 7];
+    let dep = DepModel::new(&rt).unwrap();
+    let want = dep.prefill(&mut rt, &toks, &lens, (4, 128)).unwrap();
+    let mut r = DwdpRank::new(&rt, 1, 4, peers(&rt, 4), 750e9).unwrap();
+    let (got, _) = r.prefill(&mut rt, &toks, &lens, (4, 128)).unwrap();
+    assert!(max_abs_diff(&got, &want) < 1e-3, "{}", max_abs_diff(&got, &want));
+}
+
+#[test]
+fn padding_does_not_change_valid_logits() {
+    let Some(mut rt) = runtime() else { return };
+    let vocab = rt.manifest.config.vocab;
+    let n = 60usize;
+    let base = prompt(4, n, vocab);
+    let mut padded_a = base.clone();
+    padded_a.resize(128, 0);
+    let mut padded_b = base.clone();
+    padded_b.resize(128, 3); // different padding content
+    let dep = DepModel::new(&rt).unwrap();
+    let la = dep.prefill(&mut rt, &padded_a, &[n as i32], (1, 128)).unwrap();
+    let lb = dep.prefill(&mut rt, &padded_b, &[n as i32], (1, 128)).unwrap();
+    // Valid region identical regardless of pad tokens.
+    let valid = n * vocab;
+    assert!(max_abs_diff(&la[..valid], &lb[..valid]) < 1e-4);
+}
+
+#[test]
+fn greedy_decode_deterministic_across_strategies() {
+    let Some(mut rt) = runtime() else { return };
+    let vocab = rt.manifest.config.vocab;
+    let mut toks = prompt(5, 40, vocab);
+    let dep = DepModel::new(&rt).unwrap();
+    let mut r = DwdpRank::new(&rt, 0, 4, peers(&rt, 4), 750e9).unwrap();
+    for _ in 0..3 {
+        let n = toks.len();
+        let mut padded = toks.clone();
+        padded.resize(128, 0);
+        let ld = dep.prefill(&mut rt, &padded, &[n as i32], (1, 128)).unwrap();
+        let (lw, _) = r.prefill(&mut rt, &padded, &[n as i32], (1, 128)).unwrap();
+        let nd = next_tokens(&ld, (1, 128), vocab, &[n as i32]);
+        let nw = next_tokens(&lw, (1, 128), vocab, &[n as i32]);
+        assert_eq!(nd, nw, "greedy paths diverged at len {n}");
+        toks.push(nd[0]);
+    }
+}
+
+#[test]
+fn fabric_accounting_matches_partition_sizes() {
+    let Some(mut rt) = runtime() else { return };
+    let cfg = rt.manifest.config.clone();
+    let toks = prompt(6, 128, cfg.vocab);
+    let mut r = DwdpRank::new(&rt, 0, 4, peers(&rt, 4), 750e9).unwrap();
+    let (_, stats) = r.prefill(&mut rt, &toks, &[128], (1, 128)).unwrap();
+    // Per layer: 3 weight kinds × 3 remote buffers × slots*h*f floats.
+    let slots = cfg.n_experts.div_ceil(4);
+    let per_buf = slots * cfg.hidden * cfg.ffn_inner * 4;
+    let expect = cfg.n_layers as u64 * 3 * 3 * per_buf as u64;
+    assert_eq!(stats.prefetch_bytes, expect);
+    assert!(stats.simulated_prefetch_seconds > 0.0);
+}
+
+#[test]
+fn kernel_artifacts_execute() {
+    let Some(mut rt) = runtime() else { return };
+    let cfg = rt.manifest.config.clone();
+    let (e, c, h, f) = (cfg.n_experts, 64, cfg.hidden, cfg.ffn_inner);
+    let x = rt.upload_f32(&vec![0.5f32; e * c * h], &[e, c, h]).unwrap();
+    let w = rt.upload_f32(&vec![0.1f32; e * h * f], &[e, h, f]).unwrap();
+    let lit = rt.execute("kernel_gg_merged", &[&x, &w]).unwrap();
+    let v = lit.to_vec::<f32>().unwrap();
+    assert_eq!(v.len(), e * c * f);
+    // 0.5 * 0.1 * h summed over h.
+    let expect = 0.5 * 0.1 * h as f32;
+    assert!((v[0] - expect).abs() < 1e-3, "{} vs {expect}", v[0]);
+}

@@ -1,0 +1,218 @@
+//! Property-based tests over coordinator/executor invariants.
+//!
+//! The offline registry has no `proptest`, so these use the library's own
+//! deterministic PRNG to sweep randomized cases (documented substitution,
+//! DESIGN.md §2).  Each property runs across many seeds and fails with the
+//! seed in the message for reproduction.
+
+use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
+use dwdp::dwdp::{build_copy_plan, plan_bytes};
+use dwdp::engine::run_context;
+use dwdp::model::Category;
+use dwdp::placement::ExpertPlacement;
+use dwdp::util::Rng;
+use dwdp::workload::Request;
+
+const CASES: u64 = 60;
+
+/// Property: every copy plan moves exactly the bytes of its fetch list,
+/// never slices beyond `slice_bytes`, and round-robins sources (no source
+/// appears twice before every other pending source appeared once).
+#[test]
+fn prop_copy_plan_conservation_and_fairness() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n_peers = 2 + rng.below(6) as usize;
+        let n_fetch = 1 + rng.below(40) as usize;
+        let fetches: Vec<(usize, usize)> = (0..n_fetch)
+            .map(|e| (1 + rng.below(n_peers as u64) as usize, e))
+            .collect();
+        let expert_bytes = 1e5 + rng.f64() * 3e7;
+        let slice = 1usize << (16 + rng.below(6));
+        for tdm in [false, true] {
+            let plan = build_copy_plan(&fetches, expert_bytes, slice, tdm);
+            let want: f64 = fetches.len() as f64 * expert_bytes;
+            assert!(
+                (plan_bytes(&plan) - want).abs() < 1.0,
+                "seed {seed}: bytes {} != {want}",
+                plan_bytes(&plan)
+            );
+            if tdm {
+                for s in &plan {
+                    assert!(s.bytes <= slice as f64 + 1.0, "seed {seed}: oversized slice");
+                }
+                // Fairness: within any window of `k` distinct pending
+                // sources, a source repeats only after the others appear.
+                let mut last_seen: std::collections::HashMap<usize, usize> = Default::default();
+                for (i, s) in plan.iter().enumerate() {
+                    if let Some(&prev) = last_seen.get(&s.src) {
+                        // Between two visits of the same source, at least
+                        // one other source must appear unless it's the only
+                        // one left.
+                        let others: std::collections::HashSet<usize> = plan
+                            [prev + 1..i]
+                            .iter()
+                            .map(|x| x.src)
+                            .collect();
+                        let remaining_sources: std::collections::HashSet<usize> =
+                            plan[prev + 1..].iter().map(|x| x.src).collect();
+                        assert!(
+                            !others.is_empty() || remaining_sources.len() == 1,
+                            "seed {seed}: source {} monopolizes at {i}",
+                            s.src
+                        );
+                    }
+                    last_seen.insert(s.src, i);
+                }
+            }
+        }
+    }
+}
+
+/// Property: balanced placement always covers every expert, keeps equal
+/// local counts, and never pulls from self.
+#[test]
+fn prop_placement_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let n_experts = (4 + rng.below(253)) as usize;
+        let n_ranks = (2 + rng.below(14)) as usize;
+        let min_local = n_experts.div_ceil(n_ranks);
+        let local = min_local + rng.below((n_experts - min_local + 1) as u64) as usize;
+        let p = ExpertPlacement::balanced(n_experts, n_ranks, local);
+        assert!(p.covers_all(), "seed {seed}");
+        assert!(p.equal_sized(), "seed {seed}");
+        for r in 0..n_ranks {
+            assert_eq!(p.local_experts(r).len(), local.min(n_experts));
+            for (src, e) in p.remote_fetches(r) {
+                assert_ne!(src, r, "seed {seed}: self-pull");
+                assert!(p.is_local(src, e), "seed {seed}: bad home");
+                assert!(!p.is_local(r, e), "seed {seed}: fetching local expert");
+            }
+        }
+    }
+}
+
+/// Property: the batcher conserves requests (no loss, no duplication, FIFO)
+/// for arbitrary ISL mixes.
+#[test]
+fn prop_batcher_conserves_requests() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let mnt = 1024 + rng.below(64 * 1024) as usize;
+        let max_batch = 1 + rng.below(32) as usize;
+        let n = 1 + rng.below(200) as usize;
+        let mut b = ContextBatcher::new(mnt, max_batch);
+        for id in 0..n as u64 {
+            b.push(Request {
+                id,
+                arrival: 0.0,
+                isl: 1 + rng.below(3 * mnt as u64) as usize,
+                osl: 1,
+            });
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.requests.len() <= max_batch, "seed {seed}");
+            if batch.requests.len() > 1 {
+                assert!(batch.total_tokens <= mnt, "seed {seed}: over budget");
+            }
+            seen.extend(batch.requests.iter().map(|r| r.id));
+        }
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(seen, want, "seed {seed}: loss/dup/reorder");
+    }
+}
+
+/// Property: the router never leaves a group unconsidered and LeastLoaded
+/// keeps queue spread within one max-request of balanced.
+#[test]
+fn prop_router_least_loaded_bounded_imbalance() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let groups = 2 + rng.below(8) as usize;
+        let mut router = Router::new(groups, RoutePolicy::LeastLoaded);
+        let mut max_isl = 0usize;
+        for _ in 0..200 {
+            let isl = 1 + rng.below(8192) as usize;
+            max_isl = max_isl.max(isl);
+            router.route(isl);
+        }
+        let max = *router.queued_tokens.iter().max().unwrap();
+        let min = *router.queued_tokens.iter().min().unwrap();
+        assert!(max - min <= max_isl, "seed {seed}: spread {} > {max_isl}", max - min);
+    }
+}
+
+/// Property: DWDP's latency model is monotone — more redundancy (fewer
+/// remote experts) never makes prefill slower; TDM never hurts.
+#[test]
+fn prop_latency_model_monotone_in_redundancy() {
+    let hw = HardwareConfig::gb200();
+    let m = PaperModelConfig::deepseek_r1();
+    for seed in 0..20 {
+        let mut rng = Rng::new(4000 + seed);
+        let isls: Vec<usize> = (0..4).map(|_| 2048 + rng.below(14336) as usize).collect();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.prefetch_fraction = 0.05 + rng.f64() * 0.3;
+        s.validate(&m).unwrap();
+        let base = GroupLatencyModel::new(&hw, &m, &s)
+            .prefill_offsets(&isls)
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        let mut s2 = s.clone();
+        s2.local_experts = 128; // 2x redundancy
+        let red = GroupLatencyModel::new(&hw, &m, &s2)
+            .prefill_offsets(&isls)
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        assert!(red <= base + 1e-9, "seed {seed}: redundancy slowed prefill");
+        let mut s3 = s.clone();
+        s3.tdm = false;
+        let no_tdm = GroupLatencyModel::new(&hw, &m, &s3)
+            .prefill_offsets(&isls)
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        assert!(base <= no_tdm + 1e-9, "seed {seed}: TDM hurt");
+    }
+}
+
+/// Property (DES): the DWDP critical path never contains collective
+/// communication, and DEP's never contains P2P copy — for random configs.
+#[test]
+fn prop_modes_have_disjoint_comm_categories() {
+    let hw = HardwareConfig::gb200();
+    let m = PaperModelConfig::tiny();
+    for seed in 0..8 {
+        let mut rng = Rng::new(5000 + seed);
+        for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+            let mut s = ServingConfig::default_context(mode, 2 + rng.below(3) as usize);
+            s.isl = 512 + rng.below(2048) as usize;
+            s.max_num_tokens = 8192;
+            s.seed = seed;
+            s.validate(&m).unwrap();
+            let r = run_context(&hw, &m, &s, 1, false);
+            match mode {
+                ParallelMode::Dwdp => {
+                    assert_eq!(
+                        r.per_layer_breakdown.get(Category::Communication),
+                        0.0,
+                        "seed {seed}: DWDP ran a collective"
+                    );
+                }
+                ParallelMode::Dep => {
+                    assert_eq!(
+                        r.per_layer_breakdown.get(Category::P2pCopy),
+                        0.0,
+                        "seed {seed}: DEP pulled weights"
+                    );
+                    assert!(r.per_layer_breakdown.get(Category::Communication) > 0.0);
+                }
+            }
+        }
+    }
+}
