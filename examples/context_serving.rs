@@ -3,22 +3,28 @@
 //!
 //! This is the workload the paper's intro motivates: a context server
 //! whose per-rank prompts differ in length, where DEP's layer-boundary
-//! synchronization turns local variation into global waiting.
+//! synchronization turns local variation into global waiting.  Every
+//! configuration is a `Scenario` run through the `ServingStack` at DES
+//! fidelity.
 //!
 //! ```sh
 //! cargo run --release --example context_serving
 //! ```
 
-use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode};
-use dwdp::engine::run_context;
+use dwdp::config::ParallelMode;
 use dwdp::experiments::calib;
 use dwdp::model::Category;
+use dwdp::serving::{Fidelity, RunReport, Scenario, ServingStack};
 use dwdp::util::table::Table;
+
+fn run(scn: Scenario) -> RunReport {
+    ServingStack::new(scn.build().expect("scenario"), Fidelity::Des)
+        .run()
+        .expect("DES backend")
+}
 
 fn main() {
     std::env::set_var("DWDP_QUICK", "1");
-    let hw = HardwareConfig::gb200();
-    let model = PaperModelConfig::deepseek_r1();
 
     // --- sweep: imbalance (input ratio) × mode ------------------------
     let mut t = Table::new(&[
@@ -32,14 +38,18 @@ fn main() {
     .with_title("Context serving under request-level imbalance (ISL 8K, MNT 32768, DWDP4/DEP4)");
     for ratio in [1.0f64, 0.8, 0.5] {
         for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
-            let mut s = calib::context_serving(mode, 4);
-            s.isl_ratio = ratio;
-            s.validate(&model).unwrap();
-            let r = run_context(&hw, &model, &s, 2, false);
+            let spec = calib::context_scenario(mode, 4)
+                .ratio(ratio)
+                .requests(2)
+                .build()
+                .expect("scenario");
+            let moe_layers = spec.model.n_moe_layers();
+            let r = ServingStack::new(spec, Fidelity::Des).run().expect("DES backend");
             let sync = r.per_layer_breakdown.get(Category::Synchronization) * 1e6;
-            let layers = (r.iterations * model.n_moe_layers() * 4).max(1) as f64;
+            // Per-(rank, MoE-layer-iteration) exposed wait.
+            let layer_iters = r.iterations * r.rank_prefetch_wait.len() * moe_layers;
             let exposed =
-                r.sim.ranks.iter().map(|x| x.prefetch_wait).sum::<f64>() / layers * 1e6;
+                r.rank_prefetch_wait.iter().sum::<f64>() / layer_iters.max(1) as f64 * 1e6;
             t.row(vec![
                 format!("{ratio}"),
                 mode.name().into(),
@@ -56,16 +66,16 @@ fn main() {
     let mut t2 = Table::new(&["TDM", "slice", "TPS/GPU", "exposed wait ms (sum)"])
         .with_title("TDM contention mitigation, short window (MNT 16384, ratio 0.5)");
     for (tdm, slice) in [(false, 0usize), (true, 4 << 20), (true, 1 << 20), (true, 256 << 10)] {
-        let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-        s.isl_ratio = 0.5;
-        s.max_num_tokens = 16384;
-        s.tdm = tdm;
+        let mut scn = calib::context_scenario(ParallelMode::Dwdp, 4)
+            .ratio(0.5)
+            .mnt(16384)
+            .tdm(tdm)
+            .requests(2);
         if slice > 0 {
-            s.slice_bytes = slice;
+            scn = scn.slice_bytes(slice);
         }
-        s.validate(&model).unwrap();
-        let r = run_context(&hw, &model, &s, 2, false);
-        let wait: f64 = r.sim.ranks.iter().map(|x| x.prefetch_wait).sum();
+        let r = run(scn);
+        let wait: f64 = r.rank_prefetch_wait.iter().sum();
         t2.row(vec![
             if tdm { "on".into() } else { "off (monolithic)".to_string() },
             if slice > 0 { format!("{} KiB", slice >> 10) } else { "-".into() },
@@ -76,12 +86,18 @@ fn main() {
     println!("{}", t2.render());
 
     // --- trace for inspection -----------------------------------------
-    let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-    s.isl_ratio = 0.5;
-    s.max_num_tokens = 16384;
-    s.tdm = false;
-    s.validate(&model).unwrap();
-    let r = run_context(&hw, &model, &s, 1, true);
-    r.sim.trace.write_chrome_trace("context_serving_trace.json").unwrap();
-    println!("wrote context_serving_trace.json ({} spans) — open in ui.perfetto.dev", r.sim.trace.spans.len());
+    let r = run(
+        calib::context_scenario(ParallelMode::Dwdp, 4)
+            .ratio(0.5)
+            .mnt(16384)
+            .tdm(false)
+            .requests(1)
+            .trace(true),
+    );
+    let trace = r.trace.expect("trace requested");
+    trace.write_chrome_trace("context_serving_trace.json").unwrap();
+    println!(
+        "wrote context_serving_trace.json ({} spans) — open in ui.perfetto.dev",
+        trace.spans.len()
+    );
 }

@@ -1,141 +1,58 @@
-//! End-to-end driver on the REAL model: load the AOT HLO artifacts through
-//! PJRT, stand up a DWDP group of 4 ranks + a DEP reference, and serve
-//! batched requests through the full stack — router → batcher → per-layer
-//! execution with split-weight prefetch → greedy decode — reporting
-//! latency/throughput and verifying DWDP ≡ DEP numerics along the way.
+//! End-to-end driver on the REAL model: one `Scenario`, executed by the
+//! `PjrtBackend` — which loads the AOT HLO artifacts through PJRT, stands
+//! up a DWDP group plus a merged-weight DEP reference, verifies DWDP ≡ DEP
+//! numerics (the backend's built-in gate), then serves batched requests
+//! through the full stack: router → batcher → per-layer execution with
+//! split-weight prefetch → greedy decode.
 //!
-//! Requires `make artifacts` (Python runs once at build time; this binary
-//! never calls Python).
+//! Requires the `pjrt` feature and `make artifacts` (Python runs once at
+//! build time; this binary never calls Python).  Note: `pjrt` additionally
+//! expects the locally vendored `xla` and `anyhow` crates — see the
+//! feature note in `rust/Cargo.toml`; this offline tree does not ship
+//! them, so the default build skips this example entirely.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_disagg
+//! make artifacts && cargo run --release --features pjrt --example e2e_disagg
 //! ```
 
-use std::sync::Arc;
-use std::time::Instant;
+use dwdp::config::ParallelMode;
+use dwdp::serving::{Fidelity, Scenario, ServingStack};
 
-use dwdp::coordinator::ContextBatcher;
-use dwdp::metrics::{RequestRecord, ServingMetrics};
-use dwdp::runtime::{default_artifact_dir, next_tokens, DepModel, DwdpRank, Runtime};
-use dwdp::util::Rng;
-use dwdp::workload::{IslDist, WorkloadGen};
-
-const GROUP: usize = 4;
-const CE_BW: f64 = 750.0e9; // simulated NVL72 copy-engine bandwidth
-const N_REQUESTS: usize = 12;
-const DECODE_TOKENS: usize = 4;
-
-fn main() -> anyhow::Result<()> {
-    let dir = default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    println!("loading artifacts from {dir:?}");
-    let mut rt = Runtime::new(&dir)?;
-    let cfg = rt.manifest.config.clone();
-    let bucket = (1usize, 128usize);
-
-    // Stand up the group: every rank shares the weight-store bytes but may
-    // only read its own partition without going through the fabric.
-    let t0 = Instant::now();
-    let peers: Vec<Arc<dwdp::runtime::WeightStore>> =
-        (0..GROUP).map(|_| rt.weights.clone()).collect();
-    let mut ranks: Vec<DwdpRank> = (0..GROUP)
-        .map(|r| DwdpRank::new(&rt, r, GROUP, peers.clone(), CE_BW))
-        .collect::<anyhow::Result<Vec<_>>>()?;
-    let dep = DepModel::new(&rt)?;
-    println!("group up in {:.2}s (weights pinned, executables lazy)", t0.elapsed().as_secs_f64());
-
-    // Workload: short prompts padded into the (1,128) bucket.
-    let mut gen = WorkloadGen::new(IslDist::RatioWindow { isl: 96, ratio: 0.5 }, DECODE_TOKENS, 8.0, 42);
-    let requests = gen.take(N_REQUESTS);
-    let mut batcher = ContextBatcher::new(128, 1);
-    for r in &requests {
-        batcher.push(r.clone());
-    }
-    let mut prompt_rng = Rng::new(7);
-
-    // Correctness gate: DWDP rank output must match the DEP reference.
-    {
-        let toks: Vec<i32> =
-            (0..128).map(|_| prompt_rng.below(cfg.vocab as u64) as i32).collect();
-        let lens = vec![77i32];
-        let (lw, _) = ranks[0].prefill(&mut rt, &toks, &lens, bucket)?;
-        let ld = dep.prefill(&mut rt, &toks, &lens, bucket)?;
-        let max_err = lw
-            .iter()
-            .zip(&ld)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_err < 1e-3, "DWDP != DEP: max err {max_err}");
-        println!("numerics gate: DWDP == DEP reference (max |Δlogit| = {max_err:.2e}) ✓");
-    }
-
-    // Serve: round-robin requests across ranks, prefill + greedy decode.
-    println!("\nserving {N_REQUESTS} requests (prefill + {DECODE_TOKENS}-token greedy decode)...");
-    let serve_start = Instant::now();
-    let mut metrics = ServingMetrics::new();
-    let mut total_prefetch_bytes = 0u64;
-    let mut total_layers = 0usize;
-    let mut rr = 0usize;
-    while let Some(batch) = batcher.next_batch() {
-        for req in batch.requests {
-            let rank = rr % GROUP;
-            rr += 1;
-            let isl = req.isl.min(120);
-            let mut toks: Vec<i32> = (0..isl)
-                .map(|_| prompt_rng.below(cfg.vocab as u64) as i32)
-                .collect();
-            let arrival = serve_start.elapsed().as_secs_f64();
-            // Prefill.
-            let mut padded = toks.clone();
-            padded.resize(128, 0);
-            let (logits, stats) =
-                ranks[rank].prefill(&mut rt, &padded, &[isl as i32], bucket)?;
-            total_prefetch_bytes += stats.prefetch_bytes;
-            total_layers += stats.layers_run;
-            let first_token_at = serve_start.elapsed().as_secs_f64();
-            let mut next = next_tokens(&logits, bucket, cfg.vocab, &[isl as i32]);
-            // Greedy decode (no KV cache in the demo model: re-prefill).
-            for _ in 1..DECODE_TOKENS {
-                toks.push(next[0]);
-                let cur = toks.len().min(128);
-                let mut padded = toks.clone();
-                padded.resize(128, 0);
-                let (logits, _) =
-                    ranks[rank].prefill(&mut rt, &padded, &[cur as i32], bucket)?;
-                next = next_tokens(&logits, bucket, cfg.vocab, &[cur as i32]);
-            }
-            let finish = serve_start.elapsed().as_secs_f64();
-            metrics.push(RequestRecord {
-                id: req.id,
-                arrival,
-                first_token: first_token_at,
-                finish,
-                isl,
-                osl: DECODE_TOKENS,
-            });
+fn main() {
+    let spec = Scenario::disagg()
+        .mode(ParallelMode::Dwdp)
+        .group(4)
+        .isl(96) // clamped into the demo artifact bucket by the backend
+        .ratio(0.5)
+        .osl(4)
+        .requests(12)
+        .rate(8.0)
+        .seed(42)
+        .build()
+        .expect("scenario");
+    let stack = ServingStack::new(spec, Fidelity::Pjrt);
+    let report = match stack.run() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pjrt backend unavailable: {e}");
+            std::process::exit(1);
         }
-    }
-    let wall = serve_start.elapsed().as_secs_f64();
+    };
 
-    let in_tokens: usize = metrics.records.iter().map(|r| r.isl).sum();
-    let out_tokens = N_REQUESTS * DECODE_TOKENS;
-    println!("\n== e2e results (CPU PJRT, {GROUP}-rank DWDP group) ==");
-    println!("  requests            : {}", metrics.n());
-    println!("  wall time           : {wall:.2} s");
-    println!("  prefill throughput  : {:.0} tok/s ({} prompt tokens)", in_tokens as f64 / wall, in_tokens);
-    println!("  output throughput   : {:.1} tok/s ({} tokens)", out_tokens as f64 / wall, out_tokens);
-    println!("  median TTFT         : {:.1} ms", metrics.median_ttft() * 1e3);
-    println!("  p99 TTFT            : {:.1} ms", metrics.p99_ttft() * 1e3);
-    println!("  layers executed     : {total_layers}");
+    println!("== e2e results (CPU PJRT, 4-rank DWDP group) ==");
+    println!("  scenario            : {}", report.scenario);
+    println!("  requests            : {}", report.n_requests);
+    println!("  wall time           : {:.2} s", report.makespan);
     println!(
-        "  weights prefetched  : {:.1} MB across {} pulls (sim NVL72 time {:.2} ms)",
-        total_prefetch_bytes as f64 / 1e6,
-        ranks.iter().map(|r| r.fabric.pulls).sum::<u64>(),
-        ranks.iter().map(|r| r.fabric.simulated_seconds).sum::<f64>() * 1e3,
+        "  prefill throughput  : {:.0} tok/s ({} prompt tokens)",
+        report.total_tokens / report.makespan.max(1e-9),
+        report.total_tokens as u64
     );
+    println!("  output TPS/GPU      : {:.1} tok/s", report.tps_per_gpu);
+    println!("  TPS/user            : {:.1} tok/s", report.tps_per_user);
+    println!("  median TTFT         : {:.1} ms", report.median_ttft * 1e3);
+    for (k, v) in &report.extras {
+        println!("  {k:<19} : {v}");
+    }
     println!("\nall layers composed: Pallas kernels → JAX model → HLO → PJRT → rust coordinator ✓");
-    Ok(())
 }

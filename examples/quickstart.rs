@@ -3,35 +3,35 @@
 //! Runs entirely from the analytic/simulation layer (no artifacts needed):
 //! 1. roofline analysis — when can DWDP hide remote-weight prefetch?
 //! 2. contention analytics — why TDM slicing matters (§4.3.1),
-//! 3. a discrete-event context-group run — DEP vs DWDP under imbalance.
+//! 3. the unified serving API — one `Scenario`, two fidelities, DEP vs
+//!    DWDP under imbalance.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use dwdp::config::ParallelMode;
 use dwdp::contention::contention_distribution;
-use dwdp::engine::run_context;
 use dwdp::model::Category;
 use dwdp::roofline::{crossover_isl, fig3_sweep};
+use dwdp::serving::{Fidelity, Scenario, ServingStack};
 
 fn main() {
-    let hw = HardwareConfig::gb200();
-    let model = PaperModelConfig::deepseek_r1();
-
     // 1. Roofline: sweep ISL at batch 1 (paper §3 / Fig. 3).
-    let mut serving = ServingConfig::default_context(ParallelMode::Dwdp, 4);
-    serving.validate(&model).unwrap();
-    let mut hw_b1 = hw.clone();
-    hw_b1.ce_bw = dwdp::experiments::calib::FIG3_CE_BW;
+    let spec = Scenario::context()
+        .mode(ParallelMode::Dwdp)
+        .group(4)
+        .ce_bw(dwdp::experiments::calib::FIG3_CE_BW)
+        .build()
+        .expect("roofline scenario");
     println!("== Roofline (DWDP4 vs DEP4, batch 1) ==");
-    for p in fig3_sweep(&hw_b1, &model, &serving, &[4096, 16384, 65536]) {
+    for p in fig3_sweep(&spec.hw, &spec.model, &spec.serving, &[4096, 16384, 65536]) {
         println!(
             "  ISL {:>6}: compute/prefetch = {:.2}, DEP/DWDP = {:.2}",
             p.isl, p.compute_prefetch_ratio, p.dep_dwdp_ratio
         );
     }
-    if let Some(x) = crossover_isl(&hw_b1, &model, &serving, 1024, 262144) {
+    if let Some(x) = crossover_isl(&spec.hw, &spec.model, &spec.serving, 1024, 262144) {
         println!("  prefetch fully hidden from ISL ≈ {x} (paper: ~16K)");
     }
 
@@ -47,15 +47,23 @@ fn main() {
         );
     }
 
-    // 3. Simulated context group: imbalanced workload, DEP vs DWDP.
+    // 3. The serving API: one scenario description, DEP vs DWDP at DES
+    //    fidelity (swap `Fidelity::Des` for `Analytic` to get the
+    //    closed-form answer in microseconds of wall time).
     println!("\n== Context group under imbalance (ISL 8K, ratio 0.5) ==");
     std::env::set_var("DWDP_QUICK", "1");
-    let mut s = dwdp::experiments::calib::context_serving(ParallelMode::Dep, 4);
-    s.isl_ratio = 0.5;
-    s.validate(&model).unwrap();
-    let dep = run_context(&hw, &model, &s, 2, false);
-    s.mode = ParallelMode::Dwdp;
-    let dwdp = run_context(&hw, &model, &s, 2, false);
+    let scenario = |mode| {
+        dwdp::experiments::calib::context_scenario(mode, 4)
+            .ratio(0.5)
+            .requests(2)
+    };
+    let run = |mode| {
+        ServingStack::new(scenario(mode).build().expect("scenario"), Fidelity::Des)
+            .run()
+            .expect("DES backend")
+    };
+    let dep = run(ParallelMode::Dep);
+    let dwdp = run(ParallelMode::Dwdp);
     println!(
         "  DEP4 : {:>7.0} tok/s/GPU  (sync {:>5.1} µs/layer, comm {:>5.1} µs/layer)",
         dep.tps_per_gpu,

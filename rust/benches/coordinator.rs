@@ -3,17 +3,17 @@
 //! Fig. 5 Pareto sweep).
 
 use dwdp::bench::Bencher;
-use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode};
-use dwdp::coordinator::{ContextBatcher, DisaggSim, GroupLatencyModel, RoutePolicy, Router};
+use dwdp::config::ParallelMode;
+use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::experiments::calib;
+use dwdp::serving::{Fidelity, ServingStack};
 use dwdp::workload::{IslDist, WorkloadGen};
 
 fn main() {
     let mut b = Bencher::new();
-    let hw = HardwareConfig::gb200();
-    let m = PaperModelConfig::deepseek_r1();
-    let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-    s.validate(&m).unwrap();
+    let ctx_spec = calib::context_scenario(ParallelMode::Dwdp, 4)
+        .build()
+        .expect("context scenario");
 
     // Batcher: push + drain 1024 requests.
     let mut gen = WorkloadGen::new(IslDist::RatioWindow { isl: 8192, ratio: 0.8 }, 1024, 0.0, 3);
@@ -42,20 +42,20 @@ fn main() {
     }
 
     // Group latency model: one 4-request DWDP batch.
-    let lm = GroupLatencyModel::new(&hw, &m, &s);
+    let lm = GroupLatencyModel::new(&ctx_spec.hw, &ctx_spec.model, &ctx_spec.serving);
     b.bench("latency_model/prefill_batch4_dwdp", || {
         lm.prefill_offsets(&[8192, 7200, 6800, 6600])
     });
 
-    // One full end-to-end point (24 requests).
-    let sim = DisaggSim {
-        hw: hw.clone(),
-        model: m.clone(),
-        serving: s.clone(),
-        n_ctx_groups: 2,
-        n_gen_gpus: 16,
-        route_policy: RoutePolicy::LeastLoaded,
-    };
-    b.bench("disagg/e2e_point_24req", || sim.run(24, 3.0));
+    // One full end-to-end point (24 requests) through the serving API.
+    let e2e_spec = calib::e2e_scenario(ParallelMode::Dwdp)
+        .ctx_groups(2)
+        .gen_gpus(16)
+        .requests(24)
+        .rate(3.0)
+        .build()
+        .expect("e2e scenario");
+    let stack = ServingStack::new(e2e_spec, Fidelity::Analytic);
+    b.bench("disagg/e2e_point_24req", || stack.run().expect("analytic backend"));
     b.finish();
 }

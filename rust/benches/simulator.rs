@@ -4,10 +4,10 @@
 //! numbers go to EXPERIMENTS.md §Perf).
 
 use dwdp::bench::Bencher;
-use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode};
-use dwdp::engine::run_context;
+use dwdp::config::{HardwareConfig, ParallelMode};
 use dwdp::experiments::calib;
 use dwdp::model::{Category, OpKind};
+use dwdp::serving::{Fidelity, ServingStack};
 use dwdp::sim::{ComputeStep, Simulation, Slice, Step};
 
 fn events_per_sec_case(b: &mut Bencher) {
@@ -48,18 +48,20 @@ fn main() {
     let mut b = Bencher::new();
     events_per_sec_case(&mut b);
 
-    // Full context-group runs — the engines behind Tables 1/3/4.
-    let hw = HardwareConfig::gb200();
-    let m = PaperModelConfig::deepseek_r1();
+    // Full context-group runs — the DES backend behind Tables 1/3/4,
+    // reached through the unified serving API.
     for (name, mode) in [("dep4", ParallelMode::Dep), ("dwdp4", ParallelMode::Dwdp)] {
-        let mut s = calib::context_serving(mode, 4);
-        s.validate(&m).unwrap();
-        let events = run_context(&hw, &m, &s, 1, false).sim.events_processed as f64;
+        let spec = calib::context_scenario(mode, 4)
+            .requests(1)
+            .build()
+            .expect("bench scenario");
+        let stack = ServingStack::new(spec, Fidelity::Des);
+        let events = stack.run().expect("DES backend").events as f64;
         b.bench_n(
             &format!("engine/context_{name}_r1 ({events} events)"),
             events,
             || {
-                run_context(&hw, &m, &s, 1, false);
+                stack.run().expect("DES backend");
             },
         );
     }

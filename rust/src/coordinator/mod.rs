@@ -8,10 +8,12 @@
 //! paper's metric definition.
 //!
 //! Context-group latency comes from [`GroupLatencyModel`], a mid-fidelity
-//! analytic model derived from the same roofline ops as the DES (validated
-//! against it in `engine::tests`): DEP pays `max-over-ranks(compute) +
-//! all2all` per layer (lockstep), DWDP pays `max(compute, prefetch)` per
-//! rank *independently* (async) plus a contention residual when TDM is off.
+//! analytic model derived from the same roofline ops as the DES (the two
+//! fidelities are cross-validated in `serving::tests`): DEP pays
+//! `max-over-ranks(compute) + all2all` per layer (lockstep), DWDP pays
+//! `max(compute, prefetch)` per rank *independently* (async) plus a
+//! contention residual when TDM is off.  The [`PrefillOffsets`] seam lets
+//! [`DisaggSim`] swap the analytic prefill model for a DES-backed one.
 
 pub mod batcher;
 
@@ -82,7 +84,7 @@ pub struct GroupLatencyModel {
 
 impl GroupLatencyModel {
     pub fn new(hw: &HardwareConfig, model: &PaperModelConfig, serving: &ServingConfig) -> Self {
-        let chunk_tokens = (serving.max_num_tokens / crate::engine::CHUNK_DIVISOR).max(64);
+        let chunk_tokens = crate::engine::chunk_tokens(serving);
         GroupLatencyModel {
             hw: hw.clone(),
             model: model.clone(),
@@ -235,10 +237,33 @@ pub struct E2ePoint {
     pub tps_gpu: f64,
     pub median_ttft: f64,
     pub n_requests: usize,
+    /// First arrival to last finish, seconds.
+    pub span: f64,
+}
+
+/// Per-batch prefill completion model: given the prompt lengths of one
+/// context batch, return each request's completion offset (seconds after
+/// the batch starts on its group).
+///
+/// Implemented analytically by [`GroupLatencyModel`] and at DES fidelity
+/// by `serving::DesBackend`'s adapter over the engine — the seam that lets
+/// [`DisaggSim`] run at either fidelity.
+pub trait PrefillOffsets {
+    fn offsets(&self, isls: &[usize]) -> Vec<f64>;
+}
+
+impl PrefillOffsets for GroupLatencyModel {
+    fn offsets(&self, isls: &[usize]) -> Vec<f64> {
+        self.prefill_offsets(isls)
+    }
 }
 
 /// Disaggregated serving simulation (request granularity).
-pub struct DisaggSim {
+///
+/// Crate-internal: external callers describe the deployment with a
+/// [`crate::serving::Scenario`] and run it through a
+/// [`crate::serving::ServingStack`], which constructs this simulation.
+pub(crate) struct DisaggSim {
     pub hw: HardwareConfig,
     pub model: PaperModelConfig,
     pub serving: ServingConfig,
@@ -248,12 +273,23 @@ pub struct DisaggSim {
 }
 
 impl DisaggSim {
-    /// Run `n_requests` at `arrival_rate` (req/s) and aggregate metrics.
+    /// Run `n_requests` at `arrival_rate` (req/s) with the analytic prefill
+    /// model and aggregate metrics.
     pub fn run(&self, n_requests: usize, arrival_rate: f64) -> E2ePoint {
+        let latency = GroupLatencyModel::new(&self.hw, &self.model, &self.serving);
+        self.run_with(n_requests, arrival_rate, &latency)
+    }
+
+    /// Run with an explicit prefill model (analytic or DES-backed).
+    pub fn run_with(
+        &self,
+        n_requests: usize,
+        arrival_rate: f64,
+        prefill: &dyn PrefillOffsets,
+    ) -> E2ePoint {
         let mut gen_rng = Rng::new(self.serving.seed ^ 0xE2E);
         let mut wl = WorkloadGen::from_serving(&self.serving, arrival_rate);
         let requests: Vec<Request> = wl.take(n_requests);
-        let latency = GroupLatencyModel::new(&self.hw, &self.model, &self.serving);
         let gen = GenModel::new(&self.hw, &self.model, self.n_gen_gpus);
         let mut router = Router::new(self.n_ctx_groups, self.route_policy);
 
@@ -285,7 +321,7 @@ impl DisaggSim {
                     j += 1;
                 }
                 let isls: Vec<usize> = batch.iter().map(|r| r.isl).collect();
-                let offsets = latency.prefill_offsets(&isls);
+                let offsets = prefill.offsets(&isls);
                 let mut batch_end = start;
                 for (r, off) in batch.iter().zip(&offsets) {
                     first_token[r.id as usize] = start + off;
@@ -358,6 +394,7 @@ impl DisaggSim {
             tps_gpu: metrics.output_tps_per_gpu(n_gpus, span),
             median_ttft: metrics.median_ttft(),
             n_requests: metrics.n(),
+            span,
         }
     }
 }
@@ -392,6 +429,41 @@ mod tests {
         assert_eq!(r.route(10), 1); // 20 < 100
         r.drain(0, 100);
         assert_eq!(r.route(10), 0);
+    }
+
+    #[test]
+    fn router_round_robin_wraps_many_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        for i in 0..30 {
+            assert_eq!(r.route(1), i % 3, "step {i}");
+        }
+        // Every group saw exactly its share of tokens.
+        assert_eq!(r.queued_tokens, vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn router_least_loaded_ties_break_to_lowest_index() {
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        // All empty: first route must pick group 0, not a later group.
+        assert_eq!(r.route(5), 0);
+        // Groups 1 and 2 now tie at zero: lowest index wins.
+        assert_eq!(r.route(5), 1);
+        assert_eq!(r.route(5), 2);
+        // Three-way tie again at 5 tokens each.
+        assert_eq!(r.route(1), 0);
+    }
+
+    #[test]
+    fn router_drain_underflow_saturates_to_zero() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        r.route(10); // group 0 holds 10 tokens
+        r.drain(0, 500); // drain more than queued: must clamp, not wrap
+        assert_eq!(r.queued_tokens[0], 0);
+        // Routing still works after the over-drain.
+        assert_eq!(r.route(1), 0);
+        // Draining an already-empty group is a no-op.
+        r.drain(1, 99);
+        assert_eq!(r.queued_tokens[1], 0);
     }
 
     #[test]

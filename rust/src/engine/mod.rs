@@ -1,10 +1,15 @@
 //! Context-server execution harness: workload → chunk schedules → rank
 //! programs → discrete-event simulation → serving metrics.
 //!
-//! This is the layer the experiment regenerators call: it assembles a
-//! DWDP or DEP group, feeds every rank an independent request stream
-//! (data-parallel serving), splits prompts into chunked-prefill
-//! iterations, and runs the group to completion.
+//! This is the discrete-event fidelity level behind
+//! [`crate::serving::DesBackend`]: it assembles a DWDP or DEP group, feeds
+//! every rank an independent request stream (data-parallel serving), splits
+//! prompts into chunked-prefill iterations, and runs the group to
+//! completion.  The entry points are crate-internal on purpose — external
+//! callers (examples, benches, integration tests) describe workloads with a
+//! [`crate::serving::Scenario`] and execute them through a
+//! [`crate::serving::ServingStack`], which picks this engine when asked for
+//! DES fidelity.
 //!
 //! ## Calibration
 //!
@@ -27,6 +32,13 @@ use crate::workload::{IslDist, RoutingSkew};
 
 /// MNT → per-iteration chunk size divisor (see module docs).
 pub const CHUNK_DIVISOR: usize = 16;
+
+/// The single source of truth for the chunked-prefill token budget —
+/// shared by both engine entry points, the analytic latency model, and the
+/// analytic backend so every fidelity prices the same iteration schedule.
+pub(crate) fn chunk_tokens(serving: &ServingConfig) -> usize {
+    (serving.max_num_tokens / CHUNK_DIVISOR).max(64)
+}
 
 /// A request's prefill, split into chunk workloads.
 #[derive(Debug, Clone)]
@@ -55,6 +67,21 @@ pub struct ContextRun {
     pub mean_freq: f64,
 }
 
+/// Split one prompt into chunked-prefill workloads.
+fn chunk_prompt(isl: usize, chunk_tokens: usize, model: &PaperModelConfig) -> Vec<ChunkWorkload> {
+    let mut chunks = Vec::new();
+    let mut done = 0usize;
+    while done < isl {
+        let n = chunk_tokens.min(isl - done);
+        // Causal prefill: this chunk attends to everything before it
+        // plus (on average) half of itself.
+        let avg_ctx = done + n / 2;
+        chunks.push(ChunkWorkload::uniform(n, avg_ctx.max(1), model));
+        done += n;
+    }
+    chunks
+}
+
 /// Plan `n_requests` per rank into chunked prefill iterations.
 fn plan_requests(
     model: &PaperModelConfig,
@@ -67,19 +94,23 @@ fn plan_requests(
     let mut out = Vec::with_capacity(n_requests);
     for id in 0..n_requests {
         let isl = dist.sample(rng);
-        let mut chunks = Vec::new();
-        let mut done = 0usize;
-        while done < isl {
-            let n = chunk_tokens.min(isl - done);
-            // Causal prefill: this chunk attends to everything before it
-            // plus (on average) half of itself.
-            let avg_ctx = done + n / 2;
-            chunks.push(ChunkWorkload::uniform(n, avg_ctx.max(1), model));
-            done += n;
-        }
-        out.push(PlannedRequest { id: id as u64, chunks });
+        out.push(PlannedRequest { id: id as u64, chunks: chunk_prompt(isl, chunk_tokens, model) });
     }
     out
+}
+
+/// Sample each rank's request ISLs exactly as [`run_context`] does (same
+/// root seed, same per-rank fork order, same distribution draws), so the
+/// analytic backend can price the *identical* workload the DES executes.
+pub(crate) fn sample_rank_isls(serving: &ServingConfig, n_requests: usize) -> Vec<Vec<usize>> {
+    let dist = IslDist::from_serving(serving);
+    let mut root = Rng::new(serving.seed);
+    (0..serving.group_size)
+        .map(|r| {
+            let mut rng = root.fork(r as u64);
+            (0..n_requests).map(|_| dist.sample(&mut rng)).collect()
+        })
+        .collect()
 }
 
 /// Flatten per-request chunks into a rank's iteration sequence, recording
@@ -95,27 +126,81 @@ fn rank_schedule(reqs: &[PlannedRequest]) -> (Vec<ChunkWorkload>, Vec<(u64, usiz
 }
 
 /// Run a context group: `n_requests` prompts per rank, data-parallel.
-pub fn run_context(
+///
+/// Crate-internal: external callers go through
+/// [`crate::serving::ServingStack`] at DES fidelity.
+pub(crate) fn run_context(
     hw: &HardwareConfig,
     model: &PaperModelConfig,
     serving: &ServingConfig,
     n_requests: usize,
     enable_trace: bool,
 ) -> ContextRun {
-    let n = serving.group_size;
-    let chunk_tokens = (serving.max_num_tokens / CHUNK_DIVISOR).max(64);
+    let chunk_tokens = chunk_tokens(serving);
     let mut root = Rng::new(serving.seed);
-    let placement =
-        ExpertPlacement::balanced(model.n_experts, n, serving.local_experts.max(1));
-    let skew_model = RoutingSkew::new(model.n_experts, model.top_k, serving.routing_skew);
-
     // Per-rank request plans (independent streams -> imbalance).
-    let mut per_rank: Vec<Vec<PlannedRequest>> = (0..n)
+    let per_rank: Vec<Vec<PlannedRequest>> = (0..serving.group_size)
         .map(|r| {
             let mut rng = root.fork(r as u64);
             plan_requests(model, serving, n_requests, chunk_tokens, &mut rng)
         })
         .collect();
+    run_planned(hw, model, serving, per_rank, &mut root, enable_trace)
+}
+
+/// Run one explicit batch of prompts through the context-group DES:
+/// request `i` (prompt length `isls[i]`) is assigned to rank `i % group`,
+/// mirroring [`crate::coordinator::GroupLatencyModel::prefill_offsets`] so
+/// the two fidelities price the same schedule.  The completion `Mark` of
+/// request `i` carries tag `i`.
+///
+/// This is the DES prefill model behind the disaggregated serving loop
+/// (`serving::DesBackend` wires it into `DisaggSim`).
+pub(crate) fn run_context_batch(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    isls: &[usize],
+    enable_trace: bool,
+) -> ContextRun {
+    let n = serving.group_size;
+    let chunk_tokens = chunk_tokens(serving);
+    // Batch runs get their own stream family; folding the batch contents
+    // into the seed decorrelates successive batches (identical prompt
+    // lists — identical workloads — legitimately share a stream) without
+    // any shared mutable state across calls.
+    let batch_sig = isls
+        .iter()
+        .fold(0xBA7C4u64, |h, &x| (h.rotate_left(7) ^ x as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut root = Rng::new(serving.seed ^ batch_sig);
+    let mut per_rank: Vec<Vec<PlannedRequest>> = vec![Vec::new(); n];
+    for (ri, &isl) in isls.iter().enumerate() {
+        per_rank[ri % n].push(PlannedRequest {
+            id: ri as u64,
+            chunks: chunk_prompt(isl.max(1), chunk_tokens, model),
+        });
+    }
+    run_planned(hw, model, serving, per_rank, &mut root, enable_trace)
+}
+
+/// Shared core: compile per-rank plans into simulator programs and run the
+/// group to completion.  The compile forks draw stream ids `1000+r` /
+/// `2000+r` from whatever state `root` is in: `run_context` hands over a
+/// root that already consumed its `0..n` sampling forks (preserving the
+/// historical stream layout), while `run_context_batch` hands over a fresh
+/// batch-seeded root — both are valid, the streams just differ.
+fn run_planned(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    mut per_rank: Vec<Vec<PlannedRequest>>,
+    root: &mut Rng,
+    enable_trace: bool,
+) -> ContextRun {
+    let n = serving.group_size;
+    let placement =
+        ExpertPlacement::balanced(model.n_experts, n, serving.local_experts.max(1));
+    let skew_model = RoutingSkew::new(model.n_experts, model.top_k, serving.routing_skew);
 
     // DEP runs in lockstep: every rank needs the same iteration count.
     // Pad shorter ranks with (near-)empty chunks — a rank that runs out of

@@ -1,36 +1,30 @@
 //! Context-only experiments: Fig. 1(b), Table 1, Table 3(a–d), Table 4,
 //! the merge-elimination ablation, and the Fig. 4 contention trace.
 //!
-//! All run the full discrete-event simulator (`engine::run_context`) with
-//! the DeepSeek-R1 analytic model on GB200 parameters.
+//! Each regenerator assembles its configuration with the
+//! [`crate::serving::Scenario`] builder (starting from the calibrated
+//! [`calib::context_scenario`] base) and executes it through a
+//! [`ServingStack`] at DES fidelity — the full discrete-event simulator
+//! with the DeepSeek-R1 analytic model on GB200 parameters.
 
 use super::calib;
 use super::ratio;
-use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
-use crate::engine::{run_context, ContextRun};
+use crate::config::ParallelMode;
 use crate::model::Category;
+use crate::serving::{Fidelity, RunReport, Scenario, ServingStack};
 use crate::trace::TraceSink;
 use crate::util::table::{f, us, Table};
 
-fn hw() -> HardwareConfig {
-    HardwareConfig::gb200()
-}
-
-fn model() -> PaperModelConfig {
-    PaperModelConfig::deepseek_r1()
-}
-
-fn run(serving: &ServingConfig) -> ContextRun {
-    let m = model();
-    let mut s = serving.clone();
-    s.validate(&m).unwrap();
-    run_context(&hw(), &m, &s, calib::n_requests(), false)
+/// Run one context scenario at DES fidelity.
+fn run(scn: Scenario) -> RunReport {
+    ServingStack::new(scn.build().expect("context scenario"), Fidelity::Des)
+        .run()
+        .expect("DES backend")
 }
 
 /// E1 — Figure 1(b): DEP synchronization overhead vs per-rank sequence-
 /// length imbalance (coefficient of variation of ISLs).
 pub fn fig1() -> Table {
-    let m = model();
     let mut t = Table::new(&[
         "ISL CV (%)",
         "input ratio",
@@ -42,11 +36,11 @@ pub fn fig1() -> Table {
     // Uniform[r·ISL, ISL] has CV = (1-r) / (sqrt(3)·(1+r)).
     for ratio_in in [1.0, 0.9, 0.8, 0.65, 0.5] {
         let cv = (1.0 - ratio_in) / (3.0f64.sqrt() * (1.0 + ratio_in)) * 100.0;
-        let mut s = calib::context_serving(ParallelMode::Dep, 4);
-        s.isl = 8192;
-        s.isl_ratio = ratio_in;
-        s.validate(&m).unwrap();
-        let r = run(&s);
+        let r = run(
+            calib::context_scenario(ParallelMode::Dep, 4)
+                .isl(8192)
+                .ratio(ratio_in),
+        );
         let b = &r.per_layer_breakdown;
         let sync = b.get(Category::Synchronization);
         let comm = b.get(Category::Communication);
@@ -64,20 +58,15 @@ pub fn fig1() -> Table {
 
 /// E3 — Table 1: context-only per-layer latency breakdown, DEP4 vs DWDP4.
 pub fn table1() -> Table {
-    let m = model();
-    let mut sd = calib::context_serving(ParallelMode::Dep, 4);
-    sd.isl = 8192;
-    sd.isl_ratio = 0.8;
-    sd.max_num_tokens = 32768;
-    let mut sw = sd.clone();
-    sw.mode = ParallelMode::Dwdp;
+    let base = |mode| {
+        calib::context_scenario(mode, 4)
+            .isl(8192)
+            .ratio(0.8)
+            .mnt(32768)
+    };
+    let dep = run(base(ParallelMode::Dep));
     // Table 1 profiles the *naive* DWDP baseline: merge-elim off, TDM off.
-    sw.merge_elim = false;
-    sw.tdm = false;
-    sd.validate(&m).unwrap();
-    sw.validate(&m).unwrap();
-    let dep = run(&sd);
-    let dwdp = run(&sw);
+    let dwdp = run(base(ParallelMode::Dwdp).merge_elim(false).tdm(false));
 
     let mut t = Table::new(&["Category", "DEP4 (µs)", "DWDP4 (µs)", "Δ/T_DEP4"])
         .with_title("Table 1 — context-only per-layer latency breakdown (ISL 8K, ratio 0.8, MNT 32768)");
@@ -108,13 +97,9 @@ pub fn table3a() -> Table {
     let mut t = Table::new(&["ISL", "TTFT speedup", "TPS/GPU speedup"])
         .with_title("Table 3a — speedup vs ISL (MNT = 32768)");
     for isl in [1024usize, 8192, 16384, 32768] {
-        let mut sd = calib::context_serving(ParallelMode::Dep, 4);
-        sd.isl = isl;
-        sd.max_num_tokens = 32768;
-        let mut sw = sd.clone();
-        sw.mode = ParallelMode::Dwdp;
-        let dep = run(&sd);
-        let dwdp = run(&sw);
+        let base = |mode| calib::context_scenario(mode, 4).isl(isl).mnt(32768);
+        let dep = run(base(ParallelMode::Dep));
+        let dwdp = run(base(ParallelMode::Dwdp));
         t.row(vec![
             isl.to_string(),
             ratio(dep.median_ttft, dwdp.median_ttft),
@@ -129,13 +114,9 @@ pub fn table3b() -> Table {
     let mut t = Table::new(&["MNT", "TTFT speedup", "TPS/GPU speedup"])
         .with_title("Table 3b — speedup vs MNT (ISL = 8192)");
     for mnt in [16384usize, 32768] {
-        let mut sd = calib::context_serving(ParallelMode::Dep, 4);
-        sd.isl = 8192;
-        sd.max_num_tokens = mnt;
-        let mut sw = sd.clone();
-        sw.mode = ParallelMode::Dwdp;
-        let dep = run(&sd);
-        let dwdp = run(&sw);
+        let base = |mode| calib::context_scenario(mode, 4).isl(8192).mnt(mnt);
+        let dep = run(base(ParallelMode::Dep));
+        let dwdp = run(base(ParallelMode::Dwdp));
         t.row(vec![
             mnt.to_string(),
             ratio(dep.median_ttft, dwdp.median_ttft),
@@ -150,14 +131,14 @@ pub fn table3c() -> Table {
     let mut t = Table::new(&["ISL/STD", "TTFT speedup", "TPS/GPU speedup"])
         .with_title("Table 3c — speedup vs workload imbalance (ISL = 16384)");
     for std in [0.0f64, 1024.0, 2048.0, 4096.0] {
-        let mut sd = calib::context_serving(ParallelMode::Dep, 4);
-        sd.isl = 16384;
-        sd.isl_ratio = 1.0;
-        sd.isl_std = std;
-        let mut sw = sd.clone();
-        sw.mode = ParallelMode::Dwdp;
-        let dep = run(&sd);
-        let dwdp = run(&sw);
+        let base = |mode| {
+            calib::context_scenario(mode, 4)
+                .isl(16384)
+                .ratio(1.0)
+                .isl_std(std)
+        };
+        let dep = run(base(ParallelMode::Dep));
+        let dwdp = run(base(ParallelMode::Dwdp));
         t.row(vec![
             format!("16384/{}", std as usize),
             ratio(dep.median_ttft, dwdp.median_ttft),
@@ -172,13 +153,9 @@ pub fn table3d() -> Table {
     let mut t = Table::new(&["Group size", "TTFT speedup", "TPS/GPU speedup"])
         .with_title("Table 3d — speedup vs group size (ISL 16384, MNT 32768)");
     for g in [3usize, 4] {
-        let mut sd = calib::context_serving(ParallelMode::Dep, g);
-        sd.isl = 16384;
-        sd.max_num_tokens = 32768;
-        let mut sw = sd.clone();
-        sw.mode = ParallelMode::Dwdp;
-        let dep = run(&sd);
-        let dwdp = run(&sw);
+        let base = |mode| calib::context_scenario(mode, g).isl(16384).mnt(32768);
+        let dep = run(base(ParallelMode::Dep));
+        let dwdp = run(base(ParallelMode::Dwdp));
         t.row(vec![
             format!("DWDP{g}"),
             ratio(dep.median_ttft, dwdp.median_ttft),
@@ -191,14 +168,14 @@ pub fn table3d() -> Table {
 /// E10 — §5.2 merge-elimination ablation: DWDP with and without the
 /// split-weight kernel (D2D merge on/off), same config as Table 1.
 pub fn merge_elim() -> Table {
-    let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-    s.isl = 8192;
-    s.max_num_tokens = 32768;
-    s.tdm = false;
-    s.merge_elim = false;
-    let naive = run(&s);
-    s.merge_elim = true;
-    let elim = run(&s);
+    let base = || {
+        calib::context_scenario(ParallelMode::Dwdp, 4)
+            .isl(8192)
+            .mnt(32768)
+            .tdm(false)
+    };
+    let naive = run(base().merge_elim(false));
+    let elim = run(base().merge_elim(true));
     let mut t = Table::new(&["Variant", "D2D (µs/layer)", "TPS/GPU", "vs naive"])
         .with_title("Merge-elimination ablation (§5.2)");
     t.row(vec![
@@ -218,28 +195,19 @@ pub fn merge_elim() -> Table {
 
 /// E11 — Table 4: contention mitigation under short compute windows.
 pub fn table4() -> Table {
-    let m = model();
     let mut t = Table::new(&["ISL Ratio", "MNT", "DEP", "DWDP + Merge Elim.", "Full DWDP"])
         .with_title("Table 4 — context TPS/GPU normalized to DEP (ISL 8K, 1 MB slices)");
     for isl_ratio in [0.5f64, 0.8] {
         for mnt in [16384usize, 32768] {
-            let mut sd = calib::context_serving(ParallelMode::Dep, 4);
-            sd.isl = 8192;
-            sd.isl_ratio = isl_ratio;
-            sd.max_num_tokens = mnt;
-            sd.validate(&m).unwrap();
-            let dep = run(&sd);
-
-            let mut sm = sd.clone();
-            sm.mode = ParallelMode::Dwdp;
-            sm.merge_elim = true;
-            sm.tdm = false;
-            let elim = run(&sm);
-
-            let mut sf = sm.clone();
-            sf.tdm = true;
-            let full = run(&sf);
-
+            let base = |mode| {
+                calib::context_scenario(mode, 4)
+                    .isl(8192)
+                    .ratio(isl_ratio)
+                    .mnt(mnt)
+            };
+            let dep = run(base(ParallelMode::Dep));
+            let elim = run(base(ParallelMode::Dwdp).merge_elim(true).tdm(false));
+            let full = run(base(ParallelMode::Dwdp).merge_elim(true).tdm(true));
             t.row(vec![
                 format!("{isl_ratio}"),
                 mnt.to_string(),
@@ -256,25 +224,24 @@ pub fn table4() -> Table {
 /// emit a Chrome trace exposing the many-to-one bubbles; returns (table of
 /// bubble stats, trace).
 pub fn fig4_trace() -> (Table, TraceSink) {
-    let m = model();
-    let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
     // Paper Fig 4: max_num_tokens 16384, ISLs 4K-8K -> window ~ prefetch.
-    s.isl = 8192;
-    s.isl_ratio = 0.5;
-    s.max_num_tokens = 16384;
-    s.tdm = false;
-    s.merge_elim = true;
-    s.validate(&m).unwrap();
-    let r = run_context(&hw(), &m, &s, calib::n_requests(), true);
+    let r = run(
+        calib::context_scenario(ParallelMode::Dwdp, 4)
+            .isl(8192)
+            .ratio(0.5)
+            .mnt(16384)
+            .tdm(false)
+            .merge_elim(true)
+            .trace(true),
+    );
+    let trace = r.trace.expect("trace requested from DES backend");
     let mut t = Table::new(&["Rank", "prefetch wait (ms)", "bubbles > 50µs", "longest bubble (µs)"])
         .with_title("Figure 4 — many-to-one contention exposing compute bubbles (no TDM)");
-    for (i, rank) in r.sim.ranks.iter().enumerate() {
+    for (i, wait) in r.rank_prefetch_wait.iter().enumerate() {
         let track = format!("rank{i}.sm");
         // Exposed waits are recorded as explicit "prefetch_wait" spans on
         // the SM track (category "bubble").
-        let bubbles: Vec<f64> = r
-            .sim
-            .trace
+        let bubbles: Vec<f64> = trace
             .spans
             .iter()
             .filter(|s| s.track == track && s.cat == "bubble" && s.dur > 50e-6)
@@ -283,12 +250,12 @@ pub fn fig4_trace() -> (Table, TraceSink) {
         let longest = bubbles.iter().cloned().fold(0.0f64, f64::max);
         t.row(vec![
             i.to_string(),
-            f(rank.prefetch_wait * 1e3, 2),
+            f(wait * 1e3, 2),
             bubbles.len().to_string(),
             us(longest * 1e6),
         ]);
     }
-    (t, r.sim.trace)
+    (t, trace)
 }
 
 #[cfg(test)]
@@ -358,12 +325,13 @@ pub fn ablation_slice_size() -> Table {
         .with_title("Ablation — TDM slice size (ISL 8K, ratio 0.5, MNT 16384)");
     let mut results = Vec::new();
     for &slice in &[16usize << 20, 4 << 20, 1 << 20, 256 << 10, 64 << 10] {
-        let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-        s.isl_ratio = 0.5;
-        s.max_num_tokens = 16384;
-        s.slice_bytes = slice;
-        let r = run(&s);
-        let wait: f64 = r.sim.ranks.iter().map(|x| x.prefetch_wait).sum();
+        let r = run(
+            calib::context_scenario(ParallelMode::Dwdp, 4)
+                .ratio(0.5)
+                .mnt(16384)
+                .slice_bytes(slice),
+        );
+        let wait: f64 = r.rank_prefetch_wait.iter().sum();
         results.push((slice, r.tps_per_gpu, wait));
     }
     let base = results.iter().find(|&&(sl, _, _)| sl == 1 << 20).unwrap().1;
@@ -381,7 +349,6 @@ pub fn ablation_slice_size() -> Table {
 /// Ablation — redundant expert placement (§2): more local experts per rank
 /// shrink the remote fetch; memory cost rises linearly.
 pub fn ablation_redundancy() -> Table {
-    let m = model();
     let mut t = Table::new(&[
         "local experts/rank",
         "remote fetch (MB/layer)",
@@ -392,17 +359,18 @@ pub fn ablation_redundancy() -> Table {
     .with_title("Ablation — redundant expert placement, DWDP4 (ISL 8K, MNT 16384)");
     let mut base_tps = 0.0;
     for &local in &[64usize, 96, 128, 192] {
-        let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-        s.max_num_tokens = 16384;
-        s.local_experts = local;
-        s.validate(&m).unwrap();
-        let r = run(&s);
+        let spec = calib::context_scenario(ParallelMode::Dwdp, 4)
+            .mnt(16384)
+            .local_experts(local)
+            .build()
+            .expect("redundancy scenario");
+        let fetch_mb = spec.serving.remote_experts(&spec.model) * spec.model.expert_bytes() / 1e6;
+        let hbm_gb = local as f64 * spec.model.expert_bytes() * spec.model.n_moe_layers() as f64
+            / 1e9;
+        let r = ServingStack::new(spec, Fidelity::Des).run().expect("DES backend");
         if local == 64 {
             base_tps = r.tps_per_gpu;
         }
-        let fetch_mb =
-            s.remote_experts(&m) * m.expert_bytes() / 1e6;
-        let hbm_gb = local as f64 * m.expert_bytes() * m.n_moe_layers() as f64 / 1e9;
         t.row(vec![
             local.to_string(),
             f(fetch_mb, 1),
@@ -424,14 +392,13 @@ pub fn ablation_prefetch_fraction() -> Table {
         "vs DEP",
     ])
     .with_title("Ablation — on-demand prefetch fraction (ISL 8K, MNT 32768)");
-    let mut sd = calib::context_serving(ParallelMode::Dep, 4);
-    sd.isl = 8192;
-    let dep = run(&sd);
+    let dep = run(calib::context_scenario(ParallelMode::Dep, 4).isl(8192));
     for &frac in &[0.03f64, 0.07, 0.15, 0.3, 0.6, 1.0] {
-        let mut s = calib::context_serving(ParallelMode::Dwdp, 4);
-        s.isl = 8192;
-        s.prefetch_fraction = frac;
-        let r = run(&s);
+        let r = run(
+            calib::context_scenario(ParallelMode::Dwdp, 4)
+                .isl(8192)
+                .prefetch_fraction(frac),
+        );
         t.row(vec![
             format!("{frac}"),
             us(r.per_layer_breakdown.get(Category::P2pCopy) * 1e6),

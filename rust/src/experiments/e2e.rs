@@ -4,20 +4,15 @@
 //! Setup mirrors §5.3: SemiAnalysis-style workload (ISL ∈ [6.4K, 8K],
 //! OSL 1K), generation-server configuration fixed, DWDP applied only to
 //! the context servers, improved points found primarily by reducing the
-//! number of context groups.
+//! number of context groups.  Every point is one
+//! [`crate::serving::Scenario`] run through the [`ServingStack`] at
+//! analytic fidelity (the sweep is hundreds of points; the DES backend
+//! prices identical scenarios when higher fidelity is wanted).
 
 use super::calib;
-use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
-use crate::coordinator::{DisaggSim, E2ePoint, RoutePolicy};
+use crate::config::ParallelMode;
+use crate::serving::{Fidelity, RunReport, ServingStack};
 use crate::util::table::{f, Table};
-
-fn e2e_serving(mode: ParallelMode) -> ServingConfig {
-    let mut s = calib::context_serving(mode, 4);
-    s.isl = 8192;
-    s.isl_ratio = 0.8;
-    s.osl = 1024;
-    s
-}
 
 fn n_reqs() -> usize {
     if std::env::var("DWDP_QUICK").is_ok() {
@@ -29,9 +24,10 @@ fn n_reqs() -> usize {
 
 /// Sweep a frontier for one mode: vary context groups × arrival rate ×
 /// generation pool size.  Memoized per mode (fig5/table5/table6 share it).
-pub fn sweep(mode: ParallelMode) -> Vec<E2ePoint> {
-    static CACHE: std::sync::OnceLock<std::sync::Mutex<std::collections::HashMap<&'static str, Vec<E2ePoint>>>> =
-        std::sync::OnceLock::new();
+pub fn sweep(mode: ParallelMode) -> Vec<RunReport> {
+    static CACHE: std::sync::OnceLock<
+        std::sync::Mutex<std::collections::HashMap<&'static str, Vec<RunReport>>>,
+    > = std::sync::OnceLock::new();
     let cache = CACHE.get_or_init(Default::default);
     if let Some(hit) = cache.lock().unwrap().get(mode.name()) {
         return hit.clone();
@@ -41,24 +37,23 @@ pub fn sweep(mode: ParallelMode) -> Vec<E2ePoint> {
     pts
 }
 
-fn sweep_uncached(mode: ParallelMode) -> Vec<E2ePoint> {
-    let hw = HardwareConfig::gb200();
-    let m = PaperModelConfig::deepseek_r1();
-    let mut s = e2e_serving(mode);
-    s.validate(&m).unwrap();
+fn sweep_uncached(mode: ParallelMode) -> Vec<RunReport> {
     let mut pts = Vec::new();
     for &n_ctx in &[1usize, 2, 3, 4, 6] {
         for &n_gen in &[16usize, 32] {
             for &rate in &[2.0f64, 5.0, 9.0, 11.0, 12.5, 14.0, 15.0, 16.0] {
-                let sim = DisaggSim {
-                    hw: hw.clone(),
-                    model: m.clone(),
-                    serving: s.clone(),
-                    n_ctx_groups: n_ctx,
-                    n_gen_gpus: n_gen,
-                    route_policy: RoutePolicy::LeastLoaded,
-                };
-                pts.push(sim.run(n_reqs(), rate));
+                let spec = calib::e2e_scenario(mode)
+                    .ctx_groups(n_ctx)
+                    .gen_gpus(n_gen)
+                    .rate(rate)
+                    .requests(n_reqs())
+                    .build()
+                    .expect("e2e scenario");
+                pts.push(
+                    ServingStack::new(spec, Fidelity::Analytic)
+                        .run()
+                        .expect("analytic backend"),
+                );
             }
         }
     }
@@ -66,18 +61,17 @@ fn sweep_uncached(mode: ParallelMode) -> Vec<E2ePoint> {
 }
 
 /// Keep only Pareto-optimal points (maximize both TPS/user and TPS/GPU).
-pub fn pareto(points: &[E2ePoint]) -> Vec<E2ePoint> {
-    let mut keep: Vec<E2ePoint> = Vec::new();
+pub fn pareto(points: &[RunReport]) -> Vec<RunReport> {
+    let mut keep: Vec<RunReport> = Vec::new();
     for p in points {
-        if points
-            .iter()
-            .any(|q| q.tps_user > p.tps_user * 1.001 && q.tps_gpu > p.tps_gpu * 1.001)
-        {
+        if points.iter().any(|q| {
+            q.tps_per_user > p.tps_per_user * 1.001 && q.tps_per_gpu > p.tps_per_gpu * 1.001
+        }) {
             continue;
         }
         keep.push(p.clone());
     }
-    keep.sort_by(|a, b| a.tps_user.total_cmp(&b.tps_user));
+    keep.sort_by(|a, b| a.tps_per_user.total_cmp(&b.tps_per_user));
     keep
 }
 
@@ -93,8 +87,8 @@ pub fn fig5() -> Table {
         for p in pts {
             t.row(vec![
                 name.into(),
-                f(p.tps_user, 1),
-                f(p.tps_gpu, 1),
+                f(p.tps_per_user, 1),
+                f(p.tps_per_gpu, 1),
                 p.n_ctx_groups.to_string(),
                 p.n_gen_gpus.to_string(),
                 f(p.median_ttft * 1e3, 0),
@@ -113,8 +107,10 @@ fn matched_bins() -> Vec<(String, f64, f64, f64, f64)> {
         [(20.0, 30.0), (40.0, 50.0), (60.0, 70.0), (80.0, 90.0), (170.0, 180.0)];
     let mut rows = Vec::new();
     for (lo, hi) in bins {
-        let base: Vec<&crate::coordinator::E2ePoint> =
-            dep.iter().filter(|p| p.tps_user >= lo && p.tps_user < hi).collect();
+        let base: Vec<&RunReport> = dep
+            .iter()
+            .filter(|p| p.tps_per_user >= lo && p.tps_per_user < hi)
+            .collect();
         if base.is_empty() {
             continue;
         }
@@ -125,13 +121,13 @@ fn matched_bins() -> Vec<(String, f64, f64, f64, f64)> {
         for b in &base {
             // closest-TPS/user DWDP point
             let m = dwdp.iter().min_by(|x, y| {
-                (x.tps_user - b.tps_user)
+                (x.tps_per_user - b.tps_per_user)
                     .abs()
-                    .total_cmp(&(y.tps_user - b.tps_user).abs())
+                    .total_cmp(&(y.tps_per_user - b.tps_per_user).abs())
             });
             if let Some(m) = m {
-                su_user.push(m.tps_user / b.tps_user);
-                su_gpu.push(m.tps_gpu / b.tps_gpu);
+                su_user.push(m.tps_per_user / b.tps_per_user);
+                su_gpu.push(m.tps_per_gpu / b.tps_per_gpu);
                 ttft_base.push(b.median_ttft * 1e3);
                 ttft_dwdp.push(m.median_ttft * 1e3);
             }
@@ -185,21 +181,22 @@ mod tests {
         std::env::set_var("DWDP_QUICK", "1");
     }
 
-    #[test]
-    fn pareto_filters_dominated_points() {
-        let mk = |u, g| E2ePoint {
-            n_ctx_groups: 1,
-            n_gen_gpus: 1,
-            arrival_rate: 1.0,
-            tps_user: u,
-            tps_gpu: g,
+    fn mk(u: f64, g: f64) -> RunReport {
+        RunReport {
+            tps_per_user: u,
+            tps_per_gpu: g,
             median_ttft: 0.1,
             n_requests: 1,
-        };
+            ..RunReport::default()
+        }
+    }
+
+    #[test]
+    fn pareto_filters_dominated_points() {
         let pts = vec![mk(10.0, 10.0), mk(20.0, 20.0), mk(5.0, 5.0)];
         let keep = pareto(&pts);
         assert_eq!(keep.len(), 1);
-        assert_eq!(keep[0].tps_user, 20.0);
+        assert_eq!(keep[0].tps_per_user, 20.0);
     }
 
     #[test]
@@ -211,7 +208,7 @@ mod tests {
         assert!(!front.is_empty());
         // Frontier is sorted and non-dominated.
         for w in front.windows(2) {
-            assert!(w[1].tps_user >= w[0].tps_user);
+            assert!(w[1].tps_per_user >= w[0].tps_per_user);
         }
     }
 
@@ -225,9 +222,11 @@ mod tests {
         let mut improved = false;
         for b in &dep {
             if let Some(m) = dwdp.iter().min_by(|x, y| {
-                (x.tps_user - b.tps_user).abs().total_cmp(&(y.tps_user - b.tps_user).abs())
+                (x.tps_per_user - b.tps_per_user)
+                    .abs()
+                    .total_cmp(&(y.tps_per_user - b.tps_per_user).abs())
             }) {
-                if m.tps_gpu > b.tps_gpu {
+                if m.tps_per_gpu > b.tps_per_gpu {
                     improved = true;
                     break;
                 }

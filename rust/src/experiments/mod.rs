@@ -1,8 +1,12 @@
 //! Experiment regenerators — one entry point per table/figure in the
-//! paper's evaluation (DESIGN.md §5 maps each to its modules).
+//! paper's evaluation (DESIGN.md maps each to its modules).
 //!
 //! Every function returns a [`Table`] whose rows mirror the paper's
-//! artifact; `dwdp-repro experiment <id>` prints it (and optionally CSV).
+//! artifact.  The regenerators are thin callers of the unified serving API:
+//! each builds a [`crate::serving::Scenario`], runs it through a
+//! [`crate::serving::ServingStack`], and formats the resulting
+//! [`crate::serving::RunReport`].  They are registered (id → runner) in
+//! [`crate::serving::registry`], which the CLI dispatches through.
 //! Calibration constants that tie the simulator to the paper's measured
 //! scale are centralized in [`calib`] and documented in EXPERIMENTS.md.
 
@@ -10,14 +14,16 @@ pub mod context;
 pub mod e2e;
 pub mod power;
 
-use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use crate::config::ParallelMode;
 use crate::contention::{contention_distribution, monte_carlo_contention};
 use crate::roofline::{crossover_isl, fig3_sweep};
+use crate::serving::Scenario;
 use crate::util::table::{pct, speedup, us, Table};
 
 /// Calibration presets (see EXPERIMENTS.md §Calibration for derivations).
 pub mod calib {
     use super::*;
+    use crate::serving::Scenario;
 
     /// The paper's context-server deployment evidently fetches ~320 MB of
     /// remote expert weights per layer per rank (Table 1: 429 µs of P2P at
@@ -30,12 +36,28 @@ pub mod calib {
     /// no batching of transfers).
     pub const FIG3_CE_BW: f64 = 300.0e9;
 
-    /// Context-ablation serving config (Table 1/3/4 base).
-    pub fn context_serving(mode: ParallelMode, group: usize) -> ServingConfig {
-        let mut s = ServingConfig::default_context(mode, group);
-        s.prefetch_fraction = TABLE1_PREFETCH_FRACTION;
-        s.seed = 7;
-        s
+    /// Calibrated context-phase scenario (Table 1/3/4 base): the shared
+    /// starting point every context experiment then tweaks per sweep.
+    pub fn context_scenario(mode: ParallelMode, group: usize) -> Scenario {
+        Scenario::context()
+            .mode(mode)
+            .group(group)
+            .prefetch_fraction(TABLE1_PREFETCH_FRACTION)
+            .seed(7)
+            .requests(n_requests())
+    }
+
+    /// Calibrated disaggregated scenario (§5.3 base): SemiAnalysis-style
+    /// workload, DWDP/DEP applied to the context servers only.
+    pub fn e2e_scenario(mode: ParallelMode) -> Scenario {
+        Scenario::disagg()
+            .mode(mode)
+            .group(4)
+            .isl(8192)
+            .ratio(0.8)
+            .osl(1024)
+            .prefetch_fraction(TABLE1_PREFETCH_FRACTION)
+            .seed(7)
     }
 
     /// Requests per rank for context experiments (quick mode for tests).
@@ -50,13 +72,17 @@ pub mod calib {
 
 /// E2 — Figure 3: roofline compute/prefetch and DEP/DWDP ratios vs ISL.
 pub fn fig3() -> Table {
-    let mut hw = HardwareConfig::gb200();
-    hw.ce_bw = calib::FIG3_CE_BW;
-    let model = PaperModelConfig::deepseek_r1();
-    let mut serving = ServingConfig::default_context(ParallelMode::Dwdp, 4);
-    serving.validate(&model).unwrap();
+    // Batch-1 roofline: full remote fetch (no on-demand calibration), pull
+    // bandwidth calibrated to the paper's measured batch-1 crossover.
+    let spec = Scenario::context()
+        .mode(ParallelMode::Dwdp)
+        .group(4)
+        .ce_bw(calib::FIG3_CE_BW)
+        .build()
+        .expect("fig3 scenario");
+    let (hw, model, serving) = (&spec.hw, &spec.model, &spec.serving);
     let isls = [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072, 262144];
-    let pts = fig3_sweep(&hw, &model, &serving, &isls);
+    let pts = fig3_sweep(hw, model, serving, &isls);
     let mut t = Table::new(&[
         "ISL",
         "T_compute (µs)",
@@ -76,7 +102,7 @@ pub fn fig3() -> Table {
             format!("{:.3}", p.dep_dwdp_ratio),
         ]);
     }
-    if let Some(x) = crossover_isl(&hw, &model, &serving, 1024, 262144) {
+    if let Some(x) = crossover_isl(hw, model, serving, 1024, 262144) {
         t.row(vec![
             format!("crossover ≈ {x}"),
             "-".into(),

@@ -1,6 +1,11 @@
 //! Appendix-A experiments: Table 7 / Figure 8 (overlap patterns vs DVFS
 //! frequency) and the Figure 7 pattern traces.
 //!
+//! Unlike the context/e2e regenerators these do not describe a serving
+//! workload — they drive the simulator with hand-built synthetic programs
+//! — so they sit below the `Scenario` abstraction and are reached through
+//! [`crate::serving::registry`] (id `table7`) like every other scenario.
+//!
 //! Reproduces the three scheduling configurations with synthetic programs
 //! on a single simulated GPU:
 //!

@@ -1,17 +1,12 @@
 //! `dwdp-repro` — launcher for the DWDP reproduction.
 //!
-//! ```text
-//! dwdp-repro experiment <id> [--csv] [--out FILE]   regenerate a paper table/figure
-//! dwdp-repro experiment all [--out-dir DIR]         regenerate everything
-//! dwdp-repro trace (--contention | --overlap-patterns) [--out FILE]
-//! dwdp-repro contention --group N                   analytic Pr[C=c] for one group size
-//! dwdp-repro serve [--mode dwdp|dep] [--ctx-groups N] [--gen-gpus M]
-//!                  [--rate R] [--requests K]        disaggregated serving simulation
-//! dwdp-repro info                                   print the config presets
-//! ```
-//!
-//! Experiment ids: fig1 fig3 fig4 table1 table2 table3a table3b table3c
-//! table3d table4 merge_elim fig5 table5 table6 table7.
+//! All commands are thin shells over the unified serving API: `experiment`
+//! dispatches through the data-driven scenario registry
+//! (`dwdp::serving::registry`), and `serve` builds a disaggregated
+//! scenario with the `Scenario` builder and runs it on a `ServingStack`
+//! at the requested fidelity.  Run `dwdp-repro help` for the usage screen
+//! (generated from the registry, so it always matches the scenarios that
+//! exist).
 //!
 //! (Argument parsing is hand-rolled: the offline build environment carries
 //! no clap.)
@@ -20,9 +15,11 @@ use std::collections::HashMap;
 
 use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::contention::contention_distribution;
-use dwdp::coordinator::{DisaggSim, RoutePolicy};
 use dwdp::experiments::{self, calib};
+use dwdp::serving::registry::{self, RunArtifact};
+use dwdp::serving::{Fidelity, RunReport, ServingStack};
 use dwdp::util::table::Table;
+use dwdp::util::Json;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -61,7 +58,7 @@ fn run(args: &[String]) -> i32 {
 }
 
 fn usage() {
-    eprintln!("{}", include_str!("main.rs").lines().skip(2).take(12).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+    eprintln!("{}", registry::usage_text());
 }
 
 /// `--key value` and bare `--flag` parsing.
@@ -94,15 +91,23 @@ fn emit(t: &Table, flags: &HashMap<String, String>) {
     }
 }
 
-const ALL_EXPERIMENTS: &[&str] = &[
-    "fig1", "fig3", "fig4", "table1", "table2", "table3a", "table3b", "table3c", "table3d",
-    "table4", "merge_elim", "fig5", "table5", "table6", "table7", "ablation_slice",
-    "ablation_redundancy", "ablation_fraction",
-];
+/// Run one registered scenario, writing its trace next to the table when
+/// the scenario produced one.
+fn run_entry(id: &str) -> RunArtifact {
+    let entry = registry::find(id).expect("checked by caller");
+    let art = (entry.run)();
+    if let Some(trace) = &art.trace {
+        let path = format!("{id}_trace.json");
+        if trace.write_chrome_trace(&path).is_ok() {
+            eprintln!("chrome trace: {path}");
+        }
+    }
+    art
+}
 
 fn experiment(id: Option<&str>, flags: &HashMap<String, String>) -> i32 {
     let Some(id) = id else {
-        eprintln!("experiment ids: {}", ALL_EXPERIMENTS.join(" "));
+        eprintln!("scenario ids: {}", registry::ids().join(" "));
         return 2;
     };
     if flags.contains_key("quick") {
@@ -111,52 +116,23 @@ fn experiment(id: Option<&str>, flags: &HashMap<String, String>) -> i32 {
     if id == "all" {
         let dir = flags.get("out-dir").cloned().unwrap_or_else(|| "results".into());
         std::fs::create_dir_all(&dir).expect("mkdir");
-        for e in ALL_EXPERIMENTS {
-            eprintln!("== {e} ==");
-            let t = run_one(e);
-            std::fs::write(format!("{dir}/{e}.md"), t.render()).unwrap();
-            std::fs::write(format!("{dir}/{e}.csv"), t.render_csv()).unwrap();
-            println!("{}", t.render());
+        for e in registry::registry() {
+            eprintln!("== {} — {} ==", e.id, e.title);
+            let art = run_entry(e.id);
+            std::fs::write(format!("{dir}/{}.md", e.id), art.table.render()).unwrap();
+            std::fs::write(format!("{dir}/{}.csv", e.id), art.table.render_csv()).unwrap();
+            println!("{}", art.table.render());
         }
         eprintln!("results in {dir}/");
         return 0;
     }
-    if !ALL_EXPERIMENTS.contains(&id) {
-        eprintln!("unknown experiment {id}; ids: {}", ALL_EXPERIMENTS.join(" "));
+    if registry::find(id).is_none() {
+        eprintln!("unknown scenario {id}; ids: {}", registry::ids().join(" "));
         return 2;
     }
-    let t = run_one(id);
-    emit(&t, flags);
+    let art = run_entry(id);
+    emit(&art.table, flags);
     0
-}
-
-fn run_one(id: &str) -> Table {
-    match id {
-        "fig1" => experiments::context::fig1(),
-        "fig3" => experiments::fig3(),
-        "fig4" => {
-            let (t, trace) = experiments::context::fig4_trace();
-            trace.write_chrome_trace("fig4_trace.json").ok();
-            eprintln!("chrome trace: fig4_trace.json");
-            t
-        }
-        "table1" => experiments::context::table1(),
-        "table2" => experiments::table2(),
-        "table3a" => experiments::context::table3a(),
-        "table3b" => experiments::context::table3b(),
-        "table3c" => experiments::context::table3c(),
-        "table3d" => experiments::context::table3d(),
-        "table4" => experiments::context::table4(),
-        "merge_elim" => experiments::context::merge_elim(),
-        "fig5" => experiments::e2e::fig5(),
-        "table5" => experiments::e2e::table5(),
-        "table6" => experiments::e2e::table6(),
-        "table7" => experiments::power::table7(),
-        "ablation_slice" => experiments::context::ablation_slice_size(),
-        "ablation_redundancy" => experiments::context::ablation_redundancy(),
-        "ablation_fraction" => experiments::context::ablation_prefetch_fraction(),
-        _ => unreachable!(),
-    }
 }
 
 fn trace(flags: &HashMap<String, String>) -> i32 {
@@ -198,46 +174,72 @@ fn serve(flags: &HashMap<String, String>) -> i32 {
         Some("dep") => ParallelMode::Dep,
         _ => ParallelMode::Dwdp,
     };
-    let ctx_groups: usize = flags.get("ctx-groups").and_then(|s| s.parse().ok()).unwrap_or(2);
-    let gen_gpus: usize = flags.get("gen-gpus").and_then(|s| s.parse().ok()).unwrap_or(16);
-    let rate: f64 = flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(3.0);
-    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
-    let group: usize = flags.get("group").and_then(|s| s.parse().ok()).unwrap_or(4);
-
-    let hw = HardwareConfig::gb200();
-    let model = PaperModelConfig::deepseek_r1();
-    let mut serving = calib::context_serving(mode, group);
+    let mut scn = calib::e2e_scenario(mode)
+        .group(flags.get("group").and_then(|s| s.parse().ok()).unwrap_or(4))
+        .ctx_groups(flags.get("ctx-groups").and_then(|s| s.parse().ok()).unwrap_or(2))
+        .gen_gpus(flags.get("gen-gpus").and_then(|s| s.parse().ok()).unwrap_or(16))
+        .rate(flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(3.0))
+        .requests(flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64));
     if let Some(isl) = flags.get("isl").and_then(|s| s.parse().ok()) {
-        serving.isl = isl;
+        scn = scn.isl(isl);
     }
-    if let Err(e) = serving.validate(&model) {
-        eprintln!("config error: {e}");
-        return 2;
+    if let Some(path) = flags.get("config") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 2;
+            }
+        };
+        match Json::parse(&text) {
+            Ok(json) => scn = scn.json_overrides(json),
+            Err(e) => {
+                eprintln!("bad JSON in {path}: {e:?}");
+                return 2;
+            }
+        }
     }
-    let sim = DisaggSim {
-        hw,
-        model,
-        serving,
-        n_ctx_groups: ctx_groups,
-        n_gen_gpus: gen_gpus,
-        route_policy: RoutePolicy::LeastLoaded,
+    let fidelity = match flags.get("fidelity") {
+        None => Fidelity::Analytic,
+        Some(s) => match Fidelity::parse(s) {
+            Some(f) => f,
+            None => {
+                eprintln!("unknown fidelity {s:?} (analytic|des|pjrt)");
+                return 2;
+            }
+        },
     };
-    let p = sim.run(requests, rate);
-    let mut t = Table::new(&["metric", "value"]).with_title(&format!(
-        "Disaggregated serving — {} ctx groups × {} GPUs ({}), {} gen GPUs, {} req @ {}/s",
-        ctx_groups,
-        group,
-        mode.name(),
-        gen_gpus,
-        requests,
-        rate
-    ));
-    t.row(vec!["TPS/user".into(), format!("{:.1}", p.tps_user)]);
-    t.row(vec!["output TPS/GPU".into(), format!("{:.1}", p.tps_gpu)]);
-    t.row(vec!["median TTFT (ms)".into(), format!("{:.0}", p.median_ttft * 1e3)]);
-    t.row(vec!["requests".into(), p.n_requests.to_string()]);
-    println!("{}", t.render());
+    let spec = match scn.build() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let stack = ServingStack::new(spec, fidelity);
+    let report = match stack.run() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serving error: {e}");
+            return 1;
+        }
+    };
+    println!("{}", report_table(&report).render());
     0
+}
+
+fn report_table(r: &RunReport) -> Table {
+    let mut t = Table::new(&["metric", "value"])
+        .with_title(&format!("{} [{} backend]", r.scenario, r.backend));
+    t.row(vec!["TPS/user".into(), format!("{:.1}", r.tps_per_user)]);
+    t.row(vec!["output TPS/GPU".into(), format!("{:.1}", r.tps_per_gpu)]);
+    t.row(vec!["median TTFT (ms)".into(), format!("{:.0}", r.median_ttft * 1e3)]);
+    t.row(vec!["span (s)".into(), format!("{:.2}", r.makespan)]);
+    t.row(vec!["requests".into(), r.n_requests.to_string()]);
+    for (k, v) in &r.extras {
+        t.row(vec![k.clone(), v.clone()]);
+    }
+    t
 }
 
 fn info() {

@@ -1,0 +1,502 @@
+//! Execution backends: the [`ExecutionBackend`] trait and its three
+//! implementations.
+//!
+//! * [`AnalyticBackend`] — closed-form latency models
+//!   ([`GroupLatencyModel`] for context prefill, the request-level
+//!   [`DisaggSim`] loop for disaggregated serving).  Milliseconds to run,
+//!   right to first order; the fidelity behind the paper's Fig. 5 sweep.
+//! * [`DesBackend`] — the discrete-event simulator (`engine` +
+//!   `sim::Simulation`): per-quantum DVFS, copy-engine contention, TDM
+//!   slicing, barrier skew.  Produces the Table-1-style per-layer
+//!   breakdowns and Chrome traces.
+//! * [`PjrtBackend`] — the real-numerics path: AOT HLO artifacts executed
+//!   through PJRT with split-weight prefetch over the host fabric.
+//!   Compiled only with the `pjrt` feature; otherwise it reports itself
+//!   unavailable.
+//!
+//! All three consume the same frozen [`ScenarioSpec`] and produce the same
+//! [`RunReport`], which is what makes cross-fidelity validation a one-liner
+//! (see `serving::tests`).
+
+use crate::config::ParallelMode;
+use crate::coordinator::{DisaggSim, GroupLatencyModel, PrefillOffsets};
+use crate::engine;
+use crate::metrics::Breakdown;
+use crate::trace::TraceSink;
+
+use super::scenario::{ScenarioKind, ScenarioSpec};
+
+/// Unified result of running one scenario on one backend.
+///
+/// Context-phase scenarios fill the throughput/breakdown fields and leave
+/// the per-user decode metrics at zero; disaggregated scenarios fill the
+/// end-to-end metrics and leave the DES-only fields (breakdown, trace,
+/// `mean_freq`) empty.  `extras` carries backend-specific key/value pairs
+/// (e.g. the PJRT backend's prefetch-byte accounting).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub scenario: String,
+    pub backend: &'static str,
+    pub mode: ParallelMode,
+    /// Requests completed.
+    pub n_requests: usize,
+    /// Prompt tokens processed (context scenarios).
+    pub total_tokens: f64,
+    /// End-to-end span of the run, seconds.
+    pub makespan: f64,
+    /// Context scenarios: prompt tokens/s/GPU.  Disaggregated scenarios:
+    /// output tokens/s/GPU.
+    pub tps_per_gpu: f64,
+    /// Mean per-user decode throughput (disaggregated scenarios).
+    pub tps_per_user: f64,
+    /// Median time-to-first-token incl. queueing, seconds.
+    pub median_ttft: f64,
+    /// Chunked-prefill iterations per rank (context scenarios).
+    pub iterations: usize,
+    /// Mean DVFS frequency factor over compute (DES backend).
+    pub mean_freq: f64,
+    /// Mean per-(rank, MoE-layer-iteration) breakdown (DES backend).
+    pub per_layer_breakdown: Breakdown,
+    /// Exposed prefetch-wait seconds per rank (DES backend).
+    pub rank_prefetch_wait: Vec<f64>,
+    pub n_ctx_groups: usize,
+    pub n_gen_gpus: usize,
+    pub arrival_rate: f64,
+    /// DES events processed (0 for analytic runs).
+    pub events: u64,
+    /// Chrome trace, when the scenario asked for one and the backend can
+    /// produce it.
+    pub trace: Option<TraceSink>,
+    /// Backend-specific extras for display.
+    pub extras: Vec<(String, String)>,
+}
+
+impl Default for RunReport {
+    fn default() -> Self {
+        RunReport {
+            scenario: String::new(),
+            backend: "",
+            mode: ParallelMode::Dwdp,
+            n_requests: 0,
+            total_tokens: 0.0,
+            makespan: 0.0,
+            tps_per_gpu: 0.0,
+            tps_per_user: 0.0,
+            median_ttft: 0.0,
+            iterations: 0,
+            mean_freq: 1.0,
+            per_layer_breakdown: Breakdown::new(),
+            rank_prefetch_wait: Vec::new(),
+            n_ctx_groups: 1,
+            n_gen_gpus: 0,
+            arrival_rate: 0.0,
+            events: 0,
+            trace: None,
+            extras: Vec::new(),
+        }
+    }
+}
+
+/// A fidelity level a [`ScenarioSpec`] can run at.
+pub trait ExecutionBackend {
+    fn name(&self) -> &'static str;
+    fn run(&self, spec: &ScenarioSpec) -> Result<RunReport, String>;
+}
+
+fn base_report(spec: &ScenarioSpec, backend: &'static str) -> RunReport {
+    let mut r = RunReport {
+        scenario: spec.label.clone(),
+        backend,
+        mode: spec.serving.mode,
+        ..RunReport::default()
+    };
+    if let ScenarioKind::Disagg { n_ctx_groups, n_gen_gpus, arrival_rate, .. } = spec.kind {
+        r.n_ctx_groups = n_ctx_groups;
+        r.n_gen_gpus = n_gen_gpus;
+        r.arrival_rate = arrival_rate;
+    }
+    r
+}
+
+fn disagg_sim(spec: &ScenarioSpec) -> Result<DisaggSim, String> {
+    match spec.kind {
+        ScenarioKind::Disagg { n_ctx_groups, n_gen_gpus, route_policy, .. } => Ok(DisaggSim {
+            hw: spec.hw.clone(),
+            model: spec.model.clone(),
+            serving: spec.serving.clone(),
+            n_ctx_groups,
+            n_gen_gpus,
+            route_policy,
+        }),
+        ScenarioKind::Context { .. } => Err("not a disaggregated scenario".into()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic
+// ---------------------------------------------------------------------------
+
+/// Closed-form fidelity: [`GroupLatencyModel`] prefill offsets for context
+/// scenarios, the analytic [`DisaggSim`] loop for disaggregated ones.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AnalyticBackend;
+
+impl ExecutionBackend for AnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn run(&self, spec: &ScenarioSpec) -> Result<RunReport, String> {
+        let mut report = base_report(spec, self.name());
+        match spec.kind {
+            ScenarioKind::Context { requests_per_rank } => {
+                let n = spec.serving.group_size;
+                // Identical workload draw to the DES (same seed, same
+                // per-rank forks) so the two fidelities price the same
+                // prompts.
+                let isls = engine::sample_rank_isls(&spec.serving, requests_per_rank);
+                // Interleave so `prefill_offsets`'s `ri % n` rank
+                // assignment reconstructs each rank's stream in order.
+                let mut flat = Vec::with_capacity(n * requests_per_rank);
+                for j in 0..requests_per_rank {
+                    for rank_isls in &isls {
+                        flat.push(rank_isls[j]);
+                    }
+                }
+                let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+                let offsets = lm.prefill_offsets(&flat);
+
+                let chunk_tokens = engine::chunk_tokens(&spec.serving);
+                let mut iterations = 0usize;
+                let mut tps_sum = 0.0;
+                let mut makespan = 0.0f64;
+                for (r, rank_isls) in isls.iter().enumerate() {
+                    let tokens: usize = rank_isls.iter().sum();
+                    let chunks: usize =
+                        rank_isls.iter().map(|&i| i.div_ceil(chunk_tokens).max(1)).sum();
+                    iterations = iterations.max(chunks);
+                    let finish = (0..requests_per_rank)
+                        .map(|j| offsets[j * n + r])
+                        .fold(0.0f64, f64::max);
+                    makespan = makespan.max(finish);
+                    tps_sum += tokens as f64 / finish.max(1e-9);
+                    report.total_tokens += tokens as f64;
+                }
+                report.n_requests = n * requests_per_rank;
+                report.makespan = makespan;
+                report.tps_per_gpu = tps_sum / n as f64;
+                report.median_ttft = crate::util::stats::median(&offsets);
+                report.iterations = iterations;
+                Ok(report)
+            }
+            ScenarioKind::Disagg { n_requests, arrival_rate, .. } => {
+                let p = disagg_sim(spec)?.run(n_requests, arrival_rate);
+                report.n_requests = p.n_requests;
+                report.tps_per_user = p.tps_user;
+                report.tps_per_gpu = p.tps_gpu;
+                report.median_ttft = p.median_ttft;
+                report.makespan = p.span;
+                Ok(report)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Discrete-event
+// ---------------------------------------------------------------------------
+
+/// DES prefill model for the disaggregated loop: every context batch runs
+/// through the full engine (`run_context_batch`) instead of the analytic
+/// offsets.
+struct DesPrefill<'a> {
+    spec: &'a ScenarioSpec,
+}
+
+impl PrefillOffsets for DesPrefill<'_> {
+    fn offsets(&self, isls: &[usize]) -> Vec<f64> {
+        let run = engine::run_context_batch(
+            &self.spec.hw,
+            &self.spec.model,
+            &self.spec.serving,
+            isls,
+            false,
+        );
+        let mut offsets = vec![0.0f64; isls.len()];
+        for rank in &run.sim.ranks {
+            for &(tag, t) in &rank.marks {
+                if (tag as usize) < offsets.len() {
+                    offsets[tag as usize] = t;
+                }
+            }
+        }
+        offsets
+    }
+}
+
+/// Discrete-event fidelity: the full GB200/NVL72 simulator.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DesBackend;
+
+impl ExecutionBackend for DesBackend {
+    fn name(&self) -> &'static str {
+        "des"
+    }
+
+    fn run(&self, spec: &ScenarioSpec) -> Result<RunReport, String> {
+        let mut report = base_report(spec, self.name());
+        match spec.kind {
+            ScenarioKind::Context { requests_per_rank } => {
+                let run = engine::run_context(
+                    &spec.hw,
+                    &spec.model,
+                    &spec.serving,
+                    requests_per_rank,
+                    spec.capture_trace,
+                );
+                report.n_requests = spec.serving.group_size * requests_per_rank;
+                report.total_tokens = run.total_tokens;
+                report.makespan = run.makespan;
+                report.tps_per_gpu = run.tps_per_gpu;
+                report.median_ttft = run.median_ttft;
+                report.iterations = run.iterations;
+                report.mean_freq = run.mean_freq;
+                report.per_layer_breakdown = run.per_layer_breakdown;
+                report.rank_prefetch_wait =
+                    run.sim.ranks.iter().map(|r| r.prefetch_wait).collect();
+                report.events = run.sim.events_processed;
+                if spec.capture_trace {
+                    report.trace = Some(run.sim.trace);
+                }
+                Ok(report)
+            }
+            ScenarioKind::Disagg { n_requests, arrival_rate, .. } => {
+                if spec.capture_trace {
+                    return Err(
+                        "trace capture is supported for context scenarios only; a \
+                         disaggregated DES run executes one simulation per batch and \
+                         has no single timeline to emit"
+                            .into(),
+                    );
+                }
+                let prefill = DesPrefill { spec };
+                let p = disagg_sim(spec)?.run_with(n_requests, arrival_rate, &prefill);
+                report.n_requests = p.n_requests;
+                report.tps_per_user = p.tps_user;
+                report.tps_per_gpu = p.tps_gpu;
+                report.median_ttft = p.median_ttft;
+                report.makespan = p.span;
+                Ok(report)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (real numerics)
+// ---------------------------------------------------------------------------
+
+/// Real-numerics fidelity: AOT HLO artifacts through PJRT with
+/// split-weight prefetch over the host fabric (`runtime` module).
+///
+/// Only available when the crate is built with the `pjrt` feature *and*
+/// `make artifacts` has produced the demo-model artifacts; the scenario's
+/// ISLs are clamped into the artifact padding bucket and decode is capped
+/// at a few tokens (the demo model has no KV cache).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PjrtBackend;
+
+#[cfg(not(feature = "pjrt"))]
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&self, _spec: &ScenarioSpec) -> Result<RunReport, String> {
+        Err("pjrt backend unavailable: rebuild with `--features pjrt` \
+             (requires the vendored xla crate) and run `make artifacts`"
+            .into())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&self, spec: &ScenarioSpec) -> Result<RunReport, String> {
+        use std::sync::Arc;
+        use std::time::Instant;
+
+        use crate::coordinator::ContextBatcher;
+        use crate::metrics::{RequestRecord, ServingMetrics};
+        use crate::runtime::{
+            default_artifact_dir, next_tokens, DepModel, DwdpRank, Runtime, WeightStore,
+        };
+        use crate::util::Rng;
+        use crate::workload::{IslDist, WorkloadGen};
+
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return Err(format!("artifacts missing in {dir:?} — run `make artifacts`"));
+        }
+        let mut rt = Runtime::new(&dir).map_err(|e| format!("runtime: {e:#}"))?;
+        let cfg = rt.manifest.config.clone();
+        let group = spec.serving.group_size;
+        if !cfg.group_sizes.contains(&group) {
+            return Err(format!(
+                "no artifacts for group size {group} (available: {:?})",
+                cfg.group_sizes
+            ));
+        }
+        let bucket = (1usize, 128usize);
+        let max_isl = bucket.1 - 8; // leave room for decoded tokens
+        let n_requests = match spec.kind {
+            ScenarioKind::Context { requests_per_rank } => requests_per_rank * group,
+            ScenarioKind::Disagg { n_requests, .. } => n_requests,
+        };
+        let arrival_rate = match spec.kind {
+            ScenarioKind::Disagg { arrival_rate, .. } => arrival_rate,
+            ScenarioKind::Context { .. } => 0.0,
+        };
+        let decode_tokens = spec.serving.osl.clamp(1, 4);
+
+        // Stand up the group: every rank shares the weight-store bytes but
+        // only reads its own partition without going through the fabric.
+        let peers: Vec<Arc<WeightStore>> = (0..group).map(|_| rt.weights.clone()).collect();
+        let mut ranks: Vec<DwdpRank> = (0..group)
+            .map(|r| DwdpRank::new(&rt, r, group, peers.clone(), spec.hw.ce_bw))
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map_err(|e| format!("group setup: {e:#}"))?;
+        let dep = DepModel::new(&rt).map_err(|e| format!("dep reference: {e:#}"))?;
+
+        // Cross-validation by construction: the split-weight DWDP path must
+        // reproduce the merged-weight DEP logits before serving anything.
+        let mut prompt_rng = Rng::new(spec.serving.seed ^ 0x9187);
+        let gate_toks: Vec<i32> =
+            (0..bucket.1).map(|_| prompt_rng.below(cfg.vocab as u64) as i32).collect();
+        let gate_lens = vec![(max_isl as i32) - 3];
+        let (lw, _) = ranks[0]
+            .prefill(&mut rt, &gate_toks, &gate_lens, bucket)
+            .map_err(|e| format!("dwdp gate prefill: {e:#}"))?;
+        let ld = dep
+            .prefill(&mut rt, &gate_toks, &gate_lens, bucket)
+            .map_err(|e| format!("dep gate prefill: {e:#}"))?;
+        let max_err =
+            lw.iter().zip(&ld).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        if max_err >= 1e-3 {
+            return Err(format!("numerics gate failed: max |Δlogit| = {max_err}"));
+        }
+
+        // Workload clamped into the bucket.
+        let isl_dist = IslDist::RatioWindow {
+            isl: spec.serving.isl.min(max_isl),
+            ratio: spec.serving.isl_ratio.clamp(0.1, 1.0),
+        };
+        let mut gen = WorkloadGen::new(isl_dist, decode_tokens, arrival_rate, spec.serving.seed);
+        let mut batcher = ContextBatcher::new(bucket.1, 1);
+        for r in gen.take(n_requests) {
+            batcher.push(r);
+        }
+
+        let serve_start = Instant::now();
+        let mut metrics = ServingMetrics::new();
+        let mut total_prefetch_bytes = 0u64;
+        let mut total_layers = 0usize;
+        let mut total_prompt_tokens = 0usize;
+        let mut rr = 0usize;
+        while let Some(batch) = batcher.next_batch() {
+            for req in batch.requests {
+                let rank = rr % group;
+                rr += 1;
+                let isl = req.isl.min(max_isl).max(1);
+                total_prompt_tokens += isl;
+                let mut toks: Vec<i32> =
+                    (0..isl).map(|_| prompt_rng.below(cfg.vocab as u64) as i32).collect();
+                // Honor the Poisson arrival process on the wall clock so
+                // TTFT includes real queueing, matching the other
+                // backends' definition: a request cannot start service
+                // before it arrives, and a backlog shows up as waiting.
+                let now = serve_start.elapsed().as_secs_f64();
+                if now < req.arrival {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(req.arrival - now));
+                }
+                let arrival = req.arrival;
+                let mut padded = toks.clone();
+                padded.resize(bucket.1, 0);
+                let (logits, stats) = ranks[rank]
+                    .prefill(&mut rt, &padded, &[isl as i32], bucket)
+                    .map_err(|e| format!("prefill: {e:#}"))?;
+                total_prefetch_bytes += stats.prefetch_bytes;
+                total_layers += stats.layers_run;
+                let first_token = serve_start.elapsed().as_secs_f64();
+                let mut next = next_tokens(&logits, bucket, cfg.vocab, &[isl as i32]);
+                // Greedy decode (no KV cache in the demo model: re-prefill).
+                for _ in 1..decode_tokens {
+                    toks.push(next[0]);
+                    let cur = toks.len().min(bucket.1);
+                    let mut padded = toks.clone();
+                    padded.resize(bucket.1, 0);
+                    let (logits, _) = ranks[rank]
+                        .prefill(&mut rt, &padded, &[cur as i32], bucket)
+                        .map_err(|e| format!("decode: {e:#}"))?;
+                    next = next_tokens(&logits, bucket, cfg.vocab, &[cur as i32]);
+                }
+                metrics.push(RequestRecord {
+                    id: req.id,
+                    arrival,
+                    first_token,
+                    finish: serve_start.elapsed().as_secs_f64(),
+                    isl,
+                    osl: decode_tokens,
+                });
+            }
+        }
+        let wall = serve_start.elapsed().as_secs_f64();
+
+        let mut report = base_report(spec, self.name());
+        // The demo serves everything on ONE DWDP group (no generation
+        // pool, no extra context groups) — make the report describe the
+        // fleet that actually ran instead of the requested one, so
+        // per-GPU numbers stay comparable across fidelities.
+        report.n_ctx_groups = 1;
+        report.n_gen_gpus = 0;
+        report.n_requests = metrics.n();
+        report.total_tokens = total_prompt_tokens as f64;
+        report.makespan = wall;
+        // Match the unified-report contract: context scenarios report
+        // prompt tokens/s/GPU, disaggregated scenarios output tokens/s/GPU
+        // — both normalized by the `group` GPUs this backend stood up.
+        report.tps_per_gpu = match spec.kind {
+            ScenarioKind::Context { .. } => metrics.input_tps_per_gpu(group, wall),
+            ScenarioKind::Disagg { .. } => metrics.output_tps_per_gpu(group, wall),
+        };
+        report.tps_per_user = metrics.tps_per_user();
+        report.median_ttft = metrics.median_ttft();
+        report.extras = vec![
+            (
+                "served on".into(),
+                format!("1 DWDP group of {group} GPUs (demo scale; requested fleet not stood up)"),
+            ),
+            ("numerics gate max |Δlogit|".into(), format!("{max_err:.2e}")),
+            ("layers executed".into(), total_layers.to_string()),
+            (
+                "weights prefetched (MB)".into(),
+                format!("{:.1}", total_prefetch_bytes as f64 / 1e6),
+            ),
+            (
+                "fabric pulls".into(),
+                ranks.iter().map(|r| r.fabric.pulls).sum::<u64>().to_string(),
+            ),
+            (
+                "simulated NVL72 transfer (ms)".into(),
+                format!(
+                    "{:.2}",
+                    ranks.iter().map(|r| r.fabric.simulated_seconds).sum::<f64>() * 1e3
+                ),
+            ),
+        ];
+        Ok(report)
+    }
+}

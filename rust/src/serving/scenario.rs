@@ -1,0 +1,471 @@
+//! Scenario description: the [`Scenario`] builder and the frozen,
+//! validated [`ScenarioSpec`] it produces.
+//!
+//! A scenario bundles everything needed to run a serving workload —
+//! hardware platform, model architecture, serving configuration
+//! (parallelism mode, group size, MNT, TDM, …), the workload shape
+//! (ISL/OSL distribution, request count, arrival rate), and, for
+//! disaggregated deployments, the fleet layout (context groups, generation
+//! pool, routing policy).  Every knob that the paper's experiments sweep is
+//! a builder method, so an experiment is one fluent chain:
+//!
+//! ```ignore
+//! let spec = Scenario::context()
+//!     .mode(ParallelMode::Dwdp)
+//!     .group(4)
+//!     .isl(8192)
+//!     .ratio(0.8)
+//!     .mnt(32768)
+//!     .build()?;
+//! let report = ServingStack::new(spec, Fidelity::Des).run()?;
+//! ```
+//!
+//! `build()` is the single validation point: it applies the builder's
+//! overrides on top of the presets, runs [`ServingConfig::validate`], and
+//! checks the fleet parameters, returning a frozen [`ScenarioSpec`] that
+//! every [`super::ExecutionBackend`] can execute.
+
+use crate::config::{
+    apply_json_overrides, HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig,
+};
+use crate::coordinator::RoutePolicy;
+use crate::util::Json;
+
+/// What kind of deployment a scenario describes.
+#[derive(Debug, Clone)]
+pub enum ScenarioKind {
+    /// One context group, offline batch: `requests_per_rank` prompts per
+    /// rank, all arriving at t = 0 (the paper's context-phase ablations).
+    Context { requests_per_rank: usize },
+    /// Disaggregated serving: Poisson arrivals routed over `n_ctx_groups`
+    /// context groups feeding an `n_gen_gpus` generation pool (§5.3).
+    Disagg {
+        n_ctx_groups: usize,
+        n_gen_gpus: usize,
+        n_requests: usize,
+        arrival_rate: f64,
+        route_policy: RoutePolicy,
+    },
+}
+
+/// A validated, frozen scenario: the unit of work a
+/// [`super::ServingStack`] executes on any [`super::ExecutionBackend`].
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub label: String,
+    pub hw: HardwareConfig,
+    pub model: PaperModelConfig,
+    pub serving: ServingConfig,
+    pub kind: ScenarioKind,
+    /// Collect a Chrome trace during the run (DES backend only).
+    pub capture_trace: bool,
+}
+
+impl ScenarioSpec {
+    /// GPUs the scenario occupies (context + generation).
+    pub fn n_gpus(&self) -> usize {
+        match self.kind {
+            ScenarioKind::Context { .. } => self.serving.group_size,
+            ScenarioKind::Disagg { n_ctx_groups, n_gen_gpus, .. } => {
+                n_ctx_groups * self.serving.group_size + n_gen_gpus
+            }
+        }
+    }
+}
+
+/// Builder for [`ScenarioSpec`].  Start from [`Scenario::context`] or
+/// [`Scenario::disagg`]; every method overrides one knob; [`Scenario::build`]
+/// validates and freezes.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    label: Option<String>,
+    hw: HardwareConfig,
+    ce_bw: Option<f64>,
+    model: PaperModelConfig,
+    mode: ParallelMode,
+    group: usize,
+    // Serving overrides (None = preset default from `default_context`).
+    mnt: Option<usize>,
+    isl: Option<usize>,
+    osl: Option<usize>,
+    isl_ratio: Option<f64>,
+    isl_std: Option<f64>,
+    local_experts: Option<usize>,
+    merge_elim: Option<bool>,
+    tdm: Option<bool>,
+    slice_bytes: Option<usize>,
+    prefetch_fraction: Option<f64>,
+    routing_skew: Option<f64>,
+    seed: Option<u64>,
+    // Workload / fleet.
+    requests: usize,
+    is_disagg: bool,
+    ctx_groups: usize,
+    gen_gpus: usize,
+    rate: f64,
+    route: RoutePolicy,
+    capture_trace: bool,
+    overrides: Option<Json>,
+}
+
+impl Scenario {
+    fn base(is_disagg: bool) -> Scenario {
+        Scenario {
+            label: None,
+            hw: HardwareConfig::gb200(),
+            ce_bw: None,
+            model: PaperModelConfig::deepseek_r1(),
+            mode: ParallelMode::Dwdp,
+            group: 4,
+            mnt: None,
+            isl: None,
+            osl: None,
+            isl_ratio: None,
+            isl_std: None,
+            local_experts: None,
+            merge_elim: None,
+            tdm: None,
+            slice_bytes: None,
+            prefetch_fraction: None,
+            routing_skew: None,
+            seed: None,
+            requests: if is_disagg { 64 } else { 2 },
+            is_disagg,
+            ctx_groups: 2,
+            gen_gpus: 16,
+            rate: 3.0,
+            route: RoutePolicy::LeastLoaded,
+            capture_trace: false,
+            overrides: None,
+        }
+    }
+
+    /// A single context group processing an offline batch (the paper's
+    /// context-phase setup: Tables 1/3/4, Figs. 1/4).
+    pub fn context() -> Scenario {
+        Scenario::base(false)
+    }
+
+    /// A disaggregated deployment with Poisson arrivals (the paper's §5.3
+    /// end-to-end setup: Fig. 5, Tables 5/6).
+    pub fn disagg() -> Scenario {
+        Scenario::base(true)
+    }
+
+    /// Human-readable label carried into the [`super::RunReport`].
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    /// Hardware platform (default: [`HardwareConfig::gb200`]).
+    pub fn hw(mut self, hw: HardwareConfig) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    /// Override the copy-engine pull bandwidth (B/s) — the Fig. 3 batch-1
+    /// calibration knob.  Latched like every other override: applied at
+    /// `build()`, on top of whatever `hw()` platform is in effect.
+    pub fn ce_bw(mut self, bw: f64) -> Self {
+        self.ce_bw = Some(bw);
+        self
+    }
+
+    /// Model architecture (default: [`PaperModelConfig::deepseek_r1`]).
+    pub fn model(mut self, model: PaperModelConfig) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Parallelization strategy for the context server.
+    pub fn mode(mut self, mode: ParallelMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Execution-group size (DEP-N / DWDP-N).
+    pub fn group(mut self, group: usize) -> Self {
+        self.group = group;
+        self
+    }
+
+    /// Max tokens per context forward pass (the paper's MNT).
+    pub fn mnt(mut self, mnt: usize) -> Self {
+        self.mnt = Some(mnt);
+        self
+    }
+
+    /// Input sequence length (max of the sampled range).
+    pub fn isl(mut self, isl: usize) -> Self {
+        self.isl = Some(isl);
+        self
+    }
+
+    /// Output sequence length (generation phase).
+    pub fn osl(mut self, osl: usize) -> Self {
+        self.osl = Some(osl);
+        self
+    }
+
+    /// Input ratio: ISLs sampled uniformly in `[ratio·isl, isl]`.
+    pub fn ratio(mut self, ratio: f64) -> Self {
+        self.isl_ratio = Some(ratio);
+        self
+    }
+
+    /// Normal ISL spread (Table 3c); takes precedence over `ratio`.
+    pub fn isl_std(mut self, std: f64) -> Self {
+        self.isl_std = Some(std);
+        self
+    }
+
+    /// Local experts resident per rank (redundant placement).
+    pub fn local_experts(mut self, n: usize) -> Self {
+        self.local_experts = Some(n);
+        self
+    }
+
+    /// §4.2 split-weight merge elimination on/off.
+    pub fn merge_elim(mut self, on: bool) -> Self {
+        self.merge_elim = Some(on);
+        self
+    }
+
+    /// §4.3 TDM contention mitigation on/off.
+    pub fn tdm(mut self, on: bool) -> Self {
+        self.tdm = Some(on);
+        self
+    }
+
+    /// TDM slice size in bytes.
+    pub fn slice_bytes(mut self, bytes: usize) -> Self {
+        self.slice_bytes = Some(bytes);
+        self
+    }
+
+    /// Expected fraction of remote experts fetched per layer per forward.
+    pub fn prefetch_fraction(mut self, f: f64) -> Self {
+        self.prefetch_fraction = Some(f);
+        self
+    }
+
+    /// Zipf exponent of expert-routing popularity (0 = uniform).
+    pub fn routing_skew(mut self, skew: f64) -> Self {
+        self.routing_skew = Some(skew);
+        self
+    }
+
+    /// RNG seed for the whole scenario.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Request count: per rank for context scenarios, total for
+    /// disaggregated scenarios.
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    /// Poisson arrival rate, req/s (disaggregated scenarios).
+    pub fn rate(mut self, rate: f64) -> Self {
+        self.rate = rate;
+        self
+    }
+
+    /// Number of context groups (disaggregated scenarios).
+    pub fn ctx_groups(mut self, n: usize) -> Self {
+        self.ctx_groups = n;
+        self
+    }
+
+    /// Generation-pool size in GPUs (disaggregated scenarios).
+    pub fn gen_gpus(mut self, n: usize) -> Self {
+        self.gen_gpus = n;
+        self
+    }
+
+    /// Routing policy across context groups.
+    pub fn route(mut self, policy: RoutePolicy) -> Self {
+        self.route = policy;
+        self
+    }
+
+    /// Collect a Chrome trace during the run.  Supported by the DES
+    /// backend for context scenarios; the DES backend *rejects* a
+    /// disaggregated scenario with tracing on (one simulation runs per
+    /// batch, so there is no single timeline), and the analytic/PJRT
+    /// backends return `trace: None`.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.capture_trace = on;
+        self
+    }
+
+    /// Apply `{"field": value}` JSON overrides (see
+    /// [`crate::config::apply_json_overrides`]) on top of the builder
+    /// state, e.g. from a `--config file.json` CLI flag.  Applied last, at
+    /// `build()` time.
+    pub fn json_overrides(mut self, json: Json) -> Self {
+        self.overrides = Some(json);
+        self
+    }
+
+    /// Validate and freeze into a [`ScenarioSpec`].
+    pub fn build(self) -> Result<ScenarioSpec, String> {
+        let mut hw = self.hw;
+        if let Some(bw) = self.ce_bw {
+            hw.ce_bw = bw;
+        }
+        let mut model = self.model;
+        let mut serving = ServingConfig::default_context(self.mode, self.group);
+        if let Some(v) = self.mnt {
+            serving.max_num_tokens = v;
+        }
+        if let Some(v) = self.isl {
+            serving.isl = v;
+        }
+        if let Some(v) = self.osl {
+            serving.osl = v;
+        }
+        if let Some(v) = self.isl_ratio {
+            serving.isl_ratio = v;
+        }
+        if let Some(v) = self.isl_std {
+            serving.isl_std = v;
+        }
+        if let Some(v) = self.local_experts {
+            serving.local_experts = v;
+        }
+        if let Some(v) = self.merge_elim {
+            serving.merge_elim = v;
+        }
+        if let Some(v) = self.tdm {
+            serving.tdm = v;
+        }
+        if let Some(v) = self.slice_bytes {
+            serving.slice_bytes = v;
+        }
+        if let Some(v) = self.prefetch_fraction {
+            serving.prefetch_fraction = v;
+        }
+        if let Some(v) = self.routing_skew {
+            serving.routing_skew = v;
+        }
+        if let Some(v) = self.seed {
+            serving.seed = v;
+        }
+        if let Some(json) = &self.overrides {
+            apply_json_overrides(json, &mut hw, &mut model, &mut serving)?;
+        }
+        serving.validate(&model)?;
+
+        if self.requests == 0 {
+            return Err("requests must be >= 1".into());
+        }
+        let kind = if self.is_disagg {
+            if self.ctx_groups == 0 {
+                return Err("ctx_groups must be >= 1".into());
+            }
+            if self.gen_gpus == 0 {
+                return Err("gen_gpus must be >= 1".into());
+            }
+            if !self.rate.is_finite() || self.rate < 0.0 {
+                return Err(format!("arrival rate must be finite and >= 0, got {}", self.rate));
+            }
+            ScenarioKind::Disagg {
+                n_ctx_groups: self.ctx_groups,
+                n_gen_gpus: self.gen_gpus,
+                n_requests: self.requests,
+                arrival_rate: self.rate,
+                route_policy: self.route,
+            }
+        } else {
+            ScenarioKind::Context { requests_per_rank: self.requests }
+        };
+        let label = self.label.unwrap_or_else(|| match &kind {
+            ScenarioKind::Context { requests_per_rank } => format!(
+                "context {}{} isl={} mnt={} ({} req/rank)",
+                serving.mode.name(),
+                serving.group_size,
+                serving.isl,
+                serving.max_num_tokens,
+                requests_per_rank
+            ),
+            ScenarioKind::Disagg { n_ctx_groups, n_gen_gpus, n_requests, arrival_rate, .. } => {
+                format!(
+                    "disagg {}{}x{} + {} gen GPUs, {} req @ {}/s",
+                    serving.mode.name(),
+                    serving.group_size,
+                    n_ctx_groups,
+                    n_gen_gpus,
+                    n_requests,
+                    arrival_rate
+                )
+            }
+        });
+        Ok(ScenarioSpec { label, hw, model, serving, kind, capture_trace: self.capture_trace })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_overrides_land_in_spec() {
+        let spec = Scenario::context()
+            .mode(ParallelMode::Dep)
+            .group(8)
+            .isl(16384)
+            .ratio(0.5)
+            .mnt(16384)
+            .tdm(false)
+            .merge_elim(false)
+            .prefetch_fraction(0.07)
+            .seed(42)
+            .requests(3)
+            .build()
+            .unwrap();
+        assert_eq!(spec.serving.mode, ParallelMode::Dep);
+        assert_eq!(spec.serving.group_size, 8);
+        assert_eq!(spec.serving.isl, 16384);
+        assert_eq!(spec.serving.isl_ratio, 0.5);
+        assert_eq!(spec.serving.max_num_tokens, 16384);
+        assert!(!spec.serving.tdm);
+        assert!(!spec.serving.merge_elim);
+        assert_eq!(spec.serving.seed, 42);
+        // validate() filled the derived default.
+        assert_eq!(spec.serving.local_experts, 32);
+        assert!(matches!(spec.kind, ScenarioKind::Context { requests_per_rank: 3 }));
+        assert_eq!(spec.n_gpus(), 8);
+    }
+
+    #[test]
+    fn build_rejects_invalid_configs() {
+        assert!(Scenario::context().group(1).build().is_err());
+        assert!(Scenario::context().ratio(1.5).build().is_err());
+        assert!(Scenario::context().requests(0).build().is_err());
+        assert!(Scenario::disagg().ctx_groups(0).build().is_err());
+        assert!(Scenario::disagg().gen_gpus(0).build().is_err());
+        assert!(Scenario::disagg().rate(f64::NAN).build().is_err());
+    }
+
+    #[test]
+    fn json_overrides_apply_last() {
+        let j = Json::parse(r#"{"mode": "dep", "isl": 4096, "ce_bw": 3e11}"#).unwrap();
+        let spec = Scenario::context().isl(8192).json_overrides(j).build().unwrap();
+        assert_eq!(spec.serving.mode, ParallelMode::Dep);
+        assert_eq!(spec.serving.isl, 4096);
+        assert_eq!(spec.hw.ce_bw, 3e11);
+    }
+
+    #[test]
+    fn disagg_spec_counts_gpus() {
+        let spec =
+            Scenario::disagg().group(4).ctx_groups(3).gen_gpus(16).build().unwrap();
+        assert_eq!(spec.n_gpus(), 3 * 4 + 16);
+        assert!(spec.label.contains("disagg"));
+    }
+}

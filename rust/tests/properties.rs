@@ -8,9 +8,9 @@
 use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::dwdp::{build_copy_plan, plan_bytes};
-use dwdp::engine::run_context;
 use dwdp::model::Category;
 use dwdp::placement::ExpertPlacement;
+use dwdp::serving::{Fidelity, Scenario, ServingStack};
 use dwdp::util::Rng;
 use dwdp::workload::Request;
 
@@ -182,20 +182,24 @@ fn prop_latency_model_monotone_in_redundancy() {
 }
 
 /// Property (DES): the DWDP critical path never contains collective
-/// communication, and DEP's never contains P2P copy — for random configs.
+/// communication, and DEP's never contains P2P copy — for random configs,
+/// driven through the unified serving API.
 #[test]
 fn prop_modes_have_disjoint_comm_categories() {
-    let hw = HardwareConfig::gb200();
-    let m = PaperModelConfig::tiny();
     for seed in 0..8 {
         let mut rng = Rng::new(5000 + seed);
         for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
-            let mut s = ServingConfig::default_context(mode, 2 + rng.below(3) as usize);
-            s.isl = 512 + rng.below(2048) as usize;
-            s.max_num_tokens = 8192;
-            s.seed = seed;
-            s.validate(&m).unwrap();
-            let r = run_context(&hw, &m, &s, 1, false);
+            let spec = Scenario::context()
+                .model(PaperModelConfig::tiny())
+                .mode(mode)
+                .group(2 + rng.below(3) as usize)
+                .isl(512 + rng.below(2048) as usize)
+                .mnt(8192)
+                .seed(seed)
+                .requests(1)
+                .build()
+                .unwrap();
+            let r = ServingStack::new(spec, Fidelity::Des).run().unwrap();
             match mode {
                 ParallelMode::Dwdp => {
                     assert_eq!(
@@ -214,5 +218,32 @@ fn prop_modes_have_disjoint_comm_categories() {
                 }
             }
         }
+    }
+}
+
+/// Property: for any valid builder input, `build()` either errors or
+/// produces a spec whose serving config passes validation unchanged — the
+/// "freeze" contract of the scenario API.
+#[test]
+fn prop_scenario_build_freezes_valid_configs() {
+    let m = PaperModelConfig::tiny();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let group = 2 + rng.below(6) as usize;
+        let isl = 256 + rng.below(4096) as usize;
+        let built = Scenario::context()
+            .model(m.clone())
+            .group(group)
+            .isl(isl)
+            .ratio(0.5 + rng.f64() * 0.5)
+            .prefetch_fraction(rng.f64())
+            .seed(seed)
+            .build();
+        let spec = built.unwrap_or_else(|e| panic!("seed {seed}: unexpected reject: {e}"));
+        // validate() must be idempotent on a frozen spec.
+        let mut again = spec.serving.clone();
+        again.validate(&spec.model).expect("frozen spec re-validates");
+        assert_eq!(again.local_experts, spec.serving.local_experts, "seed {seed}");
+        assert!(spec.serving.local_experts >= m.n_experts.div_ceil(group), "seed {seed}");
     }
 }
