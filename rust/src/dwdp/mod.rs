@@ -343,23 +343,20 @@ mod tests {
             .map(|_| ChunkSpec::sample(w, &m, &s, &p, 2, &mut rng))
             .collect();
         let cp = compile_rank_program(&hw, &m, &s, 2, &chunks);
+        // Invariant (a): at most one issued-but-unwaited plan at any
+        // program point.  Invariant (b) — every issue overlaps a MoE block
+        // — is checked by the explicit steady-state scan below, which
+        // inspects the Issue/gemm/Wait ordering directly.
         let mut unwaited = 0i32;
-        let mut pending_issue = false;
         for step in &cp.steps {
             match step {
                 Step::IssuePrefetch { .. } => {
                     unwaited += 1;
-                    pending_issue = true;
                     assert!(unwaited <= 1, "more than one plan in flight");
                 }
                 Step::WaitPrefetch { .. } => {
                     unwaited -= 1;
                     assert!(unwaited >= 0);
-                }
-                Step::Compute(c) if c.name == "grouped_gemm" => {
-                    // Every MoE block except the final layer's runs with the
-                    // next plan already issued (overlap).
-                    let _ = pending_issue;
                 }
                 _ => {}
             }

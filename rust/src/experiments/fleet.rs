@@ -1,0 +1,263 @@
+//! Fleet-scale regenerators: the cluster frontier, burst robustness, and
+//! trace-replay scenarios (`fleet_frontier`, `fleet_burst`, `fleet_trace`
+//! in the registry).
+//!
+//! These go beyond the paper's single-deployment §5.3 sweep: they stress
+//! DWDP's no-sync independence claim at cluster granularity, under the
+//! dynamic workloads where parallelization comparisons are known to flip
+//! (Shift Parallelism, 2509.16495) and with the fleet-level workload
+//! metrics that make capacity claims actionable (Kundu et al.,
+//! 2407.14645).  All three run at analytic fidelity through the parallel
+//! [`crate::fleet::sweep`] driver.
+
+use crate::config::ParallelMode;
+use crate::fleet::{available_threads, run_sweep, ClusterPolicy, SweepPoint};
+use crate::serving::{Fidelity, RunReport, Scenario};
+use crate::util::table::{f, Table};
+use crate::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, WorkloadTrace};
+
+use super::calib;
+
+fn quick() -> bool {
+    std::env::var("DWDP_QUICK").is_ok()
+}
+
+/// Requests offered per fleet point.
+fn n_requests() -> usize {
+    if quick() {
+        24
+    } else {
+        96
+    }
+}
+
+/// Calibrated fleet base: SemiAnalysis-style prompts on DWDP/DEP groups of
+/// 4 with the routing-skew imbalance knob on — the cross-rank imbalance
+/// DWDP is designed to tolerate.
+pub fn fleet_scenario(mode: ParallelMode, n_groups: usize) -> Scenario {
+    Scenario::fleet()
+        .mode(mode)
+        .group(4)
+        .groups(n_groups)
+        .isl(8192)
+        .ratio(0.8)
+        .osl_window(256, 1024)
+        .prefetch_fraction(calib::TABLE1_PREFETCH_FRACTION)
+        .routing_skew(1.0)
+        .requests(n_requests())
+        .seed(7)
+}
+
+/// A bursty recording all trace-replay rows share: generated once from the
+/// Gamma-burst process, round-tripped through the canonical JSON encoding
+/// so replay rows exercise the full write→read path.
+fn recorded_trace(rate: f64) -> WorkloadTrace {
+    let mut gen = OpenLoopGen::new(
+        ArrivalProcess::GammaBurst { rate, cv2: 8.0 },
+        IslDist::RatioWindow { isl: 8192, ratio: 0.8 },
+        OslDist::Uniform { lo: 256, hi: 1024 },
+        7,
+    );
+    let trace = WorkloadTrace::record(&mut gen, n_requests());
+    WorkloadTrace::parse(&trace.dump()).expect("canonical trace round-trips")
+}
+
+fn report_row(label: &str, r: &RunReport) -> Vec<String> {
+    vec![
+        label.to_string(),
+        r.n_requests.to_string(),
+        r.shed.to_string(),
+        f(r.p50_ttft * 1e3, 0),
+        f(r.p95_ttft * 1e3, 0),
+        f(r.p99_ttft * 1e3, 0),
+        f(r.p99_tpot * 1e3, 1),
+        f(r.tps_per_gpu, 1),
+        f(r.goodput * 100.0, 1),
+    ]
+}
+
+const ROW_HEADER: [&str; 9] = [
+    "scenario",
+    "served",
+    "shed",
+    "p50 TTFT (ms)",
+    "p95 TTFT (ms)",
+    "p99 TTFT (ms)",
+    "p99 TPOT (ms)",
+    "TPS/GPU",
+    "goodput (%)",
+];
+
+/// One table row per sweep point; a point that errored gets a "failed"
+/// stub padded to the header width.
+fn rows_into(t: &mut Table, points: &[SweepPoint], reports: &[Result<RunReport, String>]) {
+    for (p, r) in points.iter().zip(reports) {
+        match r {
+            Ok(r) => {
+                t.row(report_row(&p.label, r));
+            }
+            Err(e) => {
+                let mut row = vec![format!("{} (failed: {e})", p.label)];
+                row.resize(ROW_HEADER.len(), "-".into());
+                t.row(row);
+            }
+        }
+    }
+}
+
+/// `fleet_frontier` — DWDP vs DEP over a 4-group cluster under Poisson,
+/// bursty Gamma, and trace-replay arrivals, from one parallel sweep.  The
+/// sweep is run once single-threaded and once across all cores; the final
+/// row records whether the two passes were bit-identical (the determinism
+/// contract of `fleet::sweep`).
+pub fn fleet_frontier() -> Table {
+    let rate = 6.0;
+    let trace = recorded_trace(rate);
+    let arrivals: Vec<(&str, ArrivalProcess)> = vec![
+        ("poisson", ArrivalProcess::Poisson { rate }),
+        ("burst", ArrivalProcess::GammaBurst { rate, cv2: 8.0 }),
+        ("trace", ArrivalProcess::Replay { trace }),
+    ];
+    let mut points = Vec::new();
+    for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+        for (name, process) in &arrivals {
+            let spec = fleet_scenario(mode, 4)
+                .arrival(process.clone())
+                .build()
+                .expect("fleet_frontier scenario");
+            points.push(SweepPoint::new(
+                &format!("{}4 x4 {name}", mode.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let parallel = run_sweep(&points, available_threads());
+    let serial = run_sweep(&points, 1);
+    let bit_identical = parallel
+        .iter()
+        .zip(&serial)
+        .all(|(a, b)| match (a, b) {
+            (Ok(a), Ok(b)) => a.to_json().dump() == b.to_json().dump(),
+            (Err(a), Err(b)) => a == b,
+            _ => false,
+        });
+    let mut t = Table::new(&ROW_HEADER)
+        .with_title("Fleet frontier: DWDP vs DEP, 4 groups, three arrival processes");
+    rows_into(&mut t, &points, &parallel);
+    let mut row = vec![
+        "sweep determinism (1 thread vs all cores)".to_string(),
+        if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
+    ];
+    row.resize(ROW_HEADER.len(), "-".into());
+    t.row(row);
+    t
+}
+
+/// `fleet_burst` — hold the mean rate fixed and crank burstiness (CV² of
+/// the Gamma inter-arrivals): DEP's lockstep groups absorb bursts worse
+/// than DWDP's independent ranks, and the gap widens in the tail.
+pub fn fleet_burst() -> Table {
+    let rate = 6.0;
+    let mut points = Vec::new();
+    for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+        for cv2 in [1.0, 4.0, 16.0] {
+            let spec = fleet_scenario(mode, 4)
+                .arrival(ArrivalProcess::GammaBurst { rate, cv2 })
+                .build()
+                .expect("fleet_burst scenario");
+            points.push(SweepPoint::new(
+                &format!("{}4 x4 cv2={cv2}", mode.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let reports = run_sweep(&points, available_threads());
+    let mut t = Table::new(&ROW_HEADER)
+        .with_title("Fleet burst robustness: Gamma arrivals, rising CV² at fixed mean rate");
+    rows_into(&mut t, &points, &reports);
+    t
+}
+
+/// `fleet_trace` — record a bursty workload, write it to
+/// `fleet_trace.json`, read it back (byte-identical), and replay the same
+/// offered load under all three cluster policies: with identical arrivals
+/// the policy differences (tail latency vs shedding) are causal, not
+/// sampling noise.
+pub fn fleet_trace() -> Table {
+    let trace = recorded_trace(10.0);
+    // Exercise the on-disk round trip; fall back to the in-memory trace
+    // when the temp directory is not writable.  Per-process filename so
+    // concurrent runs (tests vs CLI, parallel CI jobs) cannot interleave.
+    let path = std::env::temp_dir().join(format!("dwdp_fleet_trace_{}.json", std::process::id()));
+    let path = path.to_string_lossy().to_string();
+    let trace = match trace.write_file(&path) {
+        Ok(()) => {
+            let read = WorkloadTrace::read_file(&path).expect("just-written trace reads back");
+            assert_eq!(read.dump(), trace.dump(), "trace round trip must be byte-identical");
+            eprintln!("workload trace: {path}");
+            read
+        }
+        Err(_) => trace,
+    };
+    let policies = [
+        ClusterPolicy::RoundRobin,
+        ClusterPolicy::LeastOutstandingTokens,
+        ClusterPolicy::SloAdmission { max_wait: 1.0 },
+    ];
+    let mut points = Vec::new();
+    for policy in policies {
+        let spec = fleet_scenario(ParallelMode::Dwdp, 4)
+            .arrival(ArrivalProcess::Replay { trace: trace.clone() })
+            .cluster_policy(policy)
+            .build()
+            .expect("fleet_trace scenario");
+        points.push(SweepPoint::new(
+            &format!("DWDP4 x4 {}", policy.name()),
+            spec,
+            Fidelity::Analytic,
+        ));
+    }
+    let reports = run_sweep(&points, available_threads());
+    let mut t = Table::new(&ROW_HEADER)
+        .with_title("Trace replay: one recorded burst workload, three cluster policies");
+    rows_into(&mut t, &points, &reports);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_covers_modes_and_arrivals_and_is_deterministic() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = fleet_frontier();
+        // 2 modes x 3 arrivals + the determinism row.
+        assert_eq!(t.n_rows(), 7);
+        let text = t.render();
+        for needle in ["DWDP4", "DEP4", "poisson", "burst", "trace", "bit-identical"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn burst_table_has_all_cv2_rows() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = fleet_burst();
+        assert_eq!(t.n_rows(), 6);
+        assert!(t.render().contains("cv2=16"));
+    }
+
+    #[test]
+    fn trace_table_covers_all_policies() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = fleet_trace();
+        assert_eq!(t.n_rows(), 3);
+        let text = t.render();
+        for needle in ["round-robin", "least-outstanding", "slo-admission"] {
+            assert!(text.contains(needle), "missing {needle}");
+        }
+    }
+}

@@ -12,6 +12,7 @@
 
 pub mod context;
 pub mod e2e;
+pub mod fleet;
 pub mod power;
 
 use crate::config::ParallelMode;

@@ -1,0 +1,200 @@
+//! Cluster-level routing: how arriving requests are spread over (or shed
+//! from) the fleet's serving groups.
+//!
+//! The per-group [`crate::coordinator::Router`] balances prompt tokens
+//! across *context groups inside one deployment*; this router sits one
+//! level up, assigning each open-loop arrival to one of N independent
+//! serving groups — or refusing it outright under SLO-aware admission
+//! control, the knob that turns overload into bounded shedding instead of
+//! unbounded queueing.
+
+/// Cluster routing policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClusterPolicy {
+    /// Blind rotation over the groups.
+    RoundRobin,
+    /// Fewest outstanding prompt tokens (queued + in-flight prefill);
+    /// ties break to the lowest group index.
+    LeastOutstandingTokens,
+    /// Least-outstanding placement plus admission control: a request is
+    /// shed when even the best group's predicted queueing delay exceeds
+    /// `max_wait` seconds — protecting admitted requests' TTFT SLO at the
+    /// cost of explicit, accounted-for shedding.
+    SloAdmission { max_wait: f64 },
+}
+
+impl ClusterPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterPolicy::RoundRobin => "round-robin",
+            ClusterPolicy::LeastOutstandingTokens => "least-outstanding",
+            ClusterPolicy::SloAdmission { .. } => "slo-admission",
+        }
+    }
+
+    /// Parse a CLI-style name (`rr`, `lot`, `slo`); `max_wait` seeds the
+    /// admission threshold for the `slo` policy.
+    pub fn parse(s: &str, max_wait: f64) -> Option<ClusterPolicy> {
+        match s {
+            "rr" | "round-robin" => Some(ClusterPolicy::RoundRobin),
+            "lot" | "least-outstanding" | "least" => Some(ClusterPolicy::LeastOutstandingTokens),
+            "slo" | "slo-admission" => Some(ClusterPolicy::SloAdmission { max_wait }),
+            _ => None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let ClusterPolicy::SloAdmission { max_wait } = self {
+            if !(max_wait.is_finite() && *max_wait > 0.0) {
+                return Err(format!(
+                    "slo-admission max_wait must be finite and > 0, got {max_wait}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One group's load as seen by the router at an arrival instant.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupLoad {
+    /// Prompt tokens admitted to the group but not yet prefilled
+    /// (pending queue + the batch currently in flight).
+    pub outstanding_tokens: usize,
+    /// Predicted queueing delay before a newly admitted request would
+    /// start prefill, seconds (drain of the in-flight batch plus the
+    /// pending backlog at the group's observed prefill rate).
+    pub predicted_wait: f64,
+}
+
+/// The router's verdict for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// Admit to this group index.
+    Admit(usize),
+    /// Refuse: no group can serve within the admission bound.
+    Shed,
+}
+
+/// Stateful cluster router (round-robin carries a cursor; the other
+/// policies are pure functions of the observed loads).
+#[derive(Debug, Clone)]
+pub struct ClusterRouter {
+    policy: ClusterPolicy,
+    n_groups: usize,
+    next: usize,
+}
+
+impl ClusterRouter {
+    pub fn new(n_groups: usize, policy: ClusterPolicy) -> ClusterRouter {
+        assert!(n_groups >= 1, "router needs at least one group");
+        ClusterRouter { policy, n_groups, next: 0 }
+    }
+
+    pub fn policy(&self) -> ClusterPolicy {
+        self.policy
+    }
+
+    fn least_outstanding(loads: &[GroupLoad]) -> usize {
+        let mut best = 0;
+        for (i, l) in loads.iter().enumerate() {
+            if l.outstanding_tokens < loads[best].outstanding_tokens {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Decide placement for one arrival given the current per-group loads
+    /// (`loads.len()` must equal the router's group count).
+    pub fn route(&mut self, loads: &[GroupLoad]) -> RouteDecision {
+        assert_eq!(loads.len(), self.n_groups, "load snapshot size mismatch");
+        match self.policy {
+            ClusterPolicy::RoundRobin => {
+                let g = self.next;
+                self.next = (self.next + 1) % self.n_groups;
+                RouteDecision::Admit(g)
+            }
+            ClusterPolicy::LeastOutstandingTokens => {
+                RouteDecision::Admit(Self::least_outstanding(loads))
+            }
+            ClusterPolicy::SloAdmission { max_wait } => {
+                // Place by predicted wait (what the SLO cares about); shed
+                // when even the best group is past the bound.
+                let mut best = 0;
+                for (i, l) in loads.iter().enumerate() {
+                    if l.predicted_wait < loads[best].predicted_wait {
+                        best = i;
+                    }
+                }
+                if loads[best].predicted_wait > max_wait {
+                    RouteDecision::Shed
+                } else {
+                    RouteDecision::Admit(best)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(outstanding: &[usize]) -> Vec<GroupLoad> {
+        outstanding
+            .iter()
+            .map(|&t| GroupLoad { outstanding_tokens: t, predicted_wait: t as f64 * 1e-3 })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_ignores_load() {
+        let mut r = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
+        let l = loads(&[100, 0, 50]);
+        assert_eq!(r.route(&l), RouteDecision::Admit(0));
+        assert_eq!(r.route(&l), RouteDecision::Admit(1));
+        assert_eq!(r.route(&l), RouteDecision::Admit(2));
+        assert_eq!(r.route(&l), RouteDecision::Admit(0));
+    }
+
+    #[test]
+    fn least_outstanding_picks_min_with_low_index_ties() {
+        let mut r = ClusterRouter::new(4, ClusterPolicy::LeastOutstandingTokens);
+        assert_eq!(r.route(&loads(&[5, 3, 9, 3])), RouteDecision::Admit(1));
+        assert_eq!(r.route(&loads(&[0, 0, 0, 0])), RouteDecision::Admit(0));
+    }
+
+    #[test]
+    fn slo_admission_sheds_past_bound() {
+        let mut r = ClusterRouter::new(2, ClusterPolicy::SloAdmission { max_wait: 0.5 });
+        let ok = vec![
+            GroupLoad { outstanding_tokens: 10, predicted_wait: 0.8 },
+            GroupLoad { outstanding_tokens: 90, predicted_wait: 0.2 },
+        ];
+        // Places by wait, not tokens.
+        assert_eq!(r.route(&ok), RouteDecision::Admit(1));
+        let overloaded = vec![
+            GroupLoad { outstanding_tokens: 10, predicted_wait: 0.9 },
+            GroupLoad { outstanding_tokens: 90, predicted_wait: 0.6 },
+        ];
+        assert_eq!(r.route(&overloaded), RouteDecision::Shed);
+    }
+
+    #[test]
+    fn policy_parse_and_names() {
+        assert_eq!(ClusterPolicy::parse("rr", 1.0), Some(ClusterPolicy::RoundRobin));
+        assert_eq!(
+            ClusterPolicy::parse("lot", 1.0),
+            Some(ClusterPolicy::LeastOutstandingTokens)
+        );
+        assert_eq!(
+            ClusterPolicy::parse("slo", 0.25),
+            Some(ClusterPolicy::SloAdmission { max_wait: 0.25 })
+        );
+        assert_eq!(ClusterPolicy::parse("nope", 1.0), None);
+        assert_eq!(ClusterPolicy::RoundRobin.name(), "round-robin");
+        assert!(ClusterPolicy::SloAdmission { max_wait: 0.0 }.validate().is_err());
+        assert!(ClusterPolicy::SloAdmission { max_wait: 1.0 }.validate().is_ok());
+    }
+}

@@ -1,0 +1,133 @@
+//! Multi-threaded sweep driver: fan a list of fleet (or any other)
+//! scenario points across OS threads so the DWDP-vs-DEP cluster frontier
+//! regenerates in seconds.
+//!
+//! The crate stays dependency-free: plain `std::thread::scope` workers
+//! pull point indices from an atomic counter and write into per-point
+//! slots.  Every point's simulation is a pure function of its spec (all
+//! randomness is seeded), so the results are bit-identical regardless of
+//! thread count or completion order — property-tested in
+//! `rust/tests/properties.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::serving::{Fidelity, RunReport, ScenarioSpec, ServingStack};
+
+/// One point of a sweep: a frozen spec bound to a fidelity, with a label
+/// for table rows.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    pub spec: ScenarioSpec,
+    pub fidelity: Fidelity,
+}
+
+impl SweepPoint {
+    pub fn new(label: &str, spec: ScenarioSpec, fidelity: Fidelity) -> SweepPoint {
+        SweepPoint { label: label.to_string(), spec, fidelity }
+    }
+}
+
+/// Worker threads to use by default: one per available core.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A per-point result slot, written once by whichever worker claims it.
+type SweepSlot = Mutex<Option<Result<RunReport, String>>>;
+
+/// Run every point, fanning across up to `threads` OS threads; results
+/// come back in point order, each `Ok(report)` or `Err(message)` exactly
+/// as a serial `ServingStack::run` would have produced.
+pub fn run_sweep(points: &[SweepPoint], threads: usize) -> Vec<Result<RunReport, String>> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, points.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<SweepSlot> = points.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let p = &points[i];
+                let result = ServingStack::new(p.spec.clone(), p.fidelity).run();
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("every sweep slot is filled before the scope exits")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PaperModelConfig, ParallelMode};
+    use crate::serving::Scenario;
+
+    fn points() -> Vec<SweepPoint> {
+        let mut out = Vec::new();
+        for mode in [ParallelMode::Dwdp, ParallelMode::Dep] {
+            for rate in [10.0, 40.0] {
+                let spec = Scenario::fleet()
+                    .model(PaperModelConfig::tiny())
+                    .mode(mode)
+                    .group(4)
+                    .groups(2)
+                    .isl(1024)
+                    .mnt(8192)
+                    .osl(16)
+                    .rate(rate)
+                    .requests(16)
+                    .seed(3)
+                    .build()
+                    .unwrap();
+                out.push(SweepPoint::new(
+                    &format!("{} @ {rate}", mode.name()),
+                    spec,
+                    Fidelity::Analytic,
+                ));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sweep_returns_reports_in_point_order() {
+        let pts = points();
+        let reports = run_sweep(&pts, 2);
+        assert_eq!(reports.len(), pts.len());
+        for (p, r) in pts.iter().zip(&reports) {
+            let r = r.as_ref().unwrap();
+            assert_eq!(r.mode, p.spec.serving.mode);
+            assert!(r.n_requests > 0);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let pts = points();
+        let serial = run_sweep(&pts, 1);
+        let parallel = run_sweep(&pts, 4);
+        for (a, b) in serial.iter().zip(&parallel) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.to_json().dump(), b.to_json().dump());
+        }
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        assert!(run_sweep(&[], 8).is_empty());
+    }
+}

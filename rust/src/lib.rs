@@ -30,6 +30,15 @@
 //! The lower layers ([`engine`], [`sim`], [`coordinator`]'s `DisaggSim`)
 //! are crate-internal execution machinery behind that API.
 //!
+//! Above the per-group stack sits the [`fleet`] layer: N independent
+//! serving groups behind a cluster router (round-robin,
+//! least-outstanding-tokens, or SLO-aware admission with shedding),
+//! absorbing open-loop traffic from a [`workload::ArrivalProcess`]
+//! (Poisson, bursty Gamma/MMPP, or JSON trace replay) and reporting
+//! cluster-wide p50/p95/p99 TTFT/TPOT plus goodput under an SLO.
+//! `fleet::sweep` fans load sweeps across cores so the DWDP-vs-DEP
+//! cluster frontier regenerates in seconds.
+//!
 //! Python never runs at request time: [`runtime`] (behind the `pjrt`
 //! feature, which additionally expects locally vendored `xla`/`anyhow`
 //! crates — see the feature note in `Cargo.toml`) loads the HLO artifacts
@@ -62,6 +71,7 @@ pub mod dep;
 pub mod dwdp;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod placement;

@@ -2,11 +2,13 @@
 //!
 //! All commands are thin shells over the unified serving API: `experiment`
 //! dispatches through the data-driven scenario registry
-//! (`dwdp::serving::registry`), and `serve` builds a disaggregated
-//! scenario with the `Scenario` builder and runs it on a `ServingStack`
-//! at the requested fidelity.  Run `dwdp-repro help` for the usage screen
-//! (generated from the registry, so it always matches the scenarios that
-//! exist).
+//! (`dwdp::serving::registry`), `serve` builds a disaggregated scenario
+//! with the `Scenario` builder and runs it on a `ServingStack` at the
+//! requested fidelity, and `fleet` drives the cluster-level simulator
+//! (`dwdp::fleet`) under open-loop arrivals, optionally sweeping DWDP and
+//! DEP in parallel.  `--json` exports any run's report/table through
+//! `util::json`.  Run `dwdp-repro help` for the usage screen (generated
+//! from the registry, so it always matches the scenarios that exist).
 //!
 //! (Argument parsing is hand-rolled: the offline build environment carries
 //! no clap.)
@@ -16,10 +18,12 @@ use std::collections::HashMap;
 use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::contention::contention_distribution;
 use dwdp::experiments::{self, calib};
+use dwdp::fleet::{available_threads, fleet_workload, run_sweep, ClusterPolicy, SweepPoint};
 use dwdp::serving::registry::{self, RunArtifact};
 use dwdp::serving::{Fidelity, RunReport, ServingStack};
 use dwdp::util::table::Table;
 use dwdp::util::Json;
+use dwdp::workload::{ArrivalProcess, WorkloadTrace};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +45,7 @@ fn run(args: &[String]) -> i32 {
         "trace" => trace(&flags),
         "contention" => contention(&flags),
         "serve" => serve(&flags),
+        "fleet" => fleet_cmd(&flags),
         "info" => {
             info();
             0
@@ -82,6 +87,10 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 fn emit(t: &Table, flags: &HashMap<String, String>) {
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, t.to_json().dump()).expect("write json output");
+        eprintln!("wrote {path}");
+    }
     let text = if flags.contains_key("csv") { t.render_csv() } else { t.render() };
     if let Some(path) = flags.get("out") {
         std::fs::write(path, &text).expect("write output");
@@ -89,6 +98,19 @@ fn emit(t: &Table, flags: &HashMap<String, String>) {
     } else {
         println!("{text}");
     }
+}
+
+/// `--json PATH` export of one or more run reports (an object for a single
+/// run, an array for a sweep) — the BENCH_*.json capture path.
+fn export_reports(path: &str, reports: &[&RunReport]) -> Result<(), String> {
+    let json = if reports.len() == 1 {
+        reports[0].to_json()
+    } else {
+        Json::Arr(reports.iter().map(|r| r.to_json()).collect())
+    };
+    std::fs::write(path, json.dump()).map_err(|e| format!("write {path}: {e}"))?;
+    eprintln!("wrote {path}");
+    Ok(())
 }
 
 /// Run one registered scenario, writing its trace next to the table when
@@ -225,6 +247,155 @@ fn serve(flags: &HashMap<String, String>) -> i32 {
         }
     };
     println!("{}", report_table(&report).render());
+    if let Some(path) = flags.get("json") {
+        if let Err(e) = export_reports(path, &[&report]) {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
+    0
+}
+
+/// `dwdp-repro fleet` — run a cluster of serving groups under open-loop
+/// traffic.  `--mode both` sweeps DWDP and DEP in parallel across
+/// `--threads` cores; everything else is a single fleet run.
+fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
+    let modes: Vec<ParallelMode> = match flags.get("mode").map(String::as_str) {
+        None | Some("dwdp") => vec![ParallelMode::Dwdp],
+        Some("dep") => vec![ParallelMode::Dep],
+        Some("both") => vec![ParallelMode::Dwdp, ParallelMode::Dep],
+        Some(other) => {
+            eprintln!("unknown mode {other:?} (dwdp|dep|both)");
+            return 2;
+        }
+    };
+    let groups = flags.get("groups").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let rate: f64 = flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(6.0);
+    let cv2: f64 = flags.get("cv2").and_then(|s| s.parse().ok()).unwrap_or(8.0);
+    let max_wait: f64 = flags.get("max-wait").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let seconds: Option<f64> = flags.get("seconds").and_then(|s| s.parse().ok());
+
+    let arrival = if let Some(path) = flags.get("trace") {
+        match WorkloadTrace::read_file(path) {
+            Ok(trace) => ArrivalProcess::Replay { trace },
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        match flags.get("arrival").map(String::as_str) {
+            None | Some("poisson") => ArrivalProcess::Poisson { rate },
+            Some("burst") => ArrivalProcess::GammaBurst { rate, cv2 },
+            // A calm/storm split around the requested mean rate.
+            Some("mmpp") => ArrivalProcess::MarkovModulated {
+                rate_low: rate * 0.2,
+                rate_high: rate * 1.8,
+                mean_dwell: 5.0,
+            },
+            Some(other) => {
+                eprintln!("unknown arrival {other:?} (poisson|burst|mmpp)");
+                return 2;
+            }
+        }
+    };
+    // A replayed trace defaults to its full recorded length — truncating
+    // it would silently measure a different offered load than was
+    // recorded.
+    let requests = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(
+        match &arrival {
+            ArrivalProcess::Replay { trace } => trace.requests.len(),
+            _ if seconds.is_some() => 100_000,
+            _ => 64,
+        },
+    );
+    let fidelity = match flags.get("fidelity") {
+        None => Fidelity::Analytic,
+        Some(s) => match Fidelity::parse(s) {
+            Some(f) => f,
+            None => {
+                eprintln!("unknown fidelity {s:?} (analytic|des)");
+                return 2;
+            }
+        },
+    };
+
+    let mut points = Vec::new();
+    for &mode in &modes {
+        let mut scn = experiments::fleet::fleet_scenario(mode, groups)
+            .group(flags.get("group").and_then(|s| s.parse().ok()).unwrap_or(4))
+            .requests(requests)
+            .arrival(arrival.clone());
+        if let Some(s) = seconds {
+            scn = scn.horizon(s);
+        }
+        if let Some(isl) = flags.get("isl").and_then(|s| s.parse().ok()) {
+            scn = scn.isl(isl);
+        }
+        if let Some(seed) = flags.get("seed").and_then(|s| s.parse().ok()) {
+            scn = scn.seed(seed);
+        }
+        if let Some(p) = flags.get("policy") {
+            match ClusterPolicy::parse(p, max_wait) {
+                Some(policy) => scn = scn.cluster_policy(policy),
+                None => {
+                    eprintln!("unknown policy {p:?} (rr|lot|slo)");
+                    return 2;
+                }
+            }
+        }
+        let spec = match scn.build() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        };
+        let label = spec.label.clone();
+        points.push(SweepPoint::new(&label, spec, fidelity));
+    }
+
+    if let Some(path) = flags.get("record-trace") {
+        match fleet_workload(&points[0].spec) {
+            Ok(reqs) => {
+                let trace = WorkloadTrace::from_requests(reqs);
+                if let Err(e) = trace.write_file(path) {
+                    eprintln!("{e}");
+                    return 1;
+                }
+                eprintln!("recorded workload trace: {path}");
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    }
+
+    let threads = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(available_threads);
+    let results = run_sweep(&points, threads);
+    let mut reports = Vec::new();
+    for r in &results {
+        match r {
+            Ok(report) => {
+                println!("{}", report_table(report).render());
+                reports.push(report);
+            }
+            Err(e) => {
+                eprintln!("fleet error: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(path) = flags.get("json") {
+        if let Err(e) = export_reports(path, &reports) {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
     0
 }
 
@@ -236,6 +407,27 @@ fn report_table(r: &RunReport) -> Table {
     t.row(vec!["median TTFT (ms)".into(), format!("{:.0}", r.median_ttft * 1e3)]);
     t.row(vec!["span (s)".into(), format!("{:.2}", r.makespan)]);
     t.row(vec!["requests".into(), r.n_requests.to_string()]);
+    if r.n_groups > 0 {
+        t.row(vec!["fleet groups".into(), r.n_groups.to_string()]);
+        t.row(vec![
+            "TTFT p50/p95/p99 (ms)".into(),
+            format!(
+                "{:.0} / {:.0} / {:.0}",
+                r.p50_ttft * 1e3,
+                r.p95_ttft * 1e3,
+                r.p99_ttft * 1e3
+            ),
+        ]);
+        t.row(vec![
+            "TPOT p50/p99 (ms)".into(),
+            format!("{:.1} / {:.1}", r.p50_tpot * 1e3, r.p99_tpot * 1e3),
+        ]);
+        t.row(vec!["goodput (%)".into(), format!("{:.1}", r.goodput * 100.0)]);
+        t.row(vec![
+            "offered / shed".into(),
+            format!("{} / {}", r.offered, r.shed),
+        ]);
+    }
     for (k, v) in &r.extras {
         t.row(vec![k.clone(), v.clone()]);
     }

@@ -79,6 +79,15 @@ impl RequestRecord {
         self.first_token - self.arrival
     }
 
+    /// Mean time per output token over the decode span (0 for single-token
+    /// outputs, which have no inter-token gap to measure).
+    pub fn tpot(&self) -> f64 {
+        if self.osl <= 1 {
+            return 0.0;
+        }
+        (self.finish - self.first_token).max(0.0) / (self.osl as f64 - 1.0)
+    }
+
     /// Per-user decode throughput: output tokens over the generation span.
     pub fn user_tps(&self) -> f64 {
         let gen_span = (self.finish - self.first_token).max(1e-9);
@@ -86,6 +95,85 @@ impl RequestRecord {
             return self.osl as f64 / gen_span;
         }
         (self.osl as f64 - 1.0) / gen_span
+    }
+}
+
+/// Latency service-level objective: the contract a fleet serves under.
+///
+/// A request meets the SLO when its TTFT and its mean TPOT are both within
+/// bounds; "goodput" counts only those requests (Kundu et al., 2407.14645
+/// argue fleet capacity is meaningless without this cut).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Max acceptable time-to-first-token incl. queueing, seconds.
+    pub max_ttft: f64,
+    /// Max acceptable mean time per output token, seconds.
+    pub max_tpot: f64,
+}
+
+impl Slo {
+    /// A permissive default spanning the paper's 20-100 TPS/user serving
+    /// range: 2 s TTFT, 50 ms/token (= the 20 TPS/user floor).
+    pub fn lenient() -> Slo {
+        Slo { max_ttft: 2.0, max_tpot: 0.05 }
+    }
+
+    pub fn met_by(&self, r: &RequestRecord) -> bool {
+        r.ttft() <= self.max_ttft && r.tpot() <= self.max_tpot
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.max_ttft.is_finite() && self.max_ttft > 0.0) {
+            return Err(format!("slo max_ttft must be finite and > 0, got {}", self.max_ttft));
+        }
+        if !(self.max_tpot.is_finite() && self.max_tpot > 0.0) {
+            return Err(format!("slo max_tpot must be finite and > 0, got {}", self.max_tpot));
+        }
+        Ok(())
+    }
+}
+
+/// Streaming latency accumulator: groups push samples as requests finish,
+/// digests merge cluster-wide, and percentile queries sort on demand.
+///
+/// Exact by design: fleet runs hold at most a few million samples, where a
+/// sort-on-query Vec beats a sketch on both accuracy and code size (the
+/// same substitution argument as DESIGN.md §2's PRNG/JSON choices).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyDigest {
+    samples: Vec<f64>,
+}
+
+impl LatencyDigest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    /// Fold another digest in (per-group -> cluster aggregation).
+    pub fn merge(&mut self, other: &LatencyDigest) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// The fleet reporting triple: (p50, p95, p99).
+    pub fn p50_p95_p99(&self) -> (f64, f64, f64) {
+        if self.samples.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        (
+            stats::percentile_sorted(&v, 50.0),
+            stats::percentile_sorted(&v, 95.0),
+            stats::percentile_sorted(&v, 99.0),
+        )
     }
 }
 
@@ -117,6 +205,44 @@ impl ServingMetrics {
     pub fn p99_ttft(&self) -> f64 {
         let xs: Vec<f64> = self.records.iter().map(|r| r.ttft()).collect();
         stats::percentile(&xs, 99.0)
+    }
+
+    /// TTFT samples as a mergeable digest (cluster-wide aggregation).
+    pub fn ttft_digest(&self) -> LatencyDigest {
+        let mut d = LatencyDigest::new();
+        for r in &self.records {
+            d.add(r.ttft());
+        }
+        d
+    }
+
+    /// TPOT samples as a mergeable digest.
+    pub fn tpot_digest(&self) -> LatencyDigest {
+        let mut d = LatencyDigest::new();
+        for r in &self.records {
+            d.add(r.tpot());
+        }
+        d
+    }
+
+    /// Fraction of completed requests meeting the SLO (0 for empty runs).
+    pub fn goodput_fraction(&self, slo: &Slo) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let met = self.records.iter().filter(|r| slo.met_by(r)).count();
+        met as f64 / self.records.len() as f64
+    }
+
+    /// Output tokens/s/GPU counting only SLO-meeting requests — the
+    /// fleet's goodput throughput.
+    pub fn goodput_tps_per_gpu(&self, slo: &Slo, n_gpus: usize, span: f64) -> f64 {
+        if span <= 0.0 || n_gpus == 0 {
+            return 0.0;
+        }
+        let tokens: usize =
+            self.records.iter().filter(|r| slo.met_by(r)).map(|r| r.osl).sum();
+        tokens as f64 / span / n_gpus as f64
     }
 
     /// Mean per-user decode TPS.
@@ -225,5 +351,73 @@ mod tests {
         assert_eq!(m.tps_per_user(), 0.0);
         assert_eq!(m.output_tps_per_gpu(4, 10.0), 0.0);
         assert_eq!(m.span(), 0.0);
+        assert_eq!(m.goodput_fraction(&Slo::lenient()), 0.0);
+        assert_eq!(m.ttft_digest().p50_p95_p99(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn tpot_is_decode_gap_per_token() {
+        // 10 s decode span over 101 tokens = 100 gaps of 0.1 s.
+        let r = rec(0, 1.0, 3.0, 13.0, 101);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+        // Single-token outputs have no inter-token gap.
+        assert_eq!(rec(1, 0.0, 1.0, 2.0, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn slo_cuts_goodput() {
+        let slo = Slo { max_ttft: 2.0, max_tpot: 0.2 };
+        let mut m = ServingMetrics::new();
+        m.push(rec(0, 0.0, 1.0, 3.0, 11)); // ttft 1, tpot 0.2 -> meets
+        m.push(rec(1, 0.0, 5.0, 7.0, 11)); // ttft 5 -> TTFT violation
+        m.push(rec(2, 0.0, 1.0, 11.0, 11)); // tpot 1.0 -> TPOT violation
+        assert!(slo.met_by(&m.records[0]));
+        assert!(!slo.met_by(&m.records[1]));
+        assert!(!slo.met_by(&m.records[2]));
+        assert!((m.goodput_fraction(&slo) - 1.0 / 3.0).abs() < 1e-12);
+        // Only the meeting request's 11 tokens count, over an 11 s span.
+        assert!((m.goodput_tps_per_gpu(&slo, 1, m.span()) - 1.0).abs() < 1e-12);
+        assert!(Slo { max_ttft: 0.0, max_tpot: 1.0 }.validate().is_err());
+        assert!(Slo { max_ttft: 1.0, max_tpot: f64::NAN }.validate().is_err());
+        assert!(Slo::lenient().validate().is_ok());
+    }
+
+    #[test]
+    fn digest_merges_and_matches_batch_percentiles() {
+        let mut a = LatencyDigest::new();
+        let mut b = LatencyDigest::new();
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.add(x);
+            } else {
+                b.add(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        let (p50, p95, p99) = a.p50_p95_p99();
+        assert!((p50 - crate::util::stats::percentile(&xs, 50.0)).abs() < 1e-12);
+        assert!((p95 - crate::util::stats::percentile(&xs, 95.0)).abs() < 1e-12);
+        assert!((p99 - crate::util::stats::percentile(&xs, 99.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn digests_cover_ttft_and_tpot() {
+        let mut m = ServingMetrics::new();
+        for i in 0..10 {
+            m.push(rec(i, 0.0, (i + 1) as f64, (i + 1) as f64 + 10.0, 11));
+        }
+        // TTFTs are 1..=10 s: interpolated p50 = 5.5, p95 = 9.55, p99 = 9.91.
+        let (p50, p95, p99) = m.ttft_digest().p50_p95_p99();
+        assert!((p50 - 5.5).abs() < 1e-12);
+        assert!((p95 - 9.55).abs() < 1e-9);
+        assert!((p99 - 9.91).abs() < 1e-9);
+        // All decode spans are 10 s over 10 gaps -> tpot 1.0 everywhere.
+        let (t50, _, t99) = m.tpot_digest().p50_p95_p99();
+        assert!((t50 - 1.0).abs() < 1e-12);
+        assert!((t99 - 1.0).abs() < 1e-12);
+        assert_eq!(m.ttft_digest().count(), 10);
+        assert_eq!(m.tpot_digest().count(), 10);
     }
 }

@@ -21,8 +21,11 @@
 use crate::config::ParallelMode;
 use crate::coordinator::{DisaggSim, GroupLatencyModel, PrefillOffsets};
 use crate::engine;
+use crate::fleet;
 use crate::metrics::Breakdown;
 use crate::trace::TraceSink;
+use crate::util::json::obj;
+use crate::util::Json;
 
 use super::scenario::{ScenarioKind, ScenarioSpec};
 
@@ -62,6 +65,24 @@ pub struct RunReport {
     pub n_ctx_groups: usize,
     pub n_gen_gpus: usize,
     pub arrival_rate: f64,
+    /// Serving groups in the fleet (fleet scenarios; 0 otherwise).
+    pub n_groups: usize,
+    /// Cluster-wide TTFT percentiles incl. queueing, seconds (fleet
+    /// scenarios; 0 otherwise).
+    pub p50_ttft: f64,
+    pub p95_ttft: f64,
+    pub p99_ttft: f64,
+    /// Cluster-wide time-per-output-token percentiles, seconds (fleet
+    /// scenarios; 0 otherwise).
+    pub p50_tpot: f64,
+    pub p95_tpot: f64,
+    pub p99_tpot: f64,
+    /// Fraction of admitted requests meeting the scenario SLO (fleet
+    /// scenarios; 0 otherwise).
+    pub goodput: f64,
+    /// Requests offered to / shed by the cluster (fleet scenarios).
+    pub offered: usize,
+    pub shed: usize,
     /// DES events processed (0 for analytic runs).
     pub events: u64,
     /// Chrome trace, when the scenario asked for one and the backend can
@@ -90,10 +111,62 @@ impl Default for RunReport {
             n_ctx_groups: 1,
             n_gen_gpus: 0,
             arrival_rate: 0.0,
+            n_groups: 0,
+            p50_ttft: 0.0,
+            p95_ttft: 0.0,
+            p99_ttft: 0.0,
+            p50_tpot: 0.0,
+            p95_tpot: 0.0,
+            p99_tpot: 0.0,
+            goodput: 0.0,
+            offered: 0,
+            shed: 0,
             events: 0,
             trace: None,
             extras: Vec::new(),
         }
+    }
+}
+
+impl RunReport {
+    /// Serialize the report's scalar metrics and extras for `--json`
+    /// export and for bit-identical fingerprint comparisons (sweep
+    /// determinism tests).  The Chrome trace and per-layer breakdown are
+    /// deliberately omitted — they have their own formats.
+    pub fn to_json(&self) -> Json {
+        let extras: Vec<Json> = self
+            .extras
+            .iter()
+            .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+            .collect();
+        obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("backend", Json::Str(self.backend.to_string())),
+            ("mode", Json::Str(self.mode.name().to_string())),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+            ("total_tokens", Json::Num(self.total_tokens)),
+            ("makespan", Json::Num(self.makespan)),
+            ("tps_per_gpu", Json::Num(self.tps_per_gpu)),
+            ("tps_per_user", Json::Num(self.tps_per_user)),
+            ("median_ttft", Json::Num(self.median_ttft)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("mean_freq", Json::Num(self.mean_freq)),
+            ("n_ctx_groups", Json::Num(self.n_ctx_groups as f64)),
+            ("n_gen_gpus", Json::Num(self.n_gen_gpus as f64)),
+            ("arrival_rate", Json::Num(self.arrival_rate)),
+            ("n_groups", Json::Num(self.n_groups as f64)),
+            ("p50_ttft", Json::Num(self.p50_ttft)),
+            ("p95_ttft", Json::Num(self.p95_ttft)),
+            ("p99_ttft", Json::Num(self.p99_ttft)),
+            ("p50_tpot", Json::Num(self.p50_tpot)),
+            ("p95_tpot", Json::Num(self.p95_tpot)),
+            ("p99_tpot", Json::Num(self.p99_tpot)),
+            ("goodput", Json::Num(self.goodput)),
+            ("offered", Json::Num(self.offered as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("extras", Json::Arr(extras)),
+        ])
     }
 }
 
@@ -115,7 +188,46 @@ fn base_report(spec: &ScenarioSpec, backend: &'static str) -> RunReport {
         r.n_gen_gpus = n_gen_gpus;
         r.arrival_rate = arrival_rate;
     }
+    if let ScenarioKind::Fleet { n_groups, ref arrival, .. } = spec.kind {
+        r.n_groups = n_groups;
+        r.arrival_rate = arrival.mean_rate();
+    }
     r
+}
+
+/// Map a [`fleet::FleetOutcome`] into the unified report (shared by the
+/// analytic and DES backends, which differ only in the prefill seam).
+fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::FleetOutcome) {
+    report.n_requests = out.admitted;
+    report.total_tokens = out.admitted_tokens as f64;
+    report.makespan = out.span;
+    report.tps_per_gpu = out.metrics.output_tps_per_gpu(spec.n_gpus(), out.span);
+    report.tps_per_user = out.metrics.tps_per_user();
+    report.median_ttft = out.metrics.median_ttft();
+    let (p50, p95, p99) = out.metrics.ttft_digest().p50_p95_p99();
+    report.p50_ttft = p50;
+    report.p95_ttft = p95;
+    report.p99_ttft = p99;
+    let (p50, p95, p99) = out.metrics.tpot_digest().p50_p95_p99();
+    report.p50_tpot = p50;
+    report.p95_tpot = p95;
+    report.p99_tpot = p99;
+    report.goodput = out.metrics.goodput_fraction(&out.slo);
+    report.offered = out.offered;
+    report.shed = out.shed;
+    report
+        .extras
+        .push(("per-group requests".into(), format!("{:?}", out.per_group_requests)));
+    report.extras.push((
+        "goodput TPS/GPU".into(),
+        format!(
+            "{:.1}",
+            out.metrics.goodput_tps_per_gpu(&out.slo, spec.n_gpus(), out.span)
+        ),
+    ));
+    if out.shed > 0 {
+        report.extras.push(("shed tokens".into(), out.shed_tokens.to_string()));
+    }
 }
 
 fn disagg_sim(spec: &ScenarioSpec) -> Result<DisaggSim, String> {
@@ -128,7 +240,9 @@ fn disagg_sim(spec: &ScenarioSpec) -> Result<DisaggSim, String> {
             n_gen_gpus,
             route_policy,
         }),
-        ScenarioKind::Context { .. } => Err("not a disaggregated scenario".into()),
+        ScenarioKind::Context { .. } | ScenarioKind::Fleet { .. } => {
+            Err("not a disaggregated scenario".into())
+        }
     }
 }
 
@@ -196,6 +310,12 @@ impl ExecutionBackend for AnalyticBackend {
                 report.tps_per_gpu = p.tps_gpu;
                 report.median_ttft = p.median_ttft;
                 report.makespan = p.span;
+                Ok(report)
+            }
+            ScenarioKind::Fleet { .. } => {
+                let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+                let out = fleet::simulate(spec, &lm)?;
+                fill_fleet_report(&mut report, spec, &out);
                 Ok(report)
             }
         }
@@ -288,6 +408,20 @@ impl ExecutionBackend for DesBackend {
                 report.makespan = p.span;
                 Ok(report)
             }
+            ScenarioKind::Fleet { .. } => {
+                if spec.capture_trace {
+                    return Err(
+                        "trace capture is supported for context scenarios only; a \
+                         fleet DES run executes one simulation per batch per group \
+                         and has no single timeline to emit"
+                            .into(),
+                    );
+                }
+                let prefill = DesPrefill { spec };
+                let out = fleet::simulate(spec, &prefill)?;
+                fill_fleet_report(&mut report, spec, &out);
+                Ok(report)
+            }
         }
     }
 }
@@ -337,6 +471,15 @@ impl ExecutionBackend for PjrtBackend {
         use crate::util::Rng;
         use crate::workload::{IslDist, WorkloadGen};
 
+        if let ScenarioKind::Fleet { .. } = spec.kind {
+            return Err(
+                "the pjrt backend serves the demo model on a single group and \
+                 cannot honor fleet semantics (cluster routing, shedding, \
+                 percentile aggregation); run fleet scenarios at analytic or \
+                 des fidelity"
+                    .into(),
+            );
+        }
         let dir = default_artifact_dir();
         if !dir.join("manifest.json").exists() {
             return Err(format!("artifacts missing in {dir:?} — run `make artifacts`"));
@@ -355,9 +498,11 @@ impl ExecutionBackend for PjrtBackend {
         let n_requests = match spec.kind {
             ScenarioKind::Context { requests_per_rank } => requests_per_rank * group,
             ScenarioKind::Disagg { n_requests, .. } => n_requests,
+            ScenarioKind::Fleet { n_requests, .. } => n_requests,
         };
         let arrival_rate = match spec.kind {
             ScenarioKind::Disagg { arrival_rate, .. } => arrival_rate,
+            ScenarioKind::Fleet { ref arrival, .. } => arrival.mean_rate(),
             ScenarioKind::Context { .. } => 0.0,
         };
         let decode_tokens = spec.serving.osl.clamp(1, 4);
@@ -470,7 +615,9 @@ impl ExecutionBackend for PjrtBackend {
         // — both normalized by the `group` GPUs this backend stood up.
         report.tps_per_gpu = match spec.kind {
             ScenarioKind::Context { .. } => metrics.input_tps_per_gpu(group, wall),
-            ScenarioKind::Disagg { .. } => metrics.output_tps_per_gpu(group, wall),
+            ScenarioKind::Disagg { .. } | ScenarioKind::Fleet { .. } => {
+                metrics.output_tps_per_gpu(group, wall)
+            }
         };
         report.tps_per_user = metrics.tps_per_user();
         report.median_ttft = metrics.median_ttft();

@@ -248,6 +248,41 @@ mod tests {
     }
 
     #[test]
+    fn fleet_runs_at_both_cheap_fidelities_with_percentiles() {
+        let scn = || {
+            Scenario::fleet()
+                .model(PaperModelConfig::tiny())
+                .mode(ParallelMode::Dwdp)
+                .group(4)
+                .groups(2)
+                .isl(2048)
+                .mnt(16384)
+                .osl(32)
+                .rate(20.0)
+                .requests(12)
+                .seed(5)
+        };
+        for fidelity in [Fidelity::Analytic, Fidelity::Des] {
+            let r = ServingStack::new(scn().build().unwrap(), fidelity).run().unwrap();
+            assert_eq!(r.offered, 12, "{fidelity:?}");
+            assert_eq!(r.n_requests + r.shed, r.offered, "{fidelity:?}");
+            assert_eq!(r.n_groups, 2, "{fidelity:?}");
+            assert!(r.p50_ttft > 0.0, "{fidelity:?}");
+            assert!(r.p50_ttft <= r.p95_ttft && r.p95_ttft <= r.p99_ttft, "{fidelity:?}");
+            assert!(r.p50_tpot > 0.0 && r.p99_tpot >= r.p50_tpot, "{fidelity:?}");
+            assert!(r.tps_per_gpu > 0.0, "{fidelity:?}");
+            assert!(r.goodput >= 0.0 && r.goodput <= 1.0, "{fidelity:?}");
+            // The JSON fingerprint parses back and carries the percentiles.
+            let json = crate::util::Json::parse(&r.to_json().dump()).unwrap();
+            assert_eq!(json.get("n_groups").as_usize(), Some(2));
+            assert_eq!(json.get("p99_ttft").as_f64(), Some(r.p99_ttft));
+        }
+        // A fleet DES run has no single timeline: trace capture is refused.
+        let spec = scn().trace(true).build().unwrap();
+        assert!(ServingStack::new(spec, Fidelity::Des).run().is_err());
+    }
+
+    #[test]
     fn pjrt_backend_reports_unavailable_without_feature_or_artifacts() {
         // Whether or not the feature/artifacts are present, this must not
         // panic: either a real report or a descriptive error.

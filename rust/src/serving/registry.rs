@@ -89,6 +89,15 @@ fn run_ablation_redundancy() -> RunArtifact {
 fn run_ablation_fraction() -> RunArtifact {
     RunArtifact::table(experiments::context::ablation_prefetch_fraction())
 }
+fn run_fleet_frontier() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::fleet_frontier())
+}
+fn run_fleet_burst() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::fleet_burst())
+}
+fn run_fleet_trace() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::fleet_trace())
+}
 
 static REGISTRY: &[ScenarioEntry] = &[
     ScenarioEntry {
@@ -199,6 +208,24 @@ static REGISTRY: &[ScenarioEntry] = &[
         group: "context",
         run: run_ablation_fraction,
     },
+    ScenarioEntry {
+        id: "fleet_frontier",
+        title: "cluster frontier: DWDP vs DEP, 4 groups, 3 arrival processes",
+        group: "fleet",
+        run: run_fleet_frontier,
+    },
+    ScenarioEntry {
+        id: "fleet_burst",
+        title: "burst robustness: rising CV2 at fixed mean arrival rate",
+        group: "fleet",
+        run: run_fleet_burst,
+    },
+    ScenarioEntry {
+        id: "fleet_trace",
+        title: "trace replay: one recorded workload, 3 cluster policies",
+        group: "fleet",
+        run: run_fleet_trace,
+    },
 ];
 
 /// All registered scenarios, in registration order.
@@ -228,9 +255,15 @@ pub fn usage_text() -> String {
     out.push_str("  dwdp-repro serve [--mode dwdp|dep] [--fidelity analytic|des|pjrt]\n");
     out.push_str("                   [--ctx-groups N] [--gen-gpus M] [--group G]\n");
     out.push_str("                   [--rate R] [--requests K] [--isl N] [--config FILE.json]\n");
+    out.push_str("                   [--json FILE]\n");
+    out.push_str("  dwdp-repro fleet [--groups N] [--mode dwdp|dep] [--rate R] [--requests K]\n");
+    out.push_str("                   [--seconds S] [--arrival poisson|burst|mmpp] [--cv2 X]\n");
+    out.push_str("                   [--policy rr|lot|slo] [--max-wait W] [--trace FILE.json]\n");
+    out.push_str("                   [--record-trace FILE.json] [--fidelity analytic|des]\n");
+    out.push_str("                   [--threads T] [--json FILE]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");
-    for group in ["context", "e2e", "power", "analysis"] {
+    for group in ["context", "e2e", "fleet", "power", "analysis"] {
         let mut entries =
             REGISTRY.iter().filter(|e| e.group == group).peekable();
         if entries.peek().is_none() {
@@ -258,7 +291,12 @@ mod tests {
         ] {
             assert!(find(id).is_some(), "missing scenario {id}");
         }
-        assert_eq!(registry().len(), 18);
+        // PR 2's fleet layer registers through the same table.
+        for id in ["fleet_frontier", "fleet_burst", "fleet_trace"] {
+            assert!(find(id).is_some(), "missing scenario {id}");
+            assert_eq!(find(id).unwrap().group, "fleet");
+        }
+        assert_eq!(registry().len(), 21);
     }
 
     #[test]
@@ -277,6 +315,9 @@ mod tests {
         }
         assert!(text.contains("serve"));
         assert!(text.contains("--fidelity"));
+        assert!(text.contains("dwdp-repro fleet"));
+        assert!(text.contains("--json"));
+        assert!(text.contains("  fleet:\n"));
     }
 
     #[test]

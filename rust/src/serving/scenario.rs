@@ -29,7 +29,10 @@ use crate::config::{
     apply_json_overrides, HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig,
 };
 use crate::coordinator::RoutePolicy;
+use crate::fleet::ClusterPolicy;
+use crate::metrics::Slo;
 use crate::util::Json;
+use crate::workload::{ArrivalProcess, OslDist};
 
 /// What kind of deployment a scenario describes.
 #[derive(Debug, Clone)]
@@ -45,6 +48,22 @@ pub enum ScenarioKind {
         n_requests: usize,
         arrival_rate: f64,
         route_policy: RoutePolicy,
+    },
+    /// Fleet serving: `n_groups` independent serving groups behind a
+    /// [`ClusterPolicy`] router, absorbing an open-loop
+    /// [`ArrivalProcess`] and judged against an [`Slo`] (the
+    /// `rust/src/fleet` subsystem).
+    Fleet {
+        n_groups: usize,
+        /// Cap on generated requests (and trace length under replay).
+        n_requests: usize,
+        arrival: ArrivalProcess,
+        osl_dist: OslDist,
+        policy: ClusterPolicy,
+        slo: Slo,
+        /// Stop generating arrivals at this horizon (seconds; 0 = cap by
+        /// `n_requests` only).
+        horizon: f64,
     },
 }
 
@@ -69,6 +88,7 @@ impl ScenarioSpec {
             ScenarioKind::Disagg { n_ctx_groups, n_gen_gpus, .. } => {
                 n_ctx_groups * self.serving.group_size + n_gen_gpus
             }
+            ScenarioKind::Fleet { n_groups, .. } => n_groups * self.serving.group_size,
         }
     }
 }
@@ -99,17 +119,32 @@ pub struct Scenario {
     seed: Option<u64>,
     // Workload / fleet.
     requests: usize,
-    is_disagg: bool,
+    target: BuildTarget,
     ctx_groups: usize,
     gen_gpus: usize,
     rate: f64,
     route: RoutePolicy,
+    // Fleet-only knobs.
+    n_groups: usize,
+    arrival: Option<ArrivalProcess>,
+    osl_window: Option<(usize, usize)>,
+    cluster_policy: ClusterPolicy,
+    slo: Slo,
+    horizon: f64,
     capture_trace: bool,
     overrides: Option<Json>,
 }
 
+/// Which [`ScenarioKind`] the builder freezes into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BuildTarget {
+    Context,
+    Disagg,
+    Fleet,
+}
+
 impl Scenario {
-    fn base(is_disagg: bool) -> Scenario {
+    fn base(target: BuildTarget) -> Scenario {
         Scenario {
             label: None,
             hw: HardwareConfig::gb200(),
@@ -129,12 +164,18 @@ impl Scenario {
             prefetch_fraction: None,
             routing_skew: None,
             seed: None,
-            requests: if is_disagg { 64 } else { 2 },
-            is_disagg,
+            requests: if target == BuildTarget::Context { 2 } else { 64 },
+            target,
             ctx_groups: 2,
             gen_gpus: 16,
             rate: 3.0,
             route: RoutePolicy::LeastLoaded,
+            n_groups: 4,
+            arrival: None,
+            osl_window: None,
+            cluster_policy: ClusterPolicy::LeastOutstandingTokens,
+            slo: Slo::lenient(),
+            horizon: 0.0,
             capture_trace: false,
             overrides: None,
         }
@@ -143,13 +184,21 @@ impl Scenario {
     /// A single context group processing an offline batch (the paper's
     /// context-phase setup: Tables 1/3/4, Figs. 1/4).
     pub fn context() -> Scenario {
-        Scenario::base(false)
+        Scenario::base(BuildTarget::Context)
     }
 
     /// A disaggregated deployment with Poisson arrivals (the paper's §5.3
     /// end-to-end setup: Fig. 5, Tables 5/6).
     pub fn disagg() -> Scenario {
-        Scenario::base(true)
+        Scenario::base(BuildTarget::Disagg)
+    }
+
+    /// A fleet of independent serving groups behind a cluster router,
+    /// absorbing open-loop traffic (the `fleet` subsystem).  Defaults:
+    /// 4 groups, least-outstanding-tokens routing, Poisson arrivals at
+    /// [`Scenario::rate`], lenient SLO.
+    pub fn fleet() -> Scenario {
+        Scenario::base(BuildTarget::Fleet)
     }
 
     /// Human-readable label carried into the [`super::RunReport`].
@@ -293,6 +342,46 @@ impl Scenario {
         self
     }
 
+    /// Number of serving groups in the fleet (fleet scenarios).
+    pub fn groups(mut self, n: usize) -> Self {
+        self.n_groups = n;
+        self
+    }
+
+    /// Open-loop arrival process (fleet scenarios).  Overrides the default
+    /// Poisson process at [`Scenario::rate`]; `Replay` traces also carry
+    /// the per-request ISL/OSL.
+    pub fn arrival(mut self, process: ArrivalProcess) -> Self {
+        self.arrival = Some(process);
+        self
+    }
+
+    /// Per-request OSL sampled uniformly in `[lo, hi]` (fleet scenarios);
+    /// default is the fixed serving-config OSL.
+    pub fn osl_window(mut self, lo: usize, hi: usize) -> Self {
+        self.osl_window = Some((lo, hi));
+        self
+    }
+
+    /// Cluster routing/admission policy (fleet scenarios).
+    pub fn cluster_policy(mut self, policy: ClusterPolicy) -> Self {
+        self.cluster_policy = policy;
+        self
+    }
+
+    /// Latency SLO that goodput is judged against (fleet scenarios).
+    pub fn slo(mut self, max_ttft: f64, max_tpot: f64) -> Self {
+        self.slo = Slo { max_ttft, max_tpot };
+        self
+    }
+
+    /// Stop generating arrivals at this horizon in seconds (fleet
+    /// scenarios); 0 means cap by [`Scenario::requests`] only.
+    pub fn horizon(mut self, seconds: f64) -> Self {
+        self.horizon = seconds;
+        self
+    }
+
     /// Collect a Chrome trace during the run.  Supported by the DES
     /// backend for context scenarios; the DES backend *rejects* a
     /// disaggregated scenario with tracing on (one simulation runs per
@@ -364,25 +453,61 @@ impl Scenario {
         if self.requests == 0 {
             return Err("requests must be >= 1".into());
         }
-        let kind = if self.is_disagg {
-            if self.ctx_groups == 0 {
-                return Err("ctx_groups must be >= 1".into());
+        let kind = match self.target {
+            BuildTarget::Disagg => {
+                if self.ctx_groups == 0 {
+                    return Err("ctx_groups must be >= 1".into());
+                }
+                if self.gen_gpus == 0 {
+                    return Err("gen_gpus must be >= 1".into());
+                }
+                if !self.rate.is_finite() || self.rate < 0.0 {
+                    return Err(format!(
+                        "arrival rate must be finite and >= 0, got {}",
+                        self.rate
+                    ));
+                }
+                ScenarioKind::Disagg {
+                    n_ctx_groups: self.ctx_groups,
+                    n_gen_gpus: self.gen_gpus,
+                    n_requests: self.requests,
+                    arrival_rate: self.rate,
+                    route_policy: self.route,
+                }
             }
-            if self.gen_gpus == 0 {
-                return Err("gen_gpus must be >= 1".into());
+            BuildTarget::Context => ScenarioKind::Context { requests_per_rank: self.requests },
+            BuildTarget::Fleet => {
+                if self.n_groups == 0 {
+                    return Err("fleet groups must be >= 1".into());
+                }
+                let arrival = self
+                    .arrival
+                    .clone()
+                    .unwrap_or(ArrivalProcess::Poisson { rate: self.rate });
+                arrival.validate()?;
+                let osl_dist = match self.osl_window {
+                    Some((lo, hi)) => OslDist::Uniform { lo, hi },
+                    None => OslDist::Fixed { osl: serving.osl },
+                };
+                osl_dist.validate()?;
+                self.cluster_policy.validate()?;
+                self.slo.validate()?;
+                if !self.horizon.is_finite() || self.horizon < 0.0 {
+                    return Err(format!(
+                        "horizon must be finite and >= 0, got {}",
+                        self.horizon
+                    ));
+                }
+                ScenarioKind::Fleet {
+                    n_groups: self.n_groups,
+                    n_requests: self.requests,
+                    arrival,
+                    osl_dist,
+                    policy: self.cluster_policy,
+                    slo: self.slo,
+                    horizon: self.horizon,
+                }
             }
-            if !self.rate.is_finite() || self.rate < 0.0 {
-                return Err(format!("arrival rate must be finite and >= 0, got {}", self.rate));
-            }
-            ScenarioKind::Disagg {
-                n_ctx_groups: self.ctx_groups,
-                n_gen_gpus: self.gen_gpus,
-                n_requests: self.requests,
-                arrival_rate: self.rate,
-                route_policy: self.route,
-            }
-        } else {
-            ScenarioKind::Context { requests_per_rank: self.requests }
         };
         let label = self.label.unwrap_or_else(|| match &kind {
             ScenarioKind::Context { requests_per_rank } => format!(
@@ -402,6 +527,17 @@ impl Scenario {
                     n_gen_gpus,
                     n_requests,
                     arrival_rate
+                )
+            }
+            ScenarioKind::Fleet { n_groups, arrival, policy, .. } => {
+                format!(
+                    "fleet {}{}x{}, {} arrivals @ {:.1}/s, {} routing",
+                    serving.mode.name(),
+                    serving.group_size,
+                    n_groups,
+                    arrival.name(),
+                    arrival.mean_rate(),
+                    policy.name()
                 )
             }
         });
@@ -467,5 +603,54 @@ mod tests {
             Scenario::disagg().group(4).ctx_groups(3).gen_gpus(16).build().unwrap();
         assert_eq!(spec.n_gpus(), 3 * 4 + 16);
         assert!(spec.label.contains("disagg"));
+    }
+
+    #[test]
+    fn fleet_builder_freezes_cluster_knobs() {
+        let spec = Scenario::fleet()
+            .group(4)
+            .groups(6)
+            .rate(12.0)
+            .requests(40)
+            .osl_window(64, 256)
+            .cluster_policy(ClusterPolicy::SloAdmission { max_wait: 0.5 })
+            .slo(1.0, 0.04)
+            .horizon(30.0)
+            .build()
+            .unwrap();
+        assert_eq!(spec.n_gpus(), 6 * 4);
+        assert!(spec.label.contains("fleet"));
+        assert!(spec.label.contains("slo-admission"));
+        let ScenarioKind::Fleet { n_groups, n_requests, arrival, osl_dist, policy, slo, horizon } =
+            &spec.kind
+        else {
+            panic!("not a fleet kind");
+        };
+        assert_eq!(*n_groups, 6);
+        assert_eq!(*n_requests, 40);
+        assert_eq!(arrival, &ArrivalProcess::Poisson { rate: 12.0 });
+        assert_eq!(osl_dist, &OslDist::Uniform { lo: 64, hi: 256 });
+        assert_eq!(policy, &ClusterPolicy::SloAdmission { max_wait: 0.5 });
+        assert_eq!(slo, &Slo { max_ttft: 1.0, max_tpot: 0.04 });
+        assert_eq!(*horizon, 30.0);
+    }
+
+    #[test]
+    fn fleet_builder_rejects_bad_cluster_configs() {
+        assert!(Scenario::fleet().groups(0).build().is_err());
+        assert!(Scenario::fleet().rate(0.0).build().is_err());
+        assert!(Scenario::fleet()
+            .arrival(ArrivalProcess::GammaBurst { rate: 5.0, cv2: 0.2 })
+            .build()
+            .is_err());
+        assert!(Scenario::fleet().osl_window(9, 3).build().is_err());
+        assert!(Scenario::fleet()
+            .cluster_policy(ClusterPolicy::SloAdmission { max_wait: -1.0 })
+            .build()
+            .is_err());
+        assert!(Scenario::fleet().slo(0.0, 0.05).build().is_err());
+        assert!(Scenario::fleet().horizon(f64::NAN).build().is_err());
+        // A plain default fleet builds fine.
+        assert!(Scenario::fleet().build().is_ok());
     }
 }

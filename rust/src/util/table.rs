@@ -83,6 +83,32 @@ impl Table {
         out
     }
 
+    /// Serialize as JSON (`--json` export: bench-trajectory capture and
+    /// plotting scripts).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::json::obj;
+        use crate::util::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|c| Json::Str(c.clone())).collect()))
+            .collect();
+        obj(vec![
+            (
+                "title",
+                match &self.title {
+                    Some(t) => Json::Str(t.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "header",
+                Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
     /// Render as CSV (for plotting scripts).
     pub fn render_csv(&self) -> String {
         let esc = |s: &str| {
@@ -165,6 +191,20 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["x,y".into(), "plain".into()]);
         assert_eq!(t.render_csv(), "a,b\n\"x,y\",plain\n");
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let mut t = Table::new(&["a", "b"]).with_title("T");
+        t.row(vec!["1".into(), "x\"y".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").as_str(), Some("T"));
+        assert_eq!(j.get("header").at(1).as_str(), Some("b"));
+        assert_eq!(j.get("rows").at(0).at(1).as_str(), Some("x\"y"));
+        let parsed = crate::util::Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed, j);
+        // Untitled tables serialize a null title.
+        assert_eq!(Table::new(&["a"]).to_json().get("title"), &crate::util::Json::Null);
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! Open-loop arrival processes and trace-driven workloads for the fleet
+//! layer.
+//!
+//! The per-group stack consumes closed batches ([`super::WorkloadGen`]'s
+//! Poisson stream or an offline batch); a *cluster* absorbing live traffic
+//! needs open-loop load whose burstiness is a first-class knob.  This
+//! module provides:
+//!
+//! * [`ArrivalProcess`] — Poisson (memoryless), Gamma-renewal bursts
+//!   (same mean rate, tunable squared coefficient of variation), a
+//!   two-state Markov-modulated Poisson process (calm/storm regimes), and
+//!   deterministic replay of a recorded [`WorkloadTrace`].
+//! * [`OslDist`] — per-request output-length sampling, pairing with
+//!   [`super::IslDist`] for the prompt side.
+//! * [`OpenLoopGen`] — an arrival process bound to ISL/OSL distributions,
+//!   yielding a reproducible [`Request`] stream.
+//! * [`WorkloadTrace`] — JSON read/write (via [`crate::util::Json`]) of a
+//!   request stream, byte-identical across a write→read round trip so
+//!   traces can be exchanged and replayed exactly.
+
+use crate::util::json::obj;
+use crate::util::{Json, Rng};
+use crate::workload::{IslDist, Request};
+
+/// Output-length sampling scheme.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OslDist {
+    /// Every request generates the same number of tokens.
+    Fixed { osl: usize },
+    /// Uniform in `[lo, hi]` inclusive.
+    Uniform { lo: usize, hi: usize },
+}
+
+impl OslDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            OslDist::Fixed { osl } => osl,
+            OslDist::Uniform { lo, hi } => rng.range_u64(lo as u64, hi as u64) as usize,
+        }
+    }
+
+    /// Distribution mean (for load accounting).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            OslDist::Fixed { osl } => osl as f64,
+            OslDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+        }
+    }
+
+    /// Validate the parameters (finite, ordered, non-zero).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            OslDist::Fixed { osl } if osl == 0 => Err("osl must be >= 1".into()),
+            OslDist::Uniform { lo, hi } if lo == 0 || lo > hi => {
+                Err(format!("osl window [{lo}, {hi}] must satisfy 1 <= lo <= hi"))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Inter-arrival process for open-loop load generation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrivals (CV² = 1): the classic open-loop
+    /// benchmark assumption.
+    Poisson { rate: f64 },
+    /// Gamma-renewal inter-arrivals with squared coefficient of variation
+    /// `cv2` at mean rate `rate`.  `cv2 = 1` degenerates to Poisson;
+    /// larger values cluster arrivals into bursts separated by lulls —
+    /// the dynamic-workload regime where parallelization comparisons flip.
+    GammaBurst { rate: f64, cv2: f64 },
+    /// Two-state Markov-modulated Poisson process: exponential dwell times
+    /// (mean `mean_dwell` seconds) alternate between a calm `rate_low`
+    /// regime and a storm `rate_high` regime.
+    MarkovModulated { rate_low: f64, rate_high: f64, mean_dwell: f64 },
+    /// Deterministic replay of a recorded trace: arrivals *and* per-request
+    /// ISL/OSL come from the trace verbatim.
+    Replay { trace: WorkloadTrace },
+}
+
+impl ArrivalProcess {
+    /// Short name for labels and tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::GammaBurst { .. } => "burst",
+            ArrivalProcess::MarkovModulated { .. } => "mmpp",
+            ArrivalProcess::Replay { .. } => "trace",
+        }
+    }
+
+    /// Long-run mean arrival rate, req/s.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::GammaBurst { rate, .. } => *rate,
+            // Equal expected dwell in both states.
+            ArrivalProcess::MarkovModulated { rate_low, rate_high, .. } => {
+                (rate_low + rate_high) / 2.0
+            }
+            ArrivalProcess::Replay { trace } => {
+                let span = trace.requests.last().map(|r| r.arrival).unwrap_or(0.0);
+                if span > 0.0 {
+                    trace.requests.len() as f64 / span
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Validate the parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        let pos = |name: &str, v: f64| -> Result<(), String> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{name} must be finite and > 0, got {v}"))
+            }
+        };
+        match self {
+            ArrivalProcess::Poisson { rate } => pos("arrival rate", *rate),
+            ArrivalProcess::GammaBurst { rate, cv2 } => {
+                pos("arrival rate", *rate)?;
+                if !cv2.is_finite() || *cv2 < 1.0 {
+                    return Err(format!("burst cv2 must be >= 1, got {cv2}"));
+                }
+                Ok(())
+            }
+            ArrivalProcess::MarkovModulated { rate_low, rate_high, mean_dwell } => {
+                pos("rate_low", *rate_low)?;
+                pos("rate_high", *rate_high)?;
+                pos("mean_dwell", *mean_dwell)
+            }
+            ArrivalProcess::Replay { trace } => {
+                if trace.requests.is_empty() {
+                    return Err("replay trace is empty".into());
+                }
+                for w in trace.requests.windows(2) {
+                    if w[1].arrival < w[0].arrival {
+                        return Err("replay trace arrivals are not sorted".into());
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Unit-scale Gamma(shape) sample — Marsaglia-Tsang for shape >= 1, with
+/// the standard `U^(1/k)` boost for shape < 1.
+fn gamma_unit(rng: &mut Rng, shape: f64) -> f64 {
+    if shape < 1.0 {
+        let boost = rng.f64().powf(1.0 / shape);
+        return gamma_unit(rng, shape + 1.0) * boost;
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (3.0 * d.sqrt());
+    loop {
+        let x = rng.gauss();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.f64();
+        if u < 1.0 - 0.0331 * x.powi(4) {
+            return d * v;
+        }
+        if u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Open-loop request stream: an [`ArrivalProcess`] paired with per-request
+/// ISL/OSL distributions.  Deterministic for a given seed.
+#[derive(Debug, Clone)]
+pub struct OpenLoopGen {
+    pub process: ArrivalProcess,
+    pub isl_dist: IslDist,
+    pub osl_dist: OslDist,
+    rng: Rng,
+    clock: f64,
+    next_id: u64,
+    /// MMPP regime state: currently in the high-rate storm?
+    state_high: bool,
+    /// MMPP: absolute time of the next regime switch.
+    switch_at: f64,
+    /// Replay cursor.
+    replay_pos: usize,
+}
+
+impl OpenLoopGen {
+    pub fn new(process: ArrivalProcess, isl_dist: IslDist, osl_dist: OslDist, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xF1EE7);
+        let switch_at = match &process {
+            ArrivalProcess::MarkovModulated { mean_dwell, .. } => {
+                rng.exponential(1.0 / mean_dwell)
+            }
+            _ => f64::INFINITY,
+        };
+        OpenLoopGen {
+            process,
+            isl_dist,
+            osl_dist,
+            rng,
+            clock: 0.0,
+            next_id: 0,
+            state_high: false,
+            switch_at,
+            replay_pos: 0,
+        }
+    }
+
+    /// Next arrival instant for the generative processes.
+    fn advance_clock(&mut self) {
+        match &self.process {
+            ArrivalProcess::Poisson { rate } => {
+                self.clock += self.rng.exponential(*rate);
+            }
+            ArrivalProcess::GammaBurst { rate, cv2 } => {
+                // Gamma(shape = 1/cv2, scale = cv2/rate): mean 1/rate,
+                // CV^2 = cv2.
+                let shape = 1.0 / cv2;
+                let scale = cv2 / rate;
+                self.clock += gamma_unit(&mut self.rng, shape) * scale;
+            }
+            ArrivalProcess::MarkovModulated { rate_low, rate_high, mean_dwell } => {
+                let (rl, rh, dwell) = (*rate_low, *rate_high, *mean_dwell);
+                let mut t = self.clock;
+                loop {
+                    let rate = if self.state_high { rh } else { rl };
+                    let gap = self.rng.exponential(rate);
+                    if t + gap <= self.switch_at {
+                        t += gap;
+                        break;
+                    }
+                    // Regime flips before the candidate arrival: discard it
+                    // (memorylessness) and continue in the new regime.
+                    t = self.switch_at;
+                    self.state_high = !self.state_high;
+                    self.switch_at = t + self.rng.exponential(1.0 / dwell);
+                }
+                self.clock = t;
+            }
+            ArrivalProcess::Replay { .. } => unreachable!("replay does not advance a clock"),
+        }
+    }
+
+    /// Next request, or `None` when a replayed trace is exhausted
+    /// (generative processes never run dry).
+    pub fn next_request(&mut self) -> Option<Request> {
+        if let ArrivalProcess::Replay { trace } = &self.process {
+            let r = trace.requests.get(self.replay_pos)?.clone();
+            self.replay_pos += 1;
+            return Some(r);
+        }
+        self.advance_clock();
+        let r = Request {
+            id: self.next_id,
+            arrival: self.clock,
+            isl: self.isl_dist.sample(&mut self.rng),
+            osl: self.osl_dist.sample(&mut self.rng),
+        };
+        self.next_id += 1;
+        Some(r)
+    }
+
+    /// Up to `n` requests (fewer only when a replay trace runs out).
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.next_request() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Requests arriving strictly before `horizon` seconds, capped at
+    /// `cap` (a runaway guard for storm-heavy processes).
+    pub fn until(&mut self, horizon: f64, cap: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        while out.len() < cap {
+            let Some(r) = self.next_request() else { break };
+            if r.arrival >= horizon {
+                break;
+            }
+            out.push(r);
+        }
+        out
+    }
+}
+
+/// A recorded request stream: the JSON-interchangeable unit of trace-driven
+/// workloads.
+///
+/// Serialization is canonical — object keys are sorted and numbers use
+/// Rust's shortest round-trip float formatting — so `parse(dump(t))` is
+/// byte-identical to `dump(t)` (property-tested in
+/// `rust/tests/properties.rs`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkloadTrace {
+    pub requests: Vec<Request>,
+}
+
+impl WorkloadTrace {
+    pub fn from_requests(requests: Vec<Request>) -> Self {
+        WorkloadTrace { requests }
+    }
+
+    /// Record `n` requests from a generator into a replayable trace.
+    pub fn record(gen: &mut OpenLoopGen, n: usize) -> Self {
+        WorkloadTrace { requests: gen.take(n) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let requests: Vec<Json> = self
+            .requests
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("arrival", Json::Num(r.arrival)),
+                    ("id", Json::Num(r.id as f64)),
+                    ("isl", Json::Num(r.isl as f64)),
+                    ("osl", Json::Num(r.osl as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("requests", Json::Arr(requests)),
+            ("version", Json::Num(1.0)),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<WorkloadTrace, String> {
+        if json.get("version").as_f64() != Some(1.0) {
+            return Err("unsupported or missing trace version (want 1)".into());
+        }
+        let rows = json
+            .get("requests")
+            .as_arr()
+            .ok_or_else(|| "trace has no \"requests\" array".to_string())?;
+        let mut requests = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let field = |name: &str| -> Result<f64, String> {
+                row.get(name)
+                    .as_f64()
+                    .ok_or_else(|| format!("request {i}: missing numeric \"{name}\""))
+            };
+            // Integer fields must be genuine naturals — `as usize` would
+            // silently saturate negatives to 0 and truncate fractions,
+            // turning a corrupted trace into a plausible-looking workload.
+            let nat = |name: &str, min: u64| -> Result<u64, String> {
+                let v = field(name)?;
+                if !v.is_finite() || v.fract() != 0.0 || v < min as f64 || v > 2f64.powi(53) {
+                    return Err(format!("request {i}: {name} must be an integer >= {min}, got {v}"));
+                }
+                Ok(v as u64)
+            };
+            let arrival = field("arrival")?;
+            if !arrival.is_finite() || arrival < 0.0 {
+                return Err(format!("request {i}: bad arrival {arrival}"));
+            }
+            requests.push(Request {
+                id: nat("id", 0)?,
+                arrival,
+                isl: nat("isl", 1)? as usize,
+                osl: nat("osl", 1)? as usize,
+            });
+        }
+        Ok(WorkloadTrace { requests })
+    }
+
+    /// Canonical serialization (see type docs).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    pub fn parse(text: &str) -> Result<WorkloadTrace, String> {
+        let json = Json::parse(text).map_err(|e| format!("trace: {e}"))?;
+        WorkloadTrace::from_json(&json)
+    }
+
+    pub fn write_file(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.dump()).map_err(|e| format!("write {path}: {e}"))
+    }
+
+    pub fn read_file(path: &str) -> Result<WorkloadTrace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        WorkloadTrace::parse(&text)
+    }
+
+    /// Total prompt tokens in the trace.
+    pub fn total_isl(&self) -> usize {
+        self.requests.iter().map(|r| r.isl).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn fixed_dists() -> (IslDist, OslDist) {
+        (IslDist::Fixed { isl: 1000 }, OslDist::Fixed { osl: 64 })
+    }
+
+    #[test]
+    fn poisson_matches_legacy_rate() {
+        let (isl, osl) = fixed_dists();
+        let mut g = OpenLoopGen::new(ArrivalProcess::Poisson { rate: 40.0 }, isl, osl, 1);
+        let reqs = g.take(4000);
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 40.0).abs() < 3.0, "rate {rate}");
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn gamma_burst_keeps_mean_rate_but_raises_variance() {
+        let (isl, osl) = fixed_dists();
+        let gaps = |process: ArrivalProcess| -> Vec<f64> {
+            let mut g = OpenLoopGen::new(process, isl, osl, 2);
+            let reqs = g.take(6000);
+            reqs.windows(2).map(|w| w[1].arrival - w[0].arrival).collect()
+        };
+        let poisson = gaps(ArrivalProcess::Poisson { rate: 20.0 });
+        let burst = gaps(ArrivalProcess::GammaBurst { rate: 20.0, cv2: 8.0 });
+        let mean_p = stats::mean(&poisson);
+        let mean_b = stats::mean(&burst);
+        assert!((mean_b - mean_p).abs() / mean_p < 0.15, "{mean_b} vs {mean_p}");
+        let cv2_b = stats::cv(&burst).powi(2);
+        assert!(cv2_b > 4.0, "burst cv2 {cv2_b} should be >> 1");
+    }
+
+    #[test]
+    fn mmpp_rate_between_regimes() {
+        let (isl, osl) = fixed_dists();
+        let p = ArrivalProcess::MarkovModulated {
+            rate_low: 2.0,
+            rate_high: 50.0,
+            mean_dwell: 0.5,
+        };
+        assert!((p.mean_rate() - 26.0).abs() < 1e-12);
+        let mut g = OpenLoopGen::new(p, isl, osl, 3);
+        let reqs = g.take(8000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
+        assert!(rate > 2.0 && rate < 50.0, "mmpp rate {rate}");
+    }
+
+    #[test]
+    fn replay_returns_trace_verbatim_then_dry() {
+        let trace = WorkloadTrace::from_requests(vec![
+            Request { id: 7, arrival: 0.5, isl: 123, osl: 9 },
+            Request { id: 8, arrival: 1.25, isl: 456, osl: 11 },
+        ]);
+        let (isl, osl) = fixed_dists();
+        let mut g =
+            OpenLoopGen::new(ArrivalProcess::Replay { trace: trace.clone() }, isl, osl, 4);
+        let out = g.take(10);
+        assert_eq!(out, trace.requests);
+        assert!(g.next_request().is_none());
+    }
+
+    #[test]
+    fn until_respects_horizon_and_cap() {
+        let (isl, osl) = fixed_dists();
+        let mut g = OpenLoopGen::new(ArrivalProcess::Poisson { rate: 100.0 }, isl, osl, 5);
+        let reqs = g.until(1.0, 10_000);
+        assert!(!reqs.is_empty());
+        assert!(reqs.iter().all(|r| r.arrival < 1.0));
+        let mut g2 = OpenLoopGen::new(ArrivalProcess::Poisson { rate: 100.0 }, isl, osl, 5);
+        assert_eq!(g2.until(1.0, 3).len(), 3);
+    }
+
+    #[test]
+    fn trace_json_round_trips_exactly() {
+        let (isl, _) = fixed_dists();
+        let mut g = OpenLoopGen::new(
+            ArrivalProcess::GammaBurst { rate: 10.0, cv2: 4.0 },
+            isl,
+            OslDist::Uniform { lo: 8, hi: 256 },
+            6,
+        );
+        let trace = WorkloadTrace::record(&mut g, 50);
+        let text = trace.dump();
+        let parsed = WorkloadTrace::parse(&text).unwrap();
+        assert_eq!(parsed, trace);
+        assert_eq!(parsed.dump(), text, "round trip must be byte-identical");
+    }
+
+    #[test]
+    fn trace_rejects_malformed_json() {
+        assert!(WorkloadTrace::parse("{}").is_err());
+        assert!(WorkloadTrace::parse(r#"{"version":1}"#).is_err());
+        assert!(WorkloadTrace::parse(r#"{"version":2,"requests":[]}"#).is_err());
+        let bad_rows = [
+            r#"{"arrival":-1,"id":0,"isl":1,"osl":1}"#, // negative arrival
+            r#"{"arrival":0,"id":0,"isl":0,"osl":1}"#,  // zero-token prompt
+            r#"{"arrival":0,"id":0,"isl":-100,"osl":1}"#, // negative isl
+            r#"{"arrival":0,"id":0,"isl":0.5,"osl":1}"#, // fractional isl
+            r#"{"arrival":0,"id":0,"isl":1,"osl":0}"#,  // zero-token output
+            r#"{"arrival":0,"id":-1,"isl":1,"osl":1}"#, // negative id
+            r#"{"arrival":0,"id":0,"isl":1}"#,          // missing field
+        ];
+        for row in bad_rows {
+            let text = format!(r#"{{"version":1,"requests":[{row}]}}"#);
+            assert!(WorkloadTrace::parse(&text).is_err(), "accepted: {row}");
+        }
+        assert!(
+            WorkloadTrace::parse(r#"{"version":1,"requests":[{"arrival":0,"id":0,"isl":1,"osl":1}]}"#)
+                .is_ok()
+        );
+    }
+
+    #[test]
+    fn validate_flags_bad_parameters() {
+        assert!(ArrivalProcess::Poisson { rate: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::GammaBurst { rate: 1.0, cv2: 0.5 }.validate().is_err());
+        assert!(ArrivalProcess::MarkovModulated {
+            rate_low: 1.0,
+            rate_high: 2.0,
+            mean_dwell: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Replay { trace: WorkloadTrace::default() }
+            .validate()
+            .is_err());
+        let unsorted = WorkloadTrace::from_requests(vec![
+            Request { id: 0, arrival: 2.0, isl: 1, osl: 1 },
+            Request { id: 1, arrival: 1.0, isl: 1, osl: 1 },
+        ]);
+        assert!(ArrivalProcess::Replay { trace: unsorted }.validate().is_err());
+        assert!(OslDist::Uniform { lo: 0, hi: 4 }.validate().is_err());
+        assert!(OslDist::Fixed { osl: 0 }.validate().is_err());
+        assert!(OslDist::Uniform { lo: 2, hi: 4 }.validate().is_ok());
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let (isl, osl) = fixed_dists();
+        let p = ArrivalProcess::GammaBurst { rate: 5.0, cv2: 6.0 };
+        let a = OpenLoopGen::new(p.clone(), isl, osl, 42).take(100);
+        let b = OpenLoopGen::new(p, isl, osl, 42).take(100);
+        assert_eq!(a, b);
+    }
+}

@@ -7,11 +7,15 @@
 //!   normal spread (`isl_std`, Table 3c).
 //! * SemiAnalysis-style (end-to-end): ISL in [0.8·8K, 8K], OSL 1K.
 
+pub mod arrival;
+
 use crate::config::ServingConfig;
 use crate::util::Rng;
 
+pub use arrival::{ArrivalProcess, OpenLoopGen, OslDist, WorkloadTrace};
+
 /// One inference request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     /// Arrival time, seconds.

@@ -8,11 +8,12 @@
 use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::dwdp::{build_copy_plan, plan_bytes};
+use dwdp::fleet::{run_sweep, simulate_analytic, ClusterPolicy, SweepPoint};
 use dwdp::model::Category;
 use dwdp::placement::ExpertPlacement;
 use dwdp::serving::{Fidelity, Scenario, ServingStack};
 use dwdp::util::Rng;
-use dwdp::workload::Request;
+use dwdp::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, Request, WorkloadTrace};
 
 const CASES: u64 = 60;
 
@@ -217,6 +218,166 @@ fn prop_modes_have_disjoint_comm_categories() {
                     assert!(r.per_layer_breakdown.get(Category::Communication) > 0.0);
                 }
             }
+        }
+    }
+}
+
+/// Property (fleet): a recorded workload trace survives a write -> read
+/// round trip byte-identically, for every arrival process and ISL/OSL mix.
+#[test]
+fn prop_workload_trace_roundtrip_byte_identical() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let rate = 0.5 + rng.f64() * 50.0;
+        let process = match seed % 3 {
+            0 => ArrivalProcess::Poisson { rate },
+            1 => ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 15.0 },
+            _ => ArrivalProcess::MarkovModulated {
+                rate_low: rate * 0.1,
+                rate_high: rate,
+                mean_dwell: 0.1 + rng.f64() * 5.0,
+            },
+        };
+        let isl = IslDist::RatioWindow { isl: 512 + rng.below(8192) as usize, ratio: 0.5 };
+        let osl = OslDist::Uniform { lo: 8, hi: 128 };
+        let mut gen = OpenLoopGen::new(process, isl, osl, seed);
+        let trace = WorkloadTrace::record(&mut gen, 1 + rng.below(64) as usize);
+        let text = trace.dump();
+        let parsed = WorkloadTrace::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e}"));
+        assert_eq!(parsed, trace, "seed {seed}: trace changed across round trip");
+        assert_eq!(parsed.dump(), text, "seed {seed}: serialization not byte-identical");
+    }
+}
+
+fn tiny_fleet_scenario(n_groups: usize) -> Scenario {
+    Scenario::fleet()
+        .model(PaperModelConfig::tiny())
+        .group(4)
+        .groups(n_groups)
+        .isl(2048)
+        .mnt(16384)
+        .osl(16)
+        .seed(0)
+}
+
+/// Property (fleet): the cluster conserves requests and prompt tokens —
+/// admitted + shed == offered, exactly, for every policy and load level.
+#[test]
+fn prop_fleet_token_conservation() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(8000 + seed);
+        let n_groups = 1 + rng.below(5) as usize;
+        // Every third case is a storm that forces SLO shedding.
+        let rate = if seed % 3 == 0 { 10_000.0 } else { 0.5 + rng.f64() * 20.0 };
+        let policy = match seed % 3 {
+            0 => ClusterPolicy::SloAdmission { max_wait: 1e-3 + rng.f64() },
+            1 => ClusterPolicy::RoundRobin,
+            _ => ClusterPolicy::LeastOutstandingTokens,
+        };
+        let spec = tiny_fleet_scenario(n_groups)
+            .arrival(ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 8.0 })
+            .cluster_policy(policy)
+            .requests(8 + rng.below(40) as usize)
+            .seed(seed)
+            .build()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let out = simulate_analytic(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(out.offered, out.admitted + out.shed, "seed {seed}: request leak");
+        assert_eq!(
+            out.offered_tokens,
+            out.admitted_tokens + out.shed_tokens,
+            "seed {seed}: token leak"
+        );
+        assert_eq!(out.admitted, out.metrics.n(), "seed {seed}: lost records");
+        assert_eq!(
+            out.per_group_requests.iter().sum::<usize>(),
+            out.admitted,
+            "seed {seed}: group assignment leak"
+        );
+        assert_eq!(
+            out.per_group_tokens.iter().sum::<usize>(),
+            out.admitted_tokens,
+            "seed {seed}: group token leak"
+        );
+    }
+}
+
+/// Property (fleet): under backlog, the least-outstanding-tokens router
+/// never starves a group — every group receives work, and the token
+/// spread across groups is bounded by one request (the greedy-argmin
+/// bound).  Arrivals all land at t = 0 via trace replay, so the backlog
+/// is total by construction.
+#[test]
+fn prop_least_outstanding_router_never_starves() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(9000 + seed);
+        let n_groups = 2 + rng.below(5) as usize;
+        let n_requests = n_groups * (4 + rng.below(12) as usize);
+        let mut max_isl = 0usize;
+        let requests: Vec<Request> = (0..n_requests as u64)
+            .map(|id| {
+                let isl = 256 + rng.below(4096) as usize;
+                max_isl = max_isl.max(isl);
+                Request { id, arrival: 0.0, isl, osl: 1 + rng.below(16) as usize }
+            })
+            .collect();
+        let trace = WorkloadTrace::from_requests(requests);
+        let spec = tiny_fleet_scenario(n_groups)
+            .arrival(ArrivalProcess::Replay { trace })
+            .cluster_policy(ClusterPolicy::LeastOutstandingTokens)
+            .requests(n_requests)
+            .build()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let out = simulate_analytic(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(out.shed, 0, "seed {seed}: least-outstanding never sheds");
+        for (g, &n) in out.per_group_requests.iter().enumerate() {
+            assert!(n > 0, "seed {seed}: group {g} starved ({:?})", out.per_group_requests);
+        }
+        let max = *out.per_group_tokens.iter().max().unwrap();
+        let min = *out.per_group_tokens.iter().min().unwrap();
+        assert!(
+            max - min <= max_isl,
+            "seed {seed}: token spread {} > max request {max_isl} ({:?})",
+            max - min,
+            out.per_group_tokens
+        );
+    }
+}
+
+/// Property (fleet): the parallel sweep driver's output is a pure function
+/// of the points — bit-identical across thread counts (compared through
+/// the canonical JSON fingerprint, so every float is checked exactly).
+#[test]
+fn prop_fleet_sweep_thread_invariance() {
+    let mut points = Vec::new();
+    for (i, mode) in [ParallelMode::Dwdp, ParallelMode::Dep].into_iter().enumerate() {
+        for (j, rate) in [4.0, 16.0, 64.0].into_iter().enumerate() {
+            let spec = tiny_fleet_scenario(3)
+                .mode(mode)
+                .arrival(ArrivalProcess::GammaBurst { rate, cv2: 6.0 })
+                .requests(24)
+                .seed((i * 3 + j) as u64)
+                .build()
+                .unwrap();
+            points.push(SweepPoint::new(
+                &format!("{} @ {rate}", mode.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let serial = run_sweep(&points, 1);
+    for threads in [2, 5, 16] {
+        let parallel = run_sweep(&points, threads);
+        assert_eq!(parallel.len(), serial.len());
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(
+                a.to_json().dump(),
+                b.to_json().dump(),
+                "point {i} differs at {threads} threads"
+            );
         }
     }
 }
