@@ -1,0 +1,56 @@
+//! Online expert re-placement: frozen vs dynamic placement under skew.
+//!
+//! DWDP's weak placement constraint leaves *which* experts each rank
+//! stores a free variable.  This example turns the `routing_skew` knob
+//! from a diagnostic into a controlled variable: a 2-group DWDP fleet with
+//! redundant placement (96 of 256 experts per rank) serves the same
+//! workload with the placement frozen at startup and with the EPLB-style
+//! re-placement loop enabled (`replacement_interval`), which observes
+//! per-expert token loads each epoch, replicates the hot head, and pays
+//! the weight migration over NVLink at the epoch boundary.
+//!
+//! ```sh
+//! cargo run --release --example expert_replacement
+//! ```
+
+use dwdp::config::ParallelMode;
+use dwdp::experiments::fleet::replacement_scenario;
+use dwdp::fleet::simulate_analytic;
+use dwdp::serving::Scenario;
+
+/// The registry's `replacement_skew` scenario at 1.5x redundancy (96 of
+/// 256 experts per rank), pinned to 64 requests so the example's numbers
+/// do not depend on the quick-mode environment flag.
+fn scenario(skew: f64, interval: usize) -> Scenario {
+    replacement_scenario(ParallelMode::Dwdp, skew, 96, interval).requests(64)
+}
+
+fn main() {
+    println!("== DWDP4 x2, redundant placement: static vs dynamic re-placement ==");
+    println!(
+        "{:>6} {:>10} | {:>9} {:>9} | {:>11} {:>11} {:>6}",
+        "skew", "placement", "p99 TTFT", "TPS/GPU", "remote (GB)", "moved (GB)", "moves"
+    );
+    for &skew in &[0.0, 0.6, 1.0, 1.5] {
+        for (tag, interval) in [("static", 0usize), ("eplb/8", 8)] {
+            let spec = scenario(skew, interval).build().expect("fleet scenario");
+            let n_gpus = 2 * 4;
+            let out = simulate_analytic(&spec).expect("fleet run");
+            println!(
+                "{skew:>6.1} {tag:>10} | {:>7.0} ms {:>9.1} | {:>11.2} {:>11.2} {:>6}",
+                out.metrics.p99_ttft() * 1e3,
+                out.metrics.output_tps_per_gpu(n_gpus, out.span),
+                out.remote_fetch_bytes / 1e9,
+                out.migration_bytes / 1e9,
+                out.replacements,
+            );
+        }
+    }
+    println!();
+    println!("At skew 0 the re-placement knob is an exact no-op; as skew grows, the");
+    println!("loop replicates the hot head locally, remote prefetch volume falls, and");
+    println!("the tail TTFT / TPS gap over the frozen placement widens.");
+    println!();
+    println!("Next: `dwdp-repro experiment replacement_skew`, or");
+    println!("      `dwdp-repro fleet --skew 1.0 --replace 8 --local-experts 96`.");
+}

@@ -313,8 +313,15 @@ pub struct ServingConfig {
     pub prefetch_fraction: f64,
     /// Zipf exponent of expert routing popularity (0 = uniform).  Under
     /// DEP, skewed routing loads the ranks owning hot experts — the
-    /// weight-level imbalance of Fig. 1(a).
+    /// weight-level imbalance of Fig. 1(a); under DWDP it drives the
+    /// activation-aware on-demand prefetch volume.
     pub routing_skew: f64,
+    /// Online expert re-placement epoch length: the fleet simulator
+    /// re-places after this many prefilled requests per group, the context
+    /// DES after this many chunked-prefill iterations.  0 disables
+    /// re-placement (the placement stays frozen at startup).  Only
+    /// meaningful for DWDP with `routing_skew > 0`.
+    pub replacement_interval: usize,
     /// RNG seed for the whole experiment.
     pub seed: u64,
 }
@@ -335,6 +342,7 @@ impl ServingConfig {
             slice_bytes: 1 << 20,
             prefetch_fraction: 1.0,
             routing_skew: 0.0,
+            replacement_interval: 0,
             seed: 0,
         }
     }
@@ -432,6 +440,7 @@ pub fn apply_json_overrides(
             "slice_bytes" => serving.slice_bytes = get("bytes")? as usize,
             "prefetch_fraction" => serving.prefetch_fraction = get("0..1")?,
             "routing_skew" => serving.routing_skew = get("zipf exponent")?,
+            "replacement_interval" => serving.replacement_interval = get("count")? as usize,
             "seed" => serving.seed = get("u64")? as u64,
             other => return Err(format!("unknown config key {other:?}")),
         }

@@ -104,6 +104,17 @@ impl GroupLatencyModel {
     /// Requests are assigned round-robin to the group's ranks.  DEP runs
     /// rank-lockstep per iteration; DWDP ranks run independently.
     pub fn prefill_offsets(&self, isls: &[usize]) -> Vec<f64> {
+        self.prefill_offsets_scaled(isls, 1.0)
+    }
+
+    /// [`Self::prefill_offsets`] with the DWDP remote prefetch volume
+    /// scaled by `prefetch_scale` relative to the blind static-placement
+    /// baseline.  The fleet's online expert re-placement loop passes the
+    /// activation-aware [`crate::placement::remote_scale`] here: hot
+    /// experts that gained local replicas shrink the per-layer prefetch
+    /// time (and the naive-DWDP merge volume).  DEP ignores the scale —
+    /// its all-to-alls move activations, not weights.
+    pub fn prefill_offsets_scaled(&self, isls: &[usize], prefetch_scale: f64) -> Vec<f64> {
         let n = self.serving.group_size;
         let layers = self.model.n_moe_layers() as f64;
         // Chunk schedules per rank.
@@ -134,9 +145,10 @@ impl GroupLatencyModel {
                     let mut t = 0.0;
                     for (ri, w) in chunks {
                         let tc = self.t_layer(w);
-                        let mut per_layer = tc.max(t_pref * contention);
+                        let mut per_layer = tc.max(t_pref * prefetch_scale * contention);
                         if !self.serving.merge_elim {
                             let fetched = self.serving.remote_experts(&self.model)
+                                * prefetch_scale
                                 * self.model.expert_bytes();
                             per_layer += 2.0 * (fetched * 0.5) / self.hw.hbm_bw;
                         }
@@ -250,11 +262,25 @@ pub struct E2ePoint {
 /// [`DisaggSim`] run at either fidelity.
 pub trait PrefillOffsets {
     fn offsets(&self, isls: &[usize]) -> Vec<f64>;
+
+    /// Prefill with the DWDP remote prefetch volume scaled by `scale`
+    /// relative to the blind static-placement baseline (1.0 = baseline).
+    /// The fleet's online expert re-placement loop passes < 1.0 when hot
+    /// experts gained local replicas; implementations that cannot honor
+    /// the scale fall back to [`PrefillOffsets::offsets`].
+    fn offsets_scaled(&self, isls: &[usize], scale: f64) -> Vec<f64> {
+        let _ = scale;
+        self.offsets(isls)
+    }
 }
 
 impl PrefillOffsets for GroupLatencyModel {
     fn offsets(&self, isls: &[usize]) -> Vec<f64> {
         self.prefill_offsets(isls)
+    }
+
+    fn offsets_scaled(&self, isls: &[usize], scale: f64) -> Vec<f64> {
+        self.prefill_offsets_scaled(isls, scale)
     }
 }
 
@@ -510,6 +536,26 @@ mod tests {
         let a = no_tdm.prefill_offsets(&isls).iter().cloned().fold(0.0, f64::max);
         let b = with_tdm.prefill_offsets(&isls).iter().cloned().fold(0.0, f64::max);
         assert!(b <= a, "tdm {b} vs {a}");
+    }
+
+    #[test]
+    fn prefetch_scale_shrinks_dwdp_offsets_only() {
+        let (hw, m, mut s) = setup(ParallelMode::Dwdp);
+        s.prefetch_fraction = 1.0; // prefetch-bound regime
+        let lm = GroupLatencyModel::new(&hw, &m, &s);
+        let isls = vec![8192, 4096];
+        let base = lm.prefill_offsets(&isls);
+        let scaled = lm.prefill_offsets_scaled(&isls, 0.25);
+        for (b, sc) in base.iter().zip(&scaled) {
+            assert!(sc <= b, "{sc} > {b}");
+        }
+        assert!(scaled[0] < base[0], "scale must bite when prefetch-bound");
+        // Scale 1.0 is exactly the unscaled model.
+        assert_eq!(lm.prefill_offsets_scaled(&isls, 1.0), base);
+        // DEP ignores the scale entirely: all-to-alls move activations.
+        let (hw, m, sd) = setup(ParallelMode::Dep);
+        let dep = GroupLatencyModel::new(&hw, &m, &sd);
+        assert_eq!(dep.prefill_offsets_scaled(&isls, 0.25), dep.prefill_offsets(&isls));
     }
 
     #[test]

@@ -15,10 +15,11 @@
 
 use crate::config::{HardwareConfig, PaperModelConfig, ServingConfig};
 use crate::model::{dense_layer_ops, moe_layer_ops, ChunkWorkload};
-use crate::placement::ExpertPlacement;
+use crate::placement::{self, ExpertPlacement};
 use crate::roofline::op_latency;
 use crate::sim::{ComputeStep, PlanKey, Slice, Step};
 use crate::util::Rng;
+use crate::workload::RoutingSkew;
 
 /// Build the DMA copy plan for one layer's remote fetches.
 ///
@@ -84,6 +85,10 @@ pub struct ChunkSpec {
     pub workload: ChunkWorkload,
     /// For each MoE layer: the (src, expert) fetch list.
     pub fetches_per_layer: Vec<Vec<(usize, usize)>>,
+    /// Expert shards this rank must pull *before* the chunk starts — the
+    /// weight migration of an online re-placement epoch boundary (empty
+    /// for every chunk inside an epoch).
+    pub migration: Vec<(usize, usize)>,
 }
 
 impl ChunkSpec {
@@ -105,7 +110,42 @@ impl ChunkSpec {
                 }
             })
             .collect();
-        ChunkSpec { workload, fetches_per_layer }
+        ChunkSpec { workload, fetches_per_layer, migration: Vec::new() }
+    }
+
+    /// Sample fetch lists weighted by routed expert popularity: each MoE
+    /// layer draws a per-expert load sample from `skew` and fetches remote
+    /// expert `e` with its activation-aware need
+    /// [`placement::fetch_fractions`] — hot experts are (almost) always
+    /// pulled, the cold tail rarely.  This is what makes local replicas of
+    /// hot experts shrink the remote fetch volume: a replicated hot expert
+    /// leaves only low-need tail experts in the remote set.
+    pub fn sample_skewed(
+        workload: ChunkWorkload,
+        model: &PaperModelConfig,
+        serving: &ServingConfig,
+        expert_placement: &ExpertPlacement,
+        rank: usize,
+        skew: &RoutingSkew,
+        rng: &mut Rng,
+    ) -> Self {
+        let sample_tokens = workload.new_tokens.clamp(1, 128);
+        let fetches_per_layer = (0..model.n_moe_layers())
+            .map(|_| {
+                let loads: Vec<f64> = skew
+                    .sample_loads(sample_tokens, rng)
+                    .iter()
+                    .map(|&l| l as f64)
+                    .collect();
+                let need = placement::fetch_fractions(&loads, serving.prefetch_fraction);
+                expert_placement
+                    .remote_fetches(rank)
+                    .into_iter()
+                    .filter(|&(_, e)| need[e] >= 1.0 || rng.f64() < need[e])
+                    .collect()
+            })
+            .collect();
+        ChunkSpec { workload, fetches_per_layer, migration: Vec::new() }
     }
 }
 
@@ -142,6 +182,27 @@ pub fn compile_rank_program(
     for (ci, chunk) in chunks.iter().enumerate() {
         let w = &chunk.workload;
         let plan_id = |l: usize| -> PlanKey { (rank, (ci * n_moe + l) as u32) };
+
+        // Epoch-boundary weight migration (online re-placement): pull the
+        // newly-local expert shards through the same DMA machinery as a
+        // prefetch, but block on arrival before the chunk starts — the
+        // migrated experts must be resident before any layer can treat
+        // them as local.  Keys live far above the per-layer plan space.
+        if !chunk.migration.is_empty() {
+            let key: PlanKey = (rank, u32::MAX - ci as u32);
+            // A migrated replica becomes local for every MoE layer, so the
+            // pull moves all layers' shards of the expert — per-layer
+            // prefetch plans below move only one layer's shard.
+            let plan = build_copy_plan(
+                &chunk.migration,
+                merge_bytes_per_expert * n_moe as f64,
+                serving.slice_bytes,
+                serving.tdm,
+            );
+            plans.push((key, plan));
+            steps.push(Step::IssuePrefetch { key });
+            steps.push(Step::WaitPrefetch { key });
+        }
 
         // Register all plans for this chunk.
         for (l, fetches) in chunk.fetches_per_layer.iter().enumerate() {
@@ -389,6 +450,79 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn migration_pulls_are_issued_and_waited_before_the_chunk() {
+        let (hw, m, s, p) = setup();
+        let mut rng = Rng::new(3);
+        let w = ChunkWorkload::uniform(1024, 512, &m);
+        let c0 = ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng);
+        let mut c1 = ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng);
+        c1.migration = vec![(1, 0), (2, 5)];
+        let cp = compile_rank_program(&hw, &m, &s, 0, &[c0, c1]);
+        // One plan per MoE layer per chunk, plus the migration plan.
+        assert_eq!(cp.plans.len(), 2 * m.n_moe_layers() + 1);
+        let mig_key = (0usize, u32::MAX - 1);
+        let mig_plan = cp.plans.iter().find(|(k, _)| *k == mig_key).expect("migration plan");
+        // Two experts, all MoE layers' shards each.
+        let want = 2.0 * m.expert_bytes() * m.n_moe_layers() as f64;
+        assert!((plan_bytes(&mig_plan.1) - want).abs() < 1.0);
+        // The migration wait immediately follows its issue (the chunk
+        // cannot start until the shards are resident), and double
+        // buffering still holds: at most one plan in flight anywhere.
+        let mut unwaited = 0i32;
+        let mut saw_migration = false;
+        for (i, step) in cp.steps.iter().enumerate() {
+            match step {
+                Step::IssuePrefetch { key } => {
+                    unwaited += 1;
+                    assert!(unwaited <= 1, "more than one plan in flight at {i}");
+                    if *key == mig_key {
+                        saw_migration = true;
+                        assert!(
+                            matches!(cp.steps[i + 1], Step::WaitPrefetch { key } if key == mig_key),
+                            "migration must block before the chunk"
+                        );
+                    }
+                }
+                Step::WaitPrefetch { .. } => {
+                    unwaited -= 1;
+                    assert!(unwaited >= 0);
+                }
+                _ => {}
+            }
+        }
+        assert!(saw_migration);
+    }
+
+    #[test]
+    fn skewed_sampling_fetches_hot_experts_more_than_cold() {
+        let (hw, m, s, p) = setup();
+        let _ = hw;
+        let skew = crate::workload::RoutingSkew::new(m.n_experts, m.top_k, 2.0);
+        let mut rng = Rng::new(5);
+        let w = ChunkWorkload::uniform(256, 128, &m);
+        // Rank 1's remote set under the minimal placement includes the hot
+        // expert 0 and cold tail experts; over many chunks the hot expert
+        // must be fetched far more often.
+        let remote: Vec<usize> =
+            p.remote_fetches(1).iter().map(|&(_, e)| e).collect();
+        assert!(remote.contains(&0), "test needs expert 0 remote on rank 1");
+        let cold = *remote.iter().max().unwrap();
+        let mut hot_fetches = 0usize;
+        let mut cold_fetches = 0usize;
+        for _ in 0..40 {
+            let spec = ChunkSpec::sample_skewed(w, &m, &s, &p, 1, &skew, &mut rng);
+            for layer in &spec.fetches_per_layer {
+                hot_fetches += layer.iter().filter(|&&(_, e)| e == 0).count();
+                cold_fetches += layer.iter().filter(|&&(_, e)| e == cold).count();
+            }
+        }
+        assert!(
+            hot_fetches > 2 * cold_fetches.max(1),
+            "hot {hot_fetches} vs cold {cold_fetches}"
+        );
     }
 
     #[test]

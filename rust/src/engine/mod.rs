@@ -24,7 +24,7 @@ use crate::dep;
 use crate::dwdp::{self, ChunkSpec};
 use crate::metrics::Breakdown;
 use crate::model::ChunkWorkload;
-use crate::placement::ExpertPlacement;
+use crate::placement::{self, ExpertPlacement};
 use crate::sim::{SimResult, Simulation, Step};
 use crate::util::stats;
 use crate::util::Rng;
@@ -202,6 +202,54 @@ fn run_planned(
         ExpertPlacement::balanced(model.n_experts, n, serving.local_experts.max(1));
     let skew_model = RoutingSkew::new(model.n_experts, model.top_k, serving.routing_skew);
 
+    // Online re-placement epoch schedule (DWDP, skewed routing, nonzero
+    // `replacement_interval`): epoch k covers chunk iterations
+    // [k*interval, (k+1)*interval).  Epoch 0 runs on the static balanced
+    // placement; each later epoch runs on the target computed from a
+    // 512-token load sample standing in for the previous epoch's
+    // observation — the per-rank fetch draws below are *independent*
+    // samples of the same routing process, so this models an observer of
+    // the routing distribution rather than feeding back the exact
+    // per-chunk draws (the fleet layer's `DynamicPlacement` accumulates
+    // the loads it actually priced; doing that here would need the
+    // per-rank compile loop restructured epoch-by-epoch).  Every rank
+    // pulls its newly-local shards at the boundary chunk through a
+    // migration copy plan (see `dwdp::compile_rank_program`).  Computed
+    // once, shared by all ranks, and skipped entirely for legacy configs
+    // so their RNG stream layout is untouched.
+    let interval = serving.replacement_interval;
+    let replace_active =
+        serving.mode == ParallelMode::Dwdp && serving.routing_skew > 0.0 && interval > 0;
+    let mut epoch_placements: Vec<ExpertPlacement> = vec![placement];
+    let mut epoch_migrations: Vec<Vec<Vec<(usize, usize)>>> = Vec::new();
+    if replace_active {
+        let max_chunks = per_rank
+            .iter()
+            .map(|rs| rs.iter().map(|r| r.chunks.len()).sum::<usize>())
+            .max()
+            .unwrap_or(0);
+        let mut obs_rng = root.fork(0x0B5E);
+        for _ in 1..max_chunks.div_ceil(interval) {
+            let loads: Vec<f64> = skew_model
+                .sample_loads(512, &mut obs_rng)
+                .iter()
+                .map(|&l| l as f64)
+                .collect();
+            let prev = epoch_placements.last().unwrap();
+            let target = placement::target_placement(
+                model.n_experts,
+                n,
+                serving.local_experts.max(1),
+                &loads,
+            );
+            let migrations: Vec<Vec<(usize, usize)>> = (0..n)
+                .map(|r| placement::migration_fetches(prev, &target, r))
+                .collect();
+            epoch_placements.push(target);
+            epoch_migrations.push(migrations);
+        }
+    }
+
     // DEP runs in lockstep: every rank needs the same iteration count.
     // Pad shorter ranks with (near-)empty chunks — a rank that runs out of
     // requests still joins every collective with zero tokens, exactly like
@@ -246,7 +294,30 @@ fn run_planned(
                 let mut rng = root.fork(1000 + r as u64);
                 let specs: Vec<ChunkSpec> = chunks
                     .iter()
-                    .map(|w| ChunkSpec::sample(*w, model, serving, &placement, r, &mut rng))
+                    .enumerate()
+                    .map(|(ci, w)| {
+                        let epoch = if replace_active {
+                            (ci / interval).min(epoch_placements.len() - 1)
+                        } else {
+                            0
+                        };
+                        let pl = &epoch_placements[epoch];
+                        // Skewed routing activates the activation-aware
+                        // on-demand fetch model (hot experts are always
+                        // pulled, the cold tail rarely); uniform routing
+                        // keeps the legacy blind-fraction sampler.
+                        let mut spec = if serving.routing_skew > 0.0 {
+                            ChunkSpec::sample_skewed(
+                                *w, model, serving, pl, r, &skew_model, &mut rng,
+                            )
+                        } else {
+                            ChunkSpec::sample(*w, model, serving, pl, r, &mut rng)
+                        };
+                        if replace_active && epoch > 0 && ci == epoch * interval {
+                            spec.migration = epoch_migrations[epoch - 1][r].clone();
+                        }
+                        spec
+                    })
                     .collect();
                 let compiled = dwdp::compile_rank_program(hw, model, serving, r, &specs);
                 for (key, plan) in compiled.plans {
@@ -455,6 +526,32 @@ mod tests {
         let b = run_context(&hw, &m, &s, 2, false);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.median_ttft, b.median_ttft);
+    }
+
+    #[test]
+    fn skewed_dwdp_with_replacement_runs_and_stays_deterministic() {
+        let (hw, m, mut s) = setup(ParallelMode::Dwdp);
+        s.routing_skew = 1.5;
+        s.local_experts = 6; // redundant placement over the 8 tiny experts
+        s.replacement_interval = 2;
+        let a = run_context(&hw, &m, &s, 4, false);
+        let b = run_context(&hw, &m, &s, 4, false);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.median_ttft, b.median_ttft);
+        assert!(a.makespan > 0.0 && a.makespan.is_finite());
+        assert!(a.tps_per_gpu > 0.0);
+        // All completion marks still land (migration steps do not disturb
+        // the chunk-boundary accounting).
+        let n_marks: usize = a.sim.ranks.iter().map(|r| r.marks.len()).sum();
+        assert_eq!(n_marks, 4 * 4);
+        // The static-placement variant runs the same workload.
+        s.replacement_interval = 0;
+        let stat = run_context(&hw, &m, &s, 4, false);
+        assert!(stat.makespan > 0.0 && stat.makespan.is_finite());
+        assert_eq!(
+            stat.total_tokens, a.total_tokens,
+            "re-placement must not change the offered workload"
+        );
     }
 
     #[test]

@@ -48,6 +48,31 @@ pub fn fleet_scenario(mode: ParallelMode, n_groups: usize) -> Scenario {
         .seed(7)
 }
 
+/// Scenario for the re-placement sweep: redundant expert placement at full
+/// on-demand prefetch — the regime where *which* experts are local moves
+/// DWDP's per-layer prefetch bound, so the placement knob is causal.
+pub fn replacement_scenario(
+    mode: ParallelMode,
+    skew: f64,
+    local_experts: usize,
+    interval: usize,
+) -> Scenario {
+    Scenario::fleet()
+        .mode(mode)
+        .group(4)
+        .groups(2)
+        .isl(8192)
+        .ratio(0.8)
+        .osl_window(256, 1024)
+        .local_experts(local_experts)
+        .prefetch_fraction(1.0)
+        .routing_skew(skew)
+        .replacement_interval(interval)
+        .rate(6.0)
+        .requests(n_requests())
+        .seed(7)
+}
+
 /// A bursty recording all trace-replay rows share: generated once from the
 /// Gamma-burst process, round-tripped through the canonical JSON encoding
 /// so replay rows exercise the full write→read path.
@@ -226,9 +251,102 @@ pub fn fleet_trace() -> Table {
     t
 }
 
+/// Pull a named backend extra off a report ("-" when absent).
+fn extra<'a>(r: &'a RunReport, key: &str) -> &'a str {
+    r.extras
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("-")
+}
+
+const REPLACEMENT_HEADER: [&str; 8] = [
+    "scenario",
+    "served",
+    "p50 TTFT (ms)",
+    "p99 TTFT (ms)",
+    "TPS/GPU",
+    "remote fetch (GB)",
+    "migrated (GB)",
+    "re-placements",
+];
+
+/// `replacement_skew` — the online expert re-placement sweep: DWDP with a
+/// frozen `ExpertPlacement::balanced` vs the EPLB-style re-placement loop
+/// vs DEP, across routing skew × re-placement interval × placement
+/// redundancy.  At skew 0 the re-placement knob is an exact no-op; at
+/// skew >= 1 with redundant placement the dynamic rows fetch strictly
+/// fewer remote bytes and serve more TPS/GPU than static (asserted by the
+/// fleet test-suite).  The final row re-checks sweep determinism across
+/// thread counts with re-placement enabled.
+pub fn replacement_skew() -> Table {
+    let mut points = Vec::new();
+    for &skew in &[0.0, 1.0, 1.5] {
+        for &local in &[64usize, 96] {
+            for (tag, interval) in [("static", 0usize), ("eplb/8", 8)] {
+                let spec = replacement_scenario(ParallelMode::Dwdp, skew, local, interval)
+                    .build()
+                    .expect("replacement_skew scenario");
+                points.push(SweepPoint::new(
+                    &format!("DWDP4 x2 skew={skew} local={local} {tag}"),
+                    spec,
+                    Fidelity::Analytic,
+                ));
+            }
+        }
+        let dep = replacement_scenario(ParallelMode::Dep, skew, 64, 0)
+            .build()
+            .expect("replacement_skew DEP baseline");
+        points.push(SweepPoint::new(
+            &format!("DEP4 x2 skew={skew}"),
+            dep,
+            Fidelity::Analytic,
+        ));
+    }
+    let parallel = run_sweep(&points, available_threads());
+    let serial = run_sweep(&points, 1);
+    let bit_identical = parallel.iter().zip(&serial).all(|(a, b)| match (a, b) {
+        (Ok(a), Ok(b)) => a.to_json().dump() == b.to_json().dump(),
+        (Err(a), Err(b)) => a == b,
+        _ => false,
+    });
+    let mut t = Table::new(&REPLACEMENT_HEADER).with_title(
+        "Online expert re-placement: DWDP static vs dynamic vs DEP, skew x interval x redundancy",
+    );
+    for (p, r) in points.iter().zip(&parallel) {
+        match r {
+            Ok(r) => {
+                t.row(vec![
+                    p.label.clone(),
+                    r.n_requests.to_string(),
+                    f(r.p50_ttft * 1e3, 0),
+                    f(r.p99_ttft * 1e3, 0),
+                    f(r.tps_per_gpu, 1),
+                    extra(r, "remote fetch (GB)").to_string(),
+                    extra(r, "migrated (GB)").to_string(),
+                    extra(r, "re-placements").to_string(),
+                ]);
+            }
+            Err(e) => {
+                let mut row = vec![format!("{} (failed: {e})", p.label)];
+                row.resize(REPLACEMENT_HEADER.len(), "-".into());
+                t.row(row);
+            }
+        }
+    }
+    let mut row = vec![
+        "sweep determinism (1 thread vs all cores)".to_string(),
+        if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
+    ];
+    row.resize(REPLACEMENT_HEADER.len(), "-".into());
+    t.row(row);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fleet::simulate_analytic;
 
     #[test]
     fn frontier_covers_modes_and_arrivals_and_is_deterministic() {
@@ -259,5 +377,61 @@ mod tests {
         for needle in ["round-robin", "least-outstanding", "slo-admission"] {
             assert!(text.contains(needle), "missing {needle}");
         }
+    }
+
+    #[test]
+    fn replacement_table_covers_the_sweep_and_stays_deterministic() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = replacement_skew();
+        // 3 skews x (2 redundancies x 2 intervals + 1 DEP) + determinism.
+        assert_eq!(t.n_rows(), 16);
+        let text = t.render();
+        for needle in ["static", "eplb/8", "DEP4", "local=96", "bit-identical"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    /// The PR-3 acceptance criterion: at `routing_skew >= 1` with
+    /// redundant placement, dynamic re-placement strictly reduces
+    /// remote-fetch bytes and improves TPS/GPU over the frozen
+    /// `ExpertPlacement::balanced`; at skew 0 the knob is an exact no-op.
+    #[test]
+    fn dynamic_replacement_beats_static_at_skew_one() {
+        let run = |skew: f64, interval: usize| {
+            let spec = replacement_scenario(ParallelMode::Dwdp, skew, 96, interval)
+                .requests(64) // pin the load regardless of DWDP_QUICK
+                .build()
+                .unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let n_gpus = 2 * 4;
+        let stat = run(1.0, 0);
+        let dynamic = run(1.0, 8);
+        assert!(dynamic.replacements > 0);
+        assert!(
+            dynamic.remote_fetch_bytes < stat.remote_fetch_bytes,
+            "remote fetch: dynamic {} vs static {}",
+            dynamic.remote_fetch_bytes,
+            stat.remote_fetch_bytes
+        );
+        let stat_tps = stat.metrics.output_tps_per_gpu(n_gpus, stat.span);
+        let dyn_tps = dynamic.metrics.output_tps_per_gpu(n_gpus, dynamic.span);
+        assert!(
+            dyn_tps > stat_tps,
+            "TPS/GPU: dynamic {dyn_tps} must beat static {stat_tps}"
+        );
+        assert!(
+            dynamic.metrics.p99_ttft() < stat.metrics.p99_ttft(),
+            "tail TTFT must improve: dynamic {} vs static {}",
+            dynamic.metrics.p99_ttft(),
+            stat.metrics.p99_ttft()
+        );
+        // Skew 0: bit-identical outcome, no migrations, no accounting.
+        let s0 = run(0.0, 0);
+        let d0 = run(0.0, 8);
+        assert_eq!(d0.replacements, 0);
+        assert_eq!(d0.remote_fetch_bytes, 0.0);
+        assert_eq!(s0.span, d0.span);
+        assert_eq!(s0.metrics.median_ttft(), d0.metrics.median_ttft());
     }
 }

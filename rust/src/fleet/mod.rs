@@ -19,6 +19,13 @@
 //! [`sweep`] driver regenerates that DWDP-vs-DEP cluster frontier across
 //! arrival rate × group count × mode in parallel across cores.
 //!
+//! Skewed routing additionally activates the online expert re-placement
+//! loop (`placement::replacement`): each DWDP group observes per-expert
+//! token loads per epoch, re-places hot experts onto more ranks under the
+//! equal-local-count constraint, and pays the weight migration at the
+//! epoch boundary — the `replacement_interval` serving knob, swept by the
+//! `replacement_skew` registry scenario.
+//!
 //! Entry points: describe the cluster with
 //! [`crate::serving::Scenario::fleet`] and run it through a
 //! [`crate::serving::ServingStack`] (the backends dispatch here), or call
@@ -33,10 +40,13 @@ use std::collections::VecDeque;
 pub use router::{ClusterPolicy, ClusterRouter, GroupLoad, RouteDecision};
 pub use sweep::{available_threads, run_sweep, SweepPoint};
 
+use crate::config::{HardwareConfig, ParallelMode};
 use crate::coordinator::{GenModel, GroupLatencyModel, PrefillOffsets};
 use crate::metrics::{RequestRecord, ServingMetrics, Slo};
+use crate::placement::{self, ExpertPlacement};
 use crate::serving::{ScenarioKind, ScenarioSpec};
-use crate::workload::{IslDist, OpenLoopGen, Request};
+use crate::util::Rng;
+use crate::workload::{IslDist, OpenLoopGen, Request, RoutingSkew};
 
 /// Full accounting of one fleet run — what the [`crate::serving::RunReport`]
 /// summarizes, plus the conservation counters the property tests check.
@@ -58,6 +68,14 @@ pub struct FleetOutcome {
     pub shed_tokens: usize,
     pub per_group_requests: Vec<usize>,
     pub per_group_tokens: Vec<usize>,
+    /// Expected remote expert-fetch volume charged to DWDP prefetch across
+    /// all groups, bytes (0 for DEP or uniform routing, where the
+    /// activation-aware demand model is inactive).
+    pub remote_fetch_bytes: f64,
+    /// Expert weight bytes migrated by online re-placement.
+    pub migration_bytes: f64,
+    /// Re-placement events executed across all groups.
+    pub replacements: usize,
     /// First arrival to last finish over admitted requests, seconds.
     pub span: f64,
 }
@@ -82,6 +100,137 @@ pub fn fleet_workload(spec: &ScenarioSpec) -> Result<Vec<Request>, String> {
     Ok(requests)
 }
 
+/// Per-group online expert re-placement state — the tentpole of the
+/// dynamic-placement loop (see `placement::replacement`).
+///
+/// Active only for DWDP groups with `routing_skew > 0`: each prefill batch
+/// samples per-expert token loads from the group's [`RoutingSkew`] model,
+/// prices the batch's prefetch against the *current* placement through the
+/// activation-aware demand model, and accumulates the loads into the
+/// running epoch.  With `replacement_interval > 0`, every `interval`
+/// prefilled requests the group recomputes the target placement from the
+/// epoch's observed loads and pays the weight migration (slowest rank's
+/// NVLink pull) at the epoch boundary.  All randomness comes from a
+/// per-group seeded [`Rng`], so fleet runs stay a pure function of the
+/// spec — the `fleet::sweep` thread-invariance contract.
+struct DynamicPlacement {
+    placement: ExpertPlacement,
+    skew: RoutingSkew,
+    rng: Rng,
+    /// Per-expert token loads accumulated over the current epoch.
+    epoch_loads: Vec<f64>,
+    /// Requests prefilled since the last re-placement.
+    since_replace: usize,
+    /// Epoch length in prefilled requests; 0 = observe-only (the placement
+    /// stays static, but prefetch demand is still activation-aware).
+    interval: usize,
+    local_per_rank: usize,
+    prefetch_fraction: f64,
+    expert_bytes: f64,
+    moe_layers: f64,
+    chunk_tokens: usize,
+    hw: HardwareConfig,
+    /// Re-placement is worth a migration only when the observed epoch load
+    /// is visibly imbalanced (max/mean above this); uniform routing never
+    /// triggers, so skew-0 runs are bit-identical with or without the
+    /// re-placement knob.
+    hysteresis: f64,
+    // Accounting surfaced through `FleetOutcome`.
+    remote_fetch_bytes: f64,
+    migration_bytes: f64,
+    replacements: usize,
+}
+
+impl DynamicPlacement {
+    fn new(spec: &ScenarioSpec, group: usize) -> DynamicPlacement {
+        let s = &spec.serving;
+        let local = s.local_experts.max(1);
+        DynamicPlacement {
+            placement: ExpertPlacement::balanced(spec.model.n_experts, s.group_size, local),
+            skew: RoutingSkew::new(spec.model.n_experts, spec.model.top_k, s.routing_skew),
+            rng: Rng::new(s.seed ^ 0x5EED ^ (group as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            epoch_loads: vec![0.0; spec.model.n_experts],
+            since_replace: 0,
+            interval: s.replacement_interval,
+            local_per_rank: local,
+            prefetch_fraction: s.prefetch_fraction,
+            expert_bytes: spec.model.expert_bytes(),
+            moe_layers: spec.model.n_moe_layers() as f64,
+            chunk_tokens: crate::engine::chunk_tokens(s),
+            hw: spec.hw.clone(),
+            hysteresis: 1.25,
+            remote_fetch_bytes: 0.0,
+            migration_bytes: 0.0,
+            replacements: 0,
+        }
+    }
+
+    /// Price one prefill batch against the current placement: sample the
+    /// batch's expert loads, fold them into the epoch, account the
+    /// expected remote fetch bytes, and return the prefetch scale for
+    /// [`PrefillOffsets::offsets_scaled`].
+    fn batch_scale(&mut self, batch_tokens: usize, n_chunks: usize) -> f64 {
+        let sample = batch_tokens.clamp(1, 256);
+        let loads = self.skew.sample_loads(sample, &mut self.rng);
+        let scale_up = batch_tokens as f64 / sample as f64;
+        let loads_f: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+        for (acc, &l) in self.epoch_loads.iter_mut().zip(&loads_f) {
+            *acc += l * scale_up;
+        }
+        let fractions = placement::fetch_fractions(&loads_f, self.prefetch_fraction);
+        let scale =
+            placement::remote_scale(&self.placement, &fractions, self.prefetch_fraction);
+        let remote_experts = scale
+            * self.prefetch_fraction
+            * (self.placement.n_experts - self.local_per_rank) as f64;
+        self.remote_fetch_bytes +=
+            remote_experts * self.expert_bytes * self.moe_layers * n_chunks as f64;
+        scale
+    }
+
+    /// Advance the epoch by one completed batch of `n_requests`; returns
+    /// the migration stall (seconds) to charge at the epoch boundary.
+    fn on_batch_done(&mut self, n_requests: usize) -> f64 {
+        if self.interval == 0 {
+            return 0.0;
+        }
+        self.since_replace += n_requests;
+        if self.since_replace < self.interval {
+            return 0.0;
+        }
+        self.since_replace = 0;
+        let loads =
+            std::mem::replace(&mut self.epoch_loads, vec![0.0; self.placement.n_experts]);
+        let total: f64 = loads.iter().sum();
+        let max = loads.iter().fold(0.0f64, |a, &b| a.max(b));
+        if total <= 0.0 || max * loads.len() as f64 <= self.hysteresis * total {
+            return 0.0;
+        }
+        let target = placement::target_placement(
+            self.placement.n_experts,
+            self.placement.n_ranks,
+            self.local_per_rank,
+            &loads,
+        );
+        // A migrated replica moves its shard for *every* MoE layer — the
+        // same per-layer basis the fetch savings are charged on — so the
+        // per-copy price is expert_bytes x moe_layers.
+        let report = placement::migration_cost(
+            &self.placement,
+            &target,
+            self.expert_bytes * self.moe_layers,
+        );
+        if report.n_copied == 0 {
+            return 0.0;
+        }
+        let stall = placement::migration_seconds(&report, &self.hw);
+        self.migration_bytes += report.total_bytes;
+        self.replacements += 1;
+        self.placement = target;
+        stall
+    }
+}
+
 /// One serving group's queueing state during the chronological sweep.
 struct GroupSim {
     /// Request indices admitted but not yet batched, in arrival order.
@@ -91,22 +240,27 @@ struct GroupSim {
     free_at: f64,
     /// Prompt tokens of the in-flight batch (outstanding until `free_at`).
     busy_tokens: usize,
-    /// EWMA of observed prefill seconds-per-token; 0 until the first batch
-    /// completes (optimistic prior — admission never sheds blind).
+    /// EWMA of observed prefill seconds-per-token, seeded from the
+    /// analytic [`GroupLatencyModel`] prefill rate so admission prices the
+    /// pending backlog from the very first arrival (a 0 prior made
+    /// `SloAdmission` blind to the backlog during the initial burst).
     spt: f64,
+    /// Online expert re-placement state (DWDP with `routing_skew > 0`).
+    dynamic: Option<DynamicPlacement>,
     /// Every request index admitted to this group.
     assigned: Vec<usize>,
     tokens: usize,
 }
 
 impl GroupSim {
-    fn new() -> GroupSim {
+    fn new(spt0: f64, dynamic: Option<DynamicPlacement>) -> GroupSim {
         GroupSim {
             pending: VecDeque::new(),
             pending_tokens: 0,
             free_at: 0.0,
             busy_tokens: 0,
-            spt: 0.0,
+            spt: spt0,
+            dynamic,
             assigned: Vec::new(),
             tokens: 0,
         }
@@ -146,7 +300,15 @@ impl GroupSim {
             }
             self.pending_tokens -= tokens;
             let isls: Vec<usize> = batch.iter().map(|&i| requests[i].isl).collect();
-            let offsets = prefill.offsets(&isls);
+            let offsets = match self.dynamic.as_mut() {
+                Some(d) => {
+                    let n_chunks: usize =
+                        isls.iter().map(|&i| i.div_ceil(d.chunk_tokens).max(1)).sum();
+                    let scale = d.batch_scale(tokens, n_chunks);
+                    prefill.offsets_scaled(&isls, scale)
+                }
+                None => prefill.offsets(&isls),
+            };
             let mut end = start;
             for (&i, &off) in batch.iter().zip(&offsets) {
                 first_token[i] = start + off;
@@ -155,6 +317,12 @@ impl GroupSim {
             let observed = (end - start).max(1e-9) / tokens.max(1) as f64;
             self.spt = if self.spt == 0.0 { observed } else { 0.7 * self.spt + 0.3 * observed };
             self.free_at = end;
+            if let Some(d) = self.dynamic.as_mut() {
+                // Weight migration is charged to the epoch boundary: the
+                // group cannot start its next batch until the slowest
+                // rank's pulls complete.
+                self.free_at += d.on_batch_done(batch.len());
+            }
             self.busy_tokens = tokens;
         }
     }
@@ -168,6 +336,16 @@ impl GroupSim {
                 + self.pending_tokens as f64 * self.spt,
         }
     }
+}
+
+/// Mean decode context of a member set: mean ISL plus half the mean OSL
+/// (a decoding request has generated half its output on average), computed
+/// in f64 and rounded once — the old per-term integer division truncated
+/// the mean by up to a token and biased step times for small groups.
+fn mean_decode_ctx(requests: &[Request], members: &[usize]) -> usize {
+    let isl: usize = members.iter().map(|&i| requests[i].isl).sum();
+    let osl: usize = members.iter().map(|&i| requests[i].osl).sum();
+    ((isl as f64 + osl as f64 / 2.0) / members.len() as f64).round() as usize
 }
 
 /// Continuous-batching decode of one group's admitted requests on the
@@ -184,11 +362,7 @@ fn decode_group(
     }
     let mut order: Vec<usize> = members.to_vec();
     order.sort_by(|&a, &b| first_token[a].total_cmp(&first_token[b]).then(a.cmp(&b)));
-    let mean_ctx = {
-        let isl: usize = members.iter().map(|&i| requests[i].isl).sum();
-        let osl: usize = members.iter().map(|&i| requests[i].osl).sum();
-        isl / members.len() + osl / (2 * members.len())
-    };
+    let mean_ctx = mean_decode_ctx(requests, members);
     let mut active: Vec<(usize, usize)> = Vec::new();
     let mut pi = 0usize;
     let mut t = first_token[order[0]];
@@ -232,7 +406,25 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
     let requests = fleet_workload(spec)?;
     let mnt = spec.serving.max_num_tokens;
 
-    let mut groups: Vec<GroupSim> = (0..n_groups).map(|_| GroupSim::new()).collect();
+    // Cold-start admission prior: seed the per-group seconds-per-token
+    // estimate from the analytic prefill rate of one typical prompt, so
+    // `SloAdmission` prices the pending backlog from the first arrival
+    // instead of admitting blind until the first batch completes.
+    let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+    let isl0 = spec.serving.isl.max(1);
+    let spt0 = lm.prefill_offsets(&[isl0])[0].max(0.0) / isl0 as f64;
+    // The activation-aware demand model (and, with `replacement_interval`
+    // > 0, the online re-placement loop) applies to DWDP groups under
+    // skewed routing; uniform routing keeps the legacy blind-prefetch path
+    // bit-for-bit.
+    let dynamic_placement = spec.serving.mode == ParallelMode::Dwdp
+        && spec.serving.routing_skew > 0.0;
+    let mut groups: Vec<GroupSim> = (0..n_groups)
+        .map(|g| {
+            let dynamic = dynamic_placement.then(|| DynamicPlacement::new(spec, g));
+            GroupSim::new(spt0, dynamic)
+        })
+        .collect();
     let mut router = ClusterRouter::new(n_groups, policy);
     let mut first_token = vec![0.0f64; requests.len()];
     let mut admitted_mask = vec![false; requests.len()];
@@ -300,6 +492,21 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
         shed_tokens,
         per_group_requests: groups.iter().map(|g| g.assigned.len()).collect(),
         per_group_tokens: groups.iter().map(|g| g.tokens).collect(),
+        remote_fetch_bytes: groups
+            .iter()
+            .filter_map(|g| g.dynamic.as_ref())
+            .map(|d| d.remote_fetch_bytes)
+            .sum(),
+        migration_bytes: groups
+            .iter()
+            .filter_map(|g| g.dynamic.as_ref())
+            .map(|d| d.migration_bytes)
+            .sum(),
+        replacements: groups
+            .iter()
+            .filter_map(|g| g.dynamic.as_ref())
+            .map(|d| d.replacements)
+            .sum(),
         span,
         metrics,
     })
@@ -412,6 +619,118 @@ mod tests {
         // Same trace, same result: replay is deterministic.
         let again = simulate_analytic(&spec).unwrap();
         assert_eq!(out.metrics.median_ttft(), again.metrics.median_ttft());
+    }
+
+    #[test]
+    fn cold_start_admission_sees_backlog_at_t0() {
+        // 40 identical prompts land at t = 0 on one group.  With the old
+        // blind prior (spt = 0 until the first batch completed) the
+        // predicted wait ignored the entire pending backlog, so a bound a
+        // few batch-times wide admitted the whole storm.  Seeding spt from
+        // the analytic prefill rate prices the backlog immediately: a few
+        // requests are admitted, the rest shed.
+        let trace = WorkloadTrace::from_requests(
+            (0..40)
+                .map(|i| Request { id: i, arrival: 0.0, isl: 2048, osl: 8 })
+                .collect(),
+        );
+        let probe = tiny_fleet(ParallelMode::Dwdp, 1).build().unwrap();
+        let lm = crate::coordinator::GroupLatencyModel::new(
+            &probe.hw,
+            &probe.model,
+            &probe.serving,
+        );
+        let t_batch = lm.prefill_offsets(&[2048])[0];
+        assert!(t_batch > 0.0);
+        let spec = tiny_fleet(ParallelMode::Dwdp, 1)
+            .arrival(ArrivalProcess::Replay { trace })
+            .requests(40)
+            .cluster_policy(ClusterPolicy::SloAdmission { max_wait: 3.5 * t_batch })
+            .build()
+            .unwrap();
+        let out = simulate_analytic(&spec).unwrap();
+        assert!(out.admitted >= 1, "the first request is always admitted");
+        assert!(out.shed > 0, "the t=0 storm must shed under a ~3-batch bound");
+        assert!(
+            out.admitted <= 10,
+            "admission must price the backlog, admitted {} of {}",
+            out.admitted,
+            out.offered
+        );
+        assert_eq!(out.offered, out.admitted + out.shed);
+    }
+
+    #[test]
+    fn decode_mean_ctx_rounds_instead_of_truncating() {
+        let requests: Vec<Request> = [(3usize, 3usize), (4, 3)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(isl, osl))| Request { id: i as u64, arrival: 0.0, isl, osl })
+            .collect();
+        // mean isl 3.5, mean osl/2 = 1.5 -> 5; the old integer form gave
+        // 3/1 + 6/4 = 3 + 1 = 4.
+        assert_eq!(mean_decode_ctx(&requests, &[0, 1]), 5);
+        // Single member: exact.
+        assert_eq!(mean_decode_ctx(&requests, &[1]), 6); // 4 + 1.5 rounds to 6
+    }
+
+    fn replacement_fleet(skew: f64, interval: usize) -> Scenario {
+        // Redundant placement (local 6 of 8 experts) at full on-demand
+        // prefetch: the regime where placement choice moves prefetch time.
+        Scenario::fleet()
+            .model(PaperModelConfig::tiny())
+            .mode(ParallelMode::Dwdp)
+            .group(4)
+            .groups(2)
+            .isl(2048)
+            .mnt(16384)
+            .osl(32)
+            .local_experts(6)
+            .prefetch_fraction(1.0)
+            .routing_skew(skew)
+            .replacement_interval(interval)
+            .rate(40.0)
+            .requests(48)
+            .seed(11)
+    }
+
+    #[test]
+    fn dynamic_replacement_reduces_remote_fetch_bytes_under_skew() {
+        let run = |skew: f64, interval: usize| {
+            let spec = replacement_fleet(skew, interval).build().unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let stat = run(2.0, 0);
+        let dynamic = run(2.0, 8);
+        assert!(stat.remote_fetch_bytes > 0.0);
+        assert!(dynamic.replacements > 0, "skew 2.0 must trigger re-placement");
+        assert!(dynamic.migration_bytes > 0.0);
+        assert!(
+            dynamic.remote_fetch_bytes < stat.remote_fetch_bytes,
+            "dynamic {} must fetch less than static {}",
+            dynamic.remote_fetch_bytes,
+            stat.remote_fetch_bytes
+        );
+        // Uniform routing: the re-placement knob is inert and the outcome
+        // is bit-identical to the static run.
+        let s0 = run(0.0, 0);
+        let d0 = run(0.0, 8);
+        assert_eq!(s0.remote_fetch_bytes, 0.0);
+        assert_eq!(d0.remote_fetch_bytes, 0.0);
+        assert_eq!(d0.replacements, 0);
+        assert_eq!(s0.metrics.median_ttft(), d0.metrics.median_ttft());
+        assert_eq!(s0.span, d0.span);
+    }
+
+    #[test]
+    fn replacement_is_deterministic_for_a_seed() {
+        let spec = replacement_fleet(1.5, 4).build().unwrap();
+        let a = simulate_analytic(&spec).unwrap();
+        let b = simulate_analytic(&spec).unwrap();
+        assert_eq!(a.remote_fetch_bytes, b.remote_fetch_bytes);
+        assert_eq!(a.migration_bytes, b.migration_bytes);
+        assert_eq!(a.replacements, b.replacements);
+        assert_eq!(a.metrics.median_ttft(), b.metrics.median_ttft());
     }
 
     #[test]

@@ -335,6 +335,15 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
         if let Some(seed) = flags.get("seed").and_then(|s| s.parse().ok()) {
             scn = scn.seed(seed);
         }
+        if let Some(skew) = flags.get("skew").and_then(|s| s.parse().ok()) {
+            scn = scn.routing_skew(skew);
+        }
+        if let Some(interval) = flags.get("replace").and_then(|s| s.parse().ok()) {
+            scn = scn.replacement_interval(interval);
+        }
+        if let Some(local) = flags.get("local-experts").and_then(|s| s.parse().ok()) {
+            scn = scn.local_experts(local);
+        }
         if let Some(p) = flags.get("policy") {
             match ClusterPolicy::parse(p, max_wait) {
                 Some(policy) => scn = scn.cluster_policy(policy),

@@ -88,12 +88,16 @@ impl RequestRecord {
         (self.finish - self.first_token).max(0.0) / (self.osl as f64 - 1.0)
     }
 
-    /// Per-user decode throughput: output tokens over the generation span.
+    /// Per-user decode throughput: decode steps over the generation span
+    /// (0 for single-token outputs, mirroring [`RequestRecord::tpot`] — a
+    /// request whose `finish == first_token` has no decode span, and
+    /// dividing by the 1e-9 clamp would report a nonsense ~1e9 TPS that
+    /// poisons every mean it enters).
     pub fn user_tps(&self) -> f64 {
-        let gen_span = (self.finish - self.first_token).max(1e-9);
         if self.osl <= 1 {
-            return self.osl as f64 / gen_span;
+            return 0.0;
         }
+        let gen_span = (self.finish - self.first_token).max(1e-9);
         (self.osl as f64 - 1.0) / gen_span
     }
 }
@@ -322,6 +326,23 @@ mod tests {
         assert!((r.ttft() - 2.0).abs() < 1e-12);
         // 100 decode steps over 10 s = 10 tok/s
         assert!((r.user_tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_outputs_report_zero_tps_not_1e9() {
+        // osl = 1 with finish == first_token used to divide 1 token by the
+        // 1e-9 span clamp and report ~1e9 TPS.  Single-token throughput is
+        // 0, mirroring tpot: there is no decode span to measure.
+        let r = rec(0, 0.0, 1.0, 1.0, 1);
+        assert_eq!(r.user_tps(), 0.0);
+        assert_eq!(rec(1, 0.0, 1.0, 1.0, 0).user_tps(), 0.0);
+        // Even with a positive generation span, one token is zero steps.
+        assert_eq!(rec(2, 0.0, 1.0, 5.0, 1).user_tps(), 0.0);
+        // And a mean over such records stays finite and sane.
+        let mut m = ServingMetrics::new();
+        m.push(rec(3, 0.0, 1.0, 1.0, 1));
+        m.push(rec(4, 0.0, 1.0, 11.0, 101));
+        assert!((m.tps_per_user() - 5.0).abs() < 1e-9, "{}", m.tps_per_user());
     }
 
     #[test]

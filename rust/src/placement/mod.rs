@@ -7,7 +7,14 @@
 //! 3d) and, when memory permits, extra redundancy that reduces remote
 //! prefetch volume.
 
+pub mod replacement;
+
 use crate::util::Rng;
+
+pub use replacement::{
+    fetch_fractions, migration_cost, migration_fetches, migration_seconds, remote_scale,
+    target_placement, MigrationReport,
+};
 
 /// Placement of `n_experts` across `n_ranks`, possibly redundant.
 #[derive(Debug, Clone)]
@@ -68,12 +75,49 @@ impl ExpertPlacement {
         Self::balanced(n_experts, n_ranks, n_experts.div_ceil(n_ranks))
     }
 
+    /// Build a placement from explicit per-rank expert lists (the output
+    /// side of [`replacement::target_placement`]).  Lists are sorted and
+    /// deduplicated; every expert must appear on at least one rank.
+    pub fn from_local(n_experts: usize, local: Vec<Vec<usize>>) -> Self {
+        let n_ranks = local.len();
+        assert!(n_ranks >= 1);
+        let mut membership = vec![vec![false; n_experts]; n_ranks];
+        let mut local_sorted = Vec::with_capacity(n_ranks);
+        for (r, mut mine) in local.into_iter().enumerate() {
+            mine.sort_unstable();
+            mine.dedup();
+            for &e in &mine {
+                assert!(e < n_experts, "expert {e} out of range on rank {r}");
+                membership[r][e] = true;
+            }
+            local_sorted.push(mine);
+        }
+        let mut home = vec![usize::MAX; n_experts];
+        for e in 0..n_experts {
+            let holders: Vec<usize> = (0..n_ranks).filter(|&r| membership[r][e]).collect();
+            assert!(!holders.is_empty(), "expert {e} has no holder");
+            // Spread homes across holders for source-load balance.
+            home[e] = holders[e % holders.len()];
+        }
+        ExpertPlacement { n_experts, n_ranks, local: local_sorted, home, membership }
+    }
+
     pub fn local_experts(&self, rank: usize) -> &[usize] {
         &self.local[rank]
     }
 
     pub fn is_local(&self, rank: usize, expert: usize) -> bool {
         self.membership[rank][expert]
+    }
+
+    /// The canonical source rank peers pull `expert` from.
+    pub fn home_of(&self, expert: usize) -> usize {
+        self.home[expert]
+    }
+
+    /// How many ranks hold `expert` locally.
+    pub fn replicas(&self, expert: usize) -> usize {
+        (0..self.n_ranks).filter(|&r| self.membership[r][expert]).count()
     }
 
     /// Remote experts rank `r` must fetch for one layer, grouped by source:

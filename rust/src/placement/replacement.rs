@@ -1,0 +1,346 @@
+//! Online expert re-placement: observe per-expert token loads, compute a
+//! target placement that replicates hot experts, and account the weight
+//! migration between epochs.
+//!
+//! DWDP's weak placement constraint (§2) leaves *which* experts each rank
+//! stores a free variable as long as local counts stay equal and every
+//! expert keeps at least one home.  Under skewed routing (the
+//! `routing_skew` knob) that freedom matters: a hot expert that is resident
+//! on every rank is never fetched remotely, so redundancy spent on the hot
+//! head of the routing distribution shrinks on-demand prefetch volume far
+//! more than redundancy spread blindly.  This module is the EPLB-style
+//! closed loop around that observation:
+//!
+//! 1. **Observe** — per-expert token loads accumulate over an epoch
+//!    (sampled from the same `RoutingSkew` model that drives DEP's
+//!    weight-level imbalance).
+//! 2. **Target** — [`target_placement`] turns the load vector into a new
+//!    equal-local-count placement: every expert keeps >= 1 replica, the
+//!    surplus slots go greedily to the experts with the highest
+//!    load-per-replica, and the replica units are dealt cyclically across
+//!    ranks so per-rank load stays balanced.
+//! 3. **Migrate** — [`migration_fetches`] / [`migration_cost`] enumerate
+//!    the expert shards each rank must pull (always from a rank that held
+//!    the expert under the *old* placement) and [`migration_seconds`]
+//!    prices the transfer over the NVLink copy-engine model, charged to
+//!    the epoch boundary.
+//!
+//! [`fetch_fractions`] and [`remote_scale`] are the shared demand model:
+//! the probability that a chunk needs a given expert, normalized so
+//! uniform loads reproduce the blind `prefetch_fraction`, and the ratio of
+//! a placement's expected remote fetch volume to that blind baseline.
+//! Everything here is deterministic for a given load vector, which is what
+//! keeps `fleet::sweep` results bit-identical across thread counts.
+
+use crate::config::HardwareConfig;
+use crate::placement::ExpertPlacement;
+
+/// Byte accounting of one re-placement migration.
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// Bytes each rank pulls in (newly-local experts only).
+    pub per_rank_bytes: Vec<f64>,
+    /// Total migrated bytes across the group; always equals
+    /// `n_copied * expert_bytes` and the sum of `per_rank_bytes`.
+    pub total_bytes: f64,
+    /// Expert shards copied (counting one per destination rank).
+    pub n_copied: usize,
+}
+
+/// Compute the target placement for an observed per-expert load vector.
+///
+/// Invariants (property-tested in `tests/properties.rs`): the result
+/// `covers_all()`, is `equal_sized()` at exactly `local_per_rank` experts
+/// per rank, and no rank holds a duplicate.  Deterministic: ties break to
+/// the lower expert index, so the same loads always yield the same
+/// placement.
+pub fn target_placement(
+    n_experts: usize,
+    n_ranks: usize,
+    local_per_rank: usize,
+    loads: &[f64],
+) -> ExpertPlacement {
+    assert_eq!(loads.len(), n_experts, "one load per expert");
+    assert!(n_ranks >= 1);
+    assert!(
+        local_per_rank * n_ranks >= n_experts,
+        "placement cannot cover all experts: {local_per_rank}x{n_ranks} < {n_experts}"
+    );
+    assert!(local_per_rank <= n_experts);
+
+    // 1. Replica counts: every expert keeps one home; surplus slots go
+    //    greedily to the expert with the highest remaining load-per-replica
+    //    (capped at one replica per rank).
+    let slots = local_per_rank * n_ranks;
+    let mut replicas = vec![1usize; n_experts];
+    let mut surplus = slots - n_experts;
+    while surplus > 0 {
+        let mut best: Option<usize> = None;
+        for e in 0..n_experts {
+            if replicas[e] >= n_ranks {
+                continue;
+            }
+            match best {
+                None => best = Some(e),
+                Some(b) => {
+                    if loads[e] / replicas[e] as f64 > loads[b] / replicas[b] as f64 {
+                        best = Some(e);
+                    }
+                }
+            }
+        }
+        let Some(e) = best else { break };
+        replicas[e] += 1;
+        surplus -= 1;
+    }
+
+    // 2. Deal the replica units across ranks in strict cyclic order, units
+    //    sorted by load-per-replica descending.  Same-expert units are
+    //    consecutive, so with replicas <= n_ranks they land on distinct
+    //    ranks; cyclic dealing gives every rank exactly `local_per_rank`
+    //    units and spreads the hot head across the group.
+    let mut order: Vec<usize> = (0..n_experts).collect();
+    order.sort_by(|&a, &b| {
+        let la = loads[a] / replicas[a] as f64;
+        let lb = loads[b] / replicas[b] as f64;
+        lb.total_cmp(&la).then(a.cmp(&b))
+    });
+    let mut local: Vec<Vec<usize>> = vec![Vec::with_capacity(local_per_rank); n_ranks];
+    let mut slot = 0usize;
+    for &e in &order {
+        for _ in 0..replicas[e] {
+            local[slot % n_ranks].push(e);
+            slot += 1;
+        }
+    }
+    ExpertPlacement::from_local(n_experts, local)
+}
+
+/// The `(source_rank, expert)` pulls `rank` must execute to migrate from
+/// `old` to `new`: one per newly-local expert, sourced from the expert's
+/// canonical home under the *old* placement (which by coverage always
+/// exists and, since `rank` did not hold the expert, is never `rank`).
+pub fn migration_fetches(
+    old: &ExpertPlacement,
+    new: &ExpertPlacement,
+    rank: usize,
+) -> Vec<(usize, usize)> {
+    debug_assert_eq!(old.n_experts, new.n_experts);
+    debug_assert_eq!(old.n_ranks, new.n_ranks);
+    (0..new.n_experts)
+        .filter(|&e| new.is_local(rank, e) && !old.is_local(rank, e))
+        .map(|e| (old.home_of(e), e))
+        .collect()
+}
+
+/// Byte accounting of migrating from `old` to `new` with `expert_bytes`
+/// per shard.  Experts already resident are never re-copied; evictions are
+/// free (memory is reclaimed, nothing moves).
+pub fn migration_cost(
+    old: &ExpertPlacement,
+    new: &ExpertPlacement,
+    expert_bytes: f64,
+) -> MigrationReport {
+    let mut per_rank_bytes = Vec::with_capacity(old.n_ranks);
+    let mut n_copied = 0usize;
+    for r in 0..old.n_ranks {
+        let n = migration_fetches(old, new, r).len();
+        n_copied += n;
+        per_rank_bytes.push(n as f64 * expert_bytes);
+    }
+    MigrationReport {
+        total_bytes: n_copied as f64 * expert_bytes,
+        per_rank_bytes,
+        n_copied,
+    }
+}
+
+/// Wall-clock cost of a migration, charged to the epoch boundary: every
+/// rank pulls its inbound shards in parallel over the NVLink copy engine,
+/// so the group stalls for the slowest rank's transfer.
+pub fn migration_seconds(report: &MigrationReport, hw: &HardwareConfig) -> f64 {
+    if report.n_copied == 0 {
+        return 0.0;
+    }
+    let worst = report.per_rank_bytes.iter().fold(0.0f64, |a, &b| a.max(b));
+    worst / hw.ce_bw + hw.ce_issue_latency
+}
+
+/// Per-expert fetch need under observed loads: the probability that a
+/// chunk must have expert `e` available, `min(1, pf * E * load_e / total)`.
+/// Uniform loads reproduce the blind `prefetch_fraction` exactly (so the
+/// model is calibration-neutral at `routing_skew = 0`); skewed loads
+/// saturate the hot head at 1 and shrink the tail.
+pub fn fetch_fractions(loads: &[f64], prefetch_fraction: f64) -> Vec<f64> {
+    let total: f64 = loads.iter().sum();
+    let pf = prefetch_fraction.clamp(0.0, 1.0);
+    if total <= 0.0 {
+        return vec![pf; loads.len()];
+    }
+    let e = loads.len() as f64;
+    loads.iter().map(|&l| (pf * e * l / total).min(1.0)).collect()
+}
+
+/// Expected remote fetch volume of `placement` under `fractions`, as a
+/// multiple of the blind baseline `prefetch_fraction * (E - L)` the static
+/// latency model charges: the mean over ranks of the summed fetch need of
+/// each rank's non-local experts, divided by the baseline.  1.0 means "as
+/// expensive as blind uniform prefetch"; replicating hot experts locally
+/// drives it down.
+pub fn remote_scale(
+    placement: &ExpertPlacement,
+    fractions: &[f64],
+    prefetch_fraction: f64,
+) -> f64 {
+    debug_assert_eq!(fractions.len(), placement.n_experts);
+    let local = placement.local_experts(0).len();
+    let baseline = prefetch_fraction * (placement.n_experts - local) as f64;
+    if baseline <= 0.0 {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    for r in 0..placement.n_ranks {
+        for e in 0..placement.n_experts {
+            if !placement.is_local(r, e) {
+                sum += fractions[e];
+            }
+        }
+    }
+    sum / placement.n_ranks as f64 / baseline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zipf_loads(n: usize, skew: f64) -> Vec<f64> {
+        (0..n).map(|e| 1000.0 / ((e + 1) as f64).powf(skew)).collect()
+    }
+
+    #[test]
+    fn target_preserves_invariants_and_replicates_hot_experts() {
+        let loads = zipf_loads(16, 1.2);
+        // 4 ranks x 8 local = 32 slots for 16 experts: 16 surplus replicas.
+        let p = target_placement(16, 4, 8, &loads);
+        assert!(p.covers_all());
+        assert!(p.equal_sized());
+        assert_eq!(p.local_experts(0).len(), 8);
+        // The hottest expert is replicated on more ranks than the coldest.
+        assert!(p.replicas(0) > p.replicas(15), "{} vs {}", p.replicas(0), p.replicas(15));
+        assert!(p.replicas(0) >= 2);
+        assert_eq!(p.replicas(15), 1);
+    }
+
+    #[test]
+    fn target_with_no_surplus_still_covers() {
+        let loads = zipf_loads(8, 2.0);
+        let p = target_placement(8, 4, 2, &loads);
+        assert!(p.covers_all());
+        assert!(p.equal_sized());
+        for e in 0..8 {
+            assert_eq!(p.replicas(e), 1);
+        }
+    }
+
+    #[test]
+    fn target_is_deterministic() {
+        let loads = zipf_loads(32, 1.0);
+        let a = target_placement(32, 5, 10, &loads);
+        let b = target_placement(32, 5, 10, &loads);
+        for r in 0..5 {
+            assert_eq!(a.local_experts(r), b.local_experts(r));
+        }
+    }
+
+    #[test]
+    fn uniform_loads_spread_replicas_evenly() {
+        let loads = vec![1.0; 8];
+        let p = target_placement(8, 4, 4, &loads);
+        // 16 slots / 8 experts: everyone gets exactly 2 replicas.
+        for e in 0..8 {
+            assert_eq!(p.replicas(e), 2, "expert {e}");
+        }
+    }
+
+    #[test]
+    fn migration_accounting_conserves() {
+        let loads = zipf_loads(16, 1.5);
+        let old = ExpertPlacement::balanced(16, 4, 8);
+        let new = target_placement(16, 4, 8, &loads);
+        let eb = 24.8e6;
+        let report = migration_cost(&old, &new, eb);
+        let manual: usize =
+            (0..4).map(|r| migration_fetches(&old, &new, r).len()).sum();
+        assert_eq!(report.n_copied, manual);
+        assert!((report.total_bytes - manual as f64 * eb).abs() < 1.0);
+        assert!(
+            (report.per_rank_bytes.iter().sum::<f64>() - report.total_bytes).abs() < 1.0
+        );
+        // Sources are valid old holders, never self, never already-local.
+        for r in 0..4 {
+            for (src, e) in migration_fetches(&old, &new, r) {
+                assert_ne!(src, r);
+                assert!(old.is_local(src, e));
+                assert!(!old.is_local(r, e));
+                assert!(new.is_local(r, e));
+            }
+        }
+    }
+
+    #[test]
+    fn migration_to_identical_placement_is_free() {
+        let old = ExpertPlacement::balanced(16, 4, 8);
+        let report = migration_cost(&old, &old, 1e6);
+        assert_eq!(report.n_copied, 0);
+        assert_eq!(report.total_bytes, 0.0);
+        let hw = HardwareConfig::gb200();
+        assert_eq!(migration_seconds(&report, &hw), 0.0);
+    }
+
+    #[test]
+    fn migration_seconds_is_slowest_rank_pull() {
+        let hw = HardwareConfig::gb200();
+        let report = MigrationReport {
+            per_rank_bytes: vec![0.0, 2.0 * hw.ce_bw, hw.ce_bw],
+            total_bytes: 3.0 * hw.ce_bw,
+            n_copied: 3,
+        };
+        let t = migration_seconds(&report, &hw);
+        assert!((t - (2.0 + hw.ce_issue_latency)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn uniform_fractions_match_blind_prefetch() {
+        let loads = vec![7.0; 32];
+        let fr = fetch_fractions(&loads, 0.25);
+        for f in &fr {
+            assert!((f - 0.25).abs() < 1e-12);
+        }
+        let p = ExpertPlacement::balanced(32, 4, 8);
+        assert!((remote_scale(&p, &fr, 0.25) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replicating_hot_experts_reduces_remote_scale() {
+        let loads = zipf_loads(64, 1.2);
+        let fr = fetch_fractions(&loads, 1.0);
+        // Hot head saturates at 1, tail shrinks.
+        assert_eq!(fr[0], 1.0);
+        assert!(fr[63] < 0.2, "{}", fr[63]);
+        let balanced = ExpertPlacement::balanced(64, 4, 24); // 1.5x redundancy
+        let target = target_placement(64, 4, 24, &loads);
+        let s_static = remote_scale(&balanced, &fr, 1.0);
+        let s_dynamic = remote_scale(&target, &fr, 1.0);
+        assert!(
+            s_dynamic < s_static,
+            "dynamic {s_dynamic} should beat static {s_static}"
+        );
+        assert!(s_dynamic > 0.0);
+    }
+
+    #[test]
+    fn zero_loads_fall_back_to_blind_fraction() {
+        let fr = fetch_fractions(&[0.0; 8], 0.5);
+        assert!(fr.iter().all(|&f| f == 0.5));
+    }
+}

@@ -228,6 +228,18 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
     if out.shed > 0 {
         report.extras.push(("shed tokens".into(), out.shed_tokens.to_string()));
     }
+    if out.remote_fetch_bytes > 0.0 {
+        report.extras.push((
+            "remote fetch (GB)".into(),
+            format!("{:.3}", out.remote_fetch_bytes / 1e9),
+        ));
+    }
+    if spec.serving.replacement_interval > 0 {
+        report.extras.push(("re-placements".into(), out.replacements.to_string()));
+        report
+            .extras
+            .push(("migrated (GB)".into(), format!("{:.3}", out.migration_bytes / 1e9)));
+    }
 }
 
 fn disagg_sim(spec: &ScenarioSpec) -> Result<DisaggSim, String> {
@@ -333,15 +345,10 @@ struct DesPrefill<'a> {
     spec: &'a ScenarioSpec,
 }
 
-impl PrefillOffsets for DesPrefill<'_> {
-    fn offsets(&self, isls: &[usize]) -> Vec<f64> {
-        let run = engine::run_context_batch(
-            &self.spec.hw,
-            &self.spec.model,
-            &self.spec.serving,
-            isls,
-            false,
-        );
+impl DesPrefill<'_> {
+    fn run_batch(&self, serving: &crate::config::ServingConfig, isls: &[usize]) -> Vec<f64> {
+        let run =
+            engine::run_context_batch(&self.spec.hw, &self.spec.model, serving, isls, false);
         let mut offsets = vec![0.0f64; isls.len()];
         for rank in &run.sim.ranks {
             for &(tag, t) in &rank.marks {
@@ -351,6 +358,25 @@ impl PrefillOffsets for DesPrefill<'_> {
             }
         }
         offsets
+    }
+}
+
+impl PrefillOffsets for DesPrefill<'_> {
+    fn offsets(&self, isls: &[usize]) -> Vec<f64> {
+        self.run_batch(&self.spec.serving, isls)
+    }
+
+    /// The fleet's re-placement loop owns the skew/placement modeling, so
+    /// the scale folds into the engine's on-demand `prefetch_fraction` and
+    /// the engine-side skew/re-placement machinery is disabled for the
+    /// batch (it would double-count the same effect).
+    fn offsets_scaled(&self, isls: &[usize], scale: f64) -> Vec<f64> {
+        let mut serving = self.spec.serving.clone();
+        serving.prefetch_fraction =
+            (serving.prefetch_fraction * scale.max(0.0)).clamp(0.0, 1.0);
+        serving.routing_skew = 0.0;
+        serving.replacement_interval = 0;
+        self.run_batch(&serving, isls)
     }
 }
 

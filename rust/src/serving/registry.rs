@@ -98,6 +98,9 @@ fn run_fleet_burst() -> RunArtifact {
 fn run_fleet_trace() -> RunArtifact {
     RunArtifact::table(experiments::fleet::fleet_trace())
 }
+fn run_replacement_skew() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::replacement_skew())
+}
 
 static REGISTRY: &[ScenarioEntry] = &[
     ScenarioEntry {
@@ -226,6 +229,12 @@ static REGISTRY: &[ScenarioEntry] = &[
         group: "fleet",
         run: run_fleet_trace,
     },
+    ScenarioEntry {
+        id: "replacement_skew",
+        title: "online expert re-placement: DWDP static vs dynamic vs DEP",
+        group: "fleet",
+        run: run_replacement_skew,
+    },
 ];
 
 /// All registered scenarios, in registration order.
@@ -260,6 +269,7 @@ pub fn usage_text() -> String {
     out.push_str("                   [--seconds S] [--arrival poisson|burst|mmpp] [--cv2 X]\n");
     out.push_str("                   [--policy rr|lot|slo] [--max-wait W] [--trace FILE.json]\n");
     out.push_str("                   [--record-trace FILE.json] [--fidelity analytic|des]\n");
+    out.push_str("                   [--skew Z] [--replace N] [--local-experts L]\n");
     out.push_str("                   [--threads T] [--json FILE]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");
@@ -291,12 +301,13 @@ mod tests {
         ] {
             assert!(find(id).is_some(), "missing scenario {id}");
         }
-        // PR 2's fleet layer registers through the same table.
-        for id in ["fleet_frontier", "fleet_burst", "fleet_trace"] {
+        // PR 2's fleet layer registers through the same table, as does
+        // PR 3's re-placement sweep.
+        for id in ["fleet_frontier", "fleet_burst", "fleet_trace", "replacement_skew"] {
             assert!(find(id).is_some(), "missing scenario {id}");
             assert_eq!(find(id).unwrap().group, "fleet");
         }
-        assert_eq!(registry().len(), 21);
+        assert_eq!(registry().len(), 22);
     }
 
     #[test]

@@ -116,6 +116,7 @@ pub struct Scenario {
     slice_bytes: Option<usize>,
     prefetch_fraction: Option<f64>,
     routing_skew: Option<f64>,
+    replacement_interval: Option<usize>,
     seed: Option<u64>,
     // Workload / fleet.
     requests: usize,
@@ -163,6 +164,7 @@ impl Scenario {
             slice_bytes: None,
             prefetch_fraction: None,
             routing_skew: None,
+            replacement_interval: None,
             seed: None,
             requests: if target == BuildTarget::Context { 2 } else { 64 },
             target,
@@ -305,6 +307,15 @@ impl Scenario {
         self
     }
 
+    /// Online expert re-placement epoch length (requests per group for
+    /// fleet scenarios, chunks for context DES runs); 0 keeps the
+    /// placement frozen at startup.  Effective for DWDP with
+    /// `routing_skew > 0`.
+    pub fn replacement_interval(mut self, interval: usize) -> Self {
+        self.replacement_interval = Some(interval);
+        self
+    }
+
     /// RNG seed for the whole scenario.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
@@ -442,6 +453,9 @@ impl Scenario {
         if let Some(v) = self.routing_skew {
             serving.routing_skew = v;
         }
+        if let Some(v) = self.replacement_interval {
+            serving.replacement_interval = v;
+        }
         if let Some(v) = self.seed {
             serving.seed = v;
         }
@@ -560,6 +574,8 @@ mod tests {
             .tdm(false)
             .merge_elim(false)
             .prefetch_fraction(0.07)
+            .routing_skew(1.0)
+            .replacement_interval(16)
             .seed(42)
             .requests(3)
             .build()
@@ -571,6 +587,8 @@ mod tests {
         assert_eq!(spec.serving.max_num_tokens, 16384);
         assert!(!spec.serving.tdm);
         assert!(!spec.serving.merge_elim);
+        assert_eq!(spec.serving.routing_skew, 1.0);
+        assert_eq!(spec.serving.replacement_interval, 16);
         assert_eq!(spec.serving.seed, 42);
         // validate() filled the derived default.
         assert_eq!(spec.serving.local_experts, 32);

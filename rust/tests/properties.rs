@@ -10,7 +10,7 @@ use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::dwdp::{build_copy_plan, plan_bytes};
 use dwdp::fleet::{run_sweep, simulate_analytic, ClusterPolicy, SweepPoint};
 use dwdp::model::Category;
-use dwdp::placement::ExpertPlacement;
+use dwdp::placement::{migration_cost, migration_fetches, target_placement, ExpertPlacement};
 use dwdp::serving::{Fidelity, Scenario, ServingStack};
 use dwdp::util::Rng;
 use dwdp::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, Request, WorkloadTrace};
@@ -91,6 +91,90 @@ fn prop_placement_invariants() {
                 assert!(p.is_local(src, e), "seed {seed}: bad home");
                 assert!(!p.is_local(r, e), "seed {seed}: fetching local expert");
             }
+        }
+    }
+}
+
+/// Property: online re-placement preserves the weak placement constraint
+/// at every epoch — for arbitrary load vectors, the target placement
+/// covers every expert, keeps equal local counts, and never exceeds one
+/// replica per rank — and the migration accounting conserves bytes: total
+/// = sum over ranks = copied shards x expert bytes, every pull sourced
+/// from a rank that held the expert under the old placement.
+#[test]
+fn prop_replacement_preserves_invariants_and_conserves_migration() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let n_experts = (4 + rng.below(124)) as usize;
+        let n_ranks = (2 + rng.below(7)) as usize;
+        let min_local = n_experts.div_ceil(n_ranks);
+        let local = min_local + rng.below((n_experts - min_local + 1) as u64) as usize;
+        let expert_bytes = 1e5 + rng.f64() * 3e7;
+        let mut placement = ExpertPlacement::balanced(n_experts, n_ranks, local);
+        // Several epochs of adversarial loads: zipf-ish, spiky, and flat.
+        for epoch in 0..4 {
+            let loads: Vec<f64> = (0..n_experts)
+                .map(|e| match epoch {
+                    0 => 1000.0 / ((e + 1) as f64).powf(0.5 + rng.f64() * 1.5),
+                    1 => {
+                        if rng.f64() < 0.1 {
+                            1000.0 * rng.f64()
+                        } else {
+                            rng.f64()
+                        }
+                    }
+                    2 => 1.0,
+                    _ => rng.f64() * 50.0,
+                })
+                .collect();
+            let target = target_placement(n_experts, n_ranks, local, &loads);
+            assert!(target.covers_all(), "seed {seed} epoch {epoch}");
+            assert!(target.equal_sized(), "seed {seed} epoch {epoch}");
+            for r in 0..n_ranks {
+                assert_eq!(
+                    target.local_experts(r).len(),
+                    local.min(n_experts),
+                    "seed {seed} epoch {epoch} rank {r}"
+                );
+            }
+            for e in 0..n_experts {
+                let reps = target.replicas(e);
+                assert!(
+                    (1..=n_ranks).contains(&reps),
+                    "seed {seed} epoch {epoch}: expert {e} has {reps} replicas"
+                );
+            }
+            let report = migration_cost(&placement, &target, expert_bytes);
+            let per_rank_sum: f64 = report.per_rank_bytes.iter().sum();
+            assert!(
+                (report.total_bytes - per_rank_sum).abs() < 1.0,
+                "seed {seed} epoch {epoch}: per-rank bytes do not sum"
+            );
+            assert!(
+                (report.total_bytes - report.n_copied as f64 * expert_bytes).abs() < 1.0,
+                "seed {seed} epoch {epoch}: byte total != copies x shard"
+            );
+            let mut copies = 0usize;
+            for r in 0..n_ranks {
+                for (src, e) in migration_fetches(&placement, &target, r) {
+                    copies += 1;
+                    assert_ne!(src, r, "seed {seed} epoch {epoch}: self-pull");
+                    assert!(
+                        placement.is_local(src, e),
+                        "seed {seed} epoch {epoch}: source lost the expert"
+                    );
+                    assert!(
+                        !placement.is_local(r, e),
+                        "seed {seed} epoch {epoch}: re-copied a resident expert"
+                    );
+                    assert!(
+                        target.is_local(r, e),
+                        "seed {seed} epoch {epoch}: pulled an expert not in the target"
+                    );
+                }
+            }
+            assert_eq!(copies, report.n_copied, "seed {seed} epoch {epoch}");
+            placement = target;
         }
     }
 }
@@ -371,6 +455,47 @@ fn prop_fleet_sweep_thread_invariance() {
     for threads in [2, 5, 16] {
         let parallel = run_sweep(&points, threads);
         assert_eq!(parallel.len(), serial.len());
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(
+                a.to_json().dump(),
+                b.to_json().dump(),
+                "point {i} differs at {threads} threads"
+            );
+        }
+    }
+}
+
+/// Property (fleet): sweep output stays bit-identical across thread counts
+/// with online expert re-placement enabled — the re-placement loop's
+/// sampling, migration, and byte accounting are all pure functions of the
+/// spec (compared through the canonical JSON fingerprint, which includes
+/// the remote-fetch / migration extras).
+#[test]
+fn prop_fleet_sweep_thread_invariance_with_replacement() {
+    let mut points = Vec::new();
+    for (i, skew) in [0.8, 1.5].into_iter().enumerate() {
+        for (j, interval) in [0usize, 4].into_iter().enumerate() {
+            let spec = tiny_fleet_scenario(2)
+                .local_experts(6)
+                .prefetch_fraction(1.0)
+                .routing_skew(skew)
+                .replacement_interval(interval)
+                .arrival(ArrivalProcess::GammaBurst { rate: 30.0, cv2: 4.0 })
+                .requests(32)
+                .seed((i * 2 + j) as u64)
+                .build()
+                .unwrap();
+            points.push(SweepPoint::new(
+                &format!("skew={skew} replace={interval}"),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let serial = run_sweep(&points, 1);
+    for threads in [2, 8] {
+        let parallel = run_sweep(&points, threads);
         for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_eq!(
