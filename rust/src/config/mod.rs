@@ -322,6 +322,18 @@ pub struct ServingConfig {
     /// re-placement (the placement stays frozen at startup).  Only
     /// meaningful for DWDP with `routing_skew > 0`.
     pub replacement_interval: usize,
+    /// Mean time between failures per serving group, seconds (fleet
+    /// scenarios; exponential inter-failure times).  0 or infinite
+    /// disables failure injection entirely — groups never die and the
+    /// simulation is bit-identical to the pre-churn path.
+    pub mtbf: f64,
+    /// Mean time to repair a failed group, seconds (exponential).  Must be
+    /// finite and positive when failure injection is enabled.
+    pub mttr: f64,
+    /// When a group failure kills its in-flight prefill batch, re-queue
+    /// the batch's requests through the cluster router (true) instead of
+    /// dropping them as failed (false).
+    pub requeue_on_failure: bool,
     /// RNG seed for the whole experiment.
     pub seed: u64,
 }
@@ -343,8 +355,17 @@ impl ServingConfig {
             prefetch_fraction: 1.0,
             routing_skew: 0.0,
             replacement_interval: 0,
+            mtbf: 0.0,
+            mttr: 0.0,
+            requeue_on_failure: false,
             seed: 0,
         }
+    }
+
+    /// Failure injection active?  A finite positive MTBF turns it on; 0 or
+    /// infinity means groups never die.
+    pub fn failures_enabled(&self) -> bool {
+        self.mtbf > 0.0 && self.mtbf.is_finite()
     }
 
     /// Fill derived defaults and sanity-check. Returns an error string on
@@ -379,6 +400,18 @@ impl ServingConfig {
             return Err(format!(
                 "prefetch_fraction must be in [0,1], got {}",
                 self.prefetch_fraction
+            ));
+        }
+        if self.mtbf < 0.0 || self.mtbf.is_nan() {
+            return Err(format!(
+                "mtbf must be >= 0 seconds (0 or inf disables failures), got {}",
+                self.mtbf
+            ));
+        }
+        if self.failures_enabled() && !(self.mttr.is_finite() && self.mttr > 0.0) {
+            return Err(format!(
+                "failure injection (mtbf {}) needs a finite mttr > 0, got {}",
+                self.mtbf, self.mttr
             ));
         }
         Ok(())
@@ -441,6 +474,11 @@ pub fn apply_json_overrides(
             "prefetch_fraction" => serving.prefetch_fraction = get("0..1")?,
             "routing_skew" => serving.routing_skew = get("zipf exponent")?,
             "replacement_interval" => serving.replacement_interval = get("count")? as usize,
+            "mtbf" => serving.mtbf = get("seconds")?,
+            "mttr" => serving.mttr = get("seconds")?,
+            "requeue_on_failure" => {
+                serving.requeue_on_failure = v.as_bool().ok_or(format!("{k}: bool"))?
+            }
             "seed" => serving.seed = get("u64")? as u64,
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -495,6 +533,32 @@ mod tests {
     }
 
     #[test]
+    fn failure_knobs_validate() {
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        assert!(!s.failures_enabled());
+        s.validate(&m).unwrap();
+        // Enabling MTBF requires a usable MTTR.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.mtbf = 30.0;
+        assert!(s.failures_enabled());
+        assert!(s.validate(&m).is_err());
+        s.mttr = 2.0;
+        s.validate(&m).unwrap();
+        // Negative or NaN MTBF is rejected; infinity means "never fails".
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.mtbf = -1.0;
+        assert!(s.validate(&m).is_err());
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.mtbf = f64::NAN;
+        assert!(s.validate(&m).is_err());
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.mtbf = f64::INFINITY;
+        assert!(!s.failures_enabled());
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
     fn remote_experts_accounts_redundancy() {
         let m = PaperModelConfig::deepseek_r1();
         let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
@@ -521,7 +585,8 @@ mod tests {
         let mut m = m0.clone();
         let mut s = ServingConfig::default_context(ParallelMode::Dep, 4);
         let j = Json::parse(
-            r#"{"mode": "dwdp", "group_size": 8, "isl": 16384, "tdm": false, "ce_bw": 8e11}"#,
+            r#"{"mode": "dwdp", "group_size": 8, "isl": 16384, "tdm": false, "ce_bw": 8e11,
+                "mtbf": 45.0, "mttr": 3.0, "requeue_on_failure": true}"#,
         )
         .unwrap();
         apply_json_overrides(&j, &mut hw, &mut m, &mut s).unwrap();
@@ -530,6 +595,9 @@ mod tests {
         assert_eq!(s.isl, 16384);
         assert!(!s.tdm);
         assert_eq!(hw.ce_bw, 8e11);
+        assert_eq!(s.mtbf, 45.0);
+        assert_eq!(s.mttr, 3.0);
+        assert!(s.requeue_on_failure);
 
         let bad = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
         assert!(apply_json_overrides(&bad, &mut hw, &mut m, &mut s).is_err());

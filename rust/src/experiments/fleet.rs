@@ -1,6 +1,7 @@
-//! Fleet-scale regenerators: the cluster frontier, burst robustness, and
-//! trace-replay scenarios (`fleet_frontier`, `fleet_burst`, `fleet_trace`
-//! in the registry).
+//! Fleet-scale regenerators: the cluster frontier, burst robustness,
+//! trace-replay, re-placement, and failure-injection scenarios
+//! (`fleet_frontier`, `fleet_burst`, `fleet_trace`, `replacement_skew`,
+//! `fleet_churn` in the registry).
 //!
 //! These go beyond the paper's single-deployment §5.3 sweep: they stress
 //! DWDP's no-sync independence claim at cluster granularity, under the
@@ -71,6 +72,17 @@ pub fn replacement_scenario(
         .rate(6.0)
         .requests(n_requests())
         .seed(7)
+}
+
+/// Scenario for the churn sweep: the calibrated fleet base under Poisson
+/// arrivals with failure injection and re-queueing on.  MTBF 0 disables
+/// failures (the "mtbf=inf" baseline rows).
+pub fn churn_scenario(mode: ParallelMode, mtbf: f64, mttr: f64) -> Scenario {
+    fleet_scenario(mode, 4)
+        .rate(4.0)
+        .mtbf(mtbf)
+        .mttr(mttr)
+        .requeue_on_failure(true)
 }
 
 /// A bursty recording all trace-replay rows share: generated once from the
@@ -343,6 +355,81 @@ pub fn replacement_skew() -> Table {
     t
 }
 
+const CHURN_HEADER: [&str; 9] = [
+    "scenario",
+    "offered",
+    "served",
+    "failed",
+    "requeued",
+    "availability (%)",
+    "p99 TTFT (ms)",
+    "goodput (%)",
+    "churn goodput (%)",
+];
+
+/// `fleet_churn` — failure injection: DWDP vs the DEP-coupled mode over a
+/// 4-group cluster at equal MTBF/MTTR.  Per-group failure streams are
+/// identical across the two modes (same seeds), so the gap is causal: a
+/// DWDP failure takes out one group while the router re-steers around it;
+/// a DEP failure stalls every group sharing the dead group's expert
+/// shards for the repair + warm-up.  The mtbf=inf rows pin the zero-delta
+/// contract (failure injection off is bit-identical to the legacy path),
+/// and the final row re-checks sweep determinism across thread counts
+/// with churn enabled.
+pub fn fleet_churn() -> Table {
+    let mttr = 2.0;
+    let mut points = Vec::new();
+    for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+        for (tag, mtbf) in [("mtbf=inf", 0.0), ("mtbf=20s", 20.0), ("mtbf=5s", 5.0)] {
+            let spec = churn_scenario(mode, mtbf, mttr).build().expect("fleet_churn scenario");
+            points.push(SweepPoint::new(
+                &format!("{}4 x4 {tag}", mode.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let parallel = run_sweep(&points, available_threads());
+    let serial = run_sweep(&points, 1);
+    let bit_identical = parallel.iter().zip(&serial).all(|(a, b)| match (a, b) {
+        (Ok(a), Ok(b)) => a.to_json().dump() == b.to_json().dump(),
+        (Err(a), Err(b)) => a == b,
+        _ => false,
+    });
+    let mut t = Table::new(&CHURN_HEADER).with_title(
+        "Fleet churn: failure injection at equal MTBF/MTTR, DWDP independence vs DEP lockstep",
+    );
+    for (p, r) in points.iter().zip(&parallel) {
+        match r {
+            Ok(r) => {
+                t.row(vec![
+                    p.label.clone(),
+                    r.offered.to_string(),
+                    r.n_requests.to_string(),
+                    r.failed.to_string(),
+                    r.requeued.to_string(),
+                    f(r.availability * 100.0, 1),
+                    f(r.p99_ttft * 1e3, 0),
+                    f(r.goodput * 100.0, 1),
+                    extra(r, "goodput under churn (%)").to_string(),
+                ]);
+            }
+            Err(e) => {
+                let mut row = vec![format!("{} (failed: {e})", p.label)];
+                row.resize(CHURN_HEADER.len(), "-".into());
+                t.row(row);
+            }
+        }
+    }
+    let mut row = vec![
+        "sweep determinism (1 thread vs all cores)".to_string(),
+        if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
+    ];
+    row.resize(CHURN_HEADER.len(), "-".into());
+    t.row(row);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +475,65 @@ mod tests {
         let text = t.render();
         for needle in ["static", "eplb/8", "DEP4", "local=96", "bit-identical"] {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn churn_table_covers_modes_and_mtbf_and_stays_deterministic() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = fleet_churn();
+        // 2 modes x 3 MTBF levels + the determinism row.
+        assert_eq!(t.n_rows(), 7);
+        let text = t.render();
+        for needle in ["DWDP4", "DEP4", "mtbf=inf", "mtbf=5s", "bit-identical"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    /// The PR-4 acceptance criterion: at equal MTBF/MTTR the `fleet_churn`
+    /// scenario's DWDP goodput degrades strictly more gracefully than the
+    /// DEP-coupled mode, and with failures disabled (mtbf 0 or infinity)
+    /// the outcome is identical to the pre-churn path.
+    #[test]
+    fn dwdp_goodput_degrades_more_gracefully_than_dep() {
+        let run = |mode, mtbf| {
+            // Pin the load regardless of DWDP_QUICK; an effectively
+            // unbounded SLO makes churn goodput measure completed-vs-
+            // offered, so the comparison is about the failure model, not
+            // latency calibration.
+            let spec = churn_scenario(mode, mtbf, 2.0)
+                .requests(64)
+                .slo(1e4, 1e4)
+                .build()
+                .unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let dwdp = run(ParallelMode::Dwdp, 5.0);
+        let dep = run(ParallelMode::Dep, 5.0);
+        assert_eq!(dwdp.offered, dep.offered, "identical offered load");
+        assert!(dep.failed > 0, "lockstep churn must lose requests");
+        assert!(
+            dwdp.goodput_under_churn() > dep.goodput_under_churn(),
+            "DWDP churn goodput {} must degrade more gracefully than DEP {}",
+            dwdp.goodput_under_churn(),
+            dep.goodput_under_churn()
+        );
+        // Zero delta with failures disabled, for both disabling spellings.
+        for mode in [ParallelMode::Dwdp, ParallelMode::Dep] {
+            let base = simulate_analytic(
+                &fleet_scenario(mode, 4).rate(4.0).requests(64).build().unwrap(),
+            )
+            .unwrap();
+            for mtbf in [0.0, f64::INFINITY] {
+                let off = simulate_analytic(
+                    &churn_scenario(mode, mtbf, 2.0).requests(64).build().unwrap(),
+                )
+                .unwrap();
+                assert_eq!(off.failed, 0);
+                assert_eq!(off.metrics.median_ttft(), base.metrics.median_ttft());
+                assert_eq!(off.span, base.span);
+                assert_eq!(off.admitted, base.admitted);
+            }
         }
     }
 

@@ -26,6 +26,20 @@
 //! epoch boundary — the `replacement_interval` serving knob, swept by the
 //! `replacement_skew` registry scenario.
 //!
+//! **Failure injection** (the `mtbf`/`mttr`/`requeue_on_failure` serving
+//! knobs): each group lives through a [`GroupState`] lifecycle — `Up ->
+//! Down` (exponential MTBF), `Down -> Recovering` (exponential repair),
+//! `Recovering -> Up` (warm-up: every rank re-fetches its resident expert
+//! shard over the NVLink copy-engine model).  The [`ClusterRouter`]
+//! excludes non-serving groups; a failure kills the group's in-flight
+//! prefill batch as a whole (the fused forward dies with the rank), and
+//! the victims are either re-queued through the router or dropped as
+//! failed.  Under DWDP the blast radius is one group; under DEP the groups
+//! share expert shards, so one failure stalls the *whole* fleet for the
+//! repair — the coupling the `fleet_churn` registry scenario quantifies.
+//! Failure streams are seeded per group, so sweeps stay bit-identical
+//! across thread counts with churn enabled.
+//!
 //! Entry points: describe the cluster with
 //! [`crate::serving::Scenario::fleet`] and run it through a
 //! [`crate::serving::ServingStack`] (the backends dispatch here), or call
@@ -52,22 +66,35 @@ use crate::workload::{IslDist, OpenLoopGen, Request, RoutingSkew};
 /// summarizes, plus the conservation counters the property tests check.
 #[derive(Debug, Clone)]
 pub struct FleetOutcome {
-    /// Per-request records of every admitted (and therefore completed)
-    /// request.
+    /// Per-request records of every request that completed service.
     pub metrics: ServingMetrics,
     /// The SLO goodput is judged against.
     pub slo: Slo,
-    /// Requests offered to the cluster (admitted + shed).
+    /// Requests offered to the cluster (admitted + shed + failed).
     pub offered: usize,
+    /// Requests that completed service (always equals `metrics.n()`).  A
+    /// request admitted but later lost to a failure counts under
+    /// [`FleetOutcome::failed`], not here.
     pub admitted: usize,
     pub shed: usize,
+    /// Requests dropped by failure injection: refused because no group was
+    /// serving, or killed in flight and not (or unsuccessfully) re-queued.
+    pub failed: usize,
+    /// Requests re-queued through the router at least once after a group
+    /// failure killed their batch (regardless of their eventual fate).
+    pub requeued: usize,
     /// Prompt-token conservation: `offered_tokens` always equals
-    /// `admitted_tokens + shed_tokens`.
+    /// `admitted_tokens + shed_tokens + failed_tokens`.
     pub offered_tokens: usize,
     pub admitted_tokens: usize,
     pub shed_tokens: usize,
+    pub failed_tokens: usize,
     pub per_group_requests: Vec<usize>,
     pub per_group_tokens: Vec<usize>,
+    /// Per-group fraction of the run horizon spent serving (1.0 without
+    /// failure injection).  Under DEP coupling every group shares the
+    /// union outage, so all entries move together.
+    pub per_group_availability: Vec<f64>,
     /// Expected remote expert-fetch volume charged to DWDP prefetch across
     /// all groups, bytes (0 for DEP or uniform routing, where the
     /// activation-aware demand model is inactive).
@@ -78,6 +105,22 @@ pub struct FleetOutcome {
     pub replacements: usize,
     /// First arrival to last finish over admitted requests, seconds.
     pub span: f64,
+}
+
+impl FleetOutcome {
+    /// Goodput under churn: the fraction of *offered* requests that
+    /// completed within the SLO.  Unlike
+    /// [`ServingMetrics::goodput_fraction`] (which judges only completed
+    /// requests), this charges shed and failed requests against the
+    /// cluster — the measure under which DWDP's independent groups degrade
+    /// more gracefully than DEP's lockstep coupling.
+    pub fn goodput_under_churn(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        let met = self.metrics.records.iter().filter(|r| self.slo.met_by(r)).count();
+        met as f64 / self.offered as f64
+    }
 }
 
 /// Generate the open-loop workload a fleet scenario describes (shared by
@@ -98,6 +141,217 @@ pub fn fleet_workload(spec: &ScenarioSpec) -> Result<Vec<Request>, String> {
         return Err("fleet workload is empty (exhausted trace or zero horizon)".into());
     }
     Ok(requests)
+}
+
+/// Lifecycle of one serving group under failure injection.
+///
+/// `Up -> Down` at exponential MTBF instants, `Down -> Recovering` after
+/// an exponential repair, `Recovering -> Up` once the warm-up (re-fetching
+/// the group's resident expert shard over NVLink) completes.  Down and
+/// recovering groups are excluded from routing ([`GroupLoad::up`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupState {
+    /// Serving traffic.
+    Up,
+    /// Failed; repair in progress.
+    Down,
+    /// Repaired; re-fetching the expert shard before serving again.
+    Recovering,
+}
+
+/// A request's in-flight batch was killed by a group failure at `at`;
+/// the simulation either re-queues it through the router or drops it as
+/// failed.
+struct Spill {
+    idx: usize,
+    at: f64,
+}
+
+/// A request whose batch is killed more than this many times is dropped
+/// as failed even with re-queueing on — the bound that keeps pathological
+/// churn (MTTR >> MTBF) from re-queueing forever.
+const MAX_RESPILLS: u32 = 4;
+
+/// One group's failure/repair renewal process: outage windows
+/// `(down_at, repaired_at, serving_at)` sampled lazily from a per-group
+/// seeded [`Rng`].  Windows are disjoint and sorted (failures do not
+/// strike a group that is already down), and the materialized sequence is
+/// a pure function of the seed — queries only ever *extend* it, so fleet
+/// runs stay bit-identical regardless of thread count or query order.
+struct GroupFailures {
+    rng: Rng,
+    mtbf: f64,
+    mttr: f64,
+    /// Warm-up after repair: seconds to re-fetch the rank-resident expert
+    /// shard (all MoE layers) over the NVLink copy-engine model.
+    warmup: f64,
+    windows: Vec<(f64, f64, f64)>,
+    /// Scheduled start of the next, not yet materialized, outage.
+    next_down: f64,
+}
+
+impl GroupFailures {
+    fn new(seed: u64, mtbf: f64, mttr: f64, warmup: f64) -> GroupFailures {
+        let mut rng = Rng::new(seed);
+        let next_down = rng.exponential(1.0 / mtbf);
+        GroupFailures { rng, mtbf, mttr, warmup, windows: Vec::new(), next_down }
+    }
+
+    /// Materialize every window beginning at or before `t`.
+    fn ensure(&mut self, t: f64) {
+        while self.next_down <= t {
+            let down = self.next_down;
+            let repaired = down + self.rng.exponential(1.0 / self.mttr);
+            let serving = repaired + self.warmup;
+            self.windows.push((down, repaired, serving));
+            self.next_down = serving + self.rng.exponential(1.0 / self.mtbf);
+        }
+    }
+
+    /// The outage window containing `t`, if the group is not serving then.
+    fn window_at(&mut self, t: f64) -> Option<(f64, f64, f64)> {
+        self.ensure(t);
+        // Windows are sorted and disjoint: only the last one starting at
+        // or before `t` can contain it.
+        let i = self.windows.partition_point(|w| w.0 <= t);
+        if i == 0 {
+            return None;
+        }
+        let w = self.windows[i - 1];
+        (t < w.2).then_some(w)
+    }
+
+    /// First failure instant strictly after `t`.
+    fn next_down_after(&mut self, t: f64) -> f64 {
+        self.ensure(t);
+        let i = self.windows.partition_point(|w| w.0 <= t);
+        match self.windows.get(i) {
+            Some(w) => w.0,
+            None => self.next_down,
+        }
+    }
+}
+
+/// The fleet's failure model: one [`GroupFailures`] renewal process per
+/// group, plus the DEP coupling rule.  Under DWDP a group's outages are
+/// its own; under DEP every group shares expert shards with its peers, so
+/// *any* group's outage stalls the whole fleet until repair + warm-up
+/// completes (synchronous all-to-all cannot run with a dead participant).
+struct FleetFailures {
+    groups: Vec<GroupFailures>,
+    coupled: bool,
+    requeue: bool,
+}
+
+impl FleetFailures {
+    /// Build the failure model a spec asks for; `None` when failure
+    /// injection is disabled (`mtbf` of 0 or infinity), which keeps the
+    /// simulation bit-identical to the pre-churn path.
+    fn from_spec(spec: &ScenarioSpec, n_groups: usize) -> Option<FleetFailures> {
+        let s = &spec.serving;
+        if !s.failures_enabled() {
+            return None;
+        }
+        // Warm-up: every rank of a repaired group re-pulls its resident
+        // expert shard for all MoE layers before serving — priced exactly
+        // like a re-placement migration (parallel NVLink copy-engine
+        // pulls, slowest rank gates the group).
+        let shard_bytes = s.local_experts.max(1) as f64
+            * spec.model.expert_bytes()
+            * spec.model.n_moe_layers() as f64;
+        let report = placement::MigrationReport {
+            per_rank_bytes: vec![shard_bytes; s.group_size],
+            total_bytes: shard_bytes * s.group_size as f64,
+            n_copied: s.local_experts.max(1) * s.group_size,
+        };
+        let warmup = placement::migration_seconds(&report, &spec.hw);
+        let groups = (0..n_groups)
+            .map(|g| {
+                GroupFailures::new(
+                    s.seed ^ 0xFA11 ^ (g as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    s.mtbf,
+                    s.mttr,
+                    warmup,
+                )
+            })
+            .collect();
+        Some(FleetFailures {
+            groups,
+            coupled: s.mode == ParallelMode::Dep,
+            requeue: s.requeue_on_failure,
+        })
+    }
+
+    /// When group `g`, not serving at `t`, will serve again; `None` if it
+    /// is serving at `t`.  Under DEP coupling the stall is the union of
+    /// every group's windows, so the chain of overlapping outages is
+    /// chased to its end.
+    fn serving_resume(&mut self, g: usize, t: f64) -> Option<f64> {
+        if !self.coupled {
+            return self.groups[g].window_at(t).map(|w| w.2);
+        }
+        let mut resume = t;
+        let mut stalled = false;
+        loop {
+            let mut advanced = false;
+            for gf in self.groups.iter_mut() {
+                if let Some(w) = gf.window_at(resume) {
+                    if w.2 > resume {
+                        resume = w.2;
+                        stalled = true;
+                        advanced = true;
+                    }
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        stalled.then_some(resume)
+    }
+
+    /// First failure instant strictly after `t` that affects group `g`.
+    fn next_down_after(&mut self, g: usize, t: f64) -> f64 {
+        if !self.coupled {
+            return self.groups[g].next_down_after(t);
+        }
+        let mut next = f64::INFINITY;
+        for gf in self.groups.iter_mut() {
+            next = next.min(gf.next_down_after(t));
+        }
+        next
+    }
+
+    /// Lifecycle state of group `g` at `t` (coupling included: under DEP
+    /// any group's repair makes every group `Down`).
+    fn state(&mut self, g: usize, t: f64) -> GroupState {
+        let range = if self.coupled { 0..self.groups.len() } else { g..g + 1 };
+        let mut state = GroupState::Up;
+        for i in range {
+            match self.groups[i].window_at(t) {
+                None => {}
+                Some((_, repaired, _)) if t < repaired => return GroupState::Down,
+                Some(_) => state = GroupState::Recovering,
+            }
+        }
+        state
+    }
+
+    /// Seconds in `[0, horizon)` during which group `g` is not serving.
+    fn downtime(&mut self, g: usize, horizon: f64) -> f64 {
+        let mut t = 0.0;
+        let mut down = 0.0;
+        while t < horizon {
+            match self.serving_resume(g, t) {
+                Some(resume) => {
+                    down += resume.min(horizon) - t;
+                    t = resume;
+                }
+                None => t = self.next_down_after(g, t),
+            }
+        }
+        down
+    }
 }
 
 /// Per-group online expert re-placement state — the tentpole of the
@@ -139,6 +393,11 @@ struct DynamicPlacement {
     remote_fetch_bytes: f64,
     migration_bytes: f64,
     replacements: usize,
+    /// The most recent batch's contributions, kept so a batch killed by a
+    /// failure can be un-charged ([`DynamicPlacement::revert_batch`]):
+    /// only completed prefills count toward fetch volume and epoch loads.
+    last_fetch_bytes: f64,
+    last_loads: Vec<f64>,
 }
 
 impl DynamicPlacement {
@@ -162,6 +421,8 @@ impl DynamicPlacement {
             remote_fetch_bytes: 0.0,
             migration_bytes: 0.0,
             replacements: 0,
+            last_fetch_bytes: 0.0,
+            last_loads: Vec::new(),
         }
     }
 
@@ -174,8 +435,9 @@ impl DynamicPlacement {
         let loads = self.skew.sample_loads(sample, &mut self.rng);
         let scale_up = batch_tokens as f64 / sample as f64;
         let loads_f: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
-        for (acc, &l) in self.epoch_loads.iter_mut().zip(&loads_f) {
-            *acc += l * scale_up;
+        self.last_loads = loads_f.iter().map(|&l| l * scale_up).collect();
+        for (acc, &add) in self.epoch_loads.iter_mut().zip(&self.last_loads) {
+            *acc += add;
         }
         let fractions = placement::fetch_fractions(&loads_f, self.prefetch_fraction);
         let scale =
@@ -183,9 +445,24 @@ impl DynamicPlacement {
         let remote_experts = scale
             * self.prefetch_fraction
             * (self.placement.n_experts - self.local_per_rank) as f64;
-        self.remote_fetch_bytes +=
+        self.last_fetch_bytes =
             remote_experts * self.expert_bytes * self.moe_layers * n_chunks as f64;
+        self.remote_fetch_bytes += self.last_fetch_bytes;
         scale
+    }
+
+    /// Un-charge the most recent batch: its fused forward was killed by a
+    /// failure, so neither its fetch volume nor its epoch observation
+    /// counts — the re-queued requests pay in full when a batch actually
+    /// completes (double-charging under churn would overstate fetch
+    /// volume and skew the re-placement hysteresis).
+    fn revert_batch(&mut self) {
+        self.remote_fetch_bytes -= self.last_fetch_bytes;
+        self.last_fetch_bytes = 0.0;
+        let added = std::mem::take(&mut self.last_loads);
+        for (acc, &add) in self.epoch_loads.iter_mut().zip(&added) {
+            *acc -= add;
+        }
     }
 
     /// Advance the epoch by one completed batch of `n_requests`; returns
@@ -233,7 +510,7 @@ impl DynamicPlacement {
 
 /// One serving group's queueing state during the chronological sweep.
 struct GroupSim {
-    /// Request indices admitted but not yet batched, in arrival order.
+    /// Request indices admitted but not yet batched, in ready order.
     pending: VecDeque<usize>,
     pending_tokens: usize,
     /// When the in-flight prefill batch completes.
@@ -245,10 +522,15 @@ struct GroupSim {
     /// pending backlog from the very first arrival (a 0 prior made
     /// `SloAdmission` blind to the backlog during the initial burst).
     spt: f64,
+    /// The analytic cold-start prior for `spt`.  Re-applied whenever the
+    /// group comes back from a failure: the restarted process lost its
+    /// EWMA, and the seeded prior is what keeps admission pricing the
+    /// backlog through every cold start, not just the first.
+    spt0: f64,
     /// Online expert re-placement state (DWDP with `routing_skew > 0`).
     dynamic: Option<DynamicPlacement>,
-    /// Every request index admitted to this group.
-    assigned: Vec<usize>,
+    /// Request indices whose prefill completed on this group.
+    served: Vec<usize>,
     tokens: usize,
 }
 
@@ -260,42 +542,61 @@ impl GroupSim {
             free_at: 0.0,
             busy_tokens: 0,
             spt: spt0,
+            spt0,
             dynamic,
-            assigned: Vec::new(),
+            served: Vec::new(),
             tokens: 0,
         }
     }
 
     /// Finalize every prefill batch whose start time is <= `now`.  A batch
-    /// starts at max(group free, head arrival) and greedily admits queued
-    /// requests that have arrived by that start under the MNT budget
+    /// starts at max(group free, head ready time) and greedily admits
+    /// queued requests that are ready by that start under the MNT budget
     /// (always at least one request, mirroring `DisaggSim`).
+    ///
+    /// With failure injection, a batch cannot start while the group is
+    /// down or warming up (its start shifts to the serving-resume
+    /// instant), and a failure landing before the batch completes kills
+    /// the whole batch — the fused forward dies with the rank — pushing
+    /// every member into `spills` for the caller to re-queue or fail.
     fn advance(
         &mut self,
         now: f64,
+        g: usize,
         mnt: usize,
         requests: &[Request],
+        ready: &[f64],
         prefill: &dyn PrefillOffsets,
         first_token: &mut [f64],
+        mut failures: Option<&mut FleetFailures>,
+        spills: &mut Vec<Spill>,
     ) {
         loop {
             let Some(&head) = self.pending.front() else { break };
-            let start = self.free_at.max(requests[head].arrival);
+            let mut start = self.free_at.max(ready[head]);
+            if let Some(f) = failures.as_deref_mut() {
+                if let Some(resume) = f.serving_resume(g, start) {
+                    // The group is down (or warming up) at the would-be
+                    // start; serving resumes at `resume`, and the restarted
+                    // process re-enters with the cold-start prior.
+                    start = resume;
+                    self.spt = self.spt0;
+                }
+            }
             if start > now {
                 break;
             }
             let mut batch: Vec<usize> = Vec::new();
             let mut tokens = 0usize;
             while let Some(&i) = self.pending.front() {
-                let r = &requests[i];
-                if r.arrival > start {
+                if ready[i] > start {
                     break;
                 }
-                if !batch.is_empty() && tokens + r.isl > mnt {
+                if !batch.is_empty() && tokens + requests[i].isl > mnt {
                     break;
                 }
                 batch.push(i);
-                tokens += r.isl;
+                tokens += requests[i].isl;
                 self.pending.pop_front();
             }
             self.pending_tokens -= tokens;
@@ -310,9 +611,29 @@ impl GroupSim {
                 None => prefill.offsets(&isls),
             };
             let mut end = start;
+            for &off in &offsets {
+                end = end.max(start + off);
+            }
+            if let Some(f) = failures.as_deref_mut() {
+                let kill_at = f.next_down_after(g, start);
+                if kill_at < end {
+                    // A failure (of this group, or under DEP coupling of
+                    // any peer holding its shards) lands mid-batch: the
+                    // whole batch is lost at the failure instant, and its
+                    // re-placement observation/fetch accounting with it.
+                    if let Some(d) = self.dynamic.as_mut() {
+                        d.revert_batch();
+                    }
+                    for &i in &batch {
+                        spills.push(Spill { idx: i, at: kill_at });
+                    }
+                    self.free_at = kill_at;
+                    self.busy_tokens = 0;
+                    continue;
+                }
+            }
             for (&i, &off) in batch.iter().zip(&offsets) {
                 first_token[i] = start + off;
-                end = end.max(start + off);
             }
             let observed = (end - start).max(1e-9) / tokens.max(1) as f64;
             self.spt = if self.spt == 0.0 { observed } else { 0.7 * self.spt + 0.3 * observed };
@@ -324,16 +645,101 @@ impl GroupSim {
                 self.free_at += d.on_batch_done(batch.len());
             }
             self.busy_tokens = tokens;
+            self.served.extend_from_slice(&batch);
+            self.tokens += tokens;
         }
     }
 
-    /// Load snapshot at an arrival instant (see [`GroupLoad`]).
+    /// Load snapshot at an arrival instant (see [`GroupLoad`]); `up` is
+    /// the caller's business (it needs the failure model).
     fn load(&self, now: f64) -> GroupLoad {
         let busy = if self.free_at > now { self.busy_tokens } else { 0 };
         GroupLoad {
             outstanding_tokens: self.pending_tokens + busy,
             predicted_wait: (self.free_at - now).max(0.0)
                 + self.pending_tokens as f64 * self.spt,
+            up: true,
+        }
+    }
+}
+
+/// Route one request at `now`: snapshot every group's load (marking
+/// non-serving groups so the router excludes them) and enqueue on the
+/// admitting group.  Shed/Failed verdicts are returned for the caller's
+/// accounting.
+fn route_request(
+    idx: usize,
+    now: f64,
+    isl: usize,
+    groups: &mut [GroupSim],
+    failures: &mut Option<FleetFailures>,
+    router: &mut ClusterRouter,
+) -> RouteDecision {
+    let loads: Vec<GroupLoad> = groups
+        .iter()
+        .enumerate()
+        .map(|(g, gs)| {
+            let mut l = gs.load(now);
+            if let Some(f) = failures.as_mut() {
+                l.up = f.state(g, now) == GroupState::Up;
+            }
+            l
+        })
+        .collect();
+    let decision = router.route(&loads);
+    if let RouteDecision::Admit(g) = decision {
+        groups[g].pending.push_back(idx);
+        groups[g].pending_tokens += isl;
+    }
+    decision
+}
+
+/// Bookkeeping for requests spilled by failures, shared by [`simulate`]'s
+/// arrival loop and drain loop.
+struct ChurnLedger {
+    /// Per-request ready time: the arrival, or the latest re-queue instant.
+    ready: Vec<f64>,
+    /// How many times each request's batch has been killed.
+    respills: Vec<u32>,
+    /// Requests re-queued through the router at least once.
+    requeued_mask: Vec<bool>,
+    failed: usize,
+    failed_tokens: usize,
+}
+
+/// Re-queue or fail every spilled request, in deterministic (instant,
+/// index) order.  A spill fails outright when re-queueing is off, when the
+/// request has exhausted [`MAX_RESPILLS`], or when the router finds no
+/// serving group at the failure instant (under DEP coupling the latter is
+/// always the case — the failure that killed the batch stalls the fleet).
+fn process_spills(
+    spills: &mut Vec<Spill>,
+    requests: &[Request],
+    ledger: &mut ChurnLedger,
+    groups: &mut [GroupSim],
+    failures: &mut Option<FleetFailures>,
+    router: &mut ClusterRouter,
+) {
+    spills.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.idx.cmp(&b.idx)));
+    let requeue = match failures {
+        Some(f) => f.requeue,
+        None => false,
+    };
+    for s in spills.drain(..) {
+        let isl = requests[s.idx].isl;
+        ledger.respills[s.idx] += 1;
+        if !requeue || ledger.respills[s.idx] > MAX_RESPILLS {
+            ledger.failed += 1;
+            ledger.failed_tokens += isl;
+            continue;
+        }
+        ledger.ready[s.idx] = s.at;
+        match route_request(s.idx, s.at, isl, groups, failures, router) {
+            RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
+            RouteDecision::Shed | RouteDecision::Failed => {
+                ledger.failed += 1;
+                ledger.failed_tokens += isl;
+            }
         }
     }
 }
@@ -425,49 +831,115 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             GroupSim::new(spt0, dynamic)
         })
         .collect();
+    let mut failures = FleetFailures::from_spec(spec, n_groups);
     let mut router = ClusterRouter::new(n_groups, policy);
     let mut first_token = vec![0.0f64; requests.len()];
-    let mut admitted_mask = vec![false; requests.len()];
+    let mut ledger = ChurnLedger {
+        ready: requests.iter().map(|r| r.arrival).collect(),
+        respills: vec![0; requests.len()],
+        requeued_mask: vec![false; requests.len()],
+        failed: 0,
+        failed_tokens: 0,
+    };
+    let mut spills: Vec<Spill> = Vec::new();
     let mut shed = 0usize;
     let mut shed_tokens = 0usize;
 
     // Chronological sweep: arrivals are generated in time order, so by the
     // time a request is routed every batch that could have started before
     // it is finalized — the router sees exactly the loads a live cluster
-    // would.
+    // would.  Requests spilled by failures are re-routed (or failed)
+    // before the arrival that observed them.
     for (i, r) in requests.iter().enumerate() {
-        for g in groups.iter_mut() {
-            g.advance(r.arrival, mnt, &requests, prefill, &mut first_token);
+        for g in 0..n_groups {
+            groups[g].advance(
+                r.arrival,
+                g,
+                mnt,
+                &requests,
+                &ledger.ready,
+                prefill,
+                &mut first_token,
+                failures.as_mut(),
+                &mut spills,
+            );
         }
-        let loads: Vec<GroupLoad> = groups.iter().map(|g| g.load(r.arrival)).collect();
-        match router.route(&loads) {
-            RouteDecision::Admit(g) => {
-                groups[g].pending.push_back(i);
-                groups[g].pending_tokens += r.isl;
-                groups[g].assigned.push(i);
-                groups[g].tokens += r.isl;
-                admitted_mask[i] = true;
+        if !spills.is_empty() {
+            // Only spills whose failure instant has been reached are
+            // re-routed now; a batch finalized early whose kill lands
+            // *after* this arrival stays buffered until the clock gets
+            // there (no future knowledge leaks into routing order).
+            let (mut due, rest): (Vec<Spill>, Vec<Spill>) = std::mem::take(&mut spills)
+                .into_iter()
+                .partition(|s| s.at <= r.arrival);
+            spills = rest;
+            if !due.is_empty() {
+                process_spills(
+                    &mut due,
+                    &requests,
+                    &mut ledger,
+                    &mut groups,
+                    &mut failures,
+                    &mut router,
+                );
             }
+        }
+        match route_request(i, r.arrival, r.isl, &mut groups, &mut failures, &mut router) {
+            RouteDecision::Admit(_) => {}
             RouteDecision::Shed => {
                 shed += 1;
                 shed_tokens += r.isl;
             }
+            RouteDecision::Failed => {
+                ledger.failed += 1;
+                ledger.failed_tokens += r.isl;
+            }
         }
     }
-    for g in groups.iter_mut() {
-        g.advance(f64::INFINITY, mnt, &requests, prefill, &mut first_token);
+    // Drain: finalize every remaining batch; failures can still strike, so
+    // keep re-routing spills until the fleet runs dry (the re-spill cap
+    // bounds this loop).
+    loop {
+        for g in 0..n_groups {
+            groups[g].advance(
+                f64::INFINITY,
+                g,
+                mnt,
+                &requests,
+                &ledger.ready,
+                prefill,
+                &mut first_token,
+                failures.as_mut(),
+                &mut spills,
+            );
+        }
+        if spills.is_empty() {
+            break;
+        }
+        process_spills(
+            &mut spills,
+            &requests,
+            &mut ledger,
+            &mut groups,
+            &mut failures,
+            &mut router,
+        );
     }
 
     let gen = GenModel::new(&spec.hw, &spec.model, spec.serving.group_size);
     let mut finish = vec![0.0f64; requests.len()];
+    let mut completed = vec![false; requests.len()];
     for g in &groups {
-        decode_group(&gen, &requests, &g.assigned, &first_token, &mut finish);
+        decode_group(&gen, &requests, &g.served, &first_token, &mut finish);
+        for &i in &g.served {
+            completed[i] = true;
+        }
     }
 
     let mut metrics = ServingMetrics::new();
     let mut admitted_tokens = 0usize;
     for (i, r) in requests.iter().enumerate() {
-        if admitted_mask[i] {
+        if completed[i] {
             admitted_tokens += r.isl;
             metrics.push(RequestRecord {
                 id: r.id,
@@ -480,18 +952,37 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
         }
     }
     let span = metrics.span();
+    // Availability is judged over the offered-arrival window extended to
+    // the last completion — identical arrivals across modes make the
+    // DWDP-vs-DEP comparison causal.
+    let horizon = requests
+        .last()
+        .map(|r| r.arrival)
+        .unwrap_or(0.0)
+        .max(metrics.records.iter().map(|r| r.finish).fold(0.0, f64::max));
+    let per_group_availability: Vec<f64> = (0..n_groups)
+        .map(|g| match failures.as_mut() {
+            Some(f) if horizon > 0.0 => (1.0 - f.downtime(g, horizon) / horizon).max(0.0),
+            _ => 1.0,
+        })
+        .collect();
     Ok(FleetOutcome {
         slo,
         offered: requests.len(),
         admitted: metrics.n(),
         shed,
-        // Summed over the raw workload, independently of the admit/shed
-        // accounting, so conservation is a checkable invariant.
+        failed: ledger.failed,
+        requeued: ledger.requeued_mask.iter().filter(|&&b| b).count(),
+        // Summed over the raw workload, independently of the
+        // admit/shed/fail accounting, so conservation is a checkable
+        // invariant.
         offered_tokens: requests.iter().map(|r| r.isl).sum(),
         admitted_tokens,
         shed_tokens,
-        per_group_requests: groups.iter().map(|g| g.assigned.len()).collect(),
+        failed_tokens: ledger.failed_tokens,
+        per_group_requests: groups.iter().map(|g| g.served.len()).collect(),
         per_group_tokens: groups.iter().map(|g| g.tokens).collect(),
+        per_group_availability,
         remote_fetch_bytes: groups
             .iter()
             .filter_map(|g| g.dynamic.as_ref())
@@ -738,5 +1229,228 @@ mod tests {
         let spec = Scenario::context().model(PaperModelConfig::tiny()).build().unwrap();
         assert!(simulate_analytic(&spec).is_err());
         assert!(fleet_workload(&spec).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // Failure injection
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn group_failures_walk_the_lifecycle() {
+        let mut gf = GroupFailures::new(42, 10.0, 2.0, 0.5);
+        // Materialize the first outage window through the public queries.
+        let down = gf.next_down_after(0.0);
+        assert!(down > 0.0 && down.is_finite());
+        let (d, repaired, serving) = gf.window_at(down).expect("window containing its start");
+        assert_eq!(d, down);
+        assert!(repaired > down, "repair takes positive time");
+        assert_eq!(serving, repaired + 0.5, "warm-up extends the outage");
+        // Lifecycle through the fleet view.
+        let mut f = FleetFailures {
+            groups: vec![GroupFailures::new(42, 10.0, 2.0, 0.5)],
+            coupled: false,
+            requeue: false,
+        };
+        assert_eq!(f.state(0, 0.0), GroupState::Up);
+        assert_eq!(f.state(0, (down + repaired) / 2.0), GroupState::Down);
+        assert_eq!(f.state(0, (repaired + serving) / 2.0), GroupState::Recovering);
+        assert_eq!(f.state(0, serving), GroupState::Up);
+        assert_eq!(f.serving_resume(0, down), Some(serving));
+        assert_eq!(f.serving_resume(0, serving), None);
+        // Downtime over [0, serving) is exactly the one window.
+        assert!((f.downtime(0, serving) - (serving - down)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dep_coupling_unions_the_outages() {
+        // Group 0 effectively never fails on its own (huge MTBF); group
+        // 1's first outage must stall group 0 under coupling only.
+        let mk = |coupled| FleetFailures {
+            groups: vec![
+                GroupFailures::new(1, 1e12, 1.0, 0.0),
+                GroupFailures::new(2, 50.0, 1.0, 0.0),
+            ],
+            coupled,
+            requeue: false,
+        };
+        let mut solo = mk(false);
+        let d1 = solo.next_down_after(1, 0.0);
+        let mid = d1 + 0.5 * (solo.serving_resume(1, d1).unwrap() - d1);
+        let mut coupled = mk(true);
+        // Group 0 is serving at group 1's outage midpoint without
+        // coupling...
+        assert_eq!(solo.state(0, mid), GroupState::Up);
+        // ...but stalled with it.
+        assert_eq!(coupled.state(0, mid), GroupState::Down);
+        assert!(coupled.serving_resume(0, mid).is_some());
+    }
+
+    fn churn_fleet(mode: ParallelMode, mtbf: f64, mttr: f64, requeue: bool) -> Scenario {
+        // An effectively-unbounded SLO makes goodput-under-churn measure
+        // completed-vs-offered, isolating the failure model from latency
+        // calibration.
+        Scenario::fleet()
+            .model(PaperModelConfig::tiny())
+            .mode(mode)
+            .group(4)
+            .groups(4)
+            .isl(2048)
+            .mnt(16384)
+            .osl(32)
+            .rate(8.0)
+            .requests(48)
+            .seed(11)
+            .slo(1e4, 1e4)
+            .mtbf(mtbf)
+            .mttr(mttr)
+            .requeue_on_failure(requeue)
+    }
+
+    #[test]
+    fn disabled_failure_injection_is_bit_identical() {
+        let base = tiny_fleet(ParallelMode::Dwdp, 3).build().unwrap();
+        let zero = tiny_fleet(ParallelMode::Dwdp, 3).mtbf(0.0).build().unwrap();
+        let inf = tiny_fleet(ParallelMode::Dwdp, 3)
+            .mtbf(f64::INFINITY)
+            .mttr(1.0)
+            .requeue_on_failure(true)
+            .build()
+            .unwrap();
+        let a = simulate_analytic(&base).unwrap();
+        for spec in [&zero, &inf] {
+            let b = simulate_analytic(spec).unwrap();
+            assert_eq!(a.metrics.median_ttft(), b.metrics.median_ttft());
+            assert_eq!(a.span, b.span);
+            assert_eq!(a.admitted, b.admitted);
+            assert_eq!(b.failed, 0);
+            assert_eq!(b.requeued, 0);
+            assert!(b.per_group_availability.iter().all(|&v| v == 1.0));
+        }
+    }
+
+    #[test]
+    fn churn_conserves_requests_and_tokens() {
+        for requeue in [false, true] {
+            for mode in [ParallelMode::Dwdp, ParallelMode::Dep] {
+                let spec = churn_fleet(mode, 2.0, 0.5, requeue).build().unwrap();
+                let out = simulate_analytic(&spec).unwrap();
+                assert_eq!(
+                    out.offered,
+                    out.admitted + out.shed + out.failed,
+                    "{} requeue={requeue}: request leak",
+                    mode.name()
+                );
+                assert_eq!(
+                    out.offered_tokens,
+                    out.admitted_tokens + out.shed_tokens + out.failed_tokens,
+                    "{} requeue={requeue}: token leak",
+                    mode.name()
+                );
+                assert_eq!(out.admitted, out.metrics.n());
+                assert_eq!(out.per_group_requests.iter().sum::<usize>(), out.admitted);
+                assert_eq!(out.per_group_tokens.iter().sum::<usize>(), out.admitted_tokens);
+                if !requeue {
+                    assert_eq!(out.requeued, 0, "nothing re-queues when the knob is off");
+                }
+                for &a in &out.per_group_availability {
+                    assert!((0.0..=1.0).contains(&a), "availability {a} out of range");
+                }
+            }
+        }
+    }
+
+    /// The PR acceptance criterion at the simulator level: with identical
+    /// arrivals and identical per-group failure streams, DWDP (blast
+    /// radius: one group) must keep strictly more goodput under churn
+    /// than the DEP-coupled mode (one failure stalls the fleet).
+    #[test]
+    fn dwdp_degrades_more_gracefully_than_dep_under_churn() {
+        let run = |mode| {
+            let spec = churn_fleet(mode, 3.0, 2.0, true).build().unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let dwdp = run(ParallelMode::Dwdp);
+        let dep = run(ParallelMode::Dep);
+        assert_eq!(dwdp.offered, dep.offered, "identical offered workload");
+        assert!(dep.failed > 0, "coupled churn must lose requests");
+        assert!(
+            dwdp.goodput_under_churn() > dep.goodput_under_churn(),
+            "DWDP churn goodput {} must beat DEP {}",
+            dwdp.goodput_under_churn(),
+            dep.goodput_under_churn()
+        );
+        let mean = |o: &FleetOutcome| {
+            o.per_group_availability.iter().sum::<f64>()
+                / o.per_group_availability.len() as f64
+        };
+        assert!(
+            mean(&dwdp) > mean(&dep),
+            "DWDP availability {} must beat DEP {}",
+            mean(&dwdp),
+            mean(&dep)
+        );
+    }
+
+    #[test]
+    fn requeue_resteers_instead_of_failing() {
+        // Full-size model at full on-demand prefetch: batches take real
+        // fractions of a second, and a t = 0 storm keeps every group busy
+        // until its queue drains — so second-scale MTBF reliably lands
+        // failures on in-flight work (the tiny model's microsecond
+        // batches would dodge every outage).  mttr 0.5 keeps
+        // simultaneous 4-group outages rare, so re-queues succeed.
+        let run = |requeue| {
+            let trace = WorkloadTrace::from_requests(
+                (0..64)
+                    .map(|i| Request { id: i, arrival: 0.0, isl: 8192, osl: 32 })
+                    .collect(),
+            );
+            let spec = Scenario::fleet()
+                .mode(ParallelMode::Dwdp)
+                .group(4)
+                .groups(4)
+                .prefetch_fraction(1.0)
+                .arrival(ArrivalProcess::Replay { trace })
+                .requests(64)
+                .seed(11)
+                .slo(1e4, 1e4)
+                .mtbf(1.0)
+                .mttr(0.5)
+                .requeue_on_failure(requeue)
+                .build()
+                .unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let dropped = run(false);
+        let rq = run(true);
+        // The drop path must actually lose in-flight work for this test to
+        // mean anything, and nothing re-queues.
+        assert!(dropped.failed > 0, "expected in-flight casualties");
+        assert_eq!(dropped.requeued, 0);
+        // The re-queue path re-steers those casualties through the router.
+        assert!(rq.requeued > 0, "killed batches must re-queue");
+        assert!(
+            rq.admitted > dropped.admitted,
+            "re-queueing must complete more requests ({} vs {})",
+            rq.admitted,
+            dropped.admitted
+        );
+        // Re-queued survivors' latency includes the churn delay.
+        for r in &rq.metrics.records {
+            assert!(r.first_token >= r.arrival);
+            assert!(r.finish >= r.first_token);
+        }
+    }
+
+    #[test]
+    fn churn_is_deterministic_for_a_seed() {
+        let spec = churn_fleet(ParallelMode::Dwdp, 2.0, 0.5, true).build().unwrap();
+        let a = simulate_analytic(&spec).unwrap();
+        let b = simulate_analytic(&spec).unwrap();
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.requeued, b.requeued);
+        assert_eq!(a.metrics.median_ttft(), b.metrics.median_ttft());
+        assert_eq!(a.per_group_availability, b.per_group_availability);
+        assert_eq!(a.span, b.span);
     }
 }

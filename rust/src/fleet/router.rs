@@ -56,7 +56,7 @@ impl ClusterPolicy {
 }
 
 /// One group's load as seen by the router at an arrival instant.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct GroupLoad {
     /// Prompt tokens admitted to the group but not yet prefilled
     /// (pending queue + the batch currently in flight).
@@ -65,6 +65,16 @@ pub struct GroupLoad {
     /// start prefill, seconds (drain of the in-flight batch plus the
     /// pending backlog at the group's observed prefill rate).
     pub predicted_wait: f64,
+    /// Whether the group is serving ([`crate::fleet::GroupState::Up`]).
+    /// Down and recovering groups are excluded from every policy's
+    /// candidate set — the failure-injection re-steering contract.
+    pub up: bool,
+}
+
+impl Default for GroupLoad {
+    fn default() -> GroupLoad {
+        GroupLoad { outstanding_tokens: 0, predicted_wait: 0.0, up: true }
+    }
 }
 
 /// The router's verdict for one arrival.
@@ -74,6 +84,10 @@ pub enum RouteDecision {
     Admit(usize),
     /// Refuse: no group can serve within the admission bound.
     Shed,
+    /// Drop: no group is serving at all (fleet-wide outage).  Accounted
+    /// as *failed*, not shed — shedding is a policy choice, an outage is
+    /// not.
+    Failed,
 }
 
 /// Stateful cluster router (round-robin carries a cursor; the other
@@ -95,42 +109,68 @@ impl ClusterRouter {
         self.policy
     }
 
-    fn least_outstanding(loads: &[GroupLoad]) -> usize {
-        let mut best = 0;
+    /// Serving group with the fewest outstanding tokens (ties break to
+    /// the lowest index); `None` when no group is up.
+    fn least_outstanding(loads: &[GroupLoad]) -> Option<usize> {
+        let mut best: Option<usize> = None;
         for (i, l) in loads.iter().enumerate() {
-            if l.outstanding_tokens < loads[best].outstanding_tokens {
-                best = i;
+            if !l.up {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => l.outstanding_tokens < loads[b].outstanding_tokens,
+            };
+            if better {
+                best = Some(i);
             }
         }
         best
     }
 
     /// Decide placement for one arrival given the current per-group loads
-    /// (`loads.len()` must equal the router's group count).
+    /// (`loads.len()` must equal the router's group count).  Groups that
+    /// are not [`GroupLoad::up`] are excluded; if no group is serving the
+    /// decision is [`RouteDecision::Failed`].
     pub fn route(&mut self, loads: &[GroupLoad]) -> RouteDecision {
         assert_eq!(loads.len(), self.n_groups, "load snapshot size mismatch");
         match self.policy {
             ClusterPolicy::RoundRobin => {
-                let g = self.next;
-                self.next = (self.next + 1) % self.n_groups;
-                RouteDecision::Admit(g)
-            }
-            ClusterPolicy::LeastOutstandingTokens => {
-                RouteDecision::Admit(Self::least_outstanding(loads))
-            }
-            ClusterPolicy::SloAdmission { max_wait } => {
-                // Place by predicted wait (what the SLO cares about); shed
-                // when even the best group is past the bound.
-                let mut best = 0;
-                for (i, l) in loads.iter().enumerate() {
-                    if l.predicted_wait < loads[best].predicted_wait {
-                        best = i;
+                // Rotate past down groups; the cursor lands one past the
+                // admitting group, so recovered groups rejoin the cycle.
+                for k in 0..self.n_groups {
+                    let g = (self.next + k) % self.n_groups;
+                    if loads[g].up {
+                        self.next = (g + 1) % self.n_groups;
+                        return RouteDecision::Admit(g);
                     }
                 }
-                if loads[best].predicted_wait > max_wait {
-                    RouteDecision::Shed
-                } else {
-                    RouteDecision::Admit(best)
+                RouteDecision::Failed
+            }
+            ClusterPolicy::LeastOutstandingTokens => match Self::least_outstanding(loads) {
+                Some(g) => RouteDecision::Admit(g),
+                None => RouteDecision::Failed,
+            },
+            ClusterPolicy::SloAdmission { max_wait } => {
+                // Place by predicted wait (what the SLO cares about); shed
+                // when even the best serving group is past the bound.
+                let mut best: Option<usize> = None;
+                for (i, l) in loads.iter().enumerate() {
+                    if !l.up {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => l.predicted_wait < loads[b].predicted_wait,
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                match best {
+                    None => RouteDecision::Failed,
+                    Some(b) if loads[b].predicted_wait > max_wait => RouteDecision::Shed,
+                    Some(b) => RouteDecision::Admit(b),
                 }
             }
         }
@@ -144,7 +184,11 @@ mod tests {
     fn loads(outstanding: &[usize]) -> Vec<GroupLoad> {
         outstanding
             .iter()
-            .map(|&t| GroupLoad { outstanding_tokens: t, predicted_wait: t as f64 * 1e-3 })
+            .map(|&t| GroupLoad {
+                outstanding_tokens: t,
+                predicted_wait: t as f64 * 1e-3,
+                up: true,
+            })
             .collect()
     }
 
@@ -169,16 +213,47 @@ mod tests {
     fn slo_admission_sheds_past_bound() {
         let mut r = ClusterRouter::new(2, ClusterPolicy::SloAdmission { max_wait: 0.5 });
         let ok = vec![
-            GroupLoad { outstanding_tokens: 10, predicted_wait: 0.8 },
-            GroupLoad { outstanding_tokens: 90, predicted_wait: 0.2 },
+            GroupLoad { outstanding_tokens: 10, predicted_wait: 0.8, up: true },
+            GroupLoad { outstanding_tokens: 90, predicted_wait: 0.2, up: true },
         ];
         // Places by wait, not tokens.
         assert_eq!(r.route(&ok), RouteDecision::Admit(1));
         let overloaded = vec![
-            GroupLoad { outstanding_tokens: 10, predicted_wait: 0.9 },
-            GroupLoad { outstanding_tokens: 90, predicted_wait: 0.6 },
+            GroupLoad { outstanding_tokens: 10, predicted_wait: 0.9, up: true },
+            GroupLoad { outstanding_tokens: 90, predicted_wait: 0.6, up: true },
         ];
         assert_eq!(r.route(&overloaded), RouteDecision::Shed);
+    }
+
+    #[test]
+    fn down_groups_are_excluded_by_every_policy() {
+        let mut l = loads(&[5, 3, 9]);
+        l[1].up = false; // the would-be winner is down
+        let mut lot = ClusterRouter::new(3, ClusterPolicy::LeastOutstandingTokens);
+        assert_eq!(lot.route(&l), RouteDecision::Admit(0));
+        let mut slo = ClusterRouter::new(3, ClusterPolicy::SloAdmission { max_wait: 1.0 });
+        assert_eq!(slo.route(&l), RouteDecision::Admit(0));
+        // Round-robin rotates past the down group and keeps cycling.
+        let mut rr = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
+        assert_eq!(rr.route(&l), RouteDecision::Admit(0));
+        assert_eq!(rr.route(&l), RouteDecision::Admit(2));
+        assert_eq!(rr.route(&l), RouteDecision::Admit(0));
+    }
+
+    #[test]
+    fn total_outage_fails_instead_of_shedding() {
+        let mut l = loads(&[1, 2]);
+        l[0].up = false;
+        l[1].up = false;
+        for policy in [
+            ClusterPolicy::RoundRobin,
+            ClusterPolicy::LeastOutstandingTokens,
+            ClusterPolicy::SloAdmission { max_wait: 10.0 },
+        ] {
+            let mut r = ClusterRouter::new(2, policy);
+            assert_eq!(r.route(&l), RouteDecision::Failed, "{}", policy.name());
+        }
+        assert!(GroupLoad::default().up, "loads default to serving");
     }
 
     #[test]

@@ -130,4 +130,46 @@ mod tests {
     fn empty_sweep_is_empty() {
         assert!(run_sweep(&[], 8).is_empty());
     }
+
+    /// Regression: a sweep point whose fleet loses *every* request to
+    /// failures (groups go down almost immediately and stay down past the
+    /// drain) must still produce a zero-goodput report row — not an error
+    /// and not a skipped point.
+    #[test]
+    fn all_groups_down_yields_zero_goodput_row() {
+        use crate::workload::{ArrivalProcess, Request, WorkloadTrace};
+        // A t = 0 storm with an MTBF so small every batch attempt is
+        // killed (a sampled exponential gap of mean 1e-9 s is at most
+        // ~37 ns — orders below any prefill time) and an MTTR that
+        // outlasts the run.
+        let trace = WorkloadTrace::from_requests(
+            (0..16)
+                .map(|i| Request { id: i, arrival: 0.0, isl: 2048, osl: 8 })
+                .collect(),
+        );
+        let spec = Scenario::fleet()
+            .model(PaperModelConfig::tiny())
+            .mode(ParallelMode::Dwdp)
+            .group(4)
+            .groups(2)
+            .isl(2048)
+            .mnt(16384)
+            .arrival(ArrivalProcess::Replay { trace })
+            .requests(16)
+            .mtbf(1e-9)
+            .mttr(1e9)
+            .requeue_on_failure(false)
+            .seed(5)
+            .build()
+            .unwrap();
+        let reports = run_sweep(&[SweepPoint::new("churn wipeout", spec, Fidelity::Analytic)], 2);
+        assert_eq!(reports.len(), 1);
+        let r = reports[0].as_ref().expect("a wiped-out fleet is a row, not an error");
+        assert_eq!(r.offered, 16);
+        assert_eq!(r.n_requests, 0, "nothing completes");
+        assert_eq!(r.failed, 16, "every request is a churn casualty");
+        assert_eq!(r.goodput, 0.0);
+        assert_eq!(r.tps_per_gpu, 0.0);
+        assert_eq!(r.makespan, 0.0);
+    }
 }

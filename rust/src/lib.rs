@@ -37,7 +37,11 @@
 //! (Poisson, bursty Gamma/MMPP, or JSON trace replay) and reporting
 //! cluster-wide p50/p95/p99 TTFT/TPOT plus goodput under an SLO.
 //! `fleet::sweep` fans load sweeps across cores so the DWDP-vs-DEP
-//! cluster frontier regenerates in seconds.
+//! cluster frontier regenerates in seconds.  Failure injection
+//! (per-group MTBF/MTTR, router re-steering, optional re-queue — see
+//! [`fleet::GroupState`]) quantifies the flip side of the no-sync
+//! claim: independent DWDP groups degrade gracefully under churn where
+//! DEP's shard coupling stalls the whole fleet.
 //!
 //! Python never runs at request time: [`runtime`] (behind the `pjrt`
 //! feature, which additionally expects locally vendored `xla`/`anyhow`

@@ -344,6 +344,17 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
         if let Some(local) = flags.get("local-experts").and_then(|s| s.parse().ok()) {
             scn = scn.local_experts(local);
         }
+        if let Some(mtbf) = flags.get("mtbf").and_then(|s| s.parse().ok()) {
+            // --mttr defaults to 1 s so `--mtbf` alone is a valid ask.
+            let mttr = flags.get("mttr").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            scn = scn.mtbf(mtbf).mttr(mttr);
+        } else if flags.contains_key("mttr") {
+            eprintln!("--mttr needs --mtbf (failure injection is off without it)");
+            return 2;
+        }
+        if flags.contains_key("requeue") {
+            scn = scn.requeue_on_failure(true);
+        }
         if let Some(p) = flags.get("policy") {
             match ClusterPolicy::parse(p, max_wait) {
                 Some(policy) => scn = scn.cluster_policy(policy),
@@ -436,6 +447,16 @@ fn report_table(r: &RunReport) -> Table {
             "offered / shed".into(),
             format!("{} / {}", r.offered, r.shed),
         ]);
+        if r.failed > 0 || r.requeued > 0 || r.availability < 1.0 {
+            t.row(vec![
+                "failed / re-queued".into(),
+                format!("{} / {}", r.failed, r.requeued),
+            ]);
+            t.row(vec![
+                "availability (%)".into(),
+                format!("{:.1}", r.availability * 100.0),
+            ]);
+        }
     }
     for (k, v) in &r.extras {
         t.row(vec![k.clone(), v.clone()]);

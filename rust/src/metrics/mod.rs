@@ -4,6 +4,12 @@
 //! Table 1, and [`ServingMetrics`] aggregates the end-to-end measures used
 //! in §5.3 (median TTFT including queueing, per-user and per-GPU token
 //! rates).
+//!
+//! The fleet layer ([`crate::fleet`]) builds on the same records: [`Slo`]
+//! is the latency contract goodput is judged against, [`LatencyDigest`]
+//! merges per-group TTFT/TPOT samples cluster-wide, and
+//! [`crate::fleet::FleetOutcome`] extends the accounting with churn
+//! counters (shed/failed/re-queued, per-group availability).
 
 use crate::model::Category;
 use crate::util::stats;

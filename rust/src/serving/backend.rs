@@ -83,6 +83,15 @@ pub struct RunReport {
     /// Requests offered to / shed by the cluster (fleet scenarios).
     pub offered: usize,
     pub shed: usize,
+    /// Requests dropped by failure injection (fleet scenarios with a
+    /// finite `mtbf`; 0 otherwise).
+    pub failed: usize,
+    /// Requests re-queued after a group failure killed their batch (fleet
+    /// scenarios; 0 otherwise).
+    pub requeued: usize,
+    /// Mean per-group availability over the run horizon (1.0 without
+    /// failure injection).
+    pub availability: f64,
     /// DES events processed (0 for analytic runs).
     pub events: u64,
     /// Chrome trace, when the scenario asked for one and the backend can
@@ -121,6 +130,9 @@ impl Default for RunReport {
             goodput: 0.0,
             offered: 0,
             shed: 0,
+            failed: 0,
+            requeued: 0,
+            availability: 1.0,
             events: 0,
             trace: None,
             extras: Vec::new(),
@@ -164,6 +176,9 @@ impl RunReport {
             ("goodput", Json::Num(self.goodput)),
             ("offered", Json::Num(self.offered as f64)),
             ("shed", Json::Num(self.shed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("requeued", Json::Num(self.requeued as f64)),
+            ("availability", Json::Num(self.availability)),
             ("events", Json::Num(self.events as f64)),
             ("extras", Json::Arr(extras)),
         ])
@@ -215,6 +230,13 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
     report.goodput = out.metrics.goodput_fraction(&out.slo);
     report.offered = out.offered;
     report.shed = out.shed;
+    report.failed = out.failed;
+    report.requeued = out.requeued;
+    report.availability = if out.per_group_availability.is_empty() {
+        1.0
+    } else {
+        out.per_group_availability.iter().sum::<f64>() / out.per_group_availability.len() as f64
+    };
     report
         .extras
         .push(("per-group requests".into(), format!("{:?}", out.per_group_requests)));
@@ -227,6 +249,21 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
     ));
     if out.shed > 0 {
         report.extras.push(("shed tokens".into(), out.shed_tokens.to_string()));
+    }
+    if spec.serving.failures_enabled() {
+        report.extras.push((
+            "goodput under churn (%)".into(),
+            format!("{:.1}", out.goodput_under_churn() * 100.0),
+        ));
+        let avail: Vec<f64> = out
+            .per_group_availability
+            .iter()
+            .map(|a| (a * 1000.0).round() / 1000.0)
+            .collect();
+        report.extras.push(("per-group availability".into(), format!("{avail:?}")));
+        if out.failed > 0 {
+            report.extras.push(("failed tokens".into(), out.failed_tokens.to_string()));
+        }
     }
     if out.remote_fetch_bytes > 0.0 {
         report.extras.push((

@@ -101,6 +101,9 @@ fn run_fleet_trace() -> RunArtifact {
 fn run_replacement_skew() -> RunArtifact {
     RunArtifact::table(experiments::fleet::replacement_skew())
 }
+fn run_fleet_churn() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::fleet_churn())
+}
 
 static REGISTRY: &[ScenarioEntry] = &[
     ScenarioEntry {
@@ -235,6 +238,12 @@ static REGISTRY: &[ScenarioEntry] = &[
         group: "fleet",
         run: run_replacement_skew,
     },
+    ScenarioEntry {
+        id: "fleet_churn",
+        title: "failure injection: DWDP independence vs DEP lockstep under churn",
+        group: "fleet",
+        run: run_fleet_churn,
+    },
 ];
 
 /// All registered scenarios, in registration order.
@@ -270,6 +279,7 @@ pub fn usage_text() -> String {
     out.push_str("                   [--policy rr|lot|slo] [--max-wait W] [--trace FILE.json]\n");
     out.push_str("                   [--record-trace FILE.json] [--fidelity analytic|des]\n");
     out.push_str("                   [--skew Z] [--replace N] [--local-experts L]\n");
+    out.push_str("                   [--mtbf S] [--mttr S] [--requeue]\n");
     out.push_str("                   [--threads T] [--json FILE]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");
@@ -301,13 +311,19 @@ mod tests {
         ] {
             assert!(find(id).is_some(), "missing scenario {id}");
         }
-        // PR 2's fleet layer registers through the same table, as does
-        // PR 3's re-placement sweep.
-        for id in ["fleet_frontier", "fleet_burst", "fleet_trace", "replacement_skew"] {
+        // PR 2's fleet layer registers through the same table, as do
+        // PR 3's re-placement sweep and PR 4's churn scenario.
+        for id in [
+            "fleet_frontier",
+            "fleet_burst",
+            "fleet_trace",
+            "replacement_skew",
+            "fleet_churn",
+        ] {
             assert!(find(id).is_some(), "missing scenario {id}");
             assert_eq!(find(id).unwrap().group, "fleet");
         }
-        assert_eq!(registry().len(), 22);
+        assert_eq!(registry().len(), 23);
     }
 
     #[test]
@@ -328,6 +344,7 @@ mod tests {
         assert!(text.contains("--fidelity"));
         assert!(text.contains("dwdp-repro fleet"));
         assert!(text.contains("--json"));
+        assert!(text.contains("--mtbf"));
         assert!(text.contains("  fleet:\n"));
     }
 

@@ -117,6 +117,9 @@ pub struct Scenario {
     prefetch_fraction: Option<f64>,
     routing_skew: Option<f64>,
     replacement_interval: Option<usize>,
+    mtbf: Option<f64>,
+    mttr: Option<f64>,
+    requeue_on_failure: Option<bool>,
     seed: Option<u64>,
     // Workload / fleet.
     requests: usize,
@@ -165,6 +168,9 @@ impl Scenario {
             prefetch_fraction: None,
             routing_skew: None,
             replacement_interval: None,
+            mtbf: None,
+            mttr: None,
+            requeue_on_failure: None,
             seed: None,
             requests: if target == BuildTarget::Context { 2 } else { 64 },
             target,
@@ -316,6 +322,30 @@ impl Scenario {
         self
     }
 
+    /// Mean time between failures per serving group in seconds (fleet
+    /// scenarios; exponential).  0 or infinity disables failure injection
+    /// — groups never die and results are bit-identical to the pre-churn
+    /// path.  Enabling it requires [`Scenario::mttr`].
+    pub fn mtbf(mut self, seconds: f64) -> Self {
+        self.mtbf = Some(seconds);
+        self
+    }
+
+    /// Mean time to repair a failed group in seconds (exponential).  On
+    /// repair the group re-fetches its expert shard (warm-up) before
+    /// serving again.
+    pub fn mttr(mut self, seconds: f64) -> Self {
+        self.mttr = Some(seconds);
+        self
+    }
+
+    /// Re-queue a failed group's in-flight requests through the cluster
+    /// router (default: drop them as failed).
+    pub fn requeue_on_failure(mut self, on: bool) -> Self {
+        self.requeue_on_failure = Some(on);
+        self
+    }
+
     /// RNG seed for the whole scenario.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
@@ -455,6 +485,15 @@ impl Scenario {
         }
         if let Some(v) = self.replacement_interval {
             serving.replacement_interval = v;
+        }
+        if let Some(v) = self.mtbf {
+            serving.mtbf = v;
+        }
+        if let Some(v) = self.mttr {
+            serving.mttr = v;
+        }
+        if let Some(v) = self.requeue_on_failure {
+            serving.requeue_on_failure = v;
         }
         if let Some(v) = self.seed {
             serving.seed = v;
@@ -651,6 +690,27 @@ mod tests {
         assert_eq!(policy, &ClusterPolicy::SloAdmission { max_wait: 0.5 });
         assert_eq!(slo, &Slo { max_ttft: 1.0, max_tpot: 0.04 });
         assert_eq!(*horizon, 30.0);
+    }
+
+    #[test]
+    fn churn_knobs_land_and_validate() {
+        let spec = Scenario::fleet()
+            .mtbf(30.0)
+            .mttr(2.0)
+            .requeue_on_failure(true)
+            .build()
+            .unwrap();
+        assert_eq!(spec.serving.mtbf, 30.0);
+        assert_eq!(spec.serving.mttr, 2.0);
+        assert!(spec.serving.requeue_on_failure);
+        assert!(spec.serving.failures_enabled());
+        // Enabling MTBF without a usable MTTR is rejected at build().
+        assert!(Scenario::fleet().mtbf(5.0).build().is_err());
+        assert!(Scenario::fleet().mtbf(-1.0).build().is_err());
+        // 0 and infinity both mean "groups never die".
+        assert!(!Scenario::fleet().mtbf(0.0).build().unwrap().serving.failures_enabled());
+        let inf = Scenario::fleet().mtbf(f64::INFINITY).build().unwrap();
+        assert!(!inf.serving.failures_enabled());
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!   either a uniform "ratio window" (`isl_ratio`, Fig. 1 / Table 1/4) or a
 //!   normal spread (`isl_std`, Table 3c).
 //! * SemiAnalysis-style (end-to-end): ISL in [0.8·8K, 8K], OSL 1K.
+//!
+//! Open-loop fleet traffic (bursty [`ArrivalProcess`] variants, byte-exact
+//! [`WorkloadTrace`] record/replay) lives in [`arrival`]; the consumer is
+//! the cluster simulator in [`crate::fleet`].
 
 pub mod arrival;
 

@@ -466,6 +466,113 @@ fn prop_fleet_sweep_thread_invariance() {
     }
 }
 
+/// Property (fleet): request and prompt-token conservation holds under
+/// churn — every offered request ends in exactly one of completed
+/// (admitted), shed, or failed, for both coupling models, both re-queue
+/// settings, and every policy, across random MTBF/MTTR/load mixes.
+#[test]
+fn prop_fleet_conservation_under_churn() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(11_000 + seed);
+        let n_groups = 1 + rng.below(4) as usize;
+        let rate = 2.0 + rng.f64() * 30.0;
+        let mtbf = 0.3 + rng.f64() * 4.0;
+        let mttr = 0.05 + rng.f64() * 2.0;
+        let requeue = seed % 2 == 0;
+        let mode = if seed % 3 == 0 { ParallelMode::Dep } else { ParallelMode::Dwdp };
+        let policy = match seed % 3 {
+            0 => ClusterPolicy::SloAdmission { max_wait: 0.01 + rng.f64() },
+            1 => ClusterPolicy::RoundRobin,
+            _ => ClusterPolicy::LeastOutstandingTokens,
+        };
+        let spec = tiny_fleet_scenario(n_groups)
+            .mode(mode)
+            .arrival(ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 6.0 })
+            .cluster_policy(policy)
+            .requests(8 + rng.below(40) as usize)
+            .mtbf(mtbf)
+            .mttr(mttr)
+            .requeue_on_failure(requeue)
+            .seed(seed)
+            .build()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let out = simulate_analytic(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(
+            out.offered,
+            out.admitted + out.shed + out.failed,
+            "seed {seed}: request leak under churn"
+        );
+        assert_eq!(
+            out.offered_tokens,
+            out.admitted_tokens + out.shed_tokens + out.failed_tokens,
+            "seed {seed}: token leak under churn"
+        );
+        assert_eq!(out.admitted, out.metrics.n(), "seed {seed}: lost records");
+        assert_eq!(
+            out.per_group_requests.iter().sum::<usize>(),
+            out.admitted,
+            "seed {seed}: group assignment leak"
+        );
+        assert_eq!(
+            out.per_group_tokens.iter().sum::<usize>(),
+            out.admitted_tokens,
+            "seed {seed}: group token leak"
+        );
+        if !requeue {
+            assert_eq!(out.requeued, 0, "seed {seed}: re-queue knob is off");
+        }
+        assert_eq!(out.per_group_availability.len(), n_groups);
+        for &a in &out.per_group_availability {
+            assert!((0.0..=1.0).contains(&a), "seed {seed}: availability {a}");
+        }
+        for r in &out.metrics.records {
+            assert!(r.first_token >= r.arrival, "seed {seed}: {r:?}");
+            assert!(r.finish >= r.first_token, "seed {seed}: {r:?}");
+        }
+    }
+}
+
+/// Property (fleet): sweep output stays bit-identical across thread
+/// counts with failure injection enabled — per-group failure streams are
+/// seeded from the spec, never from shared state (compared through the
+/// canonical JSON fingerprint, which includes the failed/requeued/
+/// availability fields).
+#[test]
+fn prop_fleet_sweep_thread_invariance_with_failures() {
+    let mut points = Vec::new();
+    for (i, mode) in [ParallelMode::Dwdp, ParallelMode::Dep].into_iter().enumerate() {
+        for (j, (mtbf, requeue)) in [(0.8, true), (2.5, false)].into_iter().enumerate() {
+            let spec = tiny_fleet_scenario(3)
+                .mode(mode)
+                .arrival(ArrivalProcess::GammaBurst { rate: 20.0, cv2: 4.0 })
+                .requests(32)
+                .mtbf(mtbf)
+                .mttr(0.4)
+                .requeue_on_failure(requeue)
+                .seed((i * 2 + j) as u64)
+                .build()
+                .unwrap();
+            points.push(SweepPoint::new(
+                &format!("{} mtbf={mtbf}", mode.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let serial = run_sweep(&points, 1);
+    for threads in [2, 8] {
+        let parallel = run_sweep(&points, threads);
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(
+                a.to_json().dump(),
+                b.to_json().dump(),
+                "point {i} differs at {threads} threads"
+            );
+        }
+    }
+}
+
 /// Property (fleet): sweep output stays bit-identical across thread counts
 /// with online expert re-placement enabled — the re-placement loop's
 /// sampling, migration, and byte accounting are all pure functions of the
