@@ -334,6 +334,21 @@ pub struct ServingConfig {
     /// the batch's requests through the cluster router (true) instead of
     /// dropping them as failed (false).
     pub requeue_on_failure: bool,
+    /// Racks the fleet's serving groups are spread over (contiguous
+    /// blocks).  1 — the default — is the flat single-NVL72-domain fleet,
+    /// bit-identical to the pre-topology path.  Must not exceed the fleet
+    /// group count.
+    pub racks: usize,
+    /// Inter-rack link bandwidth in GB/s (IB/Ethernet spine; NVLink runs
+    /// an order of magnitude faster).  Only meaningful with `racks > 1`.
+    pub inter_rack_gbps: f64,
+    /// Per-transfer inter-rack latency, seconds.
+    pub inter_rack_latency: f64,
+    /// Rack-level correlated failures: one outage downs *every* group in
+    /// the rack at once (failure streams sampled per rack instead of per
+    /// group), and recovery warm-up must pull expert shards cross-rack.
+    /// Only meaningful with failure injection enabled.
+    pub rack_blast_radius: bool,
     /// RNG seed for the whole experiment.
     pub seed: u64,
 }
@@ -358,6 +373,10 @@ impl ServingConfig {
             mtbf: 0.0,
             mttr: 0.0,
             requeue_on_failure: false,
+            racks: 1,
+            inter_rack_gbps: 25.0,
+            inter_rack_latency: 3e-6,
+            rack_blast_radius: false,
             seed: 0,
         }
     }
@@ -413,6 +432,29 @@ impl ServingConfig {
                 "failure injection (mtbf {}) needs a finite mttr > 0, got {}",
                 self.mtbf, self.mttr
             ));
+        }
+        if self.racks == 0 {
+            return Err("racks must be >= 1".into());
+        }
+        if self.rack_blast_radius && self.racks < 2 {
+            return Err(
+                "rack_blast_radius is a rack-level correlated-failure knob; it needs racks >= 2"
+                    .into(),
+            );
+        }
+        if self.racks > 1 {
+            if !(self.inter_rack_gbps.is_finite() && self.inter_rack_gbps > 0.0) {
+                return Err(format!(
+                    "a tiered topology (racks {}) needs a finite inter_rack_gbps > 0, got {}",
+                    self.racks, self.inter_rack_gbps
+                ));
+            }
+            if !(self.inter_rack_latency.is_finite() && self.inter_rack_latency >= 0.0) {
+                return Err(format!(
+                    "inter_rack_latency must be finite and >= 0 seconds, got {}",
+                    self.inter_rack_latency
+                ));
+            }
         }
         Ok(())
     }
@@ -478,6 +520,12 @@ pub fn apply_json_overrides(
             "mttr" => serving.mttr = get("seconds")?,
             "requeue_on_failure" => {
                 serving.requeue_on_failure = v.as_bool().ok_or(format!("{k}: bool"))?
+            }
+            "racks" => serving.racks = get("count")? as usize,
+            "inter_rack_gbps" => serving.inter_rack_gbps = get("GB/s")?,
+            "inter_rack_latency" => serving.inter_rack_latency = get("seconds")?,
+            "rack_blast_radius" => {
+                serving.rack_blast_radius = v.as_bool().ok_or(format!("{k}: bool"))?
             }
             "seed" => serving.seed = get("u64")? as u64,
             other => return Err(format!("unknown config key {other:?}")),
@@ -559,6 +607,43 @@ mod tests {
     }
 
     #[test]
+    fn rack_knobs_validate() {
+        let m = PaperModelConfig::deepseek_r1();
+        // The flat default validates and stays flat.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        assert_eq!(s.racks, 1);
+        assert!(!s.rack_blast_radius);
+        // Tiered configs need a usable inter-rack link.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.racks = 2;
+        s.validate(&m).unwrap();
+        s.inter_rack_gbps = 0.0;
+        assert!(s.validate(&m).is_err());
+        s.inter_rack_gbps = f64::NAN;
+        assert!(s.validate(&m).is_err());
+        s.inter_rack_gbps = 25.0;
+        s.inter_rack_latency = -1.0;
+        assert!(s.validate(&m).is_err());
+        s.inter_rack_latency = 3e-6;
+        s.validate(&m).unwrap();
+        // Zero racks is nonsense.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.racks = 0;
+        assert!(s.validate(&m).is_err());
+        // A rack-level blast radius needs racks to blast.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.rack_blast_radius = true;
+        assert!(s.validate(&m).is_err());
+        s.racks = 2;
+        s.validate(&m).unwrap();
+        // A flat fleet ignores a broken inter-rack link entirely.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.inter_rack_gbps = 0.0;
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
     fn remote_experts_accounts_redundancy() {
         let m = PaperModelConfig::deepseek_r1();
         let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
@@ -586,7 +671,9 @@ mod tests {
         let mut s = ServingConfig::default_context(ParallelMode::Dep, 4);
         let j = Json::parse(
             r#"{"mode": "dwdp", "group_size": 8, "isl": 16384, "tdm": false, "ce_bw": 8e11,
-                "mtbf": 45.0, "mttr": 3.0, "requeue_on_failure": true}"#,
+                "mtbf": 45.0, "mttr": 3.0, "requeue_on_failure": true,
+                "racks": 4, "inter_rack_gbps": 50.0, "inter_rack_latency": 5e-6,
+                "rack_blast_radius": true}"#,
         )
         .unwrap();
         apply_json_overrides(&j, &mut hw, &mut m, &mut s).unwrap();
@@ -598,6 +685,10 @@ mod tests {
         assert_eq!(s.mtbf, 45.0);
         assert_eq!(s.mttr, 3.0);
         assert!(s.requeue_on_failure);
+        assert_eq!(s.racks, 4);
+        assert_eq!(s.inter_rack_gbps, 50.0);
+        assert_eq!(s.inter_rack_latency, 5e-6);
+        assert!(s.rack_blast_radius);
 
         let bad = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
         assert!(apply_json_overrides(&bad, &mut hw, &mut m, &mut s).is_err());

@@ -12,7 +12,7 @@
 //! [`crate::fleet::sweep`] driver.
 
 use crate::config::ParallelMode;
-use crate::fleet::{available_threads, run_sweep, ClusterPolicy, SweepPoint};
+use crate::fleet::{available_threads, rack_axis, run_sweep, ClusterPolicy, SweepPoint};
 use crate::serving::{Fidelity, RunReport, Scenario};
 use crate::util::table::{f, Table};
 use crate::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, WorkloadTrace};
@@ -83,6 +83,18 @@ pub fn churn_scenario(mode: ParallelMode, mtbf: f64, mttr: f64) -> Scenario {
         .mtbf(mtbf)
         .mttr(mttr)
         .requeue_on_failure(true)
+}
+
+/// Scenario for the multirack sweep: the calibrated DWDP fleet base over
+/// a tiered topology — 4 groups spread across `racks` racks behind a
+/// 25 GB/s inter-rack spine (NVLink runs ~36x faster), under the given
+/// cluster policy.  `racks = 1` is the flat baseline.
+pub fn multirack_scenario(policy: ClusterPolicy, racks: usize) -> Scenario {
+    fleet_scenario(ParallelMode::Dwdp, 4)
+        .cluster_policy(policy)
+        .racks(racks)
+        .inter_rack_gbps(25.0)
+        .inter_rack_latency(3e-6)
 }
 
 /// A bursty recording all trace-replay rows share: generated once from the
@@ -430,6 +442,97 @@ pub fn fleet_churn() -> Table {
     t
 }
 
+const MULTIRACK_HEADER: [&str; 9] = [
+    "scenario",
+    "served",
+    "p50 TTFT (ms)",
+    "p99 TTFT (ms)",
+    "TPS/GPU",
+    "x-rack req",
+    "x-rack GB",
+    "availability (%)",
+    "goodput (%)",
+];
+
+/// `multirack` — the rack-tiered topology sweep: the flat single-domain
+/// fleet vs the same groups spread over 2 and 4 racks, under rack-blind
+/// least-outstanding routing and the rack-local-first policy that prices
+/// the inter-rack spill.  With identical arrivals per rack count the
+/// cross-rack traffic gap is causal: rack-local-first strictly reduces
+/// `cross_rack_bytes` at equal offered load (asserted in this module's
+/// tests — the PR acceptance criterion).  The correlated-failure rows
+/// flip `rack_blast_radius` at equal MTBF/MTTR: one blast downs a whole
+/// rack and recovery re-pulls expert shards over the spine, so
+/// availability drops in rack-sized steps.  The final row re-checks sweep
+/// determinism across thread counts with the topology enabled.
+pub fn multirack() -> Table {
+    let mut points = Vec::new();
+    // The rack-count axis, rack-blind vs rack-local at every tier count.
+    let blind = multirack_scenario(ClusterPolicy::LeastOutstandingTokens, 1);
+    points.extend(
+        rack_axis(&blind, &[1, 2, 4], Fidelity::Analytic).expect("multirack blind axis"),
+    );
+    let local = multirack_scenario(ClusterPolicy::RackLocalFirst, 1);
+    points.extend(
+        rack_axis(&local, &[2, 4], Fidelity::Analytic).expect("multirack rack-local axis"),
+    );
+    // Correlated failures: same MTBF/MTTR, blast radius of one group vs
+    // one rack.
+    for (tag, blast) in [("per-group failures", false), ("rack blast", true)] {
+        let spec = multirack_scenario(ClusterPolicy::RackLocalFirst, 2)
+            .mtbf(15.0)
+            .mttr(2.0)
+            .requeue_on_failure(true)
+            .rack_blast_radius(blast)
+            .build()
+            .expect("multirack churn scenario");
+        points.push(SweepPoint::new(
+            &format!("{} · {tag}", spec.label),
+            spec,
+            Fidelity::Analytic,
+        ));
+    }
+    let parallel = run_sweep(&points, available_threads());
+    let serial = run_sweep(&points, 1);
+    let bit_identical = parallel.iter().zip(&serial).all(|(a, b)| match (a, b) {
+        (Ok(a), Ok(b)) => a.to_json().dump() == b.to_json().dump(),
+        (Err(a), Err(b)) => a == b,
+        _ => false,
+    });
+    let mut t = Table::new(&MULTIRACK_HEADER).with_title(
+        "Multirack: flat vs rack-tiered topology, rack-blind vs rack-local-first routing",
+    );
+    for (p, r) in points.iter().zip(&parallel) {
+        match r {
+            Ok(r) => {
+                t.row(vec![
+                    p.label.clone(),
+                    r.n_requests.to_string(),
+                    f(r.p50_ttft * 1e3, 0),
+                    f(r.p99_ttft * 1e3, 0),
+                    f(r.tps_per_gpu, 1),
+                    r.cross_rack_requests.to_string(),
+                    f(r.cross_rack_bytes / 1e9, 3),
+                    f(r.availability * 100.0, 1),
+                    f(r.goodput * 100.0, 1),
+                ]);
+            }
+            Err(e) => {
+                let mut row = vec![format!("{} (failed: {e})", p.label)];
+                row.resize(MULTIRACK_HEADER.len(), "-".into());
+                t.row(row);
+            }
+        }
+    }
+    let mut row = vec![
+        "sweep determinism (1 thread vs all cores)".to_string(),
+        if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
+    ];
+    row.resize(MULTIRACK_HEADER.len(), "-".into());
+    t.row(row);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,6 +638,66 @@ mod tests {
                 assert_eq!(off.admitted, base.admitted);
             }
         }
+    }
+
+    #[test]
+    fn multirack_table_covers_the_axis_and_stays_deterministic() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = multirack();
+        // 3 rack-blind tiers + 2 rack-local tiers + 2 churn rows +
+        // the determinism row.
+        assert_eq!(t.n_rows(), 8);
+        let text = t.render();
+        for needle in [
+            "over 2 racks",
+            "over 4 racks",
+            "rack-local",
+            "least-outstanding",
+            "rack blast",
+            "per-group failures",
+            "bit-identical",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    /// The PR-5 acceptance criterion: a 1-rack tiered topology reproduces
+    /// the flat fleet bit-for-bit (same `RunReport::to_json()`), and at
+    /// 2 racks with a finite inter-rack link rack-local-first routing
+    /// strictly reduces cross-rack bytes vs rack-blind least-outstanding
+    /// at equal offered load.
+    #[test]
+    fn rack_local_first_beats_rack_blind_routing_cross_rack() {
+        use crate::serving::ServingStack;
+        // Pin the load regardless of DWDP_QUICK.
+        let run = |policy, racks| {
+            let spec = multirack_scenario(policy, racks).requests(64).build().unwrap();
+            ServingStack::new(spec, Fidelity::Analytic).run().unwrap()
+        };
+        // Zero delta: the flat fleet and a 1-rack tiered config emit the
+        // same JSON fingerprint, float for float.
+        let flat = run(ClusterPolicy::LeastOutstandingTokens, 1);
+        let one_rack = {
+            let spec = fleet_scenario(ParallelMode::Dwdp, 4)
+                .cluster_policy(ClusterPolicy::LeastOutstandingTokens)
+                .requests(64)
+                .build()
+                .unwrap();
+            ServingStack::new(spec, Fidelity::Analytic).run().unwrap()
+        };
+        assert_eq!(flat.to_json().dump(), one_rack.to_json().dump());
+        // The tiered gap: rack-blind ships bytes over the spine that
+        // rack-local-first keeps home.
+        let blind = run(ClusterPolicy::LeastOutstandingTokens, 2);
+        let local = run(ClusterPolicy::RackLocalFirst, 2);
+        assert_eq!(blind.offered, local.offered, "identical offered load");
+        assert!(blind.cross_rack_requests > 0, "rack-blind routing must spill");
+        assert!(
+            local.cross_rack_bytes < blind.cross_rack_bytes,
+            "rack-local {} must beat rack-blind {}",
+            local.cross_rack_bytes,
+            blind.cross_rack_bytes
+        );
     }
 
     /// The PR-3 acceptance criterion: at `routing_skew >= 1` with

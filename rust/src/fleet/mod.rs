@@ -40,6 +40,19 @@
 //! Failure streams are seeded per group, so sweeps stay bit-identical
 //! across thread counts with churn enabled.
 //!
+//! **Rack tiers** (the `racks`/`inter_rack_gbps`/`inter_rack_latency`/
+//! `rack_blast_radius` serving knobs, [`topology::RackTopology`]): with
+//! `racks > 1` the groups are spread over racks in contiguous blocks, and
+//! the fleet stops being flat — arrivals carry a home rack, admitting one
+//! outside it ships its prompt activations over the inter-rack spine
+//! (charged to the request's ready time and to the
+//! [`FleetOutcome::cross_rack_requests`]/[`FleetOutcome::cross_rack_bytes`]
+//! counters), the [`ClusterPolicy::RackLocalFirst`] policy prices that
+//! spill into its placement choice, recovery warm-ups are priced by the
+//! tier the shard actually crosses, and `rack_blast_radius` turns the
+//! failure model's blast radius from one group into one rack.  A 1-rack
+//! topology is bit-identical to the flat fleet.
+//!
 //! Entry points: describe the cluster with
 //! [`crate::serving::Scenario::fleet`] and run it through a
 //! [`crate::serving::ServingStack`] (the backends dispatch here), or call
@@ -48,11 +61,13 @@
 
 pub mod router;
 pub mod sweep;
+pub mod topology;
 
 use std::collections::VecDeque;
 
-pub use router::{ClusterPolicy, ClusterRouter, GroupLoad, RouteDecision};
-pub use sweep::{available_threads, run_sweep, SweepPoint};
+pub use router::{ClusterPolicy, ClusterRouter, GroupLoad, RouteCtx, RouteDecision};
+pub use sweep::{available_threads, rack_axis, run_sweep, SweepPoint};
+pub use topology::{LinkTier, RackTopology};
 
 use crate::config::{HardwareConfig, ParallelMode};
 use crate::coordinator::{GenModel, GroupLatencyModel, PrefillOffsets};
@@ -103,6 +118,12 @@ pub struct FleetOutcome {
     pub migration_bytes: f64,
     /// Re-placement events executed across all groups.
     pub replacements: usize,
+    /// Requests admitted to a serving group outside their home rack
+    /// (0 on a flat 1-rack topology, where every group is home).
+    pub cross_rack_requests: usize,
+    /// Prompt-activation bytes shipped over the inter-rack spine by those
+    /// cross-rack admissions.
+    pub cross_rack_bytes: f64,
     /// First arrival to last finish over admitted requests, seconds.
     pub span: f64,
 }
@@ -233,12 +254,20 @@ impl GroupFailures {
 }
 
 /// The fleet's failure model: one [`GroupFailures`] renewal process per
-/// group, plus the DEP coupling rule.  Under DWDP a group's outages are
-/// its own; under DEP every group shares expert shards with its peers, so
-/// *any* group's outage stalls the whole fleet until repair + warm-up
-/// completes (synchronous all-to-all cannot run with a dead participant).
+/// *failure domain*, plus the DEP coupling rule.  A failure domain is one
+/// group, or — with `rack_blast_radius` on a tiered topology — one whole
+/// rack (a power/cooling/switch event downs every group in the rack at
+/// once, and they all recover together).  Under DWDP an outage is its
+/// domain's own; under DEP every group shares expert shards with its
+/// peers, so *any* domain's outage stalls the whole fleet until repair +
+/// warm-up completes (synchronous all-to-all cannot run with a dead
+/// participant).
 struct FleetFailures {
-    groups: Vec<GroupFailures>,
+    /// One renewal process per failure domain.
+    streams: Vec<GroupFailures>,
+    /// Failure-domain index of each group (identity without the rack
+    /// blast radius; the group's rack with it).
+    domain_of: Vec<usize>,
     coupled: bool,
     requeue: bool,
 }
@@ -247,15 +276,26 @@ impl FleetFailures {
     /// Build the failure model a spec asks for; `None` when failure
     /// injection is disabled (`mtbf` of 0 or infinity), which keeps the
     /// simulation bit-identical to the pre-churn path.
-    fn from_spec(spec: &ScenarioSpec, n_groups: usize) -> Option<FleetFailures> {
+    fn from_spec(spec: &ScenarioSpec, topo: &RackTopology) -> Option<FleetFailures> {
         let s = &spec.serving;
         if !s.failures_enabled() {
             return None;
         }
+        let n_groups = topo.n_groups;
         // Warm-up: every rank of a repaired group re-pulls its resident
         // expert shard for all MoE layers before serving — priced exactly
-        // like a re-placement migration (parallel NVLink copy-engine
-        // pulls, slowest rank gates the group).
+        // like a re-placement migration (parallel pulls, slowest rank
+        // gates the group).  The tier is a *static* rule chosen from the
+        // rack layout, not from peer liveness at the repair instant (the
+        // streams materialize lazily and independently; conditioning one
+        // stream's warm-up on another's windows would be circular): the
+        // NVLink copy engine when the rack layout provides a rack-local
+        // replica source, the inter-rack spine when it cannot — a rack
+        // with a single group, or a rack-level blast that by construction
+        // took every local replica down with it.  Overlapping independent
+        // per-group outages within a rack are therefore knowingly priced
+        // at the optimistic intra-rack tier; the blast-radius knob is the
+        // exact model for correlated loss.
         let shard_bytes = s.local_experts.max(1) as f64
             * spec.model.expert_bytes()
             * spec.model.n_moe_layers() as f64;
@@ -264,19 +304,55 @@ impl FleetFailures {
             total_bytes: shard_bytes * s.group_size as f64,
             n_copied: s.local_experts.max(1) * s.group_size,
         };
-        let warmup = placement::migration_seconds(&report, &spec.hw);
-        let groups = (0..n_groups)
-            .map(|g| {
-                GroupFailures::new(
-                    s.seed ^ 0xFA11 ^ (g as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                    s.mtbf,
-                    s.mttr,
-                    warmup,
-                )
-            })
-            .collect();
+        let warmup_local = placement::migration_seconds(&report, &spec.hw);
+        let warmup_remote = if topo.is_tiered() {
+            placement::migration_seconds_over(&report, topo.inter_bw, topo.inter_latency)
+        } else {
+            warmup_local
+        };
+        let blast = s.rack_blast_radius && topo.is_tiered();
+        let (streams, domain_of) = if blast {
+            // One correlated stream per rack: every group in the rack
+            // shares its outage windows, and recovery always fetches
+            // cross-rack (the local replicas died in the same blast).
+            let streams = (0..topo.racks)
+                .map(|rack| {
+                    GroupFailures::new(
+                        s.seed
+                            ^ 0xFA11
+                            ^ 0xB1A5
+                            ^ (rack as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        s.mtbf,
+                        s.mttr,
+                        warmup_remote,
+                    )
+                })
+                .collect();
+            let domain_of = (0..n_groups).map(|g| topo.rack_of(g)).collect();
+            (streams, domain_of)
+        } else {
+            let streams = (0..n_groups)
+                .map(|g| {
+                    // A lone group in its rack has no rack-local replica
+                    // to re-pull from; its warm-up pays the spine.
+                    let warmup = if topo.is_tiered() && topo.rack_size(topo.rack_of(g)) == 1 {
+                        warmup_remote
+                    } else {
+                        warmup_local
+                    };
+                    GroupFailures::new(
+                        s.seed ^ 0xFA11 ^ (g as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        s.mtbf,
+                        s.mttr,
+                        warmup,
+                    )
+                })
+                .collect();
+            (streams, (0..n_groups).collect())
+        };
         Some(FleetFailures {
-            groups,
+            streams,
+            domain_of,
             coupled: s.mode == ParallelMode::Dep,
             requeue: s.requeue_on_failure,
         })
@@ -284,17 +360,17 @@ impl FleetFailures {
 
     /// When group `g`, not serving at `t`, will serve again; `None` if it
     /// is serving at `t`.  Under DEP coupling the stall is the union of
-    /// every group's windows, so the chain of overlapping outages is
+    /// every domain's windows, so the chain of overlapping outages is
     /// chased to its end.
     fn serving_resume(&mut self, g: usize, t: f64) -> Option<f64> {
         if !self.coupled {
-            return self.groups[g].window_at(t).map(|w| w.2);
+            return self.streams[self.domain_of[g]].window_at(t).map(|w| w.2);
         }
         let mut resume = t;
         let mut stalled = false;
         loop {
             let mut advanced = false;
-            for gf in self.groups.iter_mut() {
+            for gf in self.streams.iter_mut() {
                 if let Some(w) = gf.window_at(resume) {
                     if w.2 > resume {
                         resume = w.2;
@@ -313,22 +389,23 @@ impl FleetFailures {
     /// First failure instant strictly after `t` that affects group `g`.
     fn next_down_after(&mut self, g: usize, t: f64) -> f64 {
         if !self.coupled {
-            return self.groups[g].next_down_after(t);
+            return self.streams[self.domain_of[g]].next_down_after(t);
         }
         let mut next = f64::INFINITY;
-        for gf in self.groups.iter_mut() {
+        for gf in self.streams.iter_mut() {
             next = next.min(gf.next_down_after(t));
         }
         next
     }
 
     /// Lifecycle state of group `g` at `t` (coupling included: under DEP
-    /// any group's repair makes every group `Down`).
+    /// any domain's repair makes every group `Down`).
     fn state(&mut self, g: usize, t: f64) -> GroupState {
-        let range = if self.coupled { 0..self.groups.len() } else { g..g + 1 };
+        let d = self.domain_of[g];
+        let range = if self.coupled { 0..self.streams.len() } else { d..d + 1 };
         let mut state = GroupState::Up;
         for i in range {
-            match self.groups[i].window_at(t) {
+            match self.streams[i].window_at(t) {
                 None => {}
                 Some((_, repaired, _)) if t < repaired => return GroupState::Down,
                 Some(_) => state = GroupState::Recovering,
@@ -663,18 +740,41 @@ impl GroupSim {
     }
 }
 
+/// Cross-rack admission accounting surfaced through [`FleetOutcome`].
+#[derive(Default)]
+struct CrossRack {
+    requests: usize,
+    bytes: f64,
+}
+
 /// Route one request at `now`: snapshot every group's load (marking
 /// non-serving groups so the router excludes them) and enqueue on the
-/// admitting group.  Shed/Failed verdicts are returned for the caller's
-/// accounting.
+/// admitting group.  On a tiered topology the arrival carries its home
+/// rack and the priced cross-rack penalty; an out-of-rack admission ships
+/// the prompt activations over the inter-rack spine — charged to the
+/// request's ready time (it cannot batch before the transfer lands) and
+/// to the cross-rack counters.  Shed/Failed verdicts are returned for the
+/// caller's accounting.
 fn route_request(
     idx: usize,
     now: f64,
-    isl: usize,
+    requests: &[Request],
     groups: &mut [GroupSim],
     failures: &mut Option<FleetFailures>,
     router: &mut ClusterRouter,
+    bytes_per_token: f64,
+    ready: &mut [f64],
+    xr: &mut CrossRack,
 ) -> RouteDecision {
+    let r = &requests[idx];
+    let bytes = r.isl as f64 * bytes_per_token;
+    let ctx = {
+        let topo = router.topology();
+        RouteCtx {
+            home_rack: topo.home_rack(r.id),
+            cross_penalty: topo.cross_penalty(bytes),
+        }
+    };
     let loads: Vec<GroupLoad> = groups
         .iter()
         .enumerate()
@@ -686,10 +786,25 @@ fn route_request(
             l
         })
         .collect();
-    let decision = router.route(&loads);
+    let decision = router.route(&loads, &ctx);
     if let RouteDecision::Admit(g) = decision {
-        groups[g].pending.push_back(idx);
-        groups[g].pending_tokens += isl;
+        let topo = router.topology();
+        if topo.is_tiered() && topo.rack_of(g) != ctx.home_rack {
+            xr.requests += 1;
+            xr.bytes += bytes;
+            ready[idx] = now + topo.inter_rack_seconds(bytes);
+        }
+        // Keep the queue sorted by ready time (stable on ties, so equal
+        // ready times preserve admission order).  Only a cross-rack
+        // admission can be ready *after* `now`, and it must not block
+        // already-ready work behind it while its prompt is in transit;
+        // every other admission has ready <= now <= the queue tail's
+        // ready bound, so this degenerates to a push_back — bit-identical
+        // to the flat fleet.
+        let q = &mut groups[g].pending;
+        let pos = q.iter().position(|&j| ready[j] > ready[idx]).unwrap_or(q.len());
+        q.insert(pos, idx);
+        groups[g].pending_tokens += r.isl;
     }
     decision
 }
@@ -719,6 +834,8 @@ fn process_spills(
     groups: &mut [GroupSim],
     failures: &mut Option<FleetFailures>,
     router: &mut ClusterRouter,
+    bytes_per_token: f64,
+    xr: &mut CrossRack,
 ) {
     spills.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.idx.cmp(&b.idx)));
     let requeue = match failures {
@@ -733,8 +850,20 @@ fn process_spills(
             ledger.failed_tokens += isl;
             continue;
         }
+        // A cross-rack re-admission pushes the ready time past the spill
+        // instant by the inter-rack transfer (route_request overwrites).
         ledger.ready[s.idx] = s.at;
-        match route_request(s.idx, s.at, isl, groups, failures, router) {
+        match route_request(
+            s.idx,
+            s.at,
+            requests,
+            groups,
+            failures,
+            router,
+            bytes_per_token,
+            &mut ledger.ready,
+            xr,
+        ) {
             RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
             RouteDecision::Shed | RouteDecision::Failed => {
                 ledger.failed += 1;
@@ -811,6 +940,14 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
     let (n_groups, policy, slo) = (*n_groups, *policy, *slo);
     let requests = fleet_workload(spec)?;
     let mnt = spec.serving.max_num_tokens;
+    // Rack tiers: group→rack assignment, inter-rack link pricing, and the
+    // per-request home rack.  Flat (racks = 1) keeps every penalty at
+    // exactly zero, so the tiered code path is bit-identical to the
+    // pre-topology fleet.
+    let topo = RackTopology::from_serving(&spec.serving, n_groups);
+    // A cross-rack admission ships the request's prompt activations (one
+    // hidden-dim vector per prompt token) over the spine.
+    let bytes_per_token = spec.model.hidden as f64 * spec.model.act_bytes;
 
     // Cold-start admission prior: seed the per-group seconds-per-token
     // estimate from the analytic prefill rate of one typical prompt, so
@@ -831,9 +968,10 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             GroupSim::new(spt0, dynamic)
         })
         .collect();
-    let mut failures = FleetFailures::from_spec(spec, n_groups);
-    let mut router = ClusterRouter::new(n_groups, policy);
+    let mut failures = FleetFailures::from_spec(spec, &topo);
+    let mut router = ClusterRouter::with_topology(policy, topo);
     let mut first_token = vec![0.0f64; requests.len()];
+    let mut xr = CrossRack::default();
     let mut ledger = ChurnLedger {
         ready: requests.iter().map(|r| r.arrival).collect(),
         respills: vec![0; requests.len()],
@@ -881,10 +1019,22 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
                     &mut groups,
                     &mut failures,
                     &mut router,
+                    bytes_per_token,
+                    &mut xr,
                 );
             }
         }
-        match route_request(i, r.arrival, r.isl, &mut groups, &mut failures, &mut router) {
+        match route_request(
+            i,
+            r.arrival,
+            &requests,
+            &mut groups,
+            &mut failures,
+            &mut router,
+            bytes_per_token,
+            &mut ledger.ready,
+            &mut xr,
+        ) {
             RouteDecision::Admit(_) => {}
             RouteDecision::Shed => {
                 shed += 1;
@@ -923,6 +1073,8 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             &mut groups,
             &mut failures,
             &mut router,
+            bytes_per_token,
+            &mut xr,
         );
     }
 
@@ -998,6 +1150,8 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             .filter_map(|g| g.dynamic.as_ref())
             .map(|d| d.replacements)
             .sum(),
+        cross_rack_requests: xr.requests,
+        cross_rack_bytes: xr.bytes,
         span,
         metrics,
     })
@@ -1247,7 +1401,8 @@ mod tests {
         assert_eq!(serving, repaired + 0.5, "warm-up extends the outage");
         // Lifecycle through the fleet view.
         let mut f = FleetFailures {
-            groups: vec![GroupFailures::new(42, 10.0, 2.0, 0.5)],
+            streams: vec![GroupFailures::new(42, 10.0, 2.0, 0.5)],
+            domain_of: vec![0],
             coupled: false,
             requeue: false,
         };
@@ -1266,10 +1421,11 @@ mod tests {
         // Group 0 effectively never fails on its own (huge MTBF); group
         // 1's first outage must stall group 0 under coupling only.
         let mk = |coupled| FleetFailures {
-            groups: vec![
+            streams: vec![
                 GroupFailures::new(1, 1e12, 1.0, 0.0),
                 GroupFailures::new(2, 50.0, 1.0, 0.0),
             ],
+            domain_of: vec![0, 1],
             coupled,
             requeue: false,
         };
@@ -1452,5 +1608,197 @@ mod tests {
         assert_eq!(a.metrics.median_ttft(), b.metrics.median_ttft());
         assert_eq!(a.per_group_availability, b.per_group_availability);
         assert_eq!(a.span, b.span);
+    }
+
+    // -----------------------------------------------------------------
+    // Rack-tiered topology
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn one_rack_tiered_is_identical_to_flat() {
+        // Configuring the inter-rack link without a second rack must not
+        // move a single float: with racks = 1 every pair of groups is
+        // intra-rack and every penalty is exactly zero.
+        for policy in [
+            ClusterPolicy::RoundRobin,
+            ClusterPolicy::LeastOutstandingTokens,
+            ClusterPolicy::SloAdmission { max_wait: 0.5 },
+        ] {
+            let flat = tiny_fleet(ParallelMode::Dwdp, 4)
+                .cluster_policy(policy)
+                .build()
+                .unwrap();
+            let tiered = tiny_fleet(ParallelMode::Dwdp, 4)
+                .cluster_policy(policy)
+                .racks(1)
+                .inter_rack_gbps(0.001)
+                .inter_rack_latency(1.0)
+                .build()
+                .unwrap();
+            let a = simulate_analytic(&flat).unwrap();
+            let b = simulate_analytic(&tiered).unwrap();
+            assert_eq!(a.metrics.median_ttft(), b.metrics.median_ttft(), "{}", policy.name());
+            assert_eq!(a.span, b.span, "{}", policy.name());
+            assert_eq!(a.admitted, b.admitted, "{}", policy.name());
+            assert_eq!(a.shed, b.shed, "{}", policy.name());
+            assert_eq!(a.per_group_requests, b.per_group_requests, "{}", policy.name());
+            assert_eq!(b.cross_rack_requests, 0, "{}", policy.name());
+            assert_eq!(b.cross_rack_bytes, 0.0, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn rack_local_first_reduces_cross_rack_traffic() {
+        // 4 groups over 2 racks, arrivals alternating home racks: the
+        // rack-blind least-outstanding baseline spreads by load alone and
+        // ships roughly half its admissions cross-rack; rack-local-first
+        // keeps them home unless the backlog outweighs the priced spill.
+        let run = |policy| {
+            let spec = tiny_fleet(ParallelMode::Dwdp, 4)
+                .cluster_policy(policy)
+                .racks(2)
+                .inter_rack_gbps(25.0)
+                .inter_rack_latency(3e-6)
+                .build()
+                .unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let blind = run(ClusterPolicy::LeastOutstandingTokens);
+        let local = run(ClusterPolicy::RackLocalFirst);
+        assert_eq!(blind.offered, local.offered, "identical offered load");
+        assert!(
+            blind.cross_rack_requests > 0,
+            "rack-blind routing must actually spill cross-rack"
+        );
+        assert!(blind.cross_rack_bytes > 0.0);
+        assert!(
+            local.cross_rack_bytes < blind.cross_rack_bytes,
+            "rack-local-first {} must ship fewer cross-rack bytes than rack-blind {}",
+            local.cross_rack_bytes,
+            blind.cross_rack_bytes
+        );
+        assert_eq!(local.admitted, local.offered, "rack-local-first never sheds on load");
+    }
+
+    #[test]
+    fn cross_rack_admission_pays_the_link_in_ready_time() {
+        // Two groups in two racks; both requests home in rack 0 (even
+        // ids).  Round-robin admits the second one to the rack-1 group,
+        // so its prefill cannot start before the (deliberately glacial)
+        // inter-rack transfer of its prompt lands.
+        let trace = WorkloadTrace::from_requests(vec![
+            Request { id: 0, arrival: 0.0, isl: 2048, osl: 8 },
+            Request { id: 2, arrival: 0.0, isl: 2048, osl: 8 },
+        ]);
+        let gbps = 0.001; // 1 MB/s: 2048 tokens x 128 hidden ≈ 0.26 s
+        let spec = tiny_fleet(ParallelMode::Dwdp, 2)
+            .arrival(ArrivalProcess::Replay { trace })
+            .requests(2)
+            .cluster_policy(ClusterPolicy::RoundRobin)
+            .racks(2)
+            .inter_rack_gbps(gbps)
+            .inter_rack_latency(0.0)
+            .build()
+            .unwrap();
+        let out = simulate_analytic(&spec).unwrap();
+        assert_eq!(out.cross_rack_requests, 1);
+        let bytes = 2048.0 * 128.0; // isl x tiny-model hidden x act_bytes
+        assert_eq!(out.cross_rack_bytes, bytes);
+        let penalty = bytes / (gbps * 1e9);
+        let crossed = out
+            .metrics
+            .records
+            .iter()
+            .find(|r| r.id == 2)
+            .expect("the second arrival completed");
+        assert!(
+            crossed.first_token >= penalty,
+            "cross-rack TTFT {} must include the {penalty} s transfer",
+            crossed.first_token
+        );
+        let home = out.metrics.records.iter().find(|r| r.id == 0).unwrap();
+        assert!(home.first_token < penalty, "the home admission pays no penalty");
+    }
+
+    /// Regression: an in-transit cross-rack prompt at the head of a
+    /// group's queue must not block already-ready work admitted behind
+    /// it — the queue is kept in ready order, so the ready request
+    /// batches immediately and only the cross-rack request waits for its
+    /// transfer.
+    #[test]
+    fn in_transit_cross_rack_prompt_does_not_block_ready_work() {
+        // Round-robin over 2 groups in 2 racks: id 0 -> group 0 (home),
+        // id 2 -> group 1 (cross-rack, ~0.26 s transfer at 1 MB/s),
+        // id 4 -> group 0 (home), id 1 at t = 0.01 -> group 1 (home).
+        let trace = WorkloadTrace::from_requests(vec![
+            Request { id: 0, arrival: 0.0, isl: 2048, osl: 8 },
+            Request { id: 2, arrival: 0.0, isl: 2048, osl: 8 },
+            Request { id: 4, arrival: 0.0, isl: 2048, osl: 8 },
+            Request { id: 1, arrival: 0.01, isl: 2048, osl: 8 },
+        ]);
+        let spec = tiny_fleet(ParallelMode::Dwdp, 2)
+            .arrival(ArrivalProcess::Replay { trace })
+            .requests(4)
+            .cluster_policy(ClusterPolicy::RoundRobin)
+            .racks(2)
+            .inter_rack_gbps(0.001)
+            .inter_rack_latency(0.0)
+            .build()
+            .unwrap();
+        let out = simulate_analytic(&spec).unwrap();
+        assert_eq!(out.cross_rack_requests, 1, "only id 2 leaves its home rack");
+        let penalty = 2048.0 * 128.0 / 1e6; // isl x tiny hidden / 1 MB/s
+        let ft = |id: u64| {
+            out.metrics.records.iter().find(|r| r.id == id).expect("completed").first_token
+        };
+        assert!(
+            ft(1) < penalty / 2.0,
+            "ready home-rack request must not wait out the in-transit prompt ({} vs {penalty})",
+            ft(1)
+        );
+        assert!(ft(2) >= penalty, "the cross-rack request itself pays the transfer");
+    }
+
+    #[test]
+    fn rack_blast_radius_downs_whole_racks_together() {
+        // With the blast radius on, groups in the same rack share one
+        // failure stream — their availabilities are identical — while
+        // racks fail independently of each other.
+        let scn = |blast: bool| {
+            tiny_fleet(ParallelMode::Dwdp, 4)
+                .rate(8.0)
+                .racks(2)
+                .inter_rack_gbps(25.0)
+                .rack_blast_radius(blast)
+                .mtbf(0.5)
+                .mttr(0.2)
+                .requeue_on_failure(true)
+                .slo(1e4, 1e4)
+                .build()
+                .unwrap()
+        };
+        let out = simulate_analytic(&scn(true)).unwrap();
+        assert_eq!(
+            out.per_group_availability[0], out.per_group_availability[1],
+            "rack 0's groups share the blast"
+        );
+        assert_eq!(
+            out.per_group_availability[2], out.per_group_availability[3],
+            "rack 1's groups share the blast"
+        );
+        assert!(
+            out.per_group_availability.iter().any(|&a| a < 1.0),
+            "second-scale MTBF must produce outages"
+        );
+        // Conservation still holds under correlated failures.
+        assert_eq!(out.offered, out.admitted + out.shed + out.failed);
+        assert_eq!(out.offered_tokens, out.admitted_tokens + out.shed_tokens + out.failed_tokens);
+        // Per-group (uncorrelated) streams: the two groups of a rack are
+        // seeded independently, so their availabilities differ.
+        let solo = simulate_analytic(&scn(false)).unwrap();
+        assert_ne!(
+            solo.per_group_availability[0], solo.per_group_availability[1],
+            "independent failure streams should not coincide"
+        );
     }
 }

@@ -7,6 +7,20 @@
 //! serving groups — or refusing it outright under SLO-aware admission
 //! control, the knob that turns overload into bounded shedding instead of
 //! unbounded queueing.
+//!
+//! With a tiered [`RackTopology`] (racks > 1) the router becomes
+//! hierarchy-aware: every arrival carries a home rack ([`RouteCtx`]), and
+//! admitting it outside that rack costs the inter-rack transfer of its
+//! prompt activations.  The [`ClusterPolicy::RackLocalFirst`] policy
+//! prices that spill directly — each candidate's predicted wait is
+//! penalized by the cross-rack transfer time, so home-rack groups win
+//! until they are backlogged by more than the link costs — and
+//! [`ClusterPolicy::SloAdmission`] applies the same penalty to both its
+//! placement choice and its shed bound.  On a flat (1-rack) topology the
+//! penalty is identically zero and every policy reduces bit-for-bit to
+//! its rack-blind behavior.
+
+use super::topology::RackTopology;
 
 /// Cluster routing policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -14,13 +28,22 @@ pub enum ClusterPolicy {
     /// Blind rotation over the groups.
     RoundRobin,
     /// Fewest outstanding prompt tokens (queued + in-flight prefill);
-    /// ties break to the lowest group index.
+    /// ties break to the lowest group index.  Deliberately rack-blind —
+    /// the baseline the tiered policies are measured against.
     LeastOutstandingTokens,
     /// Least-outstanding placement plus admission control: a request is
-    /// shed when even the best group's predicted queueing delay exceeds
-    /// `max_wait` seconds — protecting admitted requests' TTFT SLO at the
-    /// cost of explicit, accounted-for shedding.
+    /// shed when even the best group's predicted queueing delay (plus the
+    /// cross-rack penalty, on a tiered topology) exceeds `max_wait`
+    /// seconds — protecting admitted requests' TTFT SLO at the cost of
+    /// explicit, accounted-for shedding.
     SloAdmission { max_wait: f64 },
+    /// Rack-local-first: place by predicted wait with the cross-rack
+    /// transfer penalty added to out-of-rack candidates, so the arrival's
+    /// home rack wins until its groups are backlogged by more than the
+    /// inter-rack link costs.  Never sheds on load (only on sick groups
+    /// reporting non-finite waits); on a flat topology this is plain
+    /// least-predicted-wait placement.
+    RackLocalFirst,
 }
 
 impl ClusterPolicy {
@@ -29,16 +52,18 @@ impl ClusterPolicy {
             ClusterPolicy::RoundRobin => "round-robin",
             ClusterPolicy::LeastOutstandingTokens => "least-outstanding",
             ClusterPolicy::SloAdmission { .. } => "slo-admission",
+            ClusterPolicy::RackLocalFirst => "rack-local",
         }
     }
 
-    /// Parse a CLI-style name (`rr`, `lot`, `slo`); `max_wait` seeds the
-    /// admission threshold for the `slo` policy.
+    /// Parse a CLI-style name (`rr`, `lot`, `slo`, `rlf`); `max_wait`
+    /// seeds the admission threshold for the `slo` policy.
     pub fn parse(s: &str, max_wait: f64) -> Option<ClusterPolicy> {
         match s {
             "rr" | "round-robin" => Some(ClusterPolicy::RoundRobin),
             "lot" | "least-outstanding" | "least" => Some(ClusterPolicy::LeastOutstandingTokens),
             "slo" | "slo-admission" => Some(ClusterPolicy::SloAdmission { max_wait }),
+            "rlf" | "rack-local" | "rack" => Some(ClusterPolicy::RackLocalFirst),
             _ => None,
         }
     }
@@ -77,12 +102,33 @@ impl Default for GroupLoad {
     }
 }
 
+/// Per-arrival routing context: where the request arrived and what
+/// admitting it outside that rack costs.  [`RouteCtx::flat`] (home rack 0,
+/// zero penalty) reproduces the topology-blind behavior exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteCtx {
+    /// Rack the arrival's front-end lives in
+    /// ([`RackTopology::home_rack`]).
+    pub home_rack: usize,
+    /// Seconds a cross-rack admission costs this request (the inter-rack
+    /// transfer of its prompt activations); 0 on a flat topology.
+    pub cross_penalty: f64,
+}
+
+impl RouteCtx {
+    /// The flat-topology context: every group is local, spilling is free.
+    pub fn flat() -> RouteCtx {
+        RouteCtx { home_rack: 0, cross_penalty: 0.0 }
+    }
+}
+
 /// The router's verdict for one arrival.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RouteDecision {
     /// Admit to this group index.
     Admit(usize),
-    /// Refuse: no group can serve within the admission bound.
+    /// Refuse: no group can serve within the admission bound (or every
+    /// serving group reports a non-finite predicted wait).
     Shed,
     /// Drop: no group is serving at all (fleet-wide outage).  Accounted
     /// as *failed*, not shed — shedding is a policy choice, an outage is
@@ -91,22 +137,33 @@ pub enum RouteDecision {
 }
 
 /// Stateful cluster router (round-robin carries a cursor; the other
-/// policies are pure functions of the observed loads).
+/// policies are pure functions of the observed loads and the topology).
 #[derive(Debug, Clone)]
 pub struct ClusterRouter {
     policy: ClusterPolicy,
+    topo: RackTopology,
     n_groups: usize,
     next: usize,
 }
 
 impl ClusterRouter {
+    /// A router over a flat (single-rack) fleet.
     pub fn new(n_groups: usize, policy: ClusterPolicy) -> ClusterRouter {
-        assert!(n_groups >= 1, "router needs at least one group");
-        ClusterRouter { policy, n_groups, next: 0 }
+        ClusterRouter::with_topology(policy, RackTopology::flat(n_groups))
+    }
+
+    /// A router over an explicit rack topology.
+    pub fn with_topology(policy: ClusterPolicy, topo: RackTopology) -> ClusterRouter {
+        assert!(topo.n_groups >= 1, "router needs at least one group");
+        ClusterRouter { policy, n_groups: topo.n_groups, topo, next: 0 }
     }
 
     pub fn policy(&self) -> ClusterPolicy {
         self.policy
+    }
+
+    pub fn topology(&self) -> &RackTopology {
+        &self.topo
     }
 
     /// Serving group with the fewest outstanding tokens (ties break to
@@ -128,11 +185,53 @@ impl ClusterRouter {
         best
     }
 
+    /// A candidate's effective wait under `ctx`: its predicted wait, plus
+    /// the cross-rack penalty when the group lives outside the arrival's
+    /// home rack.
+    fn effective_wait(&self, g: usize, loads: &[GroupLoad], ctx: &RouteCtx) -> f64 {
+        let penalty = if self.topo.is_tiered() && self.topo.rack_of(g) != ctx.home_rack {
+            ctx.cross_penalty
+        } else {
+            0.0
+        };
+        loads[g].predicted_wait + penalty
+    }
+
+    /// Serving group with the lowest *effective* wait, excluding groups
+    /// whose predicted wait is non-finite (a group reporting NaN or
+    /// infinity cannot be meaningfully compared — and must never win by
+    /// losing every `<` comparison; see the admission regression test).
+    /// Returns `(winner, any_up)` so callers can distinguish "nothing
+    /// admissible" (shed) from "nothing serving" (failed).
+    fn least_effective_wait(&self, loads: &[GroupLoad], ctx: &RouteCtx) -> (Option<usize>, bool) {
+        let mut best: Option<(usize, f64)> = None;
+        let mut any_up = false;
+        for (i, l) in loads.iter().enumerate() {
+            if !l.up {
+                continue;
+            }
+            any_up = true;
+            if !l.predicted_wait.is_finite() {
+                continue;
+            }
+            let w = self.effective_wait(i, loads, ctx);
+            let better = match best {
+                None => true,
+                Some((_, bw)) => w < bw,
+            };
+            if better {
+                best = Some((i, w));
+            }
+        }
+        (best.map(|(i, _)| i), any_up)
+    }
+
     /// Decide placement for one arrival given the current per-group loads
-    /// (`loads.len()` must equal the router's group count).  Groups that
-    /// are not [`GroupLoad::up`] are excluded; if no group is serving the
-    /// decision is [`RouteDecision::Failed`].
-    pub fn route(&mut self, loads: &[GroupLoad]) -> RouteDecision {
+    /// (`loads.len()` must equal the router's group count) and the
+    /// arrival's [`RouteCtx`].  Groups that are not [`GroupLoad::up`] are
+    /// excluded; if no group is serving the decision is
+    /// [`RouteDecision::Failed`].
+    pub fn route(&mut self, loads: &[GroupLoad], ctx: &RouteCtx) -> RouteDecision {
         assert_eq!(loads.len(), self.n_groups, "load snapshot size mismatch");
         match self.policy {
             ClusterPolicy::RoundRobin => {
@@ -152,25 +251,27 @@ impl ClusterRouter {
                 None => RouteDecision::Failed,
             },
             ClusterPolicy::SloAdmission { max_wait } => {
-                // Place by predicted wait (what the SLO cares about); shed
-                // when even the best serving group is past the bound.
-                let mut best: Option<usize> = None;
-                for (i, l) in loads.iter().enumerate() {
-                    if !l.up {
-                        continue;
-                    }
-                    let better = match best {
-                        None => true,
-                        Some(b) => l.predicted_wait < loads[b].predicted_wait,
-                    };
-                    if better {
-                        best = Some(i);
-                    }
-                }
+                // Place by effective wait (what the SLO cares about, with
+                // the cross-rack spill priced in); shed when even the
+                // best serving group is past the bound — or when every
+                // serving group reports a non-finite wait (shed-only: a
+                // sick estimate must never be *admitted* to).
+                let (best, any_up) = self.least_effective_wait(loads, ctx);
                 match best {
+                    None if any_up => RouteDecision::Shed,
                     None => RouteDecision::Failed,
-                    Some(b) if loads[b].predicted_wait > max_wait => RouteDecision::Shed,
+                    Some(b) if self.effective_wait(b, loads, ctx) > max_wait => {
+                        RouteDecision::Shed
+                    }
                     Some(b) => RouteDecision::Admit(b),
+                }
+            }
+            ClusterPolicy::RackLocalFirst => {
+                let (best, any_up) = self.least_effective_wait(loads, ctx);
+                match best {
+                    Some(g) => RouteDecision::Admit(g),
+                    None if any_up => RouteDecision::Shed,
+                    None => RouteDecision::Failed,
                 }
             }
         }
@@ -192,56 +293,159 @@ mod tests {
             .collect()
     }
 
+    fn two_racks_of_two() -> RackTopology {
+        RackTopology { n_groups: 4, racks: 2, inter_bw: 25e9, inter_latency: 3e-6 }
+    }
+
     #[test]
     fn round_robin_ignores_load() {
         let mut r = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
         let l = loads(&[100, 0, 50]);
-        assert_eq!(r.route(&l), RouteDecision::Admit(0));
-        assert_eq!(r.route(&l), RouteDecision::Admit(1));
-        assert_eq!(r.route(&l), RouteDecision::Admit(2));
-        assert_eq!(r.route(&l), RouteDecision::Admit(0));
+        let ctx = RouteCtx::flat();
+        assert_eq!(r.route(&l, &ctx), RouteDecision::Admit(0));
+        assert_eq!(r.route(&l, &ctx), RouteDecision::Admit(1));
+        assert_eq!(r.route(&l, &ctx), RouteDecision::Admit(2));
+        assert_eq!(r.route(&l, &ctx), RouteDecision::Admit(0));
     }
 
     #[test]
     fn least_outstanding_picks_min_with_low_index_ties() {
         let mut r = ClusterRouter::new(4, ClusterPolicy::LeastOutstandingTokens);
-        assert_eq!(r.route(&loads(&[5, 3, 9, 3])), RouteDecision::Admit(1));
-        assert_eq!(r.route(&loads(&[0, 0, 0, 0])), RouteDecision::Admit(0));
+        let ctx = RouteCtx::flat();
+        assert_eq!(r.route(&loads(&[5, 3, 9, 3]), &ctx), RouteDecision::Admit(1));
+        assert_eq!(r.route(&loads(&[0, 0, 0, 0]), &ctx), RouteDecision::Admit(0));
     }
 
     #[test]
     fn slo_admission_sheds_past_bound() {
         let mut r = ClusterRouter::new(2, ClusterPolicy::SloAdmission { max_wait: 0.5 });
+        let ctx = RouteCtx::flat();
         let ok = vec![
             GroupLoad { outstanding_tokens: 10, predicted_wait: 0.8, up: true },
             GroupLoad { outstanding_tokens: 90, predicted_wait: 0.2, up: true },
         ];
         // Places by wait, not tokens.
-        assert_eq!(r.route(&ok), RouteDecision::Admit(1));
+        assert_eq!(r.route(&ok, &ctx), RouteDecision::Admit(1));
         let overloaded = vec![
             GroupLoad { outstanding_tokens: 10, predicted_wait: 0.9, up: true },
             GroupLoad { outstanding_tokens: 90, predicted_wait: 0.6, up: true },
         ];
-        assert_eq!(r.route(&overloaded), RouteDecision::Shed);
+        assert_eq!(r.route(&overloaded, &ctx), RouteDecision::Shed);
+    }
+
+    /// Regression for the NaN-admission bug: a non-finite predicted wait
+    /// loses every `<` comparison, so it used to *win* the placement loop
+    /// by default — and then dodge the `> max_wait` shed check too, so a
+    /// group reporting NaN wait was admitted.  Non-finite waits are now
+    /// excluded from the candidate set (shed-only).
+    #[test]
+    fn non_finite_waits_are_never_admitted() {
+        let ctx = RouteCtx::flat();
+        for sick in [f64::NAN, f64::INFINITY] {
+            // A healthy candidate exists: it must win even though the
+            // sick group appears "first" and never compares greater.
+            let l = vec![
+                GroupLoad { outstanding_tokens: 0, predicted_wait: sick, up: true },
+                GroupLoad { outstanding_tokens: 50, predicted_wait: 0.1, up: true },
+            ];
+            let mut slo = ClusterRouter::new(2, ClusterPolicy::SloAdmission { max_wait: 0.5 });
+            assert_eq!(slo.route(&l, &ctx), RouteDecision::Admit(1), "{sick}");
+            let mut rlf = ClusterRouter::new(2, ClusterPolicy::RackLocalFirst);
+            assert_eq!(rlf.route(&l, &ctx), RouteDecision::Admit(1), "{sick}");
+            // Every serving group sick: shed, never admit — and never
+            // report a fleet-wide outage (the groups *are* up).
+            let all_sick = vec![
+                GroupLoad { outstanding_tokens: 0, predicted_wait: sick, up: true },
+                GroupLoad { outstanding_tokens: 0, predicted_wait: sick, up: true },
+            ];
+            let mut slo = ClusterRouter::new(2, ClusterPolicy::SloAdmission { max_wait: 0.5 });
+            assert_eq!(slo.route(&all_sick, &ctx), RouteDecision::Shed, "{sick}");
+            let mut rlf = ClusterRouter::new(2, ClusterPolicy::RackLocalFirst);
+            assert_eq!(rlf.route(&all_sick, &ctx), RouteDecision::Shed, "{sick}");
+        }
+    }
+
+    #[test]
+    fn rack_local_first_prefers_the_home_rack() {
+        // Groups 0/1 in rack 0, groups 2/3 in rack 1; equal (zero) load.
+        let mut r = ClusterRouter::with_topology(ClusterPolicy::RackLocalFirst, two_racks_of_two());
+        let l = loads(&[0, 0, 0, 0]);
+        let penalty = 1e-3;
+        assert_eq!(
+            r.route(&l, &RouteCtx { home_rack: 0, cross_penalty: penalty }),
+            RouteDecision::Admit(0)
+        );
+        assert_eq!(
+            r.route(&l, &RouteCtx { home_rack: 1, cross_penalty: penalty }),
+            RouteDecision::Admit(2)
+        );
+    }
+
+    #[test]
+    fn rack_local_first_spills_when_backlog_exceeds_the_penalty() {
+        let mut r = ClusterRouter::with_topology(ClusterPolicy::RackLocalFirst, two_racks_of_two());
+        let penalty = 0.01;
+        // Home-rack groups backlogged by less than the penalty: stay home.
+        let mild = loads(&[5, 5, 0, 0]); // waits 5 ms vs 0 ms + 10 ms penalty
+        assert_eq!(
+            r.route(&mild, &RouteCtx { home_rack: 0, cross_penalty: penalty }),
+            RouteDecision::Admit(0)
+        );
+        // Backlogged by more than the penalty: the spill is worth it.
+        let heavy = loads(&[50, 50, 0, 0]); // waits 50 ms vs 10 ms effective
+        assert_eq!(
+            r.route(&heavy, &RouteCtx { home_rack: 0, cross_penalty: penalty }),
+            RouteDecision::Admit(2)
+        );
+        // Home rack entirely down: spill regardless of penalty.
+        let mut dead_home = loads(&[0, 0, 3, 1]);
+        dead_home[0].up = false;
+        dead_home[1].up = false;
+        assert_eq!(
+            r.route(&dead_home, &RouteCtx { home_rack: 0, cross_penalty: 10.0 }),
+            RouteDecision::Admit(3)
+        );
+    }
+
+    #[test]
+    fn slo_admission_prices_the_cross_rack_spill() {
+        let topo = two_racks_of_two();
+        let mut r = ClusterRouter::with_topology(
+            ClusterPolicy::SloAdmission { max_wait: 0.02 },
+            topo,
+        );
+        // Remote groups idle, home groups mildly loaded: with a penalty
+        // larger than the home backlog the home group still wins.
+        let l = loads(&[5, 8, 0, 0]);
+        let ctx = RouteCtx { home_rack: 0, cross_penalty: 0.015 };
+        assert_eq!(r.route(&l, &ctx), RouteDecision::Admit(0));
+        // Home rack past the bound and the penalized spill past it too:
+        // shed, even though the remote groups' raw waits are tiny.
+        let over = loads(&[30, 30, 6, 6]);
+        assert_eq!(r.route(&over, &ctx), RouteDecision::Shed);
     }
 
     #[test]
     fn down_groups_are_excluded_by_every_policy() {
+        let ctx = RouteCtx::flat();
         let mut l = loads(&[5, 3, 9]);
         l[1].up = false; // the would-be winner is down
         let mut lot = ClusterRouter::new(3, ClusterPolicy::LeastOutstandingTokens);
-        assert_eq!(lot.route(&l), RouteDecision::Admit(0));
+        assert_eq!(lot.route(&l, &ctx), RouteDecision::Admit(0));
         let mut slo = ClusterRouter::new(3, ClusterPolicy::SloAdmission { max_wait: 1.0 });
-        assert_eq!(slo.route(&l), RouteDecision::Admit(0));
+        assert_eq!(slo.route(&l, &ctx), RouteDecision::Admit(0));
+        let mut rlf = ClusterRouter::new(3, ClusterPolicy::RackLocalFirst);
+        assert_eq!(rlf.route(&l, &ctx), RouteDecision::Admit(0));
         // Round-robin rotates past the down group and keeps cycling.
         let mut rr = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
-        assert_eq!(rr.route(&l), RouteDecision::Admit(0));
-        assert_eq!(rr.route(&l), RouteDecision::Admit(2));
-        assert_eq!(rr.route(&l), RouteDecision::Admit(0));
+        assert_eq!(rr.route(&l, &ctx), RouteDecision::Admit(0));
+        assert_eq!(rr.route(&l, &ctx), RouteDecision::Admit(2));
+        assert_eq!(rr.route(&l, &ctx), RouteDecision::Admit(0));
     }
 
     #[test]
     fn total_outage_fails_instead_of_shedding() {
+        let ctx = RouteCtx::flat();
         let mut l = loads(&[1, 2]);
         l[0].up = false;
         l[1].up = false;
@@ -249,9 +453,10 @@ mod tests {
             ClusterPolicy::RoundRobin,
             ClusterPolicy::LeastOutstandingTokens,
             ClusterPolicy::SloAdmission { max_wait: 10.0 },
+            ClusterPolicy::RackLocalFirst,
         ] {
             let mut r = ClusterRouter::new(2, policy);
-            assert_eq!(r.route(&l), RouteDecision::Failed, "{}", policy.name());
+            assert_eq!(r.route(&l, &ctx), RouteDecision::Failed, "{}", policy.name());
         }
         assert!(GroupLoad::default().up, "loads default to serving");
     }
@@ -267,9 +472,16 @@ mod tests {
             ClusterPolicy::parse("slo", 0.25),
             Some(ClusterPolicy::SloAdmission { max_wait: 0.25 })
         );
+        assert_eq!(ClusterPolicy::parse("rlf", 1.0), Some(ClusterPolicy::RackLocalFirst));
+        assert_eq!(
+            ClusterPolicy::parse("rack-local", 1.0),
+            Some(ClusterPolicy::RackLocalFirst)
+        );
         assert_eq!(ClusterPolicy::parse("nope", 1.0), None);
         assert_eq!(ClusterPolicy::RoundRobin.name(), "round-robin");
+        assert_eq!(ClusterPolicy::RackLocalFirst.name(), "rack-local");
         assert!(ClusterPolicy::SloAdmission { max_wait: 0.0 }.validate().is_err());
         assert!(ClusterPolicy::SloAdmission { max_wait: 1.0 }.validate().is_ok());
+        assert!(ClusterPolicy::RackLocalFirst.validate().is_ok());
     }
 }

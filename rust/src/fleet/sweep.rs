@@ -12,7 +12,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::serving::{Fidelity, RunReport, ScenarioSpec, ServingStack};
+use crate::serving::{Fidelity, RunReport, Scenario, ScenarioSpec, ServingStack};
 
 /// One point of a sweep: a frozen spec bound to a fidelity, with a label
 /// for table rows.
@@ -32,6 +32,24 @@ impl SweepPoint {
 /// Worker threads to use by default: one per available core.
 pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The rack-count sweep axis: one point per entry of `racks`, each the
+/// same base scenario rebuilt with that many racks (1 = the flat fleet).
+/// Labels come from the built specs, which name the rack count for tiered
+/// points — feed the result straight to [`run_sweep`].
+pub fn rack_axis(
+    base: &Scenario,
+    racks: &[usize],
+    fidelity: Fidelity,
+) -> Result<Vec<SweepPoint>, String> {
+    let mut out = Vec::with_capacity(racks.len());
+    for &r in racks {
+        let spec = base.clone().racks(r).build()?;
+        let label = spec.label.clone();
+        out.push(SweepPoint::new(&label, spec, fidelity));
+    }
+    Ok(out)
 }
 
 /// A per-point result slot, written once by whichever worker claims it.
@@ -129,6 +147,32 @@ mod tests {
     #[test]
     fn empty_sweep_is_empty() {
         assert!(run_sweep(&[], 8).is_empty());
+    }
+
+    #[test]
+    fn rack_axis_builds_one_point_per_rack_count() {
+        let base = Scenario::fleet()
+            .model(PaperModelConfig::tiny())
+            .group(4)
+            .groups(4)
+            .isl(1024)
+            .mnt(8192)
+            .osl(16)
+            .rate(20.0)
+            .requests(8)
+            .seed(3);
+        let points = rack_axis(&base, &[1, 2, 4], Fidelity::Analytic).unwrap();
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].spec.serving.racks, 1);
+        assert_eq!(points[2].spec.serving.racks, 4);
+        // Tiered labels name the rack count; the flat label stays the
+        // legacy single-domain form.
+        assert!(points[1].label.contains("2 racks"), "{}", points[1].label);
+        assert!(!points[0].label.contains("racks"), "{}", points[0].label);
+        // More racks than groups is a build error, not a silent clamp.
+        assert!(rack_axis(&base, &[8], Fidelity::Analytic).is_err());
+        let reports = run_sweep(&points, 2);
+        assert!(reports.iter().all(|r| r.is_ok()));
     }
 
     /// Regression: a sweep point whose fleet loses *every* request to

@@ -1,0 +1,202 @@
+//! Rack-tiered fleet topology: NVL72 domains grouped into racks with
+//! per-tier bandwidth/latency.
+//!
+//! The flat fleet model treats every serving group as equidistant — true
+//! inside one NVL72 domain, false the moment a fleet spans racks, where
+//! inter-rack links (IB/Ethernet) run an order of magnitude slower than
+//! NVLink and carry a real per-hop latency.  [`RackTopology`] is the one
+//! place that knowledge lives:
+//!
+//! * **Placement of groups onto racks** — groups are assigned to racks in
+//!   contiguous blocks ([`RackTopology::rack_of`]), so a 4-group fleet
+//!   over 2 racks is `[0, 0, 1, 1]`.  A group (one DWDP/DEP execution
+//!   group of a few GPUs) always lives inside a single NVL72 domain;
+//!   racks only ever separate *groups* from each other.
+//! * **Link tiers** ([`LinkTier`]) — traffic between two groups in the
+//!   same rack rides NVLink (the copy-engine model the rest of the crate
+//!   prices); traffic crossing racks pays the configured
+//!   `inter_rack_gbps` bandwidth plus `inter_rack_latency` per transfer.
+//! * **Arrival affinity** — every request arrives at a front-end in a
+//!   *home rack* ([`RackTopology::home_rack`], round-robin over racks by
+//!   request id, so the offered load is rack-balanced and deterministic).
+//!   Admitting the request to a group outside its home rack means the
+//!   prompt activations cross the inter-rack link: the router prices that
+//!   spill ([`RackTopology::cross_penalty`]) and the simulation charges
+//!   it to the request's ready time and the fleet's
+//!   `cross_rack_requests`/`cross_rack_bytes` counters.
+//!
+//! A 1-rack topology is *exactly* the flat fleet: every pair of groups is
+//! intra-rack, every arrival is home, every penalty is zero — the
+//! zero-delta contract property-tested in `rust/tests/properties.rs`.
+
+use crate::config::ServingConfig;
+
+/// Which link a transfer between two groups (or a front-end and a group)
+/// actually crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    /// Same rack: the NVL72 NVLink domain (copy-engine pricing).
+    IntraRack,
+    /// Different racks: the IB/Ethernet spine.
+    InterRack,
+}
+
+/// The fleet's rack layout plus the inter-rack link parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RackTopology {
+    /// Serving groups in the fleet.
+    pub n_groups: usize,
+    /// Racks the groups are spread over (1 = the flat, single-domain
+    /// fleet).  Never exceeds `n_groups`.
+    pub racks: usize,
+    /// Inter-rack bandwidth, B/s.
+    pub inter_bw: f64,
+    /// Per-transfer inter-rack latency, seconds.
+    pub inter_latency: f64,
+}
+
+impl RackTopology {
+    /// The flat single-rack topology (today's fleet model).
+    pub fn flat(n_groups: usize) -> RackTopology {
+        RackTopology {
+            n_groups,
+            racks: 1,
+            inter_bw: f64::INFINITY,
+            inter_latency: 0.0,
+        }
+    }
+
+    /// Build the topology a serving config describes.  `racks` is clamped
+    /// to the group count (validated upstream; the clamp keeps direct
+    /// library callers safe), and `inter_rack_gbps` converts to B/s.
+    pub fn from_serving(serving: &ServingConfig, n_groups: usize) -> RackTopology {
+        let racks = serving.racks.clamp(1, n_groups.max(1));
+        if racks <= 1 {
+            return RackTopology::flat(n_groups);
+        }
+        RackTopology {
+            n_groups,
+            racks,
+            inter_bw: serving.inter_rack_gbps * 1e9,
+            inter_latency: serving.inter_rack_latency,
+        }
+    }
+
+    /// More than one rack?
+    pub fn is_tiered(&self) -> bool {
+        self.racks > 1
+    }
+
+    /// The rack holding group `g`: contiguous blocks, first racks taking
+    /// the remainder when `racks` does not divide `n_groups`.
+    pub fn rack_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.n_groups);
+        g * self.racks / self.n_groups
+    }
+
+    /// Groups resident in `rack`.
+    pub fn rack_size(&self, rack: usize) -> usize {
+        (0..self.n_groups).filter(|&g| self.rack_of(g) == rack).count()
+    }
+
+    /// The home rack of a request: front-ends are spread round-robin over
+    /// racks by request id, so the offered load is rack-balanced and a
+    /// pure function of the workload (thread-invariance contract).
+    pub fn home_rack(&self, request_id: u64) -> usize {
+        (request_id % self.racks as u64) as usize
+    }
+
+    /// The link tier between two groups.
+    pub fn tier(&self, a: usize, b: usize) -> LinkTier {
+        if self.rack_of(a) == self.rack_of(b) {
+            LinkTier::IntraRack
+        } else {
+            LinkTier::InterRack
+        }
+    }
+
+    /// Seconds to move `bytes` over the inter-rack link.
+    pub fn inter_rack_seconds(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.inter_bw + self.inter_latency
+    }
+
+    /// Routing penalty for admitting a request of `bytes` prompt
+    /// activations to a group outside its home rack; 0 for a flat
+    /// topology.
+    pub fn cross_penalty(&self, bytes: f64) -> f64 {
+        if !self.is_tiered() {
+            return 0.0;
+        }
+        self.inter_rack_seconds(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+
+    #[test]
+    fn flat_topology_is_penalty_free() {
+        let t = RackTopology::flat(4);
+        assert!(!t.is_tiered());
+        assert_eq!(t.racks, 1);
+        for g in 0..4 {
+            assert_eq!(t.rack_of(g), 0);
+        }
+        assert_eq!(t.rack_size(0), 4);
+        for id in 0..10u64 {
+            assert_eq!(t.home_rack(id), 0);
+        }
+        assert_eq!(t.tier(0, 3), LinkTier::IntraRack);
+        assert_eq!(t.cross_penalty(1e9), 0.0);
+    }
+
+    #[test]
+    fn groups_map_to_contiguous_rack_blocks() {
+        let t = RackTopology { n_groups: 4, racks: 2, inter_bw: 25e9, inter_latency: 3e-6 };
+        assert_eq!((0..4).map(|g| t.rack_of(g)).collect::<Vec<_>>(), vec![0, 0, 1, 1]);
+        assert_eq!(t.rack_size(0), 2);
+        assert_eq!(t.rack_size(1), 2);
+        assert_eq!(t.tier(0, 1), LinkTier::IntraRack);
+        assert_eq!(t.tier(1, 2), LinkTier::InterRack);
+        // Uneven split: contiguous blocks, the earlier racks taking the
+        // remainder, every rack non-empty.
+        let t3 = RackTopology { n_groups: 5, racks: 3, inter_bw: 25e9, inter_latency: 0.0 };
+        let racks: Vec<usize> = (0..5).map(|g| t3.rack_of(g)).collect();
+        assert_eq!(racks, vec![0, 0, 1, 1, 2]);
+        assert_eq!((0..3).map(|r| t3.rack_size(r)).sum::<usize>(), 5);
+        assert!((0..3).all(|r| t3.rack_size(r) >= 1));
+    }
+
+    #[test]
+    fn home_racks_round_robin_and_penalty_prices_the_link() {
+        let t = RackTopology { n_groups: 4, racks: 2, inter_bw: 10e9, inter_latency: 1e-5 };
+        assert_eq!(t.home_rack(0), 0);
+        assert_eq!(t.home_rack(1), 1);
+        assert_eq!(t.home_rack(2), 0);
+        let p = t.cross_penalty(1e9);
+        assert!((p - (0.1 + 1e-5)).abs() < 1e-12, "{p}");
+        assert_eq!(t.cross_penalty(0.0), 0.0);
+    }
+
+    #[test]
+    fn from_serving_clamps_and_converts() {
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.racks = 1;
+        assert_eq!(RackTopology::from_serving(&s, 4), RackTopology::flat(4));
+        s.racks = 2;
+        s.inter_rack_gbps = 25.0;
+        s.inter_rack_latency = 3e-6;
+        let t = RackTopology::from_serving(&s, 4);
+        assert!(t.is_tiered());
+        assert_eq!(t.inter_bw, 25e9);
+        assert_eq!(t.inter_latency, 3e-6);
+        // More racks than groups: clamped so no rack is empty.
+        s.racks = 9;
+        assert_eq!(RackTopology::from_serving(&s, 4).racks, 4);
+    }
+}

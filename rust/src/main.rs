@@ -344,6 +344,18 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
         if let Some(local) = flags.get("local-experts").and_then(|s| s.parse().ok()) {
             scn = scn.local_experts(local);
         }
+        if let Some(racks) = flags.get("racks").and_then(|s| s.parse().ok()) {
+            scn = scn.racks(racks);
+        }
+        if let Some(gbps) = flags.get("inter-rack-gbps").and_then(|s| s.parse().ok()) {
+            scn = scn.inter_rack_gbps(gbps);
+        }
+        if let Some(lat) = flags.get("inter-rack-latency").and_then(|s| s.parse().ok()) {
+            scn = scn.inter_rack_latency(lat);
+        }
+        if flags.contains_key("rack-blast") {
+            scn = scn.rack_blast_radius(true);
+        }
         if let Some(mtbf) = flags.get("mtbf").and_then(|s| s.parse().ok()) {
             // --mttr defaults to 1 s so `--mtbf` alone is a valid ask.
             let mttr = flags.get("mttr").and_then(|s| s.parse().ok()).unwrap_or(1.0);
@@ -429,6 +441,13 @@ fn report_table(r: &RunReport) -> Table {
     t.row(vec!["requests".into(), r.n_requests.to_string()]);
     if r.n_groups > 0 {
         t.row(vec!["fleet groups".into(), r.n_groups.to_string()]);
+        if r.racks > 1 {
+            t.row(vec!["racks".into(), r.racks.to_string()]);
+            t.row(vec![
+                "cross-rack req / GB".into(),
+                format!("{} / {:.3}", r.cross_rack_requests, r.cross_rack_bytes / 1e9),
+            ]);
+        }
         t.row(vec![
             "TTFT p50/p95/p99 (ms)".into(),
             format!(

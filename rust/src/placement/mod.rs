@@ -12,8 +12,8 @@ pub mod replacement;
 use crate::util::Rng;
 
 pub use replacement::{
-    fetch_fractions, migration_cost, migration_fetches, migration_seconds, remote_scale,
-    target_placement, MigrationReport,
+    fetch_fractions, migration_cost, migration_fetches, migration_seconds,
+    migration_seconds_over, remote_scale, target_placement, MigrationReport,
 };
 
 /// Placement of `n_experts` across `n_ranks`, possibly redundant.

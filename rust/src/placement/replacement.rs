@@ -158,12 +158,28 @@ pub fn migration_cost(
 /// Wall-clock cost of a migration, charged to the epoch boundary: every
 /// rank pulls its inbound shards in parallel over the NVLink copy engine,
 /// so the group stalls for the slowest rank's transfer.
+///
+/// Re-placement migrations move shards *between the ranks of one group*,
+/// which always live inside a single NVL72 domain — so this is always the
+/// intra-rack tier.  Fetches that cross a rack boundary (a recovering
+/// group whose rack-local replicas died with it) are priced through
+/// [`migration_seconds_over`] with the inter-rack link parameters
+/// instead.
 pub fn migration_seconds(report: &MigrationReport, hw: &HardwareConfig) -> f64 {
+    migration_seconds_over(report, hw.ce_bw, hw.ce_issue_latency)
+}
+
+/// [`migration_seconds`] over an explicit link: the slowest rank's pull at
+/// `bw` B/s plus one `latency` per migration.  The tier-aware seam the
+/// fleet's rack topology prices recovery warm-ups through — intra-rack
+/// fetches pass the NVLink copy-engine parameters, cross-rack fetches the
+/// IB/Ethernet spine's.
+pub fn migration_seconds_over(report: &MigrationReport, bw: f64, latency: f64) -> f64 {
     if report.n_copied == 0 {
         return 0.0;
     }
     let worst = report.per_rank_bytes.iter().fold(0.0f64, |a, &b| a.max(b));
-    worst / hw.ce_bw + hw.ce_issue_latency
+    worst / bw + latency
 }
 
 /// Per-expert fetch need under observed loads: the probability that a
@@ -307,6 +323,30 @@ mod tests {
         };
         let t = migration_seconds(&report, &hw);
         assert!((t - (2.0 + hw.ce_issue_latency)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn migration_seconds_over_prices_the_chosen_tier() {
+        let hw = HardwareConfig::gb200();
+        let report = MigrationReport {
+            per_rank_bytes: vec![25e9, 50e9],
+            total_bytes: 75e9,
+            n_copied: 2,
+        };
+        // The default tier is exactly the NVLink copy-engine pricing.
+        assert_eq!(
+            migration_seconds(&report, &hw),
+            migration_seconds_over(&report, hw.ce_bw, hw.ce_issue_latency)
+        );
+        // A 25 GB/s inter-rack link with 3 us latency: slowest rank moves
+        // 50 GB in 2 s.
+        let t = migration_seconds_over(&report, 25e9, 3e-6);
+        assert!((t - (2.0 + 3e-6)).abs() < 1e-9, "{t}");
+        // Slower tier, slower warm-up.
+        assert!(t > migration_seconds(&report, &hw));
+        // An empty migration is free on every tier.
+        let empty = MigrationReport { per_rank_bytes: vec![0.0; 2], total_bytes: 0.0, n_copied: 0 };
+        assert_eq!(migration_seconds_over(&empty, 25e9, 3e-6), 0.0);
     }
 
     #[test]

@@ -92,6 +92,14 @@ pub struct RunReport {
     /// Mean per-group availability over the run horizon (1.0 without
     /// failure injection).
     pub availability: f64,
+    /// Racks the fleet's groups span (fleet scenarios; 1 = flat).
+    pub racks: usize,
+    /// Requests admitted to a group outside their home rack (fleet
+    /// scenarios on a tiered topology; 0 otherwise).
+    pub cross_rack_requests: usize,
+    /// Prompt-activation bytes those admissions shipped over the
+    /// inter-rack spine.
+    pub cross_rack_bytes: f64,
     /// DES events processed (0 for analytic runs).
     pub events: u64,
     /// Chrome trace, when the scenario asked for one and the backend can
@@ -133,6 +141,9 @@ impl Default for RunReport {
             failed: 0,
             requeued: 0,
             availability: 1.0,
+            racks: 1,
+            cross_rack_requests: 0,
+            cross_rack_bytes: 0.0,
             events: 0,
             trace: None,
             extras: Vec::new(),
@@ -179,6 +190,9 @@ impl RunReport {
             ("failed", Json::Num(self.failed as f64)),
             ("requeued", Json::Num(self.requeued as f64)),
             ("availability", Json::Num(self.availability)),
+            ("racks", Json::Num(self.racks as f64)),
+            ("cross_rack_requests", Json::Num(self.cross_rack_requests as f64)),
+            ("cross_rack_bytes", Json::Num(self.cross_rack_bytes)),
             ("events", Json::Num(self.events as f64)),
             ("extras", Json::Arr(extras)),
         ])
@@ -206,6 +220,7 @@ fn base_report(spec: &ScenarioSpec, backend: &'static str) -> RunReport {
     if let ScenarioKind::Fleet { n_groups, ref arrival, .. } = spec.kind {
         r.n_groups = n_groups;
         r.arrival_rate = arrival.mean_rate();
+        r.racks = spec.serving.racks;
     }
     r
 }
@@ -264,6 +279,18 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
         if out.failed > 0 {
             report.extras.push(("failed tokens".into(), out.failed_tokens.to_string()));
         }
+    }
+    report.cross_rack_requests = out.cross_rack_requests;
+    report.cross_rack_bytes = out.cross_rack_bytes;
+    if spec.serving.racks > 1 {
+        report.extras.push((
+            "cross-rack".into(),
+            format!(
+                "{} requests, {:.3} GB",
+                out.cross_rack_requests,
+                out.cross_rack_bytes / 1e9
+            ),
+        ));
     }
     if out.remote_fetch_bytes > 0.0 {
         report.extras.push((

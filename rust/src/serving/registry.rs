@@ -104,6 +104,9 @@ fn run_replacement_skew() -> RunArtifact {
 fn run_fleet_churn() -> RunArtifact {
     RunArtifact::table(experiments::fleet::fleet_churn())
 }
+fn run_multirack() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::multirack())
+}
 
 static REGISTRY: &[ScenarioEntry] = &[
     ScenarioEntry {
@@ -244,6 +247,12 @@ static REGISTRY: &[ScenarioEntry] = &[
         group: "fleet",
         run: run_fleet_churn,
     },
+    ScenarioEntry {
+        id: "multirack",
+        title: "rack-tiered topology: flat vs tiered, rack-blind vs rack-local routing",
+        group: "fleet",
+        run: run_multirack,
+    },
 ];
 
 /// All registered scenarios, in registration order.
@@ -276,11 +285,13 @@ pub fn usage_text() -> String {
     out.push_str("                   [--json FILE]\n");
     out.push_str("  dwdp-repro fleet [--groups N] [--mode dwdp|dep] [--rate R] [--requests K]\n");
     out.push_str("                   [--seconds S] [--arrival poisson|burst|mmpp] [--cv2 X]\n");
-    out.push_str("                   [--policy rr|lot|slo] [--max-wait W] [--trace FILE.json]\n");
-    out.push_str("                   [--record-trace FILE.json] [--fidelity analytic|des]\n");
+    out.push_str("                   [--policy rr|lot|slo|rlf] [--max-wait W]\n");
+    out.push_str("                   [--trace FILE.json] [--record-trace FILE.json]\n");
+    out.push_str("                   [--fidelity analytic|des]\n");
     out.push_str("                   [--skew Z] [--replace N] [--local-experts L]\n");
     out.push_str("                   [--mtbf S] [--mttr S] [--requeue]\n");
-    out.push_str("                   [--threads T] [--json FILE]\n");
+    out.push_str("                   [--racks R] [--inter-rack-gbps G] [--inter-rack-latency S]\n");
+    out.push_str("                   [--rack-blast] [--threads T] [--json FILE]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");
     for group in ["context", "e2e", "fleet", "power", "analysis"] {
@@ -312,18 +323,20 @@ mod tests {
             assert!(find(id).is_some(), "missing scenario {id}");
         }
         // PR 2's fleet layer registers through the same table, as do
-        // PR 3's re-placement sweep and PR 4's churn scenario.
+        // PR 3's re-placement sweep, PR 4's churn scenario, and PR 5's
+        // rack-tiered topology sweep.
         for id in [
             "fleet_frontier",
             "fleet_burst",
             "fleet_trace",
             "replacement_skew",
             "fleet_churn",
+            "multirack",
         ] {
             assert!(find(id).is_some(), "missing scenario {id}");
             assert_eq!(find(id).unwrap().group, "fleet");
         }
-        assert_eq!(registry().len(), 23);
+        assert_eq!(registry().len(), 24);
     }
 
     #[test]
@@ -345,6 +358,8 @@ mod tests {
         assert!(text.contains("dwdp-repro fleet"));
         assert!(text.contains("--json"));
         assert!(text.contains("--mtbf"));
+        assert!(text.contains("--racks"));
+        assert!(text.contains("--inter-rack-gbps"));
         assert!(text.contains("  fleet:\n"));
     }
 

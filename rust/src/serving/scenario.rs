@@ -120,6 +120,10 @@ pub struct Scenario {
     mtbf: Option<f64>,
     mttr: Option<f64>,
     requeue_on_failure: Option<bool>,
+    racks: Option<usize>,
+    inter_rack_gbps: Option<f64>,
+    inter_rack_latency: Option<f64>,
+    rack_blast_radius: Option<bool>,
     seed: Option<u64>,
     // Workload / fleet.
     requests: usize,
@@ -171,6 +175,10 @@ impl Scenario {
             mtbf: None,
             mttr: None,
             requeue_on_failure: None,
+            racks: None,
+            inter_rack_gbps: None,
+            inter_rack_latency: None,
+            rack_blast_radius: None,
             seed: None,
             requests: if target == BuildTarget::Context { 2 } else { 64 },
             target,
@@ -346,6 +354,36 @@ impl Scenario {
         self
     }
 
+    /// Racks the fleet's serving groups are spread over, in contiguous
+    /// blocks (fleet scenarios; default 1 = the flat single-NVL72-domain
+    /// fleet, bit-identical to the pre-topology path).  Must not exceed
+    /// the fleet group count.
+    pub fn racks(mut self, n: usize) -> Self {
+        self.racks = Some(n);
+        self
+    }
+
+    /// Inter-rack link bandwidth in GB/s (the IB/Ethernet spine; only
+    /// meaningful with [`Scenario::racks`] > 1).
+    pub fn inter_rack_gbps(mut self, gbps: f64) -> Self {
+        self.inter_rack_gbps = Some(gbps);
+        self
+    }
+
+    /// Per-transfer inter-rack latency, seconds.
+    pub fn inter_rack_latency(mut self, seconds: f64) -> Self {
+        self.inter_rack_latency = Some(seconds);
+        self
+    }
+
+    /// Rack-level correlated failures: one outage downs every group in
+    /// the rack at once, and recovery warm-up fetches cross-rack
+    /// (requires racks >= 2; pairs with [`Scenario::mtbf`]).
+    pub fn rack_blast_radius(mut self, on: bool) -> Self {
+        self.rack_blast_radius = Some(on);
+        self
+    }
+
     /// RNG seed for the whole scenario.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
@@ -495,6 +533,18 @@ impl Scenario {
         if let Some(v) = self.requeue_on_failure {
             serving.requeue_on_failure = v;
         }
+        if let Some(v) = self.racks {
+            serving.racks = v;
+        }
+        if let Some(v) = self.inter_rack_gbps {
+            serving.inter_rack_gbps = v;
+        }
+        if let Some(v) = self.inter_rack_latency {
+            serving.inter_rack_latency = v;
+        }
+        if let Some(v) = self.rack_blast_radius {
+            serving.rack_blast_radius = v;
+        }
         if let Some(v) = self.seed {
             serving.seed = v;
         }
@@ -532,6 +582,12 @@ impl Scenario {
             BuildTarget::Fleet => {
                 if self.n_groups == 0 {
                     return Err("fleet groups must be >= 1".into());
+                }
+                if serving.racks > self.n_groups {
+                    return Err(format!(
+                        "racks {} exceeds fleet groups {} (every rack needs at least one group)",
+                        serving.racks, self.n_groups
+                    ));
                 }
                 let arrival = self
                     .arrival
@@ -583,8 +639,13 @@ impl Scenario {
                 )
             }
             ScenarioKind::Fleet { n_groups, arrival, policy, .. } => {
+                let rack_tag = if serving.racks > 1 {
+                    format!(" over {} racks", serving.racks)
+                } else {
+                    String::new()
+                };
                 format!(
-                    "fleet {}{}x{}, {} arrivals @ {:.1}/s, {} routing",
+                    "fleet {}{}x{}{rack_tag}, {} arrivals @ {:.1}/s, {} routing",
                     serving.mode.name(),
                     serving.group_size,
                     n_groups,
@@ -711,6 +772,47 @@ mod tests {
         assert!(!Scenario::fleet().mtbf(0.0).build().unwrap().serving.failures_enabled());
         let inf = Scenario::fleet().mtbf(f64::INFINITY).build().unwrap();
         assert!(!inf.serving.failures_enabled());
+    }
+
+    #[test]
+    fn rack_knobs_land_and_validate() {
+        let spec = Scenario::fleet()
+            .groups(6)
+            .racks(3)
+            .inter_rack_gbps(50.0)
+            .inter_rack_latency(5e-6)
+            .build()
+            .unwrap();
+        assert_eq!(spec.serving.racks, 3);
+        assert_eq!(spec.serving.inter_rack_gbps, 50.0);
+        assert_eq!(spec.serving.inter_rack_latency, 5e-6);
+        assert!(spec.label.contains("over 3 racks"), "{}", spec.label);
+        // The flat default carries no rack tag — labels (and so JSON
+        // fingerprints) are unchanged from the pre-topology path.
+        let flat = Scenario::fleet().build().unwrap();
+        assert_eq!(flat.serving.racks, 1);
+        assert!(!flat.label.contains("racks"), "{}", flat.label);
+        // Every rack needs a group; a broken spine is rejected.
+        assert!(Scenario::fleet().groups(2).racks(3).build().is_err());
+        assert!(Scenario::fleet().groups(4).racks(0).build().is_err());
+        assert!(Scenario::fleet().groups(4).racks(2).inter_rack_gbps(0.0).build().is_err());
+        assert!(Scenario::fleet()
+            .groups(4)
+            .racks(2)
+            .inter_rack_latency(f64::NAN)
+            .build()
+            .is_err());
+        // The blast radius needs racks (and rides failure injection).
+        assert!(Scenario::fleet().groups(4).rack_blast_radius(true).build().is_err());
+        let blast = Scenario::fleet()
+            .groups(4)
+            .racks(2)
+            .rack_blast_radius(true)
+            .mtbf(10.0)
+            .mttr(1.0)
+            .build()
+            .unwrap();
+        assert!(blast.serving.rack_blast_radius);
     }
 
     #[test]

@@ -28,12 +28,16 @@ pub fn cv(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, p in [0, 100]. Sorts a copy.
+///
+/// Sorts with `total_cmp` (NaN orders after +inf) — the same total order
+/// `LatencyDigest` uses — so a stray NaN sample degrades the top
+/// percentiles instead of panicking the whole aggregation.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, p)
 }
 
@@ -135,6 +139,19 @@ mod tests {
     fn percentile_unsorted_input() {
         let xs = [9.0, 1.0, 5.0];
         assert_eq!(percentile(&xs, 50.0), 5.0);
+    }
+
+    /// Regression: `partial_cmp().unwrap()` panicked on any NaN sample,
+    /// while `LatencyDigest` sorted the same data with `total_cmp`.  Both
+    /// now share the total order: NaN sorts last, so low/mid percentiles
+    /// of the finite samples are unaffected.
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN orders last");
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -100,9 +100,20 @@ impl ArrivalProcess {
                 (rate_low + rate_high) / 2.0
             }
             ArrivalProcess::Replay { trace } => {
-                let span = trace.requests.last().map(|r| r.arrival).unwrap_or(0.0);
+                // n arrivals bound n-1 inter-arrival gaps, and the span
+                // runs first-to-last (the old len()/last form both
+                // overcounted by one gap and undercounted traces whose
+                // first arrival sits far from t = 0).  A single-arrival
+                // trace has no gap to estimate a rate from.
+                let n = trace.requests.len();
+                if n < 2 {
+                    return 0.0;
+                }
+                let first = trace.requests.first().map(|r| r.arrival).unwrap_or(0.0);
+                let last = trace.requests.last().map(|r| r.arrival).unwrap_or(0.0);
+                let span = last - first;
                 if span > 0.0 {
-                    trace.requests.len() as f64 / span
+                    (n - 1) as f64 / span
                 } else {
                     0.0
                 }
@@ -454,6 +465,43 @@ mod tests {
         }
         let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
         assert!(rate > 2.0 && rate < 50.0, "mmpp rate {rate}");
+    }
+
+    /// Regression for the replay-rate fencepost: 5 arrivals spaced 0.5 s
+    /// apart are 4 gaps over 2 s — 2 req/s — regardless of where the
+    /// trace starts on the clock.  The old `len()/last` form reported
+    /// 2.5 req/s from t = 0 and a nonsense 0.45 req/s for the same trace
+    /// shifted to start at t = 9.
+    #[test]
+    fn replay_mean_rate_counts_gaps_not_arrivals() {
+        let spaced = |t0: f64| {
+            WorkloadTrace::from_requests(
+                (0..5)
+                    .map(|i| Request {
+                        id: i,
+                        arrival: t0 + i as f64 * 0.5,
+                        isl: 100,
+                        osl: 1,
+                    })
+                    .collect(),
+            )
+        };
+        for t0 in [0.0, 9.0] {
+            let p = ArrivalProcess::Replay { trace: spaced(t0) };
+            assert!((p.mean_rate() - 2.0).abs() < 1e-12, "t0={t0}: {}", p.mean_rate());
+        }
+        // Degenerate traces report no rate instead of a bogus one.
+        let single = WorkloadTrace::from_requests(vec![Request {
+            id: 0,
+            arrival: 3.0,
+            isl: 100,
+            osl: 1,
+        }]);
+        assert_eq!(ArrivalProcess::Replay { trace: single }.mean_rate(), 0.0);
+        let storm = WorkloadTrace::from_requests(
+            (0..4).map(|i| Request { id: i, arrival: 1.0, isl: 100, osl: 1 }).collect(),
+        );
+        assert_eq!(ArrivalProcess::Replay { trace: storm }.mean_rate(), 0.0);
     }
 
     #[test]

@@ -614,6 +614,109 @@ fn prop_fleet_sweep_thread_invariance_with_replacement() {
     }
 }
 
+/// Property (fleet): a 1-rack tiered topology is the flat fleet, bit for
+/// bit — configuring the inter-rack link without a second rack must not
+/// move a single float in the `RunReport::to_json()` fingerprint, across
+/// all three legacy policies and random loads/seeds (the zero-delta
+/// contract of the rack-topology layer).
+#[test]
+fn prop_one_rack_tiered_topology_is_bit_identical_to_flat() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(13_000 + seed);
+        let n_groups = 1 + rng.below(5) as usize;
+        let rate = 2.0 + rng.f64() * 30.0;
+        let policy = match seed % 3 {
+            0 => ClusterPolicy::SloAdmission { max_wait: 0.01 + rng.f64() },
+            1 => ClusterPolicy::RoundRobin,
+            _ => ClusterPolicy::LeastOutstandingTokens,
+        };
+        let requests = 8 + rng.below(40) as usize;
+        let scenario = |tiered: bool| {
+            let mut s = tiny_fleet_scenario(n_groups)
+                .arrival(ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng_clone_cv2(seed) })
+                .cluster_policy(policy)
+                .requests(requests)
+                .seed(seed);
+            if tiered {
+                // The 1-rack "tiered" spelling: rack knobs set, no second
+                // rack to use them.
+                s = s.racks(1).inter_rack_gbps(0.001).inter_rack_latency(0.5);
+            }
+            s.build().unwrap_or_else(|e| panic!("seed {seed}: {e}"))
+        };
+        let flat = ServingStack::new(scenario(false), Fidelity::Analytic)
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let tiered = ServingStack::new(scenario(true), Fidelity::Analytic)
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(
+            flat.to_json().dump(),
+            tiered.to_json().dump(),
+            "seed {seed}: a 1-rack topology moved the fingerprint"
+        );
+        assert_eq!(tiered.cross_rack_requests, 0, "seed {seed}");
+        assert_eq!(tiered.cross_rack_bytes, 0.0, "seed {seed}");
+    }
+}
+
+/// The burst CV2 must be identical between the flat and tiered builds of
+/// one case, but different across cases: derive it from the seed alone.
+fn rng_clone_cv2(seed: u64) -> f64 {
+    (seed % 7) as f64
+}
+
+/// Property (fleet): sweep output stays bit-identical across thread
+/// counts with a tiered rack topology enabled — home racks, cross-rack
+/// penalties, and rack-level correlated failures are all pure functions
+/// of the spec (compared through the canonical JSON fingerprint, which
+/// includes the racks/cross-rack fields).
+#[test]
+fn prop_fleet_sweep_thread_invariance_with_racks() {
+    let mut points = Vec::new();
+    for (i, policy) in [
+        ClusterPolicy::LeastOutstandingTokens,
+        ClusterPolicy::RackLocalFirst,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for (j, (racks, blast)) in [(2usize, false), (4, true)].into_iter().enumerate() {
+            let spec = tiny_fleet_scenario(4)
+                .arrival(ArrivalProcess::GammaBurst { rate: 20.0, cv2: 4.0 })
+                .cluster_policy(policy)
+                .racks(racks)
+                .inter_rack_gbps(1.0)
+                .inter_rack_latency(3e-6)
+                .rack_blast_radius(blast)
+                .mtbf(1.5)
+                .mttr(0.4)
+                .requeue_on_failure(true)
+                .requests(32)
+                .seed((i * 2 + j) as u64)
+                .build()
+                .unwrap();
+            points.push(SweepPoint::new(
+                &format!("{} racks={racks}", policy.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let serial = run_sweep(&points, 1);
+    for threads in [2, 8] {
+        let parallel = run_sweep(&points, threads);
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(
+                a.to_json().dump(),
+                b.to_json().dump(),
+                "point {i} differs at {threads} threads"
+            );
+        }
+    }
+}
+
 /// Property: for any valid builder input, `build()` either errors or
 /// produces a spec whose serving config passes validation unchanged — the
 /// "freeze" contract of the scenario API.
