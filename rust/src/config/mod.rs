@@ -349,6 +349,22 @@ pub struct ServingConfig {
     /// group), and recovery warm-up must pull expert shards cross-rack.
     /// Only meaningful with failure injection enabled.
     pub rack_blast_radius: bool,
+    /// Closed-loop session workload: arrivals open multi-turn sessions
+    /// whose follow-ups share a KV prefix with their history (fleet
+    /// scenarios).  Off — the default — is the plain open-loop path,
+    /// bit-identical to the pre-session simulator.
+    pub sessions: bool,
+    /// Max turns per session (sampled uniformly in [1, max]); >= 1.
+    pub session_turns: usize,
+    /// Mean think time between a response finishing and the follow-up,
+    /// seconds.  Infinite ⇒ users never return (open-loop degeneration);
+    /// 0 ⇒ instant follow-ups.  Must not be NaN or negative.
+    pub think_time: f64,
+    /// Migrate a re-steered follow-up's KV prefix over NVLink / the
+    /// inter-rack spine instead of re-prefilling it on the new group.
+    pub kv_migrate: bool,
+    /// Per-group KV-prefix cache budget in GB (0 = unbounded).
+    pub kv_capacity_gb: f64,
     /// RNG seed for the whole experiment.
     pub seed: u64,
 }
@@ -377,6 +393,11 @@ impl ServingConfig {
             inter_rack_gbps: 25.0,
             inter_rack_latency: 3e-6,
             rack_blast_radius: false,
+            sessions: false,
+            session_turns: 4,
+            think_time: 2.0,
+            kv_migrate: false,
+            kv_capacity_gb: 0.0,
             seed: 0,
         }
     }
@@ -456,6 +477,25 @@ impl ServingConfig {
                 ));
             }
         }
+        if self.sessions {
+            if self.session_turns < 1 {
+                return Err("session_turns must be >= 1 when sessions are on".into());
+            }
+            // 0 (instant follow-ups) and +inf (no one ever returns) are both
+            // legal think times; NaN and negative are not.
+            if self.think_time.is_nan() || self.think_time < 0.0 {
+                return Err(format!(
+                    "think_time must be >= 0 seconds (inf = open loop), got {}",
+                    self.think_time
+                ));
+            }
+            if self.kv_capacity_gb.is_nan() || self.kv_capacity_gb < 0.0 {
+                return Err(format!(
+                    "kv_capacity_gb must be >= 0 GB (0 = unbounded), got {}",
+                    self.kv_capacity_gb
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -527,6 +567,11 @@ pub fn apply_json_overrides(
             "rack_blast_radius" => {
                 serving.rack_blast_radius = v.as_bool().ok_or(format!("{k}: bool"))?
             }
+            "sessions" => serving.sessions = v.as_bool().ok_or(format!("{k}: bool"))?,
+            "session_turns" => serving.session_turns = get("count")? as usize,
+            "think_time" => serving.think_time = get("seconds")?,
+            "kv_migrate" => serving.kv_migrate = v.as_bool().ok_or(format!("{k}: bool"))?,
+            "kv_capacity_gb" => serving.kv_capacity_gb = get("GB")?,
             "seed" => serving.seed = get("u64")? as u64,
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -644,6 +689,43 @@ mod tests {
     }
 
     #[test]
+    fn session_knobs_validate() {
+        let m = PaperModelConfig::deepseek_r1();
+        // Defaults: sessions off, and the knobs are ignored while off.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        assert!(!s.sessions);
+        s.session_turns = 0;
+        s.think_time = f64::NAN;
+        s.validate(&m).unwrap();
+        // On: turn count must be usable.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.sessions = true;
+        s.validate(&m).unwrap();
+        s.session_turns = 0;
+        assert!(s.validate(&m).is_err());
+        // Think time: 0 and +inf are legal, NaN / negative are not.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.sessions = true;
+        s.think_time = 0.0;
+        s.validate(&m).unwrap();
+        s.think_time = f64::INFINITY;
+        s.validate(&m).unwrap();
+        s.think_time = f64::NAN;
+        assert!(s.validate(&m).is_err());
+        s.think_time = -1.0;
+        assert!(s.validate(&m).is_err());
+        // KV budget: 0 = unbounded, negative / NaN rejected.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.sessions = true;
+        s.kv_capacity_gb = 0.5;
+        s.validate(&m).unwrap();
+        s.kv_capacity_gb = -0.5;
+        assert!(s.validate(&m).is_err());
+        s.kv_capacity_gb = f64::NAN;
+        assert!(s.validate(&m).is_err());
+    }
+
+    #[test]
     fn remote_experts_accounts_redundancy() {
         let m = PaperModelConfig::deepseek_r1();
         let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
@@ -673,7 +755,9 @@ mod tests {
             r#"{"mode": "dwdp", "group_size": 8, "isl": 16384, "tdm": false, "ce_bw": 8e11,
                 "mtbf": 45.0, "mttr": 3.0, "requeue_on_failure": true,
                 "racks": 4, "inter_rack_gbps": 50.0, "inter_rack_latency": 5e-6,
-                "rack_blast_radius": true}"#,
+                "rack_blast_radius": true,
+                "sessions": true, "session_turns": 6, "think_time": 1.5,
+                "kv_migrate": true, "kv_capacity_gb": 2.5}"#,
         )
         .unwrap();
         apply_json_overrides(&j, &mut hw, &mut m, &mut s).unwrap();
@@ -689,6 +773,11 @@ mod tests {
         assert_eq!(s.inter_rack_gbps, 50.0);
         assert_eq!(s.inter_rack_latency, 5e-6);
         assert!(s.rack_blast_radius);
+        assert!(s.sessions);
+        assert_eq!(s.session_turns, 6);
+        assert_eq!(s.think_time, 1.5);
+        assert!(s.kv_migrate);
+        assert_eq!(s.kv_capacity_gb, 2.5);
 
         let bad = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
         assert!(apply_json_overrides(&bad, &mut hw, &mut m, &mut s).is_err());

@@ -1,7 +1,7 @@
 //! Fleet-scale regenerators: the cluster frontier, burst robustness,
-//! trace-replay, re-placement, and failure-injection scenarios
-//! (`fleet_frontier`, `fleet_burst`, `fleet_trace`, `replacement_skew`,
-//! `fleet_churn` in the registry).
+//! trace-replay, re-placement, failure-injection, and closed-loop session
+//! scenarios (`fleet_frontier`, `fleet_burst`, `fleet_trace`,
+//! `replacement_skew`, `fleet_churn`, `sessions` in the registry).
 //!
 //! These go beyond the paper's single-deployment §5.3 sweep: they stress
 //! DWDP's no-sync independence claim at cluster granularity, under the
@@ -533,6 +533,115 @@ pub fn multirack() -> Table {
     t
 }
 
+/// Scenario for the closed-loop session sweep: the calibrated DWDP fleet
+/// base with users cycling request → think → follow-up for up to 4 turns.
+/// Follow-up prompts carry the whole prior context, so the KV-prefix cache
+/// (and the policy's willingness to route back to it) is what separates
+/// the rows.
+pub fn sessions_scenario(policy: ClusterPolicy, think: f64) -> Scenario {
+    fleet_scenario(ParallelMode::Dwdp, 4)
+        .rate(4.0)
+        .sessions(true)
+        .session_turns(4)
+        .think_time(think)
+        .cluster_policy(policy)
+}
+
+const SESSIONS_HEADER: [&str; 9] = [
+    "scenario",
+    "offered",
+    "served",
+    "follow-ups",
+    "hit rate (%)",
+    "saved tokens",
+    "follow-up TTFT (ms)",
+    "turn p95 (s)",
+    "goodput (%)",
+];
+
+/// `sessions` — the closed-loop session sweep: sticky prefix-affinity vs
+/// rack-blind least-outstanding vs SLO admission, at short and long think
+/// times, plus one churn row (failures invalidate the downed group's
+/// resident caches) and the thread-determinism row.  With identical
+/// session plans per column the hit-rate and follow-up-TTFT gaps are
+/// causal: only the router's stickiness differs.
+pub fn sessions() -> Table {
+    let policies = [
+        ClusterPolicy::PrefixAffinity,
+        ClusterPolicy::LeastOutstandingTokens,
+        ClusterPolicy::SloAdmission { max_wait: 1.0 },
+    ];
+    let mut points = Vec::new();
+    for policy in policies {
+        for think in [0.5, 4.0] {
+            let spec = sessions_scenario(policy, think)
+                .build()
+                .expect("sessions scenario");
+            points.push(SweepPoint::new(
+                &format!("DWDP4 x4 {} think={think}s", policy.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let churn = sessions_scenario(ClusterPolicy::PrefixAffinity, 0.5)
+        .mtbf(15.0)
+        .mttr(2.0)
+        .requeue_on_failure(true)
+        .slo(1e4, 1e4)
+        .build()
+        .expect("sessions churn scenario");
+    points.push(SweepPoint::new(
+        "DWDP4 x4 prefix-affinity think=0.5s churn",
+        churn,
+        Fidelity::Analytic,
+    ));
+    let parallel = run_sweep(&points, available_threads());
+    let serial = run_sweep(&points, 1);
+    let bit_identical = parallel.iter().zip(&serial).all(|(a, b)| match (a, b) {
+        (Ok(a), Ok(b)) => a.to_json().dump() == b.to_json().dump(),
+        (Err(a), Err(b)) => a == b,
+        _ => false,
+    });
+    let mut t = Table::new(&SESSIONS_HEADER).with_title(
+        "Closed-loop sessions: KV-prefix affinity vs rack-blind routing, hit rate x think time x churn",
+    );
+    for (p, r) in points.iter().zip(&parallel) {
+        match r {
+            Ok(r) => {
+                let hit_rate = if r.follow_ups > 0 {
+                    r.prefix_hits as f64 / r.follow_ups as f64 * 100.0
+                } else {
+                    0.0
+                };
+                t.row(vec![
+                    p.label.clone(),
+                    r.offered.to_string(),
+                    r.n_requests.to_string(),
+                    r.follow_ups.to_string(),
+                    f(hit_rate, 1),
+                    r.prefix_tokens_saved.to_string(),
+                    f(r.follow_up_mean_ttft * 1e3, 0),
+                    f(r.p95_turn, 2),
+                    f(r.goodput * 100.0, 1),
+                ]);
+            }
+            Err(e) => {
+                let mut row = vec![format!("{} (failed: {e})", p.label)];
+                row.resize(SESSIONS_HEADER.len(), "-".into());
+                t.row(row);
+            }
+        }
+    }
+    let mut row = vec![
+        "sweep determinism (1 thread vs all cores)".to_string(),
+        if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
+    ];
+    row.resize(SESSIONS_HEADER.len(), "-".into());
+    t.row(row);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -742,5 +851,88 @@ mod tests {
         assert_eq!(d0.remote_fetch_bytes, 0.0);
         assert_eq!(s0.span, d0.span);
         assert_eq!(s0.metrics.median_ttft(), d0.metrics.median_ttft());
+    }
+
+    #[test]
+    fn sessions_table_covers_the_sweep_and_stays_deterministic() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = sessions();
+        // 3 policies x 2 think times + the churn row + determinism.
+        assert_eq!(t.n_rows(), 8);
+        let text = t.render();
+        for needle in [
+            "prefix-affinity",
+            "least-outstanding",
+            "slo-admission",
+            "think=0.5s",
+            "think=4s",
+            "churn",
+            "bit-identical",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    /// The PR-6 acceptance criterion, part 1: at equal offered load the
+    /// sticky `PrefixAffinity` policy lands strictly more prefix hits and
+    /// a strictly lower mean follow-up TTFT than rack-blind
+    /// least-outstanding routing.
+    #[test]
+    fn prefix_affinity_beats_rack_blind_on_follow_up_turns() {
+        let run = |policy| {
+            // Pin the load regardless of DWDP_QUICK.
+            let spec = sessions_scenario(policy, 0.5).requests(64).build().unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let sticky = run(ClusterPolicy::PrefixAffinity);
+        let blind = run(ClusterPolicy::LeastOutstandingTokens);
+        assert_eq!(sticky.offered, blind.offered, "identical closed-loop plans");
+        assert!(sticky.follow_ups > 0 && blind.follow_ups > 0);
+        let rate = |o: &crate::fleet::FleetOutcome| {
+            o.prefix_hits as f64 / o.follow_ups as f64
+        };
+        assert!(
+            rate(&sticky) > rate(&blind),
+            "hit rate: affinity {} must beat rack-blind {}",
+            rate(&sticky),
+            rate(&blind)
+        );
+        assert!(
+            sticky.follow_up_ttft.mean() < blind.follow_up_ttft.mean(),
+            "follow-up TTFT: affinity {} must beat rack-blind {}",
+            sticky.follow_up_ttft.mean(),
+            blind.follow_up_ttft.mean()
+        );
+    }
+
+    /// The PR-6 acceptance criterion, part 2: with an infinite think time
+    /// (no follow-up is ever scheduled) the closed-loop session path
+    /// reproduces the open-loop fleet bit-for-bit — same
+    /// `RunReport::to_json()` fingerprint, float for float.  Only the
+    /// scenario label differs (it advertises the session knobs).
+    #[test]
+    fn infinite_think_time_reproduces_the_open_loop_fingerprint() {
+        use crate::serving::ServingStack;
+        let open = {
+            let spec = fleet_scenario(ParallelMode::Dwdp, 4)
+                .rate(4.0)
+                .requests(64)
+                .build()
+                .unwrap();
+            ServingStack::new(spec, Fidelity::Analytic).run().unwrap()
+        };
+        let mut closed = {
+            let spec = fleet_scenario(ParallelMode::Dwdp, 4)
+                .rate(4.0)
+                .requests(64)
+                .sessions(true)
+                .think_time(f64::INFINITY)
+                .build()
+                .unwrap();
+            ServingStack::new(spec, Fidelity::Analytic).run().unwrap()
+        };
+        assert_eq!(closed.follow_ups, 0, "infinite think time schedules no follow-up");
+        closed.scenario = open.scenario.clone();
+        assert_eq!(open.to_json().dump(), closed.to_json().dump());
     }
 }

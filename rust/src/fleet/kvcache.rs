@@ -1,0 +1,214 @@
+//! Per-group KV-prefix cache model for closed-loop session workloads.
+//!
+//! When a session's turn completes on a group, that group holds the
+//! session's KV cache: prompt + generated tokens, which is exactly the
+//! prefix the follow-up turn re-sends.  [`KvPrefixCache`] tracks one
+//! resident copy per session (the latest turn's context supersedes earlier
+//! ones) with per-group token capacity and LRU eviction:
+//!
+//! * A follow-up admitted to the cache-holding group *hits*: the shared
+//!   prefix skips re-prefill and only the fresh tokens are charged.
+//! * A follow-up re-steered to another group either pays full prefill
+//!   (cache entry dropped — the new group rebuilds the whole context), or,
+//!   with `kv_migrate` on, pays an NVLink/spine-tier-priced KV transfer
+//!   instead and keeps the prefix savings.
+//! * A group going Down invalidates its resident entries (HBM contents do
+//!   not survive the failure), so churn costs re-prefill on top of the
+//!   requeue/shed machinery — the cache-shaped axis of graceful
+//!   degradation.
+//!
+//! Determinism: per-group entries live in `BTreeMap`s so iteration (and
+//! therefore LRU tie-breaking and eviction order) is identical across runs
+//! and thread counts.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    tokens: usize,
+    /// Logical LRU clock at last touch (insert or hit).
+    stamp: u64,
+}
+
+/// One resident KV prefix per session, spread over per-group stores with
+/// token-capacity LRU eviction.
+#[derive(Debug, Clone)]
+pub struct KvPrefixCache {
+    /// Per-group resident entries: session id → entry.
+    per_group: Vec<BTreeMap<u64, Entry>>,
+    /// Session id → holding group (the single resident copy).
+    resident: BTreeMap<u64, usize>,
+    used_tokens: Vec<usize>,
+    /// Per-group capacity in KV tokens (`usize::MAX` = unbounded).
+    capacity_tokens: usize,
+    clock: u64,
+}
+
+impl KvPrefixCache {
+    pub fn new(n_groups: usize, capacity_tokens: usize) -> KvPrefixCache {
+        KvPrefixCache {
+            per_group: vec![BTreeMap::new(); n_groups],
+            resident: BTreeMap::new(),
+            used_tokens: vec![0; n_groups],
+            capacity_tokens,
+            clock: 0,
+        }
+    }
+
+    /// Capacity in tokens from a per-group budget in GB and the model's
+    /// per-token KV footprint (0 or negative GB ⇒ unbounded).
+    pub fn tokens_for_budget(capacity_gb: f64, kv_bytes_per_token: f64) -> usize {
+        if capacity_gb <= 0.0 || !capacity_gb.is_finite() {
+            return usize::MAX;
+        }
+        (capacity_gb * 1e9 / kv_bytes_per_token.max(1e-12)).floor() as usize
+    }
+
+    /// Where `session`'s KV prefix resides: `(group, cached tokens)`.
+    pub fn locate(&self, session: u64) -> Option<(usize, usize)> {
+        let g = *self.resident.get(&session)?;
+        let tokens = self.per_group[g].get(&session)?.tokens;
+        Some((g, tokens))
+    }
+
+    /// Install (or refresh) `session`'s resident prefix on `group`,
+    /// superseding any copy elsewhere.  LRU-evicts within the group to fit;
+    /// an entry larger than the whole group capacity is not cached at all.
+    pub fn insert(&mut self, group: usize, session: u64, tokens: usize) {
+        self.remove(session);
+        if tokens > self.capacity_tokens {
+            return;
+        }
+        while self.used_tokens[group] + tokens > self.capacity_tokens {
+            let Some(victim) = self.lru_victim(group) else { break };
+            self.evict(group, victim);
+        }
+        if self.used_tokens[group] + tokens > self.capacity_tokens {
+            return;
+        }
+        self.clock += 1;
+        self.per_group[group].insert(session, Entry { tokens, stamp: self.clock });
+        self.used_tokens[group] += tokens;
+        self.resident.insert(session, group);
+    }
+
+    /// Refresh `session`'s LRU stamp (a hit keeps the entry warm).
+    pub fn touch(&mut self, session: u64) {
+        if let Some(&g) = self.resident.get(&session) {
+            self.clock += 1;
+            if let Some(e) = self.per_group[g].get_mut(&session) {
+                e.stamp = self.clock;
+            }
+        }
+    }
+
+    /// Drop `session`'s resident copy, returning `(group, tokens)` if one
+    /// existed.
+    pub fn remove(&mut self, session: u64) -> Option<(usize, usize)> {
+        let g = self.resident.remove(&session)?;
+        let e = self.per_group[g].remove(&session)?;
+        self.used_tokens[g] -= e.tokens;
+        Some((g, e.tokens))
+    }
+
+    /// A group went Down: its HBM-resident session prefixes are gone.
+    /// Returns the number of entries invalidated.
+    pub fn invalidate_group(&mut self, group: usize) -> usize {
+        let dropped: Vec<u64> = self.per_group[group].keys().copied().collect();
+        for sid in &dropped {
+            self.resident.remove(sid);
+        }
+        self.per_group[group].clear();
+        self.used_tokens[group] = 0;
+        dropped.len()
+    }
+
+    pub fn used_tokens(&self, group: usize) -> usize {
+        self.used_tokens[group]
+    }
+
+    pub fn entries(&self, group: usize) -> usize {
+        self.per_group[group].len()
+    }
+
+    /// Least-recently-used session on `group` (lowest stamp; BTreeMap
+    /// order breaks exact ties deterministically).
+    fn lru_victim(&self, group: usize) -> Option<u64> {
+        self.per_group[group]
+            .iter()
+            .min_by_key(|&(sid, e)| (e.stamp, *sid))
+            .map(|(sid, _)| *sid)
+    }
+
+    fn evict(&mut self, group: usize, session: u64) {
+        if let Some(e) = self.per_group[group].remove(&session) {
+            self.used_tokens[group] -= e.tokens;
+        }
+        self.resident.remove(&session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_resident_copy_moves_between_groups() {
+        let mut c = KvPrefixCache::new(3, usize::MAX);
+        c.insert(0, 7, 1000);
+        assert_eq!(c.locate(7), Some((0, 1000)));
+        // A newer turn completing on group 2 supersedes the copy on 0.
+        c.insert(2, 7, 1500);
+        assert_eq!(c.locate(7), Some((2, 1500)));
+        assert_eq!(c.used_tokens(0), 0);
+        assert_eq!(c.used_tokens(2), 1500);
+        assert_eq!(c.remove(7), Some((2, 1500)));
+        assert_eq!(c.locate(7), None);
+        assert_eq!(c.remove(7), None);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity_and_recency() {
+        let mut c = KvPrefixCache::new(1, 1000);
+        c.insert(0, 1, 400);
+        c.insert(0, 2, 400);
+        c.touch(1); // session 2 is now least recently used
+        c.insert(0, 3, 400); // forces one eviction
+        assert_eq!(c.locate(2), None, "LRU victim evicted");
+        assert_eq!(c.locate(1), Some((0, 400)));
+        assert_eq!(c.locate(3), Some((0, 400)));
+        assert_eq!(c.used_tokens(0), 800);
+    }
+
+    #[test]
+    fn oversized_entry_is_not_cached() {
+        let mut c = KvPrefixCache::new(1, 100);
+        c.insert(0, 1, 60);
+        c.insert(0, 2, 500); // larger than the whole group: skip, no churn
+        assert_eq!(c.locate(2), None);
+        assert_eq!(c.locate(1), Some((0, 60)));
+    }
+
+    #[test]
+    fn group_failure_invalidates_resident_sessions() {
+        let mut c = KvPrefixCache::new(2, usize::MAX);
+        c.insert(0, 1, 100);
+        c.insert(0, 2, 200);
+        c.insert(1, 3, 300);
+        assert_eq!(c.invalidate_group(0), 2);
+        assert_eq!(c.locate(1), None);
+        assert_eq!(c.locate(2), None);
+        assert_eq!(c.locate(3), Some((1, 300)));
+        assert_eq!(c.used_tokens(0), 0);
+        assert_eq!(c.entries(0), 0);
+    }
+
+    #[test]
+    fn budget_to_tokens_conversion() {
+        // 1 GB at 1000 B/token = 1e6 tokens.
+        assert_eq!(KvPrefixCache::tokens_for_budget(1.0, 1000.0), 1_000_000);
+        assert_eq!(KvPrefixCache::tokens_for_budget(0.0, 1000.0), usize::MAX);
+        assert_eq!(KvPrefixCache::tokens_for_budget(-1.0, 1000.0), usize::MAX);
+        assert_eq!(KvPrefixCache::tokens_for_budget(f64::INFINITY, 1000.0), usize::MAX);
+    }
+}

@@ -53,29 +53,49 @@
 //! failure model's blast radius from one group into one rack.  A 1-rack
 //! topology is bit-identical to the flat fleet.
 //!
+//! **Closed-loop sessions** (the `sessions`/`session_turns`/`think_time`/
+//! `kv_migrate`/`kv_capacity_gb` serving knobs,
+//! [`crate::workload::SessionGen`] + [`kvcache::KvPrefixCache`]): with
+//! `sessions` on, arrivals open multi-turn conversations whose follow-ups
+//! re-send the whole prior context plus fresh tokens, one think time after
+//! the previous response finished streaming.  The group that served a turn
+//! holds the session's KV prefix, so a follow-up routed back there skips
+//! re-prefilling the shared prefix (only the fresh tokens are charged
+//! against the MNT budget); re-steered elsewhere it pays full prefill, or
+//! — with `kv_migrate` — an NVLink/spine-tier-priced KV transfer.  The
+//! sticky [`ClusterPolicy::PrefixAffinity`] policy credits the cache
+//! holder with the predicted prefill savings and spills only when the
+//! backlog outweighs them; a group going Down invalidates its resident
+//! session caches (HBM does not survive the failure).  With sessions off
+//! — or think time infinite, when no user ever returns — the fleet is
+//! bit-identical to the open-loop path.
+//!
 //! Entry points: describe the cluster with
 //! [`crate::serving::Scenario::fleet`] and run it through a
 //! [`crate::serving::ServingStack`] (the backends dispatch here), or call
 //! [`simulate`]/[`simulate_analytic`] directly for access to the full
 //! [`FleetOutcome`] accounting.
 
+pub mod kvcache;
 pub mod router;
 pub mod sweep;
 pub mod topology;
 
 use std::collections::VecDeque;
 
+pub use kvcache::KvPrefixCache;
 pub use router::{ClusterPolicy, ClusterRouter, GroupLoad, RouteCtx, RouteDecision};
 pub use sweep::{available_threads, rack_axis, run_sweep, SweepPoint};
 pub use topology::{LinkTier, RackTopology};
 
 use crate::config::{HardwareConfig, ParallelMode};
 use crate::coordinator::{GenModel, GroupLatencyModel, PrefillOffsets};
-use crate::metrics::{RequestRecord, ServingMetrics, Slo};
+use crate::metrics::{LatencyDigest, RequestRecord, ServingMetrics, Slo};
 use crate::placement::{self, ExpertPlacement};
 use crate::serving::{ScenarioKind, ScenarioSpec};
 use crate::util::Rng;
-use crate::workload::{IslDist, OpenLoopGen, Request, RoutingSkew};
+use crate::workload::session::resident_prefix;
+use crate::workload::{IslDist, OpenLoopGen, Request, RoutingSkew, SessionGen};
 
 /// Full accounting of one fleet run — what the [`crate::serving::RunReport`]
 /// summarizes, plus the conservation counters the property tests check.
@@ -124,6 +144,25 @@ pub struct FleetOutcome {
     /// Prompt-activation bytes shipped over the inter-rack spine by those
     /// cross-rack admissions.
     pub cross_rack_bytes: f64,
+    /// Prompt tokens the groups actually prefilled.  Without sessions this
+    /// equals `admitted_tokens`; with them, prefix-cache hits reduce it —
+    /// `admitted_tokens == prefill_tokens + prefix_tokens_saved` is the
+    /// session-path token-conservation invariant.
+    pub prefill_tokens: usize,
+    /// Completed follow-ups admitted to the group holding their session's
+    /// KV prefix (the shared prefix skipped re-prefill).
+    pub prefix_hits: usize,
+    /// Prefix tokens those hits (and `kv_migrate` transfers) skipped.
+    pub prefix_tokens_saved: usize,
+    /// KV-cache bytes shipped between groups by `kv_migrate` re-steers.
+    pub kv_transfer_bytes: f64,
+    /// Follow-up turns the closed loop offered (0 with sessions off or an
+    /// infinite think time).
+    pub follow_ups: usize,
+    /// TTFT of completed follow-up turns (empty without follow-ups).
+    pub follow_up_ttft: LatencyDigest,
+    /// Full turn latency (arrival to last token) of completed follow-ups.
+    pub turn_latency: LatencyDigest,
     /// First arrival to last finish over admitted requests, seconds.
     pub span: f64,
 }
@@ -398,6 +437,14 @@ impl FleetFailures {
         next
     }
 
+    /// First failure instant strictly after `t` in group `g`'s *own*
+    /// failure domain, coupling ignored: a DEP peer's outage stalls the
+    /// group but leaves its HBM (and so its resident KV prefixes) intact,
+    /// so cache invalidation keys off the domain that actually lost power.
+    fn own_down_after(&mut self, g: usize, t: f64) -> f64 {
+        self.streams[self.domain_of[g]].next_down_after(t)
+    }
+
     /// Lifecycle state of group `g` at `t` (coupling included: under DEP
     /// any domain's repair makes every group `Down`).
     fn state(&mut self, g: usize, t: f64) -> GroupState {
@@ -641,7 +688,9 @@ impl GroupSim {
         now: f64,
         g: usize,
         mnt: usize,
-        requests: &[Request],
+        // Prompt tokens to prefill per request: the raw ISLs open-loop,
+        // the *charged* ISLs (prefix-hit savings deducted) under sessions.
+        isls_of: &[usize],
         ready: &[f64],
         prefill: &dyn PrefillOffsets,
         first_token: &mut [f64],
@@ -669,15 +718,15 @@ impl GroupSim {
                 if ready[i] > start {
                     break;
                 }
-                if !batch.is_empty() && tokens + requests[i].isl > mnt {
+                if !batch.is_empty() && tokens + isls_of[i] > mnt {
                     break;
                 }
                 batch.push(i);
-                tokens += requests[i].isl;
+                tokens += isls_of[i];
                 self.pending.pop_front();
             }
             self.pending_tokens -= tokens;
-            let isls: Vec<usize> = batch.iter().map(|&i| requests[i].isl).collect();
+            let isls: Vec<usize> = batch.iter().map(|&i| isls_of[i]).collect();
             let offsets = match self.dynamic.as_mut() {
                 Some(d) => {
                     let n_chunks: usize =
@@ -765,14 +814,23 @@ fn route_request(
     bytes_per_token: f64,
     ready: &mut [f64],
     xr: &mut CrossRack,
+    // `(cache-holding group, predicted prefill seconds saved)` for a
+    // session follow-up whose KV prefix is resident somewhere; `None`
+    // open-loop and for session openings.
+    affinity: Option<(usize, f64)>,
 ) -> RouteDecision {
     let r = &requests[idx];
     let bytes = r.isl as f64 * bytes_per_token;
     let ctx = {
         let topo = router.topology();
         RouteCtx {
-            home_rack: topo.home_rack(r.id),
+            // Every turn of a session belongs to the same user, so the
+            // home rack keys off the session id (the opening's id) —
+            // `r.id` for open-loop requests, where session is None.
+            home_rack: topo.home_rack(r.session.unwrap_or(r.id)),
             cross_penalty: topo.cross_penalty(bytes),
+            affinity: affinity.map(|(g, _)| g),
+            affinity_bonus: affinity.map_or(0.0, |(_, b)| b),
         }
     };
     let loads: Vec<GroupLoad> = groups
@@ -863,6 +921,7 @@ fn process_spills(
             bytes_per_token,
             &mut ledger.ready,
             xr,
+            None,
         ) {
             RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
             RouteDecision::Shed | RouteDecision::Failed => {
@@ -934,11 +993,17 @@ fn decode_group(
 /// which is what makes the parallel [`sweep`] driver's output independent
 /// of thread count.
 pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<FleetOutcome, String> {
+    if spec.serving.sessions {
+        // The closed-loop event sweep; the open-loop path below stays
+        // untouched so pre-session results are bit-identical.
+        return simulate_sessions(spec, prefill);
+    }
     let ScenarioKind::Fleet { n_groups, policy, slo, .. } = &spec.kind else {
         return Err("not a fleet scenario".into());
     };
     let (n_groups, policy, slo) = (*n_groups, *policy, *slo);
     let requests = fleet_workload(spec)?;
+    let isls: Vec<usize> = requests.iter().map(|r| r.isl).collect();
     let mnt = spec.serving.max_num_tokens;
     // Rack tiers: group→rack assignment, inter-rack link pricing, and the
     // per-request home rack.  Flat (racks = 1) keeps every penalty at
@@ -994,7 +1059,7 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
                 r.arrival,
                 g,
                 mnt,
-                &requests,
+                &isls,
                 &ledger.ready,
                 prefill,
                 &mut first_token,
@@ -1034,6 +1099,7 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             bytes_per_token,
             &mut ledger.ready,
             &mut xr,
+            None,
         ) {
             RouteDecision::Admit(_) => {}
             RouteDecision::Shed => {
@@ -1055,7 +1121,7 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
                 f64::INFINITY,
                 g,
                 mnt,
-                &requests,
+                &isls,
                 &ledger.ready,
                 prefill,
                 &mut first_token,
@@ -1152,6 +1218,506 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             .sum(),
         cross_rack_requests: xr.requests,
         cross_rack_bytes: xr.bytes,
+        prefill_tokens: admitted_tokens,
+        prefix_hits: 0,
+        prefix_tokens_saved: 0,
+        kv_transfer_bytes: 0.0,
+        follow_ups: 0,
+        follow_up_ttft: LatencyDigest::new(),
+        turn_latency: LatencyDigest::new(),
+        span,
+        metrics,
+    })
+}
+
+/// Invalidate the KV prefixes of every group whose *own* failure domain
+/// went Down in `(watermark, t]`, advancing the per-group watermarks.  HBM
+/// contents do not survive an outage, so the sessions resident there pay
+/// full re-prefill on their next turn.  Never called with an infinite `t`
+/// (that would materialize failure windows forever); spill processing
+/// syncs to each finite spill instant instead.
+fn sync_cache_failures(
+    failures: &mut Option<FleetFailures>,
+    cache: &mut KvPrefixCache,
+    synced: &mut [f64],
+    t: f64,
+) {
+    let Some(f) = failures.as_mut() else { return };
+    if !t.is_finite() {
+        return;
+    }
+    for g in 0..synced.len() {
+        loop {
+            let down = f.own_down_after(g, synced[g]);
+            if down > t {
+                break;
+            }
+            cache.invalidate_group(g);
+            synced[g] = down;
+        }
+    }
+}
+
+/// Re-position `idx` in a ready-ordered pending queue after its ready time
+/// moved (a `kv_migrate` transfer landing after admission).
+fn reposition(q: &mut VecDeque<usize>, idx: usize, ready: &[f64]) {
+    if let Some(pos) = q.iter().position(|&j| j == idx) {
+        q.remove(pos);
+        let pos = q.iter().position(|&j| ready[j] > ready[idx]).unwrap_or(q.len());
+        q.insert(pos, idx);
+    }
+}
+
+/// Session-path routing: look up the follow-up's resident KV prefix,
+/// hand the router the affinity hint (cache group + predicted prefill
+/// seconds the prefix saves there), and settle the cache accounting on
+/// admission — a hit charges only the fresh tokens, a re-steer pays full
+/// prefill or (with `kv_migrate`) a tier-priced KV transfer.
+#[allow(clippy::too_many_arguments)]
+fn route_session(
+    idx: usize,
+    now: f64,
+    requests: &[Request],
+    groups: &mut [GroupSim],
+    failures: &mut Option<FleetFailures>,
+    router: &mut ClusterRouter,
+    bytes_per_token: f64,
+    ready: &mut [f64],
+    xr: &mut CrossRack,
+    cache: &mut KvPrefixCache,
+    charged: &mut [usize],
+    saved: &mut [usize],
+    hit: &mut [bool],
+    kv_migrate: bool,
+    kv_bytes_per_token: f64,
+    ce_bw: f64,
+    kv_transfer_bytes: &mut f64,
+) -> RouteDecision {
+    let r = &requests[idx];
+    let resident = r.session.filter(|_| r.is_follow_up()).and_then(|s| cache.locate(s));
+    let affinity =
+        resident.map(|(g, tokens)| (g, tokens.min(r.isl) as f64 * groups[g].spt));
+    let decision = route_request(
+        idx,
+        now,
+        requests,
+        groups,
+        failures,
+        router,
+        bytes_per_token,
+        ready,
+        xr,
+        affinity,
+    );
+    let RouteDecision::Admit(g) = decision else { return decision };
+    let (Some(sid), Some((cg, cached))) = (r.session, resident) else { return decision };
+    let prefix = cached.min(r.isl);
+    if cg == g {
+        // Hit: the resident prefix skips re-prefill; only the fresh
+        // tokens enter the MNT budget and the backlog pricing.
+        charged[idx] = r.isl - prefix;
+        saved[idx] = prefix;
+        hit[idx] = true;
+        cache.touch(sid);
+        groups[g].pending_tokens -= prefix;
+    } else if kv_migrate {
+        // Re-steered, but the KV prefix ships to the new group instead of
+        // being rebuilt: same token savings, paid for in transfer time on
+        // the tier the cache actually crosses (NVLink copy engine within
+        // the rack, the spine across racks).
+        charged[idx] = r.isl - prefix;
+        saved[idx] = prefix;
+        cache.remove(sid);
+        groups[g].pending_tokens -= prefix;
+        let bytes = prefix as f64 * kv_bytes_per_token;
+        *kv_transfer_bytes += bytes;
+        let topo = router.topology();
+        let secs = if topo.is_tiered() && topo.rack_of(cg) != topo.rack_of(g) {
+            topo.inter_rack_seconds(bytes)
+        } else {
+            bytes / ce_bw
+        };
+        // The prompt-activation and KV transfers overlap; the slower one
+        // gates the batch.  The queue stays ready-ordered.
+        let at = (now + secs).max(ready[idx]);
+        if at > ready[idx] {
+            ready[idx] = at;
+            reposition(&mut groups[g].pending, idx, ready);
+        }
+    } else {
+        // Re-steered without migration: the new group rebuilds the whole
+        // context from scratch, and the stale copy is dropped.
+        cache.remove(sid);
+    }
+    decision
+}
+
+/// [`process_spills`]' session-path twin: a killed batch voids its
+/// members' prefix grants (the re-queued request re-prefills in full
+/// unless it wins a fresh hit on re-admission), and cache invalidation is
+/// synced to each spill instant before re-routing.
+#[allow(clippy::too_many_arguments)]
+fn process_session_spills(
+    mut due: Vec<Spill>,
+    requests: &[Request],
+    ledger: &mut ChurnLedger,
+    groups: &mut [GroupSim],
+    failures: &mut Option<FleetFailures>,
+    router: &mut ClusterRouter,
+    bytes_per_token: f64,
+    xr: &mut CrossRack,
+    cache: &mut KvPrefixCache,
+    synced: &mut [f64],
+    charged: &mut [usize],
+    saved: &mut [usize],
+    hit: &mut [bool],
+    kv_migrate: bool,
+    kv_bytes_per_token: f64,
+    ce_bw: f64,
+    kv_transfer_bytes: &mut f64,
+) {
+    due.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.idx.cmp(&b.idx)));
+    let requeue = failures.as_ref().is_some_and(|f| f.requeue);
+    for s in due {
+        charged[s.idx] = requests[s.idx].isl;
+        saved[s.idx] = 0;
+        hit[s.idx] = false;
+        let isl = requests[s.idx].isl;
+        ledger.respills[s.idx] += 1;
+        if !requeue || ledger.respills[s.idx] > MAX_RESPILLS {
+            ledger.failed += 1;
+            ledger.failed_tokens += isl;
+            continue;
+        }
+        sync_cache_failures(failures, cache, synced, s.at);
+        ledger.ready[s.idx] = s.at;
+        match route_session(
+            s.idx,
+            s.at,
+            requests,
+            groups,
+            failures,
+            router,
+            bytes_per_token,
+            &mut ledger.ready,
+            xr,
+            cache,
+            charged,
+            saved,
+            hit,
+            kv_migrate,
+            kv_bytes_per_token,
+            ce_bw,
+            kv_transfer_bytes,
+        ) {
+            RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
+            RouteDecision::Shed | RouteDecision::Failed => {
+                ledger.failed += 1;
+                ledger.failed_tokens += isl;
+            }
+        }
+    }
+}
+
+/// [`simulate`]'s closed-loop twin, entered when `serving.sessions` is on:
+/// session openings ride the open-loop stream verbatim, each served turn
+/// installs its KV prefix on the serving group and schedules the follow-up
+/// one think time after the response is predicted to finish streaming, and
+/// follow-ups interleave with openings through a single (arrival, index)
+/// event order.  With an infinite think time no follow-up is ever
+/// scheduled and every float reproduces the open-loop path bit-for-bit.
+fn simulate_sessions(
+    spec: &ScenarioSpec,
+    prefill: &dyn PrefillOffsets,
+) -> Result<FleetOutcome, String> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let ScenarioKind::Fleet { n_groups, n_requests, arrival, osl_dist, policy, slo, horizon } =
+        &spec.kind
+    else {
+        return Err("not a fleet scenario".into());
+    };
+    let (n_groups, policy, slo) = (*n_groups, *policy, *slo);
+    let s = &spec.serving;
+    let base =
+        OpenLoopGen::new(arrival.clone(), IslDist::from_serving(s), *osl_dist, s.seed);
+    let mut sgen = SessionGen::new(base, s.seed, s.session_turns.max(1), s.think_time);
+    let mut requests = if *horizon > 0.0 {
+        sgen.initial_until(*horizon, *n_requests)
+    } else {
+        sgen.initial_take(*n_requests)
+    };
+    if requests.is_empty() {
+        return Err("fleet workload is empty (exhausted trace or zero horizon)".into());
+    }
+    let mnt = s.max_num_tokens;
+    let topo = RackTopology::from_serving(s, n_groups);
+    let bytes_per_token = spec.model.hidden as f64 * spec.model.act_bytes;
+    let kv_bytes_per_token = spec.model.kv_bytes_per_token();
+    let capacity = KvPrefixCache::tokens_for_budget(s.kv_capacity_gb, kv_bytes_per_token);
+    let mut cache = KvPrefixCache::new(n_groups, capacity);
+
+    let lm = GroupLatencyModel::new(&spec.hw, &spec.model, s);
+    let isl0 = s.isl.max(1);
+    let spt0 = lm.prefill_offsets(&[isl0])[0].max(0.0) / isl0 as f64;
+    let dynamic_placement = s.mode == ParallelMode::Dwdp && s.routing_skew > 0.0;
+    let mut groups: Vec<GroupSim> = (0..n_groups)
+        .map(|g| {
+            GroupSim::new(spt0, dynamic_placement.then(|| DynamicPlacement::new(spec, g)))
+        })
+        .collect();
+    let mut failures = FleetFailures::from_spec(spec, &topo);
+    let mut router = ClusterRouter::with_topology(policy, topo);
+    // Decode-rate estimate for scheduling follow-ups: the user reads the
+    // response as it streams, then thinks, then sends the next turn.
+    let gen_est = GenModel::new(&spec.hw, &spec.model, s.group_size);
+
+    let n0 = requests.len();
+    // Per-request prompt tokens actually charged to prefill (prefix-hit
+    // savings deducted at admission, reset when a failure voids them).
+    let mut charged: Vec<usize> = requests.iter().map(|r| r.isl).collect();
+    let mut saved: Vec<usize> = vec![0; n0];
+    let mut hit: Vec<bool> = vec![false; n0];
+    let mut first_token = vec![0.0f64; n0];
+    let mut xr = CrossRack::default();
+    let mut ledger = ChurnLedger {
+        ready: requests.iter().map(|r| r.arrival).collect(),
+        respills: vec![0; n0],
+        requeued_mask: vec![false; n0],
+        failed: 0,
+        failed_tokens: 0,
+    };
+    let mut spills: Vec<Spill> = Vec::new();
+    let mut shed = 0usize;
+    let mut shed_tokens = 0usize;
+    let mut kv_transfer_bytes = 0.0f64;
+    // Per-group failure-sync watermark for cache invalidation.
+    let mut synced = vec![0.0f64; n_groups];
+    // Per-group cursor into `served` for harvesting completed turns.
+    let mut harvested = vec![0usize; n_groups];
+    let mut next_id = requests.iter().map(|r| r.id).max().unwrap_or(0) + 1;
+    let mut follow_ups = 0usize;
+
+    // Arrival events — openings up front, follow-ups as they are
+    // scheduled — ordered by (arrival, index).  Arrivals are non-negative,
+    // so the raw f64 bit pattern sorts identically to the float, and the
+    // index tiebreak reproduces the open-loop sweep's enumeration order.
+    let mut events: BinaryHeap<Reverse<(u64, usize)>> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Reverse((r.arrival.to_bits(), i)))
+        .collect();
+
+    loop {
+        // The clock: the earliest unrouted arrival, or a full drain.
+        let now =
+            events.peek().map_or(f64::INFINITY, |Reverse((b, _))| f64::from_bits(*b));
+        for g in 0..n_groups {
+            groups[g].advance(
+                now,
+                g,
+                mnt,
+                &charged,
+                &ledger.ready,
+                prefill,
+                &mut first_token,
+                failures.as_mut(),
+                &mut spills,
+            );
+        }
+        // Harvest turns served since the last look: install the session's
+        // KV prefix on the serving group and schedule the follow-up.
+        let mut scheduled = false;
+        for g in 0..n_groups {
+            while harvested[g] < groups[g].served.len() {
+                let i = groups[g].served[harvested[g]];
+                harvested[g] += 1;
+                let r = requests[i].clone();
+                let Some(sid) = r.session else { continue };
+                cache.insert(g, sid, resident_prefix(&r));
+                let plan = sgen.plan(sid);
+                let ctx = (r.isl as f64 + r.osl as f64 / 2.0).round() as usize;
+                let done = first_token[i] + r.osl as f64 * gen_est.step_time(1, ctx);
+                if let Some(f) = sgen.follow_up(&r, &plan, next_id, done) {
+                    next_id += 1;
+                    let idx = requests.len();
+                    events.push(Reverse((f.arrival.to_bits(), idx)));
+                    ledger.ready.push(f.arrival);
+                    ledger.respills.push(0);
+                    ledger.requeued_mask.push(false);
+                    charged.push(f.isl);
+                    saved.push(0);
+                    hit.push(false);
+                    first_token.push(0.0);
+                    requests.push(f);
+                    follow_ups += 1;
+                    scheduled = true;
+                }
+            }
+        }
+        if scheduled {
+            // A follow-up can land before `now` (its turn finished well
+            // before the next opening): re-resolve the earliest event.
+            continue;
+        }
+        sync_cache_failures(&mut failures, &mut cache, &mut synced, now);
+        let mut processed_spills = false;
+        if !spills.is_empty() {
+            // Mirror the open-loop sweep: only spills whose failure
+            // instant has been reached re-route before this arrival.
+            let (due, rest): (Vec<Spill>, Vec<Spill>) =
+                std::mem::take(&mut spills).into_iter().partition(|sp| sp.at <= now);
+            spills = rest;
+            if !due.is_empty() {
+                processed_spills = true;
+                process_session_spills(
+                    due,
+                    &requests,
+                    &mut ledger,
+                    &mut groups,
+                    &mut failures,
+                    &mut router,
+                    bytes_per_token,
+                    &mut xr,
+                    &mut cache,
+                    &mut synced,
+                    &mut charged,
+                    &mut saved,
+                    &mut hit,
+                    s.kv_migrate,
+                    kv_bytes_per_token,
+                    spec.hw.ce_bw,
+                    &mut kv_transfer_bytes,
+                );
+            }
+        }
+        let Some(Reverse((_, i))) = events.pop() else {
+            if spills.is_empty() && !processed_spills {
+                break;
+            }
+            // Re-queued spills are back in the pending queues; advance
+            // again to finalize (and possibly re-spill) them.
+            continue;
+        };
+        let at = requests[i].arrival;
+        match route_session(
+            i,
+            at,
+            &requests,
+            &mut groups,
+            &mut failures,
+            &mut router,
+            bytes_per_token,
+            &mut ledger.ready,
+            &mut xr,
+            &mut cache,
+            &mut charged,
+            &mut saved,
+            &mut hit,
+            s.kv_migrate,
+            kv_bytes_per_token,
+            spec.hw.ce_bw,
+            &mut kv_transfer_bytes,
+        ) {
+            RouteDecision::Admit(_) => {}
+            RouteDecision::Shed => {
+                shed += 1;
+                shed_tokens += requests[i].isl;
+            }
+            RouteDecision::Failed => {
+                ledger.failed += 1;
+                ledger.failed_tokens += requests[i].isl;
+            }
+        }
+    }
+
+    let mut finish = vec![0.0f64; requests.len()];
+    let mut completed = vec![false; requests.len()];
+    for g in &groups {
+        decode_group(&gen_est, &requests, &g.served, &first_token, &mut finish);
+        for &i in &g.served {
+            completed[i] = true;
+        }
+    }
+
+    let mut metrics = ServingMetrics::new();
+    let mut admitted_tokens = 0usize;
+    let mut prefill_tokens = 0usize;
+    let mut prefix_tokens_saved = 0usize;
+    let mut prefix_hits = 0usize;
+    let mut follow_up_ttft = LatencyDigest::new();
+    let mut turn_latency = LatencyDigest::new();
+    for (i, r) in requests.iter().enumerate() {
+        if completed[i] {
+            admitted_tokens += r.isl;
+            prefill_tokens += charged[i];
+            prefix_tokens_saved += saved[i];
+            prefix_hits += hit[i] as usize;
+            if r.is_follow_up() {
+                follow_up_ttft.add(first_token[i] - r.arrival);
+                turn_latency.add(finish[i] - r.arrival);
+            }
+            metrics.push(RequestRecord {
+                id: r.id,
+                arrival: r.arrival,
+                first_token: first_token[i],
+                finish: finish[i],
+                isl: r.isl,
+                osl: r.osl,
+            });
+        }
+    }
+    let span = metrics.span();
+    let horizon = requests
+        .last()
+        .map(|r| r.arrival)
+        .unwrap_or(0.0)
+        .max(metrics.records.iter().map(|r| r.finish).fold(0.0, f64::max));
+    let per_group_availability: Vec<f64> = (0..n_groups)
+        .map(|g| match failures.as_mut() {
+            Some(f) if horizon > 0.0 => (1.0 - f.downtime(g, horizon) / horizon).max(0.0),
+            _ => 1.0,
+        })
+        .collect();
+    Ok(FleetOutcome {
+        slo,
+        offered: requests.len(),
+        admitted: metrics.n(),
+        shed,
+        failed: ledger.failed,
+        requeued: ledger.requeued_mask.iter().filter(|&&b| b).count(),
+        offered_tokens: requests.iter().map(|r| r.isl).sum(),
+        admitted_tokens,
+        shed_tokens,
+        failed_tokens: ledger.failed_tokens,
+        per_group_requests: groups.iter().map(|g| g.served.len()).collect(),
+        per_group_tokens: groups.iter().map(|g| g.tokens).collect(),
+        per_group_availability,
+        remote_fetch_bytes: groups
+            .iter()
+            .filter_map(|g| g.dynamic.as_ref())
+            .map(|d| d.remote_fetch_bytes)
+            .sum(),
+        migration_bytes: groups
+            .iter()
+            .filter_map(|g| g.dynamic.as_ref())
+            .map(|d| d.migration_bytes)
+            .sum(),
+        replacements: groups
+            .iter()
+            .filter_map(|g| g.dynamic.as_ref())
+            .map(|d| d.replacements)
+            .sum(),
+        cross_rack_requests: xr.requests,
+        cross_rack_bytes: xr.bytes,
+        prefill_tokens,
+        prefix_hits,
+        prefix_tokens_saved,
+        kv_transfer_bytes,
+        follow_ups,
+        follow_up_ttft,
+        turn_latency,
         span,
         metrics,
     })
@@ -1209,7 +1775,7 @@ mod tests {
         // bound, so shedding is guaranteed by construction.
         let trace = WorkloadTrace::from_requests(
             (0..40)
-                .map(|i| Request { id: i, arrival: 0.0, isl: 2048, osl: 16 })
+                .map(|i| Request::open(i, 0.0, 2048, 16))
                 .collect(),
         );
         let spec = tiny_fleet(ParallelMode::Dwdp, 2)
@@ -1245,12 +1811,7 @@ mod tests {
     fn trace_replay_drives_the_exact_offered_load() {
         let trace = WorkloadTrace::from_requests(
             (0..10)
-                .map(|i| Request {
-                    id: i,
-                    arrival: i as f64 * 0.01,
-                    isl: 1024 + 17 * i as usize,
-                    osl: 16,
-                })
+                .map(|i| Request::open(i, i as f64 * 0.01, 1024 + 17 * i as usize, 16))
                 .collect(),
         );
         let spec = tiny_fleet(ParallelMode::Dwdp, 2)
@@ -1276,7 +1837,7 @@ mod tests {
         // requests are admitted, the rest shed.
         let trace = WorkloadTrace::from_requests(
             (0..40)
-                .map(|i| Request { id: i, arrival: 0.0, isl: 2048, osl: 8 })
+                .map(|i| Request::open(i, 0.0, 2048, 8))
                 .collect(),
         );
         let probe = tiny_fleet(ParallelMode::Dwdp, 1).build().unwrap();
@@ -1310,7 +1871,7 @@ mod tests {
         let requests: Vec<Request> = [(3usize, 3usize), (4, 3)]
             .iter()
             .enumerate()
-            .map(|(i, &(isl, osl))| Request { id: i as u64, arrival: 0.0, isl, osl })
+            .map(|(i, &(isl, osl))| Request::open(i as u64, 0.0, isl, osl))
             .collect();
         // mean isl 3.5, mean osl/2 = 1.5 -> 5; the old integer form gave
         // 3/1 + 6/4 = 3 + 1 = 4.
@@ -1558,7 +2119,7 @@ mod tests {
         let run = |requeue| {
             let trace = WorkloadTrace::from_requests(
                 (0..64)
-                    .map(|i| Request { id: i, arrival: 0.0, isl: 8192, osl: 32 })
+                    .map(|i| Request::open(i, 0.0, 8192, 32))
                     .collect(),
             );
             let spec = Scenario::fleet()
@@ -1687,8 +2248,8 @@ mod tests {
         // so its prefill cannot start before the (deliberately glacial)
         // inter-rack transfer of its prompt lands.
         let trace = WorkloadTrace::from_requests(vec![
-            Request { id: 0, arrival: 0.0, isl: 2048, osl: 8 },
-            Request { id: 2, arrival: 0.0, isl: 2048, osl: 8 },
+            Request::open(0, 0.0, 2048, 8),
+            Request::open(2, 0.0, 2048, 8),
         ]);
         let gbps = 0.001; // 1 MB/s: 2048 tokens x 128 hidden ≈ 0.26 s
         let spec = tiny_fleet(ParallelMode::Dwdp, 2)
@@ -1731,10 +2292,10 @@ mod tests {
         // id 2 -> group 1 (cross-rack, ~0.26 s transfer at 1 MB/s),
         // id 4 -> group 0 (home), id 1 at t = 0.01 -> group 1 (home).
         let trace = WorkloadTrace::from_requests(vec![
-            Request { id: 0, arrival: 0.0, isl: 2048, osl: 8 },
-            Request { id: 2, arrival: 0.0, isl: 2048, osl: 8 },
-            Request { id: 4, arrival: 0.0, isl: 2048, osl: 8 },
-            Request { id: 1, arrival: 0.01, isl: 2048, osl: 8 },
+            Request::open(0, 0.0, 2048, 8),
+            Request::open(2, 0.0, 2048, 8),
+            Request::open(4, 0.0, 2048, 8),
+            Request::open(1, 0.01, 2048, 8),
         ]);
         let spec = tiny_fleet(ParallelMode::Dwdp, 2)
             .arrival(ArrivalProcess::Replay { trace })
@@ -1800,5 +2361,163 @@ mod tests {
             solo.per_group_availability[0], solo.per_group_availability[1],
             "independent failure streams should not coincide"
         );
+    }
+
+    fn session_fleet(policy: ClusterPolicy) -> Scenario {
+        tiny_fleet(ParallelMode::Dwdp, 3)
+            .sessions(true)
+            .session_turns(4)
+            .think_time(0.05)
+            .cluster_policy(policy)
+    }
+
+    #[test]
+    fn sessions_schedule_follow_ups_and_conserve_tokens() {
+        let spec = session_fleet(ClusterPolicy::PrefixAffinity).build().unwrap();
+        let out = simulate_analytic(&spec).unwrap();
+        assert!(out.follow_ups > 0, "0.05 s think time must produce follow-ups");
+        assert!(out.offered > 48, "follow-ups count as offered load");
+        assert_eq!(out.offered, out.admitted + out.shed + out.failed);
+        // Every admitted prompt token was either prefilled or skipped via
+        // a resident prefix — the session-path conservation law.
+        assert_eq!(out.admitted_tokens, out.prefill_tokens + out.prefix_tokens_saved);
+        assert_eq!(out.per_group_tokens.iter().sum::<usize>(), out.prefill_tokens);
+        assert!(out.prefix_hits > 0, "sticky routing must land hits");
+        assert!(out.prefix_tokens_saved > 0);
+        assert_eq!(out.follow_up_ttft.count(), out.turn_latency.count());
+        for r in &out.metrics.records {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn affinity_beats_rack_blind_on_hit_rate() {
+        let sticky =
+            simulate_analytic(&session_fleet(ClusterPolicy::PrefixAffinity).build().unwrap())
+                .unwrap();
+        let blind = simulate_analytic(
+            &session_fleet(ClusterPolicy::LeastOutstandingTokens).build().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sticky.offered, blind.offered, "identical closed-loop plans");
+        let rate = |o: &FleetOutcome| o.prefix_hits as f64 / o.follow_ups.max(1) as f64;
+        assert!(
+            rate(&sticky) > rate(&blind),
+            "affinity {} vs blind {}",
+            rate(&sticky),
+            rate(&blind)
+        );
+    }
+
+    #[test]
+    fn infinite_think_time_reproduces_open_loop_bit_for_bit() {
+        let open = simulate_analytic(&tiny_fleet(ParallelMode::Dwdp, 3).build().unwrap())
+            .unwrap();
+        let closed = simulate_analytic(
+            &tiny_fleet(ParallelMode::Dwdp, 3)
+                .sessions(true)
+                .think_time(f64::INFINITY)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(closed.follow_ups, 0);
+        assert_eq!(closed.offered, open.offered);
+        assert_eq!(closed.admitted, open.admitted);
+        assert_eq!(closed.admitted_tokens, open.admitted_tokens);
+        assert_eq!(closed.per_group_requests, open.per_group_requests);
+        assert_eq!(closed.per_group_tokens, open.per_group_tokens);
+        assert_eq!(closed.span.to_bits(), open.span.to_bits(), "span must match exactly");
+        assert_eq!(closed.metrics.n(), open.metrics.n());
+        for (a, b) in closed.metrics.records.iter().zip(open.metrics.records.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.first_token.to_bits(), b.first_token.to_bits(), "req {}", a.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn kv_migrate_ships_bytes_instead_of_reprefilling() {
+        // Round-robin ignores the affinity hint, so most follow-ups are
+        // re-steered away from their cache; with `kv_migrate` the prefix
+        // ships and still counts as saved tokens.
+        let moved = simulate_analytic(
+            &session_fleet(ClusterPolicy::RoundRobin).kv_migrate(true).build().unwrap(),
+        )
+        .unwrap();
+        let dropped =
+            simulate_analytic(&session_fleet(ClusterPolicy::RoundRobin).build().unwrap())
+                .unwrap();
+        assert!(moved.kv_transfer_bytes > 0.0, "re-steers must migrate KV");
+        assert_eq!(dropped.kv_transfer_bytes, 0.0);
+        assert!(
+            moved.prefix_tokens_saved > dropped.prefix_tokens_saved,
+            "migration {} vs drop {}",
+            moved.prefix_tokens_saved,
+            dropped.prefix_tokens_saved
+        );
+        assert_eq!(moved.admitted_tokens, moved.prefill_tokens + moved.prefix_tokens_saved);
+        assert_eq!(
+            dropped.admitted_tokens,
+            dropped.prefill_tokens + dropped.prefix_tokens_saved
+        );
+    }
+
+    #[test]
+    fn group_failures_invalidate_resident_caches_and_conserve() {
+        let scn = |mtbf: f64| {
+            session_fleet(ClusterPolicy::PrefixAffinity)
+                .mtbf(mtbf)
+                .mttr(0.5)
+                .requeue_on_failure(true)
+                .slo(1e4, 1e4)
+                .rate(10.0)
+                .build()
+                .unwrap()
+        };
+        let churned = simulate_analytic(&scn(4.0)).unwrap();
+        let calm = simulate_analytic(&scn(1e12)).unwrap();
+        // Conservation holds with batches being killed mid-flight and
+        // prefix grants voided on re-queue.
+        assert_eq!(churned.offered, churned.admitted + churned.shed + churned.failed);
+        assert_eq!(
+            churned.admitted_tokens,
+            churned.prefill_tokens + churned.prefix_tokens_saved
+        );
+        assert_eq!(churned.per_group_tokens.iter().sum::<usize>(), churned.prefill_tokens);
+        assert!(churned.per_group_availability.iter().any(|&a| a < 1.0));
+        // An outage wipes the group's HBM: sessions resident there pay
+        // full re-prefill, so the saved-token total drops under churn.
+        assert!(calm.follow_ups > 0 && churned.follow_ups > 0);
+        let rate = |o: &FleetOutcome| {
+            o.prefix_tokens_saved as f64 / o.admitted_tokens.max(1) as f64
+        };
+        assert!(
+            rate(&churned) < rate(&calm),
+            "churned {} vs calm {}",
+            rate(&churned),
+            rate(&calm)
+        );
+    }
+
+    #[test]
+    fn tiny_kv_budget_evicts_and_caps_resident_tokens() {
+        // A one-session budget (tiny model: 320 B/token, ~2 k tokens per
+        // resident context) forces LRU eviction; savings shrink but the
+        // books still balance.
+        let tight = simulate_analytic(
+            &session_fleet(ClusterPolicy::PrefixAffinity)
+                .kv_capacity_gb(1e-3)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        let roomy =
+            simulate_analytic(&session_fleet(ClusterPolicy::PrefixAffinity).build().unwrap())
+                .unwrap();
+        assert_eq!(tight.offered, roomy.offered);
+        assert!(tight.prefix_tokens_saved <= roomy.prefix_tokens_saved);
+        assert_eq!(tight.admitted_tokens, tight.prefill_tokens + tight.prefix_tokens_saved);
     }
 }

@@ -44,6 +44,14 @@ pub enum ClusterPolicy {
     /// reporting non-finite waits); on a flat topology this is plain
     /// least-predicted-wait placement.
     RackLocalFirst,
+    /// Sticky session routing: like [`ClusterPolicy::RackLocalFirst`], but
+    /// a follow-up whose session KV prefix resides on a group
+    /// ([`RouteCtx::affinity`]) credits that group with the re-prefill
+    /// time the cached prefix saves ([`RouteCtx::affinity_bonus`]).  The
+    /// cache-holding group wins until its backlog exceeds the savings —
+    /// the "spill on predicted-wait blowout" escape hatch — and arrivals
+    /// with no resident prefix route exactly like `RackLocalFirst`.
+    PrefixAffinity,
 }
 
 impl ClusterPolicy {
@@ -53,17 +61,19 @@ impl ClusterPolicy {
             ClusterPolicy::LeastOutstandingTokens => "least-outstanding",
             ClusterPolicy::SloAdmission { .. } => "slo-admission",
             ClusterPolicy::RackLocalFirst => "rack-local",
+            ClusterPolicy::PrefixAffinity => "prefix-affinity",
         }
     }
 
-    /// Parse a CLI-style name (`rr`, `lot`, `slo`, `rlf`); `max_wait`
-    /// seeds the admission threshold for the `slo` policy.
+    /// Parse a CLI-style name (`rr`, `lot`, `slo`, `rlf`, `affinity`);
+    /// `max_wait` seeds the admission threshold for the `slo` policy.
     pub fn parse(s: &str, max_wait: f64) -> Option<ClusterPolicy> {
         match s {
             "rr" | "round-robin" => Some(ClusterPolicy::RoundRobin),
             "lot" | "least-outstanding" | "least" => Some(ClusterPolicy::LeastOutstandingTokens),
             "slo" | "slo-admission" => Some(ClusterPolicy::SloAdmission { max_wait }),
             "rlf" | "rack-local" | "rack" => Some(ClusterPolicy::RackLocalFirst),
+            "affinity" | "aff" | "prefix-affinity" => Some(ClusterPolicy::PrefixAffinity),
             _ => None,
         }
     }
@@ -113,12 +123,21 @@ pub struct RouteCtx {
     /// Seconds a cross-rack admission costs this request (the inter-rack
     /// transfer of its prompt activations); 0 on a flat topology.
     pub cross_penalty: f64,
+    /// Group holding this request's session KV prefix (`None` for
+    /// open-loop arrivals, opening turns, and invalidated caches).
+    pub affinity: Option<usize>,
+    /// Seconds of re-prefill the resident prefix saves if the request is
+    /// admitted to the affinity group — the credit
+    /// [`ClusterPolicy::PrefixAffinity`] subtracts from that group's
+    /// effective wait.
+    pub affinity_bonus: f64,
 }
 
 impl RouteCtx {
-    /// The flat-topology context: every group is local, spilling is free.
+    /// The flat-topology context: every group is local, spilling is free,
+    /// and no session prefix is resident anywhere.
     pub fn flat() -> RouteCtx {
-        RouteCtx { home_rack: 0, cross_penalty: 0.0 }
+        RouteCtx { home_rack: 0, cross_penalty: 0.0, affinity: None, affinity_bonus: 0.0 }
     }
 }
 
@@ -226,6 +245,37 @@ impl ClusterRouter {
         (best.map(|(i, _)| i), any_up)
     }
 
+    /// Like [`Self::least_effective_wait`], but the group holding the
+    /// arrival's session KV prefix is credited with the re-prefill seconds
+    /// the cached prefix saves.  The credit can drive the comparison value
+    /// negative — that is fine; only the ordering matters.  Kept separate
+    /// so [`ClusterPolicy::SloAdmission`] stays affinity-blind.
+    fn least_affinity_wait(&self, loads: &[GroupLoad], ctx: &RouteCtx) -> (Option<usize>, bool) {
+        let mut best: Option<(usize, f64)> = None;
+        let mut any_up = false;
+        for (i, l) in loads.iter().enumerate() {
+            if !l.up {
+                continue;
+            }
+            any_up = true;
+            if !l.predicted_wait.is_finite() {
+                continue;
+            }
+            let mut w = self.effective_wait(i, loads, ctx);
+            if ctx.affinity == Some(i) {
+                w -= ctx.affinity_bonus;
+            }
+            let better = match best {
+                None => true,
+                Some((_, bw)) => w < bw,
+            };
+            if better {
+                best = Some((i, w));
+            }
+        }
+        (best.map(|(i, _)| i), any_up)
+    }
+
     /// Decide placement for one arrival given the current per-group loads
     /// (`loads.len()` must equal the router's group count) and the
     /// arrival's [`RouteCtx`].  Groups that are not [`GroupLoad::up`] are
@@ -268,6 +318,14 @@ impl ClusterRouter {
             }
             ClusterPolicy::RackLocalFirst => {
                 let (best, any_up) = self.least_effective_wait(loads, ctx);
+                match best {
+                    Some(g) => RouteDecision::Admit(g),
+                    None if any_up => RouteDecision::Shed,
+                    None => RouteDecision::Failed,
+                }
+            }
+            ClusterPolicy::PrefixAffinity => {
+                let (best, any_up) = self.least_affinity_wait(loads, ctx);
                 match best {
                     Some(g) => RouteDecision::Admit(g),
                     None if any_up => RouteDecision::Shed,
@@ -372,11 +430,11 @@ mod tests {
         let l = loads(&[0, 0, 0, 0]);
         let penalty = 1e-3;
         assert_eq!(
-            r.route(&l, &RouteCtx { home_rack: 0, cross_penalty: penalty }),
+            r.route(&l, &RouteCtx { home_rack: 0, cross_penalty: penalty, ..RouteCtx::flat() }),
             RouteDecision::Admit(0)
         );
         assert_eq!(
-            r.route(&l, &RouteCtx { home_rack: 1, cross_penalty: penalty }),
+            r.route(&l, &RouteCtx { home_rack: 1, cross_penalty: penalty, ..RouteCtx::flat() }),
             RouteDecision::Admit(2)
         );
     }
@@ -388,13 +446,13 @@ mod tests {
         // Home-rack groups backlogged by less than the penalty: stay home.
         let mild = loads(&[5, 5, 0, 0]); // waits 5 ms vs 0 ms + 10 ms penalty
         assert_eq!(
-            r.route(&mild, &RouteCtx { home_rack: 0, cross_penalty: penalty }),
+            r.route(&mild, &RouteCtx { home_rack: 0, cross_penalty: penalty, ..RouteCtx::flat() }),
             RouteDecision::Admit(0)
         );
         // Backlogged by more than the penalty: the spill is worth it.
         let heavy = loads(&[50, 50, 0, 0]); // waits 50 ms vs 10 ms effective
         assert_eq!(
-            r.route(&heavy, &RouteCtx { home_rack: 0, cross_penalty: penalty }),
+            r.route(&heavy, &RouteCtx { home_rack: 0, cross_penalty: penalty, ..RouteCtx::flat() }),
             RouteDecision::Admit(2)
         );
         // Home rack entirely down: spill regardless of penalty.
@@ -402,9 +460,42 @@ mod tests {
         dead_home[0].up = false;
         dead_home[1].up = false;
         assert_eq!(
-            r.route(&dead_home, &RouteCtx { home_rack: 0, cross_penalty: 10.0 }),
+            r.route(&dead_home, &RouteCtx { home_rack: 0, cross_penalty: 10.0, ..RouteCtx::flat() }),
             RouteDecision::Admit(3)
         );
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_until_the_backlog_beats_the_savings() {
+        let mut r = ClusterRouter::new(2, ClusterPolicy::PrefixAffinity);
+        // The cache-holding group is busier, but the prefix savings cover
+        // the difference: stick.
+        let l = loads(&[8, 2]); // waits 8 ms vs 2 ms
+        let sticky = RouteCtx { affinity: Some(0), affinity_bonus: 0.01, ..RouteCtx::flat() };
+        assert_eq!(r.route(&l, &sticky), RouteDecision::Admit(0));
+        // Backlog exceeds the savings: spill to the lighter group (and pay
+        // full prefill there — the simulator's accounting, not the
+        // router's concern).
+        let heavy = loads(&[20, 2]); // 20 ms - 10 ms credit vs 2 ms
+        assert_eq!(r.route(&heavy, &sticky), RouteDecision::Admit(1));
+        // No resident prefix: identical to least-effective-wait placement.
+        assert_eq!(r.route(&heavy, &RouteCtx::flat()), RouteDecision::Admit(1));
+    }
+
+    #[test]
+    fn prefix_affinity_composes_with_rack_penalties() {
+        // Affinity group 2 sits outside the home rack: the credit must
+        // beat the cross-rack penalty *and* the backlog gap to win.
+        let mut r =
+            ClusterRouter::with_topology(ClusterPolicy::PrefixAffinity, two_racks_of_two());
+        let l = loads(&[3, 3, 5, 5]);
+        let home = RouteCtx { home_rack: 0, cross_penalty: 0.004, ..RouteCtx::flat() };
+        // Credit too small: 5 ms + 4 ms - 5 ms = 4 ms > 3 ms, stay home.
+        let weak = RouteCtx { affinity: Some(2), affinity_bonus: 0.005, ..home };
+        assert_eq!(r.route(&l, &weak), RouteDecision::Admit(0));
+        // Credit covers penalty + gap: follow the cache across the spine.
+        let strong = RouteCtx { affinity: Some(2), affinity_bonus: 0.008, ..home };
+        assert_eq!(r.route(&l, &strong), RouteDecision::Admit(2));
     }
 
     #[test]
@@ -417,7 +508,7 @@ mod tests {
         // Remote groups idle, home groups mildly loaded: with a penalty
         // larger than the home backlog the home group still wins.
         let l = loads(&[5, 8, 0, 0]);
-        let ctx = RouteCtx { home_rack: 0, cross_penalty: 0.015 };
+        let ctx = RouteCtx { home_rack: 0, cross_penalty: 0.015, ..RouteCtx::flat() };
         assert_eq!(r.route(&l, &ctx), RouteDecision::Admit(0));
         // Home rack past the bound and the penalized spill past it too:
         // shed, even though the remote groups' raw waits are tiny.
@@ -436,6 +527,11 @@ mod tests {
         assert_eq!(slo.route(&l, &ctx), RouteDecision::Admit(0));
         let mut rlf = ClusterRouter::new(3, ClusterPolicy::RackLocalFirst);
         assert_eq!(rlf.route(&l, &ctx), RouteDecision::Admit(0));
+        // Even a sticky policy never follows a session prefix onto a down
+        // group — the failure-invalidation contract.
+        let mut aff = ClusterRouter::new(3, ClusterPolicy::PrefixAffinity);
+        let sticky = RouteCtx { affinity: Some(1), affinity_bonus: 100.0, ..RouteCtx::flat() };
+        assert_eq!(aff.route(&l, &sticky), RouteDecision::Admit(0));
         // Round-robin rotates past the down group and keeps cycling.
         let mut rr = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
         assert_eq!(rr.route(&l, &ctx), RouteDecision::Admit(0));
@@ -454,6 +550,7 @@ mod tests {
             ClusterPolicy::LeastOutstandingTokens,
             ClusterPolicy::SloAdmission { max_wait: 10.0 },
             ClusterPolicy::RackLocalFirst,
+            ClusterPolicy::PrefixAffinity,
         ] {
             let mut r = ClusterRouter::new(2, policy);
             assert_eq!(r.route(&l, &ctx), RouteDecision::Failed, "{}", policy.name());
@@ -477,9 +574,16 @@ mod tests {
             ClusterPolicy::parse("rack-local", 1.0),
             Some(ClusterPolicy::RackLocalFirst)
         );
+        assert_eq!(ClusterPolicy::parse("affinity", 1.0), Some(ClusterPolicy::PrefixAffinity));
+        assert_eq!(
+            ClusterPolicy::parse("prefix-affinity", 1.0),
+            Some(ClusterPolicy::PrefixAffinity)
+        );
         assert_eq!(ClusterPolicy::parse("nope", 1.0), None);
         assert_eq!(ClusterPolicy::RoundRobin.name(), "round-robin");
         assert_eq!(ClusterPolicy::RackLocalFirst.name(), "rack-local");
+        assert_eq!(ClusterPolicy::PrefixAffinity.name(), "prefix-affinity");
+        assert!(ClusterPolicy::PrefixAffinity.validate().is_ok());
         assert!(ClusterPolicy::SloAdmission { max_wait: 0.0 }.validate().is_err());
         assert!(ClusterPolicy::SloAdmission { max_wait: 1.0 }.validate().is_ok());
         assert!(ClusterPolicy::RackLocalFirst.validate().is_ok());

@@ -188,7 +188,7 @@ mod tests {
         // outlasts the run.
         let trace = WorkloadTrace::from_requests(
             (0..16)
-                .map(|i| Request { id: i, arrival: 0.0, isl: 2048, osl: 8 })
+                .map(|i| Request::open(i, 0.0, 2048, 8))
                 .collect(),
         );
         let spec = Scenario::fleet()

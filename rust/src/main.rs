@@ -367,11 +367,26 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
         if flags.contains_key("requeue") {
             scn = scn.requeue_on_failure(true);
         }
+        if flags.contains_key("sessions") {
+            scn = scn.sessions(true);
+        }
+        if let Some(turns) = flags.get("turns").and_then(|s| s.parse().ok()) {
+            scn = scn.sessions(true).session_turns(turns);
+        }
+        if let Some(think) = flags.get("think-time").and_then(|s| s.parse().ok()) {
+            scn = scn.sessions(true).think_time(think);
+        }
+        if flags.contains_key("kv-migrate") {
+            scn = scn.kv_migrate(true);
+        }
+        if let Some(gb) = flags.get("kv-capacity").and_then(|s| s.parse().ok()) {
+            scn = scn.kv_capacity_gb(gb);
+        }
         if let Some(p) = flags.get("policy") {
             match ClusterPolicy::parse(p, max_wait) {
                 Some(policy) => scn = scn.cluster_policy(policy),
                 None => {
-                    eprintln!("unknown policy {p:?} (rr|lot|slo)");
+                    eprintln!("unknown policy {p:?} (rr|lot|slo|rlf|affinity)");
                     return 2;
                 }
             }
@@ -474,6 +489,20 @@ fn report_table(r: &RunReport) -> Table {
             t.row(vec![
                 "availability (%)".into(),
                 format!("{:.1}", r.availability * 100.0),
+            ]);
+        }
+        if r.follow_ups > 0 {
+            t.row(vec![
+                "prefix hits / follow-ups".into(),
+                format!("{} / {}", r.prefix_hits, r.follow_ups),
+            ]);
+            t.row(vec![
+                "follow-up mean TTFT (ms)".into(),
+                format!("{:.0}", r.follow_up_mean_ttft * 1e3),
+            ]);
+            t.row(vec![
+                "turn p50/p95/p99 (s)".into(),
+                format!("{:.2} / {:.2} / {:.2}", r.p50_turn, r.p95_turn, r.p99_turn),
             ]);
         }
     }

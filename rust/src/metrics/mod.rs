@@ -172,6 +172,15 @@ impl LatencyDigest {
         self.samples.len()
     }
 
+    /// Sample mean (0 for empty digests) — the fleet's follow-up-TTFT
+    /// comparison metric.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
     /// The fleet reporting triple: (p50, p95, p99).
     pub fn p50_p95_p99(&self) -> (f64, f64, f64) {
         if self.samples.is_empty() {
@@ -423,6 +432,8 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a.count(), 100);
+        assert!((a.mean() - 50.5).abs() < 1e-12);
+        assert_eq!(LatencyDigest::new().mean(), 0.0);
         let (p50, p95, p99) = a.p50_p95_p99();
         assert!((p50 - crate::util::stats::percentile(&xs, 50.0)).abs() < 1e-12);
         assert!((p95 - crate::util::stats::percentile(&xs, 95.0)).abs() < 1e-12);

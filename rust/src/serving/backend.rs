@@ -100,6 +100,20 @@ pub struct RunReport {
     /// Prompt-activation bytes those admissions shipped over the
     /// inter-rack spine.
     pub cross_rack_bytes: f64,
+    /// Closed-loop sessions (fleet scenarios with `sessions` on; all 0
+    /// otherwise): follow-up turns offered, prefix-cache hits, prefix
+    /// tokens the hits skipped, and KV bytes `kv_migrate` shipped.
+    pub follow_ups: usize,
+    pub prefix_hits: usize,
+    pub prefix_tokens_saved: usize,
+    pub kv_transfer_bytes: f64,
+    /// Mean TTFT over completed follow-up turns, seconds.
+    pub follow_up_mean_ttft: f64,
+    /// Full session-turn latency percentiles over completed follow-ups
+    /// (arrival to last token), seconds.
+    pub p50_turn: f64,
+    pub p95_turn: f64,
+    pub p99_turn: f64,
     /// DES events processed (0 for analytic runs).
     pub events: u64,
     /// Chrome trace, when the scenario asked for one and the backend can
@@ -144,6 +158,14 @@ impl Default for RunReport {
             racks: 1,
             cross_rack_requests: 0,
             cross_rack_bytes: 0.0,
+            follow_ups: 0,
+            prefix_hits: 0,
+            prefix_tokens_saved: 0,
+            kv_transfer_bytes: 0.0,
+            follow_up_mean_ttft: 0.0,
+            p50_turn: 0.0,
+            p95_turn: 0.0,
+            p99_turn: 0.0,
             events: 0,
             trace: None,
             extras: Vec::new(),
@@ -193,6 +215,14 @@ impl RunReport {
             ("racks", Json::Num(self.racks as f64)),
             ("cross_rack_requests", Json::Num(self.cross_rack_requests as f64)),
             ("cross_rack_bytes", Json::Num(self.cross_rack_bytes)),
+            ("follow_ups", Json::Num(self.follow_ups as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefix_tokens_saved", Json::Num(self.prefix_tokens_saved as f64)),
+            ("kv_transfer_bytes", Json::Num(self.kv_transfer_bytes)),
+            ("follow_up_mean_ttft", Json::Num(self.follow_up_mean_ttft)),
+            ("p50_turn", Json::Num(self.p50_turn)),
+            ("p95_turn", Json::Num(self.p95_turn)),
+            ("p99_turn", Json::Num(self.p99_turn)),
             ("events", Json::Num(self.events as f64)),
             ("extras", Json::Arr(extras)),
         ])
@@ -303,6 +333,30 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
         report
             .extras
             .push(("migrated (GB)".into(), format!("{:.3}", out.migration_bytes / 1e9)));
+    }
+    report.follow_ups = out.follow_ups;
+    report.prefix_hits = out.prefix_hits;
+    report.prefix_tokens_saved = out.prefix_tokens_saved;
+    report.kv_transfer_bytes = out.kv_transfer_bytes;
+    report.follow_up_mean_ttft = out.follow_up_ttft.mean();
+    let (p50, p95, p99) = out.turn_latency.p50_p95_p99();
+    report.p50_turn = p50;
+    report.p95_turn = p95;
+    report.p99_turn = p99;
+    if spec.serving.sessions && out.follow_ups > 0 {
+        report.extras.push((
+            "prefix cache".into(),
+            format!(
+                "{} hits / {} follow-ups, {} tokens saved",
+                out.prefix_hits, out.follow_ups, out.prefix_tokens_saved
+            ),
+        ));
+        if out.kv_transfer_bytes > 0.0 {
+            report.extras.push((
+                "KV migrated (GB)".into(),
+                format!("{:.3}", out.kv_transfer_bytes / 1e9),
+            ));
+        }
     }
 }
 

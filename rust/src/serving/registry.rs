@@ -107,6 +107,9 @@ fn run_fleet_churn() -> RunArtifact {
 fn run_multirack() -> RunArtifact {
     RunArtifact::table(experiments::fleet::multirack())
 }
+fn run_sessions() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::sessions())
+}
 
 static REGISTRY: &[ScenarioEntry] = &[
     ScenarioEntry {
@@ -253,6 +256,12 @@ static REGISTRY: &[ScenarioEntry] = &[
         group: "fleet",
         run: run_multirack,
     },
+    ScenarioEntry {
+        id: "sessions",
+        title: "closed-loop sessions: KV-prefix affinity vs rack-blind routing",
+        group: "fleet",
+        run: run_sessions,
+    },
 ];
 
 /// All registered scenarios, in registration order.
@@ -285,7 +294,9 @@ pub fn usage_text() -> String {
     out.push_str("                   [--json FILE]\n");
     out.push_str("  dwdp-repro fleet [--groups N] [--mode dwdp|dep] [--rate R] [--requests K]\n");
     out.push_str("                   [--seconds S] [--arrival poisson|burst|mmpp] [--cv2 X]\n");
-    out.push_str("                   [--policy rr|lot|slo|rlf] [--max-wait W]\n");
+    out.push_str("                   [--policy rr|lot|slo|rlf|affinity] [--max-wait W]\n");
+    out.push_str("                   [--sessions] [--turns N] [--think-time S]\n");
+    out.push_str("                   [--kv-migrate] [--kv-capacity GB]\n");
     out.push_str("                   [--trace FILE.json] [--record-trace FILE.json]\n");
     out.push_str("                   [--fidelity analytic|des]\n");
     out.push_str("                   [--skew Z] [--replace N] [--local-experts L]\n");
@@ -323,8 +334,8 @@ mod tests {
             assert!(find(id).is_some(), "missing scenario {id}");
         }
         // PR 2's fleet layer registers through the same table, as do
-        // PR 3's re-placement sweep, PR 4's churn scenario, and PR 5's
-        // rack-tiered topology sweep.
+        // PR 3's re-placement sweep, PR 4's churn scenario, PR 5's
+        // rack-tiered topology sweep, and PR 6's closed-loop sessions.
         for id in [
             "fleet_frontier",
             "fleet_burst",
@@ -332,11 +343,12 @@ mod tests {
             "replacement_skew",
             "fleet_churn",
             "multirack",
+            "sessions",
         ] {
             assert!(find(id).is_some(), "missing scenario {id}");
             assert_eq!(find(id).unwrap().group, "fleet");
         }
-        assert_eq!(registry().len(), 24);
+        assert_eq!(registry().len(), 25);
     }
 
     #[test]
@@ -360,6 +372,8 @@ mod tests {
         assert!(text.contains("--mtbf"));
         assert!(text.contains("--racks"));
         assert!(text.contains("--inter-rack-gbps"));
+        assert!(text.contains("--sessions"));
+        assert!(text.contains("--think-time"));
         assert!(text.contains("  fleet:\n"));
     }
 

@@ -124,6 +124,11 @@ pub struct Scenario {
     inter_rack_gbps: Option<f64>,
     inter_rack_latency: Option<f64>,
     rack_blast_radius: Option<bool>,
+    sessions: Option<bool>,
+    session_turns: Option<usize>,
+    think_time: Option<f64>,
+    kv_migrate: Option<bool>,
+    kv_capacity_gb: Option<f64>,
     seed: Option<u64>,
     // Workload / fleet.
     requests: usize,
@@ -179,6 +184,11 @@ impl Scenario {
             inter_rack_gbps: None,
             inter_rack_latency: None,
             rack_blast_radius: None,
+            sessions: None,
+            session_turns: None,
+            think_time: None,
+            kv_migrate: None,
+            kv_capacity_gb: None,
             seed: None,
             requests: if target == BuildTarget::Context { 2 } else { 64 },
             target,
@@ -384,6 +394,41 @@ impl Scenario {
         self
     }
 
+    /// Closed-loop session workload (fleet scenarios): arrivals open
+    /// multi-turn conversations whose follow-ups share a KV prefix with
+    /// their history.  Off by default — the plain open-loop path.
+    pub fn sessions(mut self, on: bool) -> Self {
+        self.sessions = Some(on);
+        self
+    }
+
+    /// Max turns per session, sampled uniformly in `[1, max]` (pairs with
+    /// [`Scenario::sessions`]).
+    pub fn session_turns(mut self, turns: usize) -> Self {
+        self.session_turns = Some(turns);
+        self
+    }
+
+    /// Mean think time between a response finishing and the follow-up,
+    /// seconds.  Infinite ⇒ no one returns (open-loop degeneration).
+    pub fn think_time(mut self, seconds: f64) -> Self {
+        self.think_time = Some(seconds);
+        self
+    }
+
+    /// Ship a re-steered follow-up's KV prefix over the interconnect
+    /// instead of re-prefilling it on the new group.
+    pub fn kv_migrate(mut self, on: bool) -> Self {
+        self.kv_migrate = Some(on);
+        self
+    }
+
+    /// Per-group KV-prefix cache budget in GB (0 = unbounded).
+    pub fn kv_capacity_gb(mut self, gb: f64) -> Self {
+        self.kv_capacity_gb = Some(gb);
+        self
+    }
+
     /// RNG seed for the whole scenario.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
@@ -545,6 +590,21 @@ impl Scenario {
         if let Some(v) = self.rack_blast_radius {
             serving.rack_blast_radius = v;
         }
+        if let Some(v) = self.sessions {
+            serving.sessions = v;
+        }
+        if let Some(v) = self.session_turns {
+            serving.session_turns = v;
+        }
+        if let Some(v) = self.think_time {
+            serving.think_time = v;
+        }
+        if let Some(v) = self.kv_migrate {
+            serving.kv_migrate = v;
+        }
+        if let Some(v) = self.kv_capacity_gb {
+            serving.kv_capacity_gb = v;
+        }
         if let Some(v) = self.seed {
             serving.seed = v;
         }
@@ -644,8 +704,18 @@ impl Scenario {
                 } else {
                     String::new()
                 };
+                // Open-loop labels stay byte-identical to pre-session
+                // builds; the tag appears only when the loop is closed.
+                let session_tag = if serving.sessions {
+                    format!(
+                        ", sessions x{} think {}s",
+                        serving.session_turns, serving.think_time
+                    )
+                } else {
+                    String::new()
+                };
                 format!(
-                    "fleet {}{}x{}{rack_tag}, {} arrivals @ {:.1}/s, {} routing",
+                    "fleet {}{}x{}{rack_tag}{session_tag}, {} arrivals @ {:.1}/s, {} routing",
                     serving.mode.name(),
                     serving.group_size,
                     n_groups,
@@ -813,6 +883,40 @@ mod tests {
             .build()
             .unwrap();
         assert!(blast.serving.rack_blast_radius);
+    }
+
+    #[test]
+    fn session_knobs_land_and_validate() {
+        let spec = Scenario::fleet()
+            .sessions(true)
+            .session_turns(6)
+            .think_time(1.5)
+            .kv_migrate(true)
+            .kv_capacity_gb(2.0)
+            .build()
+            .unwrap();
+        assert!(spec.serving.sessions);
+        assert_eq!(spec.serving.session_turns, 6);
+        assert_eq!(spec.serving.think_time, 1.5);
+        assert!(spec.serving.kv_migrate);
+        assert_eq!(spec.serving.kv_capacity_gb, 2.0);
+        assert!(spec.label.contains("sessions x6 think 1.5s"), "{}", spec.label);
+        // The open-loop default carries no session tag — labels (and so
+        // JSON fingerprints) are unchanged from the pre-session path.
+        let open = Scenario::fleet().build().unwrap();
+        assert!(!open.serving.sessions);
+        assert!(!open.label.contains("sessions"), "{}", open.label);
+        // Bad knobs are rejected at build() only when sessions are on.
+        assert!(Scenario::fleet().sessions(true).session_turns(0).build().is_err());
+        assert!(Scenario::fleet().sessions(true).think_time(-1.0).build().is_err());
+        assert!(Scenario::fleet().sessions(true).kv_capacity_gb(-0.5).build().is_err());
+        assert!(Scenario::fleet().session_turns(0).build().is_ok());
+        // Infinite think time is the legal open-loop degeneration.
+        assert!(Scenario::fleet()
+            .sessions(true)
+            .think_time(f64::INFINITY)
+            .build()
+            .is_ok());
     }
 
     #[test]

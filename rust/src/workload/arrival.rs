@@ -200,6 +200,10 @@ pub struct OpenLoopGen {
     switch_at: f64,
     /// Replay cursor.
     replay_pos: usize,
+    /// Lookahead stashed by [`Self::until`]: the first request at or past a
+    /// window's horizon is already drawn (RNG and clock advanced), so it is
+    /// held here and returned first by the next call instead of being lost.
+    pending: Option<Request>,
 }
 
 impl OpenLoopGen {
@@ -221,6 +225,7 @@ impl OpenLoopGen {
             state_high: false,
             switch_at,
             replay_pos: 0,
+            pending: None,
         }
     }
 
@@ -262,18 +267,21 @@ impl OpenLoopGen {
     /// Next request, or `None` when a replayed trace is exhausted
     /// (generative processes never run dry).
     pub fn next_request(&mut self) -> Option<Request> {
+        if let Some(r) = self.pending.take() {
+            return Some(r);
+        }
         if let ArrivalProcess::Replay { trace } = &self.process {
             let r = trace.requests.get(self.replay_pos)?.clone();
             self.replay_pos += 1;
             return Some(r);
         }
         self.advance_clock();
-        let r = Request {
-            id: self.next_id,
-            arrival: self.clock,
-            isl: self.isl_dist.sample(&mut self.rng),
-            osl: self.osl_dist.sample(&mut self.rng),
-        };
+        let r = Request::open(
+            self.next_id,
+            self.clock,
+            self.isl_dist.sample(&mut self.rng),
+            self.osl_dist.sample(&mut self.rng),
+        );
         self.next_id += 1;
         Some(r)
     }
@@ -292,11 +300,17 @@ impl OpenLoopGen {
 
     /// Requests arriving strictly before `horizon` seconds, capped at
     /// `cap` (a runaway guard for storm-heavy processes).
+    ///
+    /// The first request drawn at or past `horizon` is stashed as a
+    /// lookahead (not dropped), so consecutive `until` windows partition
+    /// the stream exactly: concatenating the windows reproduces what one
+    /// big [`Self::take`] would have produced.
     pub fn until(&mut self, horizon: f64, cap: usize) -> Vec<Request> {
         let mut out = Vec::new();
         while out.len() < cap {
             let Some(r) = self.next_request() else { break };
             if r.arrival >= horizon {
+                self.pending = Some(r);
                 break;
             }
             out.push(r);
@@ -332,12 +346,21 @@ impl WorkloadTrace {
             .requests
             .iter()
             .map(|r| {
-                obj(vec![
+                let mut fields = vec![
                     ("arrival", Json::Num(r.arrival)),
                     ("id", Json::Num(r.id as f64)),
                     ("isl", Json::Num(r.isl as f64)),
                     ("osl", Json::Num(r.osl as f64)),
-                ])
+                ];
+                // Session fields are emitted only when present so
+                // pre-session traces stay byte-identical.
+                if let Some(s) = r.session {
+                    fields.push(("session", Json::Num(s as f64)));
+                }
+                if let Some(t) = r.turn {
+                    fields.push(("turn", Json::Num(t as f64)));
+                }
+                obj(fields)
             })
             .collect();
         obj(vec![
@@ -375,11 +398,28 @@ impl WorkloadTrace {
             if !arrival.is_finite() || arrival < 0.0 {
                 return Err(format!("request {i}: bad arrival {arrival}"));
             }
+            // Optional session fields: absent in pre-session traces, which
+            // must keep parsing; present-but-malformed still errors.
+            let session = if *row.get("session") == Json::Null {
+                None
+            } else {
+                Some(nat("session", 0)?)
+            };
+            let turn = if *row.get("turn") == Json::Null {
+                None
+            } else {
+                let t = nat("turn", 0)?;
+                Some(u32::try_from(t).map_err(|_| {
+                    format!("request {i}: turn {t} does not fit in u32")
+                })?)
+            };
             requests.push(Request {
                 id: nat("id", 0)?,
                 arrival,
                 isl: nat("isl", 1)? as usize,
                 osl: nat("osl", 1)? as usize,
+                session,
+                turn,
             });
         }
         Ok(WorkloadTrace { requests })
@@ -477,12 +517,7 @@ mod tests {
         let spaced = |t0: f64| {
             WorkloadTrace::from_requests(
                 (0..5)
-                    .map(|i| Request {
-                        id: i,
-                        arrival: t0 + i as f64 * 0.5,
-                        isl: 100,
-                        osl: 1,
-                    })
+                    .map(|i| Request::open(i, t0 + i as f64 * 0.5, 100, 1))
                     .collect(),
             )
         };
@@ -491,15 +526,10 @@ mod tests {
             assert!((p.mean_rate() - 2.0).abs() < 1e-12, "t0={t0}: {}", p.mean_rate());
         }
         // Degenerate traces report no rate instead of a bogus one.
-        let single = WorkloadTrace::from_requests(vec![Request {
-            id: 0,
-            arrival: 3.0,
-            isl: 100,
-            osl: 1,
-        }]);
+        let single = WorkloadTrace::from_requests(vec![Request::open(0, 3.0, 100, 1)]);
         assert_eq!(ArrivalProcess::Replay { trace: single }.mean_rate(), 0.0);
         let storm = WorkloadTrace::from_requests(
-            (0..4).map(|i| Request { id: i, arrival: 1.0, isl: 100, osl: 1 }).collect(),
+            (0..4).map(|i| Request::open(i, 1.0, 100, 1)).collect(),
         );
         assert_eq!(ArrivalProcess::Replay { trace: storm }.mean_rate(), 0.0);
     }
@@ -507,8 +537,8 @@ mod tests {
     #[test]
     fn replay_returns_trace_verbatim_then_dry() {
         let trace = WorkloadTrace::from_requests(vec![
-            Request { id: 7, arrival: 0.5, isl: 123, osl: 9 },
-            Request { id: 8, arrival: 1.25, isl: 456, osl: 11 },
+            Request::open(7, 0.5, 123, 9),
+            Request::open(8, 1.25, 456, 11),
         ]);
         let (isl, osl) = fixed_dists();
         let mut g =
@@ -527,6 +557,86 @@ mod tests {
         assert!(reqs.iter().all(|r| r.arrival < 1.0));
         let mut g2 = OpenLoopGen::new(ArrivalProcess::Poisson { rate: 100.0 }, isl, osl, 5);
         assert_eq!(g2.until(1.0, 3).len(), 3);
+    }
+
+    /// Regression for the `until` fencepost: the first request drawn at or
+    /// past the horizon used to be dropped (RNG and clock already
+    /// advanced), so consecutive windows lost one request per call.
+    #[test]
+    fn until_windows_partition_the_stream() {
+        let (isl, osl) = fixed_dists();
+        for process in [
+            ArrivalProcess::Poisson { rate: 50.0 },
+            ArrivalProcess::GammaBurst { rate: 50.0, cv2: 6.0 },
+            ArrivalProcess::MarkovModulated {
+                rate_low: 10.0,
+                rate_high: 90.0,
+                mean_dwell: 0.2,
+            },
+        ] {
+            let mut windows = OpenLoopGen::new(process.clone(), isl, osl, 7);
+            let mut chunked = Vec::new();
+            for w in 1..=8 {
+                chunked.extend(windows.until(w as f64 * 0.25, usize::MAX));
+            }
+            let mut whole = OpenLoopGen::new(process.clone(), isl, osl, 7);
+            let reference = whole.take(chunked.len());
+            assert_eq!(chunked, reference, "{}", process.name());
+        }
+        // Replay traces partition the same way: the overshoot request is
+        // handed to the next window instead of being skipped.
+        let trace = WorkloadTrace::from_requests(
+            (0..6).map(|i| Request::open(i, i as f64, 100, 1)).collect(),
+        );
+        let mut g = OpenLoopGen::new(
+            ArrivalProcess::Replay { trace: trace.clone() },
+            isl,
+            osl,
+            8,
+        );
+        let mut chunked = g.until(2.5, usize::MAX);
+        chunked.extend(g.until(100.0, usize::MAX));
+        assert_eq!(chunked, trace.requests);
+    }
+
+    #[test]
+    fn session_fields_round_trip_and_stay_optional() {
+        let mut reqs = vec![Request::open(0, 0.0, 64, 8)];
+        reqs.push(Request {
+            id: 1,
+            arrival: 0.5,
+            isl: 128,
+            osl: 16,
+            session: Some(0),
+            turn: Some(1),
+        });
+        let trace = WorkloadTrace::from_requests(reqs);
+        let text = trace.dump();
+        assert!(text.contains("\"session\":0") && text.contains("\"turn\":1"));
+        let parsed = WorkloadTrace::parse(&text).unwrap();
+        assert_eq!(parsed, trace);
+        assert_eq!(parsed.dump(), text, "round trip must be byte-identical");
+        // Open-loop rows do not grow the new keys.
+        assert!(!text[..text.find("session").unwrap()].contains("turn"));
+    }
+
+    /// Pre-session traces (no `session`/`turn` keys) must keep parsing.
+    #[test]
+    fn pre_session_trace_still_parses() {
+        let text =
+            r#"{"requests":[{"arrival":0.25,"id":3,"isl":77,"osl":9}],"version":1}"#;
+        let trace = WorkloadTrace::parse(text).unwrap();
+        assert_eq!(trace.requests, vec![Request::open(3, 0.25, 77, 9)]);
+        assert_eq!(trace.dump(), text, "legacy shape is the canonical shape");
+        // Present-but-malformed session fields still error.
+        for row in [
+            r#"{"arrival":0,"id":0,"isl":1,"osl":1,"session":-1}"#,
+            r#"{"arrival":0,"id":0,"isl":1,"osl":1,"session":0,"turn":0.5}"#,
+            r#"{"arrival":0,"id":0,"isl":1,"osl":1,"turn":5000000000}"#,
+        ] {
+            let text = format!(r#"{{"version":1,"requests":[{row}]}}"#);
+            assert!(WorkloadTrace::parse(&text).is_err(), "accepted: {row}");
+        }
     }
 
     #[test]
@@ -584,8 +694,8 @@ mod tests {
             .validate()
             .is_err());
         let unsorted = WorkloadTrace::from_requests(vec![
-            Request { id: 0, arrival: 2.0, isl: 1, osl: 1 },
-            Request { id: 1, arrival: 1.0, isl: 1, osl: 1 },
+            Request::open(0, 2.0, 1, 1),
+            Request::open(1, 1.0, 1, 1),
         ]);
         assert!(ArrivalProcess::Replay { trace: unsorted }.validate().is_err());
         assert!(OslDist::Uniform { lo: 0, hi: 4 }.validate().is_err());

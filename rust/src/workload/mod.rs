@@ -12,11 +12,13 @@
 //! the cluster simulator in [`crate::fleet`].
 
 pub mod arrival;
+pub mod session;
 
 use crate::config::ServingConfig;
 use crate::util::Rng;
 
 pub use arrival::{ArrivalProcess, OpenLoopGen, OslDist, WorkloadTrace};
+pub use session::{SessionGen, SessionPlan};
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,6 +30,25 @@ pub struct Request {
     pub isl: usize,
     /// Output sequence length (tokens to generate).
     pub osl: usize,
+    /// Session this request belongs to (closed-loop workloads; `None` for
+    /// plain open-loop traffic).
+    pub session: Option<u64>,
+    /// Zero-based turn index within the session (`Some(0)` = opening turn).
+    pub turn: Option<u32>,
+}
+
+impl Request {
+    /// An open-loop request with no session membership — the constructor
+    /// every pre-session call site uses.
+    pub fn open(id: u64, arrival: f64, isl: usize, osl: usize) -> Request {
+        Request { id, arrival, isl, osl, session: None, turn: None }
+    }
+
+    /// Is this a session follow-up (turn > 0) whose prompt shares a prefix
+    /// with its session history?
+    pub fn is_follow_up(&self) -> bool {
+        self.turn.is_some_and(|t| t > 0)
+    }
 }
 
 /// ISL sampling scheme.
@@ -111,12 +132,12 @@ impl WorkloadGen {
         if self.arrival_rate > 0.0 {
             self.clock += self.rng.exponential(self.arrival_rate);
         }
-        let r = Request {
-            id: self.next_id,
-            arrival: self.clock,
-            isl: self.isl_dist.sample(&mut self.rng),
-            osl: self.osl,
-        };
+        let r = Request::open(
+            self.next_id,
+            self.clock,
+            self.isl_dist.sample(&mut self.rng),
+            self.osl,
+        );
         self.next_id += 1;
         r
     }

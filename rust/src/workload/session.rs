@@ -1,0 +1,279 @@
+//! Closed-loop session workloads: multi-turn conversations layered on the
+//! open-loop arrival processes.
+//!
+//! Open-loop traffic treats every request as independent; the traffic DWDP
+//! actually serves is millions of *users* in multi-turn conversations whose
+//! follow-ups share a long prefix (the full session history) with prior
+//! turns.  [`SessionGen`] models that loop:
+//!
+//! * Session openings ride the underlying [`OpenLoopGen`] stream verbatim
+//!   (same RNG, same arrivals, same ISL/OSL draws), so a session workload
+//!   whose think time is infinite — no user ever returns — degenerates to
+//!   the open-loop stream bit-for-bit.
+//! * Each opening starts a session whose *plan* (turn count, per-follow-up
+//!   fresh prompt tokens, output lengths, think times) is pre-sampled from
+//!   a session-keyed RNG stream.  The offered load is therefore a pure
+//!   function of the seed — identical under every routing policy — which
+//!   is what makes "equal offered load" policy comparisons meaningful.
+//! * A follow-up's ISL is the whole prior context (previous ISL + previous
+//!   OSL) plus fresh tokens, and it arrives one think time after the
+//!   previous response finished streaming: the closed-loop feedback that
+//!   an open-loop generator cannot express.
+//!
+//! The consumer is the cluster simulator ([`crate::fleet`]), which pairs
+//! the shared prefix with a per-group KV cache so a follow-up routed back
+//! to the group holding its session's KV skips re-prefilling the prefix.
+
+use crate::util::Rng;
+use crate::workload::{IslDist, OpenLoopGen, OslDist, Request};
+
+/// Stream tag mixed into the workload seed for per-session plan RNGs.
+const SESSION_STREAM: u64 = 0x5E55;
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Frozen per-session schedule, pre-sampled at session creation.
+///
+/// `turns` counts *all* turns including the opening, so a plan with
+/// `turns == 1` has no follow-ups and the per-follow-up vectors are empty;
+/// follow-up turn `k` (1-based) reads index `k - 1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionPlan {
+    /// Total turns in the session, in `[1, max_turns]`.
+    pub turns: usize,
+    /// Fresh prompt tokens each follow-up adds on top of the prior context.
+    pub new_tokens: Vec<usize>,
+    /// Output length of each follow-up turn.
+    pub osls: Vec<usize>,
+    /// Think time before each follow-up, seconds (infinite when the
+    /// configured think time is infinite: the user never returns).
+    pub thinks: Vec<f64>,
+}
+
+/// Closed-loop session generator: an [`OpenLoopGen`] for session openings
+/// plus deterministic per-session plans for the follow-up turns.
+#[derive(Debug, Clone)]
+pub struct SessionGen {
+    base: OpenLoopGen,
+    isl_dist: IslDist,
+    osl_dist: OslDist,
+    seed: u64,
+    /// Upper bound on turns per session (sampled uniformly in [1, max]).
+    pub max_turns: usize,
+    /// Mean think time between a response finishing and the follow-up,
+    /// seconds.  Infinite ⇒ no follow-ups (open-loop degeneration);
+    /// 0 ⇒ instant follow-ups.
+    pub think_time: f64,
+}
+
+impl SessionGen {
+    pub fn new(
+        base: OpenLoopGen,
+        seed: u64,
+        max_turns: usize,
+        think_time: f64,
+    ) -> SessionGen {
+        debug_assert!(max_turns >= 1);
+        let isl_dist = base.isl_dist;
+        let osl_dist = base.osl_dist;
+        SessionGen { base, isl_dist, osl_dist, seed, max_turns, think_time }
+    }
+
+    /// Up to `n` session openings: the base open-loop stream verbatim, each
+    /// request tagged as turn 0 of a new session keyed by its id.
+    pub fn initial_take(&mut self, n: usize) -> Vec<Request> {
+        let mut out = self.base.take(n);
+        Self::tag_openings(&mut out);
+        out
+    }
+
+    /// Session openings arriving strictly before `horizon` (see
+    /// [`OpenLoopGen::until`] for the lookahead contract).
+    pub fn initial_until(&mut self, horizon: f64, cap: usize) -> Vec<Request> {
+        let mut out = self.base.until(horizon, cap);
+        Self::tag_openings(&mut out);
+        out
+    }
+
+    fn tag_openings(reqs: &mut [Request]) {
+        for r in reqs.iter_mut() {
+            r.session = Some(r.id);
+            r.turn = Some(0);
+        }
+    }
+
+    /// The frozen plan for session `sid` — a pure function of (seed, sid),
+    /// independent of routing, admission, and simulation order.
+    pub fn plan(&self, sid: u64) -> SessionPlan {
+        let mut rng = Rng::new(self.seed ^ SESSION_STREAM ^ sid.wrapping_mul(GOLDEN));
+        let turns = 1 + rng.below(self.max_turns as u64) as usize;
+        let mut new_tokens = Vec::with_capacity(turns - 1);
+        let mut osls = Vec::with_capacity(turns - 1);
+        let mut thinks = Vec::with_capacity(turns - 1);
+        for _ in 1..turns {
+            new_tokens.push(self.isl_dist.sample(&mut rng));
+            osls.push(self.osl_dist.sample(&mut rng));
+            thinks.push(if self.think_time.is_finite() {
+                // think_time == 0 ⇒ lambda = ∞ ⇒ a zero draw (instant
+                // follow-up); the RNG still advances so plans stay aligned
+                // across think-time settings.
+                rng.exponential(1.0 / self.think_time)
+            } else {
+                f64::INFINITY
+            });
+        }
+        SessionPlan { turns, new_tokens, osls, thinks }
+    }
+
+    /// The follow-up to `prev`, arriving one think time after `prev`'s
+    /// response finished streaming at `response_done`.  `None` when the
+    /// plan is exhausted or the user never returns (infinite think time).
+    pub fn follow_up(
+        &self,
+        prev: &Request,
+        plan: &SessionPlan,
+        id: u64,
+        response_done: f64,
+    ) -> Option<Request> {
+        let k = prev.turn.unwrap_or(0) as usize + 1;
+        if k >= plan.turns {
+            return None;
+        }
+        let think = plan.thinks[k - 1];
+        if !think.is_finite() {
+            return None;
+        }
+        Some(Request {
+            id,
+            arrival: response_done + think,
+            // The whole prior context re-enters the prompt, plus fresh
+            // tokens — the shared prefix a KV cache can skip.
+            isl: prev.isl + prev.osl + plan.new_tokens[k - 1],
+            osl: plan.osls[k - 1],
+            session: prev.session,
+            turn: Some(k as u32),
+        })
+    }
+}
+
+/// KV-prefix tokens a completed request leaves behind: its whole context
+/// (prompt + generated tokens), which is exactly the prefix its follow-up
+/// re-sends.
+pub fn resident_prefix(r: &Request) -> usize {
+    r.isl + r.osl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ArrivalProcess;
+
+    fn gen(seed: u64, max_turns: usize, think: f64) -> SessionGen {
+        let base = OpenLoopGen::new(
+            ArrivalProcess::Poisson { rate: 20.0 },
+            IslDist::Fixed { isl: 500 },
+            OslDist::Uniform { lo: 8, hi: 64 },
+            seed,
+        );
+        SessionGen::new(base, seed, max_turns, think)
+    }
+
+    #[test]
+    fn openings_ride_the_open_loop_stream_verbatim() {
+        let base = OpenLoopGen::new(
+            ArrivalProcess::Poisson { rate: 20.0 },
+            IslDist::Fixed { isl: 500 },
+            OslDist::Uniform { lo: 8, hi: 64 },
+            42,
+        );
+        let reference = base.clone().take(50);
+        let openings = gen(42, 4, 2.0).initial_take(50);
+        assert_eq!(openings.len(), 50);
+        for (o, r) in openings.iter().zip(&reference) {
+            assert_eq!(o.session, Some(r.id));
+            assert_eq!(o.turn, Some(0));
+            assert_eq!(
+                (o.id, o.arrival, o.isl, o.osl),
+                (r.id, r.arrival, r.isl, r.osl)
+            );
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_bounded() {
+        let g = gen(7, 6, 1.5);
+        for sid in 0..64u64 {
+            let a = g.plan(sid);
+            let b = g.plan(sid);
+            assert_eq!(a, b);
+            assert!((1..=6).contains(&a.turns), "turns {}", a.turns);
+            assert_eq!(a.new_tokens.len(), a.turns - 1);
+            assert_eq!(a.osls.len(), a.turns - 1);
+            assert_eq!(a.thinks.len(), a.turns - 1);
+            assert!(a.thinks.iter().all(|t| t.is_finite() && *t >= 0.0));
+        }
+        // Distinct sessions draw distinct plans (statistically certain for
+        // 64 sessions with a 6-way turn count and continuous think times).
+        assert!((0..64u64).any(|s| g.plan(s) != g.plan(s + 64)));
+    }
+
+    #[test]
+    fn follow_up_carries_the_whole_prior_context() {
+        let g = gen(3, 5, 2.0);
+        let sid = (0..64)
+            .find(|&s| g.plan(s).turns >= 3)
+            .expect("some session has >= 3 turns");
+        let plan = g.plan(sid);
+        let first = Request {
+            id: sid,
+            arrival: 1.0,
+            isl: 500,
+            osl: 32,
+            session: Some(sid),
+            turn: Some(0),
+        };
+        let f1 = g.follow_up(&first, &plan, 1000, 4.0).unwrap();
+        assert_eq!(f1.isl, 500 + 32 + plan.new_tokens[0]);
+        assert_eq!(f1.osl, plan.osls[0]);
+        assert_eq!(f1.session, Some(sid));
+        assert_eq!(f1.turn, Some(1));
+        assert!((f1.arrival - (4.0 + plan.thinks[0])).abs() < 1e-12);
+        assert_eq!(resident_prefix(&first), 532);
+        let f2 = g.follow_up(&f1, &plan, 1001, 9.0).unwrap();
+        assert_eq!(f2.isl, f1.isl + f1.osl + plan.new_tokens[1]);
+        assert_eq!(f2.turn, Some(2));
+    }
+
+    #[test]
+    fn plan_exhaustion_ends_the_session() {
+        let g = gen(11, 4, 2.0);
+        let sid = (0..64).find(|&s| g.plan(s).turns == 1).expect("a 1-turn session");
+        let plan = g.plan(sid);
+        let first = Request {
+            id: sid,
+            arrival: 0.0,
+            isl: 500,
+            osl: 8,
+            session: Some(sid),
+            turn: Some(0),
+        };
+        assert!(g.follow_up(&first, &plan, 1, 1.0).is_none());
+    }
+
+    #[test]
+    fn infinite_think_time_means_no_follow_ups() {
+        let g = gen(5, 8, f64::INFINITY);
+        for sid in 0..32u64 {
+            let plan = g.plan(sid);
+            assert!(plan.thinks.iter().all(|t| t.is_infinite()));
+            let first = Request {
+                id: sid,
+                arrival: 0.0,
+                isl: 500,
+                osl: 8,
+                session: Some(sid),
+                turn: Some(0),
+            };
+            assert!(g.follow_up(&first, &plan, 1, 1.0).is_none());
+        }
+    }
+}

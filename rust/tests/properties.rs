@@ -190,12 +190,7 @@ fn prop_batcher_conserves_requests() {
         let n = 1 + rng.below(200) as usize;
         let mut b = ContextBatcher::new(mnt, max_batch);
         for id in 0..n as u64 {
-            b.push(Request {
-                id,
-                arrival: 0.0,
-                isl: 1 + rng.below(3 * mnt as u64) as usize,
-                osl: 1,
-            });
+            b.push(Request::open(id, 0.0, 1 + rng.below(3 * mnt as u64) as usize, 1));
         }
         let mut seen = Vec::new();
         while let Some(batch) = b.next_batch() {
@@ -331,6 +326,58 @@ fn prop_workload_trace_roundtrip_byte_identical() {
             .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e}"));
         assert_eq!(parsed, trace, "seed {seed}: trace changed across round trip");
         assert_eq!(parsed.dump(), text, "seed {seed}: serialization not byte-identical");
+        // Session-tagged rows (the optional PR-6 schema extension) survive
+        // the same byte-identical round trip, mixed with untagged rows.
+        let mut tagged = trace.requests.clone();
+        for (k, r) in tagged.iter_mut().enumerate() {
+            if k % 2 == 0 {
+                r.session = Some(seed * 100 + k as u64);
+                r.turn = Some((k % 5) as u32);
+            }
+        }
+        let tagged = WorkloadTrace::from_requests(tagged);
+        let text = tagged.dump();
+        let parsed = WorkloadTrace::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: tagged reparse failed: {e}"));
+        assert_eq!(parsed, tagged, "seed {seed}: session tags changed across round trip");
+        assert_eq!(parsed.dump(), text, "seed {seed}: tagged dump not byte-identical");
+    }
+}
+
+/// Property (workload): consecutive `until` windows partition the arrival
+/// stream exactly — no request is dropped at a window boundary (the
+/// lookahead fix) and no request is duplicated, for every arrival process;
+/// the concatenation equals one big window from a fresh generator.
+#[test]
+fn prop_until_windows_partition_the_stream() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(14_000 + seed);
+        let rate = 0.5 + rng.f64() * 30.0;
+        let process = match seed % 3 {
+            0 => ArrivalProcess::Poisson { rate },
+            1 => ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 10.0 },
+            _ => ArrivalProcess::MarkovModulated {
+                rate_low: rate * 0.1,
+                rate_high: rate,
+                mean_dwell: 0.1 + rng.f64() * 5.0,
+            },
+        };
+        let isl = IslDist::Fixed { isl: 64 + rng.below(1024) as usize };
+        let osl = OslDist::Fixed { osl: 8 };
+        let window = 0.2 + rng.f64() * 3.0;
+        let n_windows = 2 + rng.below(4) as usize;
+        let cap = 10_000;
+        let mut gen = OpenLoopGen::new(process.clone(), isl, osl, seed);
+        let mut windowed = Vec::new();
+        for w in 1..=n_windows {
+            windowed.extend(gen.until(w as f64 * window, cap));
+        }
+        let mut fresh = OpenLoopGen::new(process, isl, osl, seed);
+        let whole = fresh.until(n_windows as f64 * window, cap);
+        assert_eq!(
+            windowed, whole,
+            "seed {seed}: windowed generation dropped or duplicated requests"
+        );
     }
 }
 
@@ -403,7 +450,7 @@ fn prop_least_outstanding_router_never_starves() {
             .map(|id| {
                 let isl = 256 + rng.below(4096) as usize;
                 max_isl = max_isl.max(isl);
-                Request { id, arrival: 0.0, isl, osl: 1 + rng.below(16) as usize }
+                Request::open(id, 0.0, isl, 1 + rng.below(16) as usize)
             })
             .collect();
         let trace = WorkloadTrace::from_requests(requests);
@@ -698,6 +745,124 @@ fn prop_fleet_sweep_thread_invariance_with_racks() {
                 .unwrap();
             points.push(SweepPoint::new(
                 &format!("{} racks={racks}", policy.name()),
+                spec,
+                Fidelity::Analytic,
+            ));
+        }
+    }
+    let serial = run_sweep(&points, 1);
+    for threads in [2, 8] {
+        let parallel = run_sweep(&points, threads);
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(
+                a.to_json().dump(),
+                b.to_json().dump(),
+                "point {i} differs at {threads} threads"
+            );
+        }
+    }
+}
+
+/// Property (fleet): token conservation holds under closed-loop sessions —
+/// every offered turn (openings and follow-ups alike) ends in exactly one
+/// of admitted, shed, or failed, and every admitted prompt token was
+/// either charged to prefill or skipped via a resident KV prefix:
+/// `admitted_tokens == prefill_tokens + prefix_tokens_saved`, with the
+/// per-group prefill ledger agreeing — across all policies, churn on/off,
+/// `kv_migrate` on/off, and random think times / cache budgets.
+#[test]
+fn prop_sessions_token_conservation() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(15_000 + seed);
+        let n_groups = 1 + rng.below(4) as usize;
+        let rate = 2.0 + rng.f64() * 20.0;
+        let policy = match seed % 4 {
+            0 => ClusterPolicy::SloAdmission { max_wait: 0.01 + rng.f64() },
+            1 => ClusterPolicy::RoundRobin,
+            2 => ClusterPolicy::LeastOutstandingTokens,
+            _ => ClusterPolicy::PrefixAffinity,
+        };
+        let churn = seed % 2 == 0;
+        let mut scn = tiny_fleet_scenario(n_groups)
+            .arrival(ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 6.0 })
+            .cluster_policy(policy)
+            .requests(8 + rng.below(24) as usize)
+            .sessions(true)
+            .session_turns(1 + rng.below(4) as usize)
+            .think_time(rng.f64() * 2.0)
+            .kv_migrate(seed % 3 == 0)
+            .seed(seed);
+        if seed % 5 == 0 {
+            // A tight cache budget forces LRU eviction mid-run.
+            scn = scn.kv_capacity_gb(1e-3);
+        }
+        if churn {
+            scn = scn.mtbf(0.5 + rng.f64() * 4.0).mttr(0.05 + rng.f64() * 2.0).requeue_on_failure(true);
+        }
+        let spec = scn.build().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let out = simulate_analytic(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(
+            out.offered,
+            out.admitted + out.shed + out.failed,
+            "seed {seed}: turn leak under sessions"
+        );
+        assert_eq!(
+            out.offered_tokens,
+            out.admitted_tokens + out.shed_tokens + out.failed_tokens,
+            "seed {seed}: token leak under sessions"
+        );
+        assert_eq!(
+            out.admitted_tokens,
+            out.prefill_tokens + out.prefix_tokens_saved,
+            "seed {seed}: prefix savings do not balance the prefill ledger"
+        );
+        assert_eq!(
+            out.per_group_tokens.iter().sum::<usize>(),
+            out.prefill_tokens,
+            "seed {seed}: group prefill ledger leak"
+        );
+        assert_eq!(out.admitted, out.metrics.n(), "seed {seed}: lost records");
+        assert!(out.prefix_hits <= out.follow_ups, "seed {seed}");
+        if !spec.serving.kv_migrate {
+            assert_eq!(out.kv_transfer_bytes, 0.0, "seed {seed}: phantom KV transfer");
+        }
+        for r in &out.metrics.records {
+            assert!(r.first_token >= r.arrival, "seed {seed}: {r:?}");
+            assert!(r.finish >= r.first_token, "seed {seed}: {r:?}");
+        }
+    }
+}
+
+/// Property (fleet): sweep output stays bit-identical across thread counts
+/// with closed-loop sessions and affinity routing enabled — session plans,
+/// cache state, and KV-transfer pricing are all pure functions of the spec
+/// (compared through the canonical JSON fingerprint, which includes the
+/// follow-up / prefix-hit fields).
+#[test]
+fn prop_fleet_sweep_thread_invariance_with_sessions() {
+    let mut points = Vec::new();
+    for (i, policy) in [
+        ClusterPolicy::PrefixAffinity,
+        ClusterPolicy::LeastOutstandingTokens,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for (j, kv_migrate) in [false, true].into_iter().enumerate() {
+            let spec = tiny_fleet_scenario(3)
+                .arrival(ArrivalProcess::GammaBurst { rate: 15.0, cv2: 4.0 })
+                .cluster_policy(policy)
+                .sessions(true)
+                .session_turns(3)
+                .think_time(0.2)
+                .kv_migrate(kv_migrate)
+                .requests(24)
+                .seed((i * 2 + j) as u64)
+                .build()
+                .unwrap();
+            points.push(SweepPoint::new(
+                &format!("{} kv_migrate={kv_migrate}", policy.name()),
                 spec,
                 Fidelity::Analytic,
             ));
