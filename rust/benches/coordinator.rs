@@ -1,8 +1,8 @@
 //! Coordinator benchmarks: batcher admission, routing, latency-model
 //! evaluation, and a full disaggregated end-to-end point (the unit of the
-//! Fig. 5 Pareto sweep).
+//! Fig. 5 Pareto sweep).  Emits `BENCH_coordinator.json`.
 
-use dwdp::bench::Bencher;
+use dwdp::bench::run_suite;
 use dwdp::config::ParallelMode;
 use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::experiments::calib;
@@ -10,52 +10,53 @@ use dwdp::serving::{Fidelity, ServingStack};
 use dwdp::workload::{IslDist, WorkloadGen};
 
 fn main() {
-    let mut b = Bencher::new();
-    let ctx_spec = calib::context_scenario(ParallelMode::Dwdp, 4)
-        .build()
-        .expect("context scenario");
+    run_suite("coordinator", |b| {
+        let ctx_spec = calib::context_scenario(ParallelMode::Dwdp, 4)
+            .build()
+            .expect("context scenario");
 
-    // Batcher: push + drain 1024 requests.
-    let mut gen = WorkloadGen::new(IslDist::RatioWindow { isl: 8192, ratio: 0.8 }, 1024, 0.0, 3);
-    let reqs = gen.take(1024);
-    b.bench_n("batcher/push_drain_1024", 1024.0, || {
-        let mut batcher = ContextBatcher::new(32768, 64);
-        for r in &reqs {
-            batcher.push(r.clone());
-        }
-        let mut n = 0;
-        while let Some(batch) = batcher.next_batch() {
-            n += batch.requests.len();
-        }
-        assert_eq!(n, 1024);
-    });
-
-    // Router policies.
-    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
-        let name = format!("router/{policy:?}/1024_over_8");
-        b.bench_n(&name, 1024.0, || {
-            let mut router = Router::new(8, policy);
+        // Batcher: push + drain 1024 requests.
+        let mut gen =
+            WorkloadGen::new(IslDist::RatioWindow { isl: 8192, ratio: 0.8 }, 1024, 0.0, 3);
+        let reqs = gen.take(1024);
+        b.bench_n("batcher/push_drain_1024", 1024.0, || {
+            let mut batcher = ContextBatcher::new(32768, 64);
             for r in &reqs {
-                std::hint::black_box(router.route(r.isl));
+                batcher.push(r.clone());
             }
+            let mut n = 0;
+            while let Some(batch) = batcher.next_batch() {
+                n += batch.requests.len();
+            }
+            assert_eq!(n, 1024);
         });
-    }
 
-    // Group latency model: one 4-request DWDP batch.
-    let lm = GroupLatencyModel::new(&ctx_spec.hw, &ctx_spec.model, &ctx_spec.serving);
-    b.bench("latency_model/prefill_batch4_dwdp", || {
-        lm.prefill_offsets(&[8192, 7200, 6800, 6600])
+        // Router policies.
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            let name = format!("router/{policy:?}/1024_over_8");
+            b.bench_n(&name, 1024.0, || {
+                let mut router = Router::new(8, policy);
+                for r in &reqs {
+                    std::hint::black_box(router.route(r.isl));
+                }
+            });
+        }
+
+        // Group latency model: one 4-request DWDP batch.
+        let lm = GroupLatencyModel::new(&ctx_spec.hw, &ctx_spec.model, &ctx_spec.serving);
+        b.bench("latency_model/prefill_batch4_dwdp", || {
+            lm.prefill_offsets(&[8192, 7200, 6800, 6600])
+        });
+
+        // One full end-to-end point (24 requests) through the serving API.
+        let e2e_spec = calib::e2e_scenario(ParallelMode::Dwdp)
+            .ctx_groups(2)
+            .gen_gpus(16)
+            .requests(24)
+            .rate(3.0)
+            .build()
+            .expect("e2e scenario");
+        let stack = ServingStack::new(e2e_spec, Fidelity::Analytic);
+        b.bench("disagg/e2e_point_24req", || stack.run().expect("analytic backend"));
     });
-
-    // One full end-to-end point (24 requests) through the serving API.
-    let e2e_spec = calib::e2e_scenario(ParallelMode::Dwdp)
-        .ctx_groups(2)
-        .gen_gpus(16)
-        .requests(24)
-        .rate(3.0)
-        .build()
-        .expect("e2e scenario");
-    let stack = ServingStack::new(e2e_spec, Fidelity::Analytic);
-    b.bench("disagg/e2e_point_24req", || stack.run().expect("analytic backend"));
-    b.finish();
 }

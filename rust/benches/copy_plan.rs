@@ -1,42 +1,43 @@
 //! Hot-path micro-benchmarks: TDM copy-plan construction (Listing 1) and
 //! placement queries.  The plan builder runs once per (rank, layer,
 //! iteration) on the coordinator's critical path, so it must stay cheap
-//! relative to the ~µs-scale scheduling budget.
+//! relative to the ~µs-scale scheduling budget.  Emits
+//! `BENCH_copy_plan.json`.
 
-use dwdp::bench::Bencher;
+use dwdp::bench::run_suite;
 use dwdp::dwdp::build_copy_plan;
 use dwdp::placement::ExpertPlacement;
 use dwdp::util::Rng;
 
 fn main() {
-    let mut b = Bencher::new();
-    let placement = ExpertPlacement::minimal(256, 4);
-    let fetches = placement.remote_fetches(0); // 192 experts over 3 peers
-    let expert_bytes = 24.8e6;
+    run_suite("copy_plan", |b| {
+        let placement = ExpertPlacement::minimal(256, 4);
+        let fetches = placement.remote_fetches(0); // 192 experts over 3 peers
+        let expert_bytes = 24.8e6;
 
-    b.bench("copy_plan/monolithic/256exp_g4", || {
-        build_copy_plan(&fetches, expert_bytes, 1 << 20, false)
-    });
-    b.bench("copy_plan/tdm_1MiB/256exp_g4", || {
-        build_copy_plan(&fetches, expert_bytes, 1 << 20, true)
-    });
-    b.bench("copy_plan/tdm_256KiB/256exp_g4", || {
-        build_copy_plan(&fetches, expert_bytes, 256 << 10, true)
-    });
+        b.bench("copy_plan/monolithic/256exp_g4", || {
+            build_copy_plan(&fetches, expert_bytes, 1 << 20, false)
+        });
+        b.bench("copy_plan/tdm_1MiB/256exp_g4", || {
+            build_copy_plan(&fetches, expert_bytes, 1 << 20, true)
+        });
+        b.bench("copy_plan/tdm_256KiB/256exp_g4", || {
+            build_copy_plan(&fetches, expert_bytes, 256 << 10, true)
+        });
 
-    let p16 = ExpertPlacement::minimal(256, 16);
-    let f16 = p16.remote_fetches(0);
-    b.bench("copy_plan/tdm_1MiB/256exp_g16", || {
-        build_copy_plan(&f16, expert_bytes, 1 << 20, true)
-    });
+        let p16 = ExpertPlacement::minimal(256, 16);
+        let f16 = p16.remote_fetches(0);
+        b.bench("copy_plan/tdm_1MiB/256exp_g16", || {
+            build_copy_plan(&f16, expert_bytes, 1 << 20, true)
+        });
 
-    b.bench("placement/remote_fetches/g4", || placement.remote_fetches(2));
-    let mut rng = Rng::new(1);
-    b.bench("placement/sampled_fetches/g4", || {
-        placement.remote_fetches_sampled(2, 0.07, &mut rng)
+        b.bench("placement/remote_fetches/g4", || placement.remote_fetches(2));
+        let mut rng = Rng::new(1);
+        b.bench("placement/sampled_fetches/g4", || {
+            placement.remote_fetches_sampled(2, 0.07, &mut rng)
+        });
+        b.bench("placement/build/256exp_g4_redundant", || {
+            ExpertPlacement::balanced(256, 4, 128)
+        });
     });
-    b.bench("placement/build/256exp_g4_redundant", || {
-        ExpertPlacement::balanced(256, 4, 128)
-    });
-    b.finish();
 }

@@ -1,22 +1,23 @@
 //! Table-regeneration benchmarks: wall time to reproduce each paper
 //! artifact (quick-mode workloads).  One entry per table/figure so
-//! `cargo bench` exercises every experiment path end to end.
+//! `cargo bench` exercises every experiment path end to end.  Emits
+//! `BENCH_experiments.json`.
 
-use dwdp::bench::Bencher;
+use dwdp::bench::run_suite;
 use dwdp::experiments;
 
 fn main() {
     std::env::set_var("DWDP_QUICK", "1");
     // These are seconds-scale: give the harness a tight budget.
     std::env::set_var("DWDP_BENCH_QUICK", "1");
-    let mut b = Bencher::new();
-    b.bench("exp/fig3_roofline", experiments::fig3);
-    b.bench("exp/table2_contention", experiments::table2);
-    b.bench("exp/table7_power_patterns", experiments::power::table7);
-    b.bench("exp/table1_breakdown", experiments::context::table1);
-    b.bench("exp/fig1_sync_overhead", experiments::context::fig1);
-    b.bench("exp/table3b_mnt_sweep", experiments::context::table3b);
-    b.bench("exp/table4_contention_mitigation", experiments::context::table4);
-    b.bench("exp/fig5_pareto", experiments::e2e::fig5);
-    b.finish();
+    run_suite("experiments", |b| {
+        b.bench("exp/fig3_roofline", experiments::fig3);
+        b.bench("exp/table2_contention", experiments::table2);
+        b.bench("exp/table7_power_patterns", experiments::power::table7);
+        b.bench("exp/table1_breakdown", experiments::context::table1);
+        b.bench("exp/fig1_sync_overhead", experiments::context::fig1);
+        b.bench("exp/table3b_mnt_sweep", experiments::context::table3b);
+        b.bench("exp/table4_contention_mitigation", experiments::context::table4);
+        b.bench("exp/fig5_pareto", experiments::e2e::fig5);
+    });
 }

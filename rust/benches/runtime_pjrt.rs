@@ -1,12 +1,13 @@
 //! PJRT runtime benchmarks on the real artifacts: kernel executables
 //! (merged vs split grouped GEMM — the §4.2 "no meaningful regression"
-//! check), layer execution, and a full DWDP-rank prefill.
+//! check), layer execution, and a full DWDP-rank prefill.  Emits
+//! `BENCH_runtime_pjrt.json`.
 //!
 //! Skipped gracefully when `make artifacts` hasn't run.
 
 use std::sync::Arc;
 
-use dwdp::bench::Bencher;
+use dwdp::bench::run_suite;
 use dwdp::runtime::{default_artifact_dir, DepModel, DwdpRank, Runtime};
 
 fn main() {
@@ -16,55 +17,54 @@ fn main() {
         return;
     }
     let mut rt = Runtime::new(&dir).expect("runtime");
-    let mut b = Bencher::new();
+    run_suite("runtime_pjrt", |b| {
+        // --- micro-kernels: merged vs split grouped GEMM -------------------
+        let e = rt.manifest.config.n_experts;
+        let (c, h, f) = (64usize, rt.manifest.config.hidden, rt.manifest.config.ffn_inner);
+        let x = rt.upload_f32(&vec![0.1f32; e * c * h], &[e, c, h]).unwrap();
+        let w = rt.upload_f32(&vec![0.01f32; e * h * f], &[e, h, f]).unwrap();
+        b.bench("pjrt/kernel_gg_merged", || {
+            rt.execute_keep("kernel_gg_merged", &[&x, &w]).unwrap()
+        });
 
-    // --- micro-kernels: merged vs split grouped GEMM -------------------
-    let e = rt.manifest.config.n_experts;
-    let (c, h, f) = (64usize, rt.manifest.config.hidden, rt.manifest.config.ffn_inner);
-    let x = rt.upload_f32(&vec![0.1f32; e * c * h], &[e, c, h]).unwrap();
-    let w = rt.upload_f32(&vec![0.01f32; e * h * f], &[e, h, f]).unwrap();
-    b.bench("pjrt/kernel_gg_merged", || {
-        rt.execute_keep("kernel_gg_merged", &[&x, &w]).unwrap()
-    });
+        let slots = e.div_ceil(4);
+        let bufs: Vec<_> = (0..4)
+            .map(|_| rt.upload_f32(&vec![0.01f32; slots * h * f], &[slots, h, f]).unwrap())
+            .collect();
+        let bid: Vec<i32> = (0..e as i32).map(|i| i / slots as i32).collect();
+        let slot: Vec<i32> = (0..e as i32).map(|i| i % slots as i32).collect();
+        let bid_b = rt.upload_i32(&bid, &[e]).unwrap();
+        let slot_b = rt.upload_i32(&slot, &[e]).unwrap();
+        b.bench("pjrt/kernel_gg_split_g4", || {
+            rt.execute_keep(
+                "kernel_gg_split_g4",
+                &[&x, &bufs[0], &bufs[1], &bufs[2], &bufs[3], &bid_b, &slot_b],
+            )
+            .unwrap()
+        });
 
-    let slots = e.div_ceil(4);
-    let bufs: Vec<_> = (0..4)
-        .map(|_| rt.upload_f32(&vec![0.01f32; slots * h * f], &[slots, h, f]).unwrap())
-        .collect();
-    let bid: Vec<i32> = (0..e as i32).map(|i| i / slots as i32).collect();
-    let slot: Vec<i32> = (0..e as i32).map(|i| i % slots as i32).collect();
-    let bid_b = rt.upload_i32(&bid, &[e]).unwrap();
-    let slot_b = rt.upload_i32(&slot, &[e]).unwrap();
-    b.bench("pjrt/kernel_gg_split_g4", || {
-        rt.execute_keep(
-            "kernel_gg_split_g4",
-            &[&x, &bufs[0], &bufs[1], &bufs[2], &bufs[3], &bid_b, &slot_b],
-        )
-        .unwrap()
-    });
+        // --- attention kernel ----------------------------------------------
+        let nh = rt.manifest.config.n_heads;
+        let hd = rt.manifest.config.head_dim;
+        let q = rt.upload_f32(&vec![0.1f32; nh * 128 * hd], &[1, nh, 128, hd]).unwrap();
+        let lens = rt.upload_i32(&[128], &[1]).unwrap();
+        b.bench("pjrt/kernel_attention_s128", || {
+            rt.execute_keep("kernel_attention", &[&q, &q, &q, &lens]).unwrap()
+        });
 
-    // --- attention kernel ----------------------------------------------
-    let nh = rt.manifest.config.n_heads;
-    let hd = rt.manifest.config.head_dim;
-    let q = rt.upload_f32(&vec![0.1f32; nh * 128 * hd], &[1, nh, 128, hd]).unwrap();
-    let lens = rt.upload_i32(&[128], &[1]).unwrap();
-    b.bench("pjrt/kernel_attention_s128", || {
-        rt.execute_keep("kernel_attention", &[&q, &q, &q, &lens]).unwrap()
-    });
+        // --- full prefill: DEP reference vs DWDP rank ----------------------
+        let vocab = rt.manifest.config.vocab;
+        let toks: Vec<i32> = (0..128).map(|i| (i * 7) as i32 % vocab as i32).collect();
+        let dep = DepModel::new(&rt).unwrap();
+        b.bench("pjrt/prefill_dep_b1s128", || {
+            dep.prefill(&mut rt, &toks, &[100], (1, 128)).unwrap()
+        });
 
-    // --- full prefill: DEP reference vs DWDP rank ----------------------
-    let vocab = rt.manifest.config.vocab;
-    let toks: Vec<i32> = (0..128).map(|i| (i * 7) as i32 % vocab as i32).collect();
-    let dep = DepModel::new(&rt).unwrap();
-    b.bench("pjrt/prefill_dep_b1s128", || {
-        dep.prefill(&mut rt, &toks, &[100], (1, 128)).unwrap()
+        let peers: Vec<Arc<dwdp::runtime::WeightStore>> =
+            (0..4).map(|_| rt.weights.clone()).collect();
+        let mut rank = DwdpRank::new(&rt, 0, 4, peers, 750e9).unwrap();
+        b.bench("pjrt/prefill_dwdp_rank_b1s128", || {
+            rank.prefill(&mut rt, &toks, &[100], (1, 128)).unwrap()
+        });
     });
-
-    let peers: Vec<Arc<dwdp::runtime::WeightStore>> =
-        (0..4).map(|_| rt.weights.clone()).collect();
-    let mut rank = DwdpRank::new(&rt, 0, 4, peers, 750e9).unwrap();
-    b.bench("pjrt/prefill_dwdp_rank_b1s128", || {
-        rank.prefill(&mut rt, &toks, &[100], (1, 128)).unwrap()
-    });
-    b.finish();
 }

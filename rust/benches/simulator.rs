@@ -1,9 +1,10 @@
 //! Simulator throughput benchmarks: event-processing rate of the DES and
 //! end-to-end table regeneration latency (one per paper table — these are
 //! the `cargo bench` equivalents of the experiment harness; absolute
-//! numbers go to EXPERIMENTS.md §Perf).
+//! numbers go to EXPERIMENTS.md §Perf, machine-readable ones to
+//! `BENCH_simulator.json`).
 
-use dwdp::bench::Bencher;
+use dwdp::bench::{run_suite, Bencher};
 use dwdp::config::{HardwareConfig, ParallelMode};
 use dwdp::experiments::calib;
 use dwdp::model::{Category, OpKind};
@@ -45,25 +46,25 @@ fn events_per_sec_case(b: &mut Bencher) {
 
 fn main() {
     std::env::set_var("DWDP_QUICK", "1");
-    let mut b = Bencher::new();
-    events_per_sec_case(&mut b);
+    run_suite("simulator", |b| {
+        events_per_sec_case(b);
 
-    // Full context-group runs — the DES backend behind Tables 1/3/4,
-    // reached through the unified serving API.
-    for (name, mode) in [("dep4", ParallelMode::Dep), ("dwdp4", ParallelMode::Dwdp)] {
-        let spec = calib::context_scenario(mode, 4)
-            .requests(1)
-            .build()
-            .expect("bench scenario");
-        let stack = ServingStack::new(spec, Fidelity::Des);
-        let events = stack.run().expect("DES backend").events as f64;
-        b.bench_n(
-            &format!("engine/context_{name}_r1 ({events} events)"),
-            events,
-            || {
-                stack.run().expect("DES backend");
-            },
-        );
-    }
-    b.finish();
+        // Full context-group runs — the DES backend behind Tables 1/3/4,
+        // reached through the unified serving API.
+        for (name, mode) in [("dep4", ParallelMode::Dep), ("dwdp4", ParallelMode::Dwdp)] {
+            let spec = calib::context_scenario(mode, 4)
+                .requests(1)
+                .build()
+                .expect("bench scenario");
+            let stack = ServingStack::new(spec, Fidelity::Des);
+            let events = stack.run().expect("DES backend").events as f64;
+            b.bench_n(
+                &format!("engine/context_{name}_r1 ({events} events)"),
+                events,
+                || {
+                    stack.run().expect("DES backend");
+                },
+            );
+        }
+    });
 }

@@ -1,13 +1,18 @@
 //! Minimal micro-benchmark harness (criterion is unavailable offline).
 //!
 //! `cargo bench` targets are `harness = false` binaries that call
-//! [`Bencher::bench`] for each case: warmup, then timed batches until the
-//! time budget is spent, reporting mean / median / p95 per iteration and a
-//! relative std-dev quality signal.  Output is stable, grep-able text that
-//! EXPERIMENTS.md §Perf quotes directly.
+//! [`run_suite`] with a closure registering cases on the [`Bencher`]:
+//! warmup, then timed batches until the time budget is spent, reporting
+//! mean / median / p95 per iteration and a relative std-dev quality
+//! signal.  Output is stable, grep-able text that EXPERIMENTS.md §Perf
+//! quotes directly, plus a machine-readable `BENCH_<name>.json`
+//! ([`BenchSuite::to_json`]) — the per-PR perf trajectory ROADMAP asks
+//! for.  The `bench` CLI subcommand emits the same schema with
+//! fleet-sweep wall times attached.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{obj, Json};
 use crate::util::stats;
 
 /// One benchmark report.
@@ -24,17 +29,34 @@ pub struct BenchReport {
 }
 
 impl BenchReport {
+    /// Throughput; 0 (never inf/NaN) for zero-duration or unmeasured
+    /// batches.
     pub fn items_per_sec(&self) -> f64 {
-        if self.mean_ns == 0.0 {
-            0.0
-        } else {
+        if self.mean_ns > 0.0 {
             self.items_per_iter * 1e9 / self.mean_ns
+        } else {
+            0.0
         }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("median_ns", Json::Num(self.median_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("rel_std", Json::Num(self.rel_std)),
+            ("items_per_iter", Json::Num(self.items_per_iter)),
+            ("items_per_sec", Json::Num(self.items_per_sec())),
+        ])
     }
 }
 
 fn fmt_ns(ns: f64) -> String {
-    if ns < 1e3 {
+    if !ns.is_finite() {
+        format!("{ns}")
+    } else if ns < 1e3 {
         format!("{ns:.1} ns")
     } else if ns < 1e6 {
         format!("{:.2} µs", ns / 1e3)
@@ -89,9 +111,12 @@ impl Bencher {
             f();
             warm_iters += 1;
         }
-        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        // Floor the estimate: a zero warmup budget (or a sub-ns case)
+        // would otherwise divide the batch size by zero.
+        let per_iter = (self.warmup.as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
         let batch =
-            ((self.budget.as_secs_f64() / self.min_batches as f64 / per_iter).ceil() as u64)
+            ((self.budget.as_secs_f64() / self.min_batches.max(1) as f64 / per_iter).ceil()
+                as u64)
                 .max(1);
 
         let mut samples_ns: Vec<f64> = Vec::new();
@@ -116,7 +141,13 @@ impl Bencher {
             mean_ns: mean,
             median_ns: stats::median(&samples_ns),
             p95_ns: stats::percentile(&samples_ns, 95.0),
-            rel_std: if mean > 0.0 { stats::std_dev(&samples_ns) / mean } else { 0.0 },
+            // std_dev of < 2 samples is meaningless (and its n-1 divisor
+            // undefined); report a clean 0 instead.
+            rel_std: if samples_ns.len() >= 2 && mean > 0.0 {
+                stats::std_dev(&samples_ns) / mean
+            } else {
+                0.0
+            },
             items_per_iter: items,
         };
         println!(
@@ -144,6 +175,101 @@ impl Bencher {
     pub fn finish(&self) {
         println!("—— {} benchmarks complete ——", self.reports.len());
     }
+}
+
+/// One timed fleet-sweep point inside a [`BenchSuite`] (end-to-end wall
+/// time, not a micro-bench: the interesting figure is simulated
+/// requests routed per wall-clock second).
+#[derive(Debug, Clone)]
+pub struct SweepTiming {
+    /// Sweep-point label, e.g. `"fleet/dwdp4 rate=40"`.
+    pub label: String,
+    /// Wall-clock seconds for the point.
+    pub wall_seconds: f64,
+    /// Requests the simulated fleet processed (offered load).
+    pub requests: usize,
+}
+
+impl SweepTiming {
+    /// Simulated requests per wall-clock second; 0 for a zero-duration
+    /// point.
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.requests as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("requests_per_sec", Json::Num(self.requests_per_sec())),
+        ])
+    }
+}
+
+/// A named collection of bench reports and sweep timings — the unit the
+/// perf trajectory records, one `BENCH_<name>.json` per suite.
+#[derive(Debug, Clone, Default)]
+pub struct BenchSuite {
+    pub name: String,
+    /// Total wall-clock seconds for the whole suite.
+    pub wall_seconds: f64,
+    pub reports: Vec<BenchReport>,
+    pub sweep: Vec<SweepTiming>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        BenchSuite { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Record one timed sweep point.
+    pub fn sweep_point(&mut self, label: &str, wall_seconds: f64, requests: usize) {
+        self.sweep.push(SweepTiming { label: label.to_string(), wall_seconds, requests });
+    }
+
+    /// The `BENCH_<name>.json` schema (validated by CI's bench smoke):
+    /// `{name, wall_seconds, benches: [{name, iters, mean_ns, median_ns,
+    /// p95_ns, rel_std, items_per_iter, items_per_sec}], sweep: [{label,
+    /// wall_seconds, requests, requests_per_sec}]}`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("benches", Json::Arr(self.reports.iter().map(|r| r.to_json()).collect())),
+            ("sweep", Json::Arr(self.sweep.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` under `dir` and return the path.
+    pub fn write(&self, dir: &str) -> std::io::Result<String> {
+        let path = format!("{}/BENCH_{}.json", dir.trim_end_matches('/'), self.name);
+        std::fs::write(&path, self.to_json().dump())?;
+        Ok(path)
+    }
+}
+
+/// The shared `cargo bench` entry point: run `f`'s cases on a fresh
+/// [`Bencher`], print the footer, and emit `BENCH_<name>.json` into the
+/// working directory (the workspace root under `cargo bench`).  Returns
+/// the suite so callers can post-process.
+pub fn run_suite(name: &str, f: impl FnOnce(&mut Bencher)) -> BenchSuite {
+    let t0 = Instant::now();
+    let mut b = Bencher::new();
+    f(&mut b);
+    b.finish();
+    let mut suite = BenchSuite::new(name);
+    suite.wall_seconds = t0.elapsed().as_secs_f64();
+    suite.reports = b.reports().to_vec();
+    match suite.write(".") {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("bench: could not write BENCH_{name}.json: {e}"),
+    }
+    suite
 }
 
 #[cfg(test)]
@@ -183,5 +309,67 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(2.0e9).contains(" s"));
+        assert_eq!(fmt_ns(f64::NAN), "NaN");
+    }
+
+    #[test]
+    fn zero_duration_and_single_sample_edges_stay_finite() {
+        let r = BenchReport {
+            name: "degenerate".into(),
+            iters: 1,
+            mean_ns: 0.0,
+            median_ns: 0.0,
+            p95_ns: 0.0,
+            rel_std: 0.0,
+            items_per_iter: 1000.0,
+        };
+        assert_eq!(r.items_per_sec(), 0.0, "zero-duration must not be inf");
+        let nan = BenchReport { mean_ns: f64::NAN, ..r };
+        assert_eq!(nan.items_per_sec(), 0.0);
+
+        // A zero warmup/budget bencher must neither hang (batch-size
+        // division by zero) nor report a NaN rel_std from one sample.
+        let mut b = Bencher::new();
+        b.warmup = Duration::ZERO;
+        b.budget = Duration::ZERO;
+        b.min_batches = 1;
+        let rep = b.bench("one-shot", || std::hint::black_box(1 + 1)).clone();
+        assert!(rep.rel_std.is_finite());
+        assert_eq!(rep.rel_std, 0.0);
+        assert!(rep.iters >= 1);
+    }
+
+    #[test]
+    fn suite_json_schema_round_trips() {
+        std::env::set_var("DWDP_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.bench("noop", || std::hint::black_box(0u64));
+        let mut suite = BenchSuite::new("unit");
+        suite.wall_seconds = 0.25;
+        suite.reports = b.reports().to_vec();
+        suite.sweep_point("fleet/x rate=10", 0.5, 100);
+        let parsed = crate::util::Json::parse(&suite.to_json().dump()).unwrap();
+        assert_eq!(parsed.get("name").as_str(), Some("unit"));
+        let benches = parsed.get("benches").as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        for key in
+            ["name", "iters", "mean_ns", "median_ns", "p95_ns", "rel_std", "items_per_sec"]
+        {
+            assert_ne!(benches[0].get(key), &crate::util::Json::Null, "missing {key}");
+        }
+        let sweep = parsed.get("sweep").as_arr().unwrap();
+        assert!((sweep[0].get("requests_per_sec").as_f64().unwrap() - 200.0).abs() < 1e-9);
+
+        let dir = std::env::temp_dir();
+        let path = suite.write(dir.to_str().unwrap()).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        assert!(crate::util::Json::parse(&std::fs::read_to_string(&path).unwrap()).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn zero_wall_sweep_point_reports_zero_rate() {
+        let s = SweepTiming { label: "x".into(), wall_seconds: 0.0, requests: 10 };
+        assert_eq!(s.requests_per_sec(), 0.0);
     }
 }

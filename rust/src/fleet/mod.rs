@@ -91,6 +91,7 @@ pub use topology::{LinkTier, RackTopology};
 use crate::config::{HardwareConfig, ParallelMode};
 use crate::coordinator::{GenModel, GroupLatencyModel, PrefillOffsets};
 use crate::metrics::{LatencyDigest, RequestRecord, ServingMetrics, Slo};
+use crate::obs::{EventLog, FleetEvent, FleetEventSink, GroupPhase, NoopSink};
 use crate::placement::{self, ExpertPlacement};
 use crate::serving::{ScenarioKind, ScenarioSpec};
 use crate::util::Rng;
@@ -461,6 +462,39 @@ impl FleetFailures {
         state
     }
 
+    /// Replay every group's lifecycle transitions up to `horizon` into the
+    /// sink (its *own* failure domain's windows — under DEP coupling the
+    /// effective stall is the union, which `state`/`serving_resume` apply;
+    /// the emitted transitions record which domain actually lost power).
+    /// Materializes windows lazily like the simulation itself; each
+    /// stream's RNG is private, so this cannot perturb results.
+    fn emit_group_states(
+        &mut self,
+        n_groups: usize,
+        horizon: f64,
+        sink: &mut dyn FleetEventSink,
+    ) {
+        if !sink.enabled() || !horizon.is_finite() {
+            return;
+        }
+        for g in 0..n_groups {
+            let stream = &mut self.streams[self.domain_of[g]];
+            stream.ensure(horizon);
+            for &(down, repaired, serving) in &stream.windows {
+                if down > horizon {
+                    break;
+                }
+                sink.emit(FleetEvent::GroupState { group: g, t: down, phase: GroupPhase::Down });
+                sink.emit(FleetEvent::GroupState {
+                    group: g,
+                    t: repaired,
+                    phase: GroupPhase::Recovering,
+                });
+                sink.emit(FleetEvent::GroupState { group: g, t: serving, phase: GroupPhase::Up });
+            }
+        }
+    }
+
     /// Seconds in `[0, horizon)` during which group `g` is not serving.
     fn downtime(&mut self, g: usize, horizon: f64) -> f64 {
         let mut t = 0.0;
@@ -696,10 +730,14 @@ impl GroupSim {
         first_token: &mut [f64],
         mut failures: Option<&mut FleetFailures>,
         spills: &mut Vec<Spill>,
+        sink: &mut dyn FleetEventSink,
     ) {
         loop {
             let Some(&head) = self.pending.front() else { break };
             let mut start = self.free_at.max(ready[head]);
+            // Pre-warm-up start, kept so each batch member's share of a
+            // recovery warm-up can be attributed (`FleetEvent::WarmupWait`).
+            let warm_from = start;
             if let Some(f) = failures.as_deref_mut() {
                 if let Some(resume) = f.serving_resume(g, start) {
                     // The group is down (or warming up) at the would-be
@@ -740,6 +778,20 @@ impl GroupSim {
             for &off in &offsets {
                 end = end.max(start + off);
             }
+            if sink.enabled() {
+                // The batch left the queue and entered prefill; each
+                // member's warm-up share is the overlap of the recovery
+                // warm-up with its own wait (members admitted mid-warm-up
+                // waited less of it).
+                for &i in &batch {
+                    sink.emit(FleetEvent::QueueLeave { id: i, t: start, group: g });
+                    let w = start - warm_from.max(ready[i]);
+                    if w > 0.0 {
+                        sink.emit(FleetEvent::WarmupWait { id: i, t: start, group: g, seconds: w });
+                    }
+                    sink.emit(FleetEvent::PrefillStart { id: i, t: start, group: g });
+                }
+            }
             if let Some(f) = failures.as_deref_mut() {
                 let kill_at = f.next_down_after(g, start);
                 if kill_at < end {
@@ -749,6 +801,11 @@ impl GroupSim {
                     // re-placement observation/fetch accounting with it.
                     if let Some(d) = self.dynamic.as_mut() {
                         d.revert_batch();
+                    }
+                    if sink.enabled() {
+                        for &i in &batch {
+                            sink.emit(FleetEvent::Kill { id: i, t: kill_at, group: g });
+                        }
                     }
                     for &i in &batch {
                         spills.push(Spill { idx: i, at: kill_at });
@@ -760,6 +817,9 @@ impl GroupSim {
             }
             for (&i, &off) in batch.iter().zip(&offsets) {
                 first_token[i] = start + off;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::PrefillEnd { id: i, t: start + off, group: g });
+                }
             }
             let observed = (end - start).max(1e-9) / tokens.max(1) as f64;
             self.spt = if self.spt == 0.0 { observed } else { 0.7 * self.spt + 0.3 * observed };
@@ -768,7 +828,13 @@ impl GroupSim {
                 // Weight migration is charged to the epoch boundary: the
                 // group cannot start its next batch until the slowest
                 // rank's pulls complete.
-                self.free_at += d.on_batch_done(batch.len());
+                let epochs_before = d.replacements;
+                let stall = d.on_batch_done(batch.len());
+                self.free_at += stall;
+                if sink.enabled() && d.replacements > epochs_before {
+                    sink.emit(FleetEvent::PlacementEpoch { group: g, t: end });
+                    sink.emit(FleetEvent::Migration { group: g, t: end, seconds: stall });
+                }
             }
             self.busy_tokens = tokens;
             self.served.extend_from_slice(&batch);
@@ -818,6 +884,7 @@ fn route_request(
     // session follow-up whose KV prefix is resident somewhere; `None`
     // open-loop and for session openings.
     affinity: Option<(usize, f64)>,
+    sink: &mut dyn FleetEventSink,
 ) -> RouteDecision {
     let r = &requests[idx];
     let bytes = r.isl as f64 * bytes_per_token;
@@ -844,13 +911,48 @@ fn route_request(
             l
         })
         .collect();
-    let decision = router.route(&loads, &ctx);
+    // The explained route IS the route call (it delegates exactly once),
+    // so stateful policies advance identically with or without a sink and
+    // the decision floats are untouched.
+    let decision = if sink.enabled() {
+        let ex = router.route_explained(&loads, &ctx);
+        let chosen = match ex.decision {
+            RouteDecision::Admit(g) => Some(g),
+            _ => None,
+        };
+        sink.emit(FleetEvent::RouteDecision {
+            id: idx,
+            t: now,
+            policy: router.policy().name(),
+            chosen,
+            reason: ex.reason,
+            candidates: ex.candidates,
+        });
+        ex.decision
+    } else {
+        router.route(&loads, &ctx)
+    };
     if let RouteDecision::Admit(g) = decision {
+        if sink.enabled() {
+            sink.emit(FleetEvent::QueueEnter { id: idx, t: now, group: g });
+        }
         let topo = router.topology();
         if topo.is_tiered() && topo.rack_of(g) != ctx.home_rack {
             xr.requests += 1;
             xr.bytes += bytes;
             ready[idx] = now + topo.inter_rack_seconds(bytes);
+            if sink.enabled() {
+                // The matching `CrossRackEnd` is emitted by the caller once
+                // every charge to the ready clock (the session path can add
+                // a KV migration) has landed — one transfer span per
+                // routing attempt.
+                sink.emit(FleetEvent::CrossRackStart {
+                    id: idx,
+                    t: now,
+                    rack: topo.rack_of(g),
+                    bytes,
+                });
+            }
         }
         // Keep the queue sorted by ready time (stable on ties, so equal
         // ready times preserve admission order).  Only a cross-rack
@@ -894,6 +996,7 @@ fn process_spills(
     router: &mut ClusterRouter,
     bytes_per_token: f64,
     xr: &mut CrossRack,
+    sink: &mut dyn FleetEventSink,
 ) {
     spills.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.idx.cmp(&b.idx)));
     let requeue = match failures {
@@ -906,7 +1009,13 @@ fn process_spills(
         if !requeue || ledger.respills[s.idx] > MAX_RESPILLS {
             ledger.failed += 1;
             ledger.failed_tokens += isl;
+            if sink.enabled() {
+                sink.emit(FleetEvent::Failed { id: s.idx, t: s.at });
+            }
             continue;
+        }
+        if sink.enabled() {
+            sink.emit(FleetEvent::Requeue { id: s.idx, t: s.at });
         }
         // A cross-rack re-admission pushes the ready time past the spill
         // instant by the inter-rack transfer (route_request overwrites).
@@ -922,11 +1031,22 @@ fn process_spills(
             &mut ledger.ready,
             xr,
             None,
+            sink,
         ) {
-            RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
+            RouteDecision::Admit(_) => {
+                ledger.requeued_mask[s.idx] = true;
+                if sink.enabled() && ledger.ready[s.idx] > s.at {
+                    sink.emit(FleetEvent::CrossRackEnd { id: s.idx, t: ledger.ready[s.idx] });
+                }
+            }
             RouteDecision::Shed | RouteDecision::Failed => {
                 ledger.failed += 1;
                 ledger.failed_tokens += isl;
+                // Both verdicts are accounted as *failed* on the re-queue
+                // path (the kill, not a policy choice, doomed the request).
+                if sink.enabled() {
+                    sink.emit(FleetEvent::Failed { id: s.idx, t: s.at });
+                }
             }
         }
     }
@@ -993,10 +1113,23 @@ fn decode_group(
 /// which is what makes the parallel [`sweep`] driver's output independent
 /// of thread count.
 pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<FleetOutcome, String> {
+    simulate_with_sink(spec, prefill, &mut NoopSink)
+}
+
+/// [`simulate`] with an attached [`FleetEventSink`] receiving the full
+/// request-lifecycle event stream (see [`crate::obs`]).  With a
+/// [`NoopSink`] this *is* [`simulate`]: every emission site is gated on
+/// `sink.enabled()`, no event is constructed, and the outcome is
+/// bit-identical — the sink-on/off fingerprint property pins it.
+pub fn simulate_with_sink(
+    spec: &ScenarioSpec,
+    prefill: &dyn PrefillOffsets,
+    sink: &mut dyn FleetEventSink,
+) -> Result<FleetOutcome, String> {
     if spec.serving.sessions {
         // The closed-loop event sweep; the open-loop path below stays
         // untouched so pre-session results are bit-identical.
-        return simulate_sessions(spec, prefill);
+        return simulate_sessions(spec, prefill, sink);
     }
     let ScenarioKind::Fleet { n_groups, policy, slo, .. } = &spec.kind else {
         return Err("not a fleet scenario".into());
@@ -1065,6 +1198,7 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
                 &mut first_token,
                 failures.as_mut(),
                 &mut spills,
+                sink,
             );
         }
         if !spills.is_empty() {
@@ -1086,8 +1220,18 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
                     &mut router,
                     bytes_per_token,
                     &mut xr,
+                    sink,
                 );
             }
+        }
+        if sink.enabled() {
+            sink.emit(FleetEvent::Arrival {
+                id: i,
+                t: r.arrival,
+                isl: r.isl,
+                osl: r.osl,
+                session: r.session,
+            });
         }
         match route_request(
             i,
@@ -1100,15 +1244,28 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             &mut ledger.ready,
             &mut xr,
             None,
+            sink,
         ) {
-            RouteDecision::Admit(_) => {}
+            RouteDecision::Admit(_) => {
+                // Only a cross-rack admission moves the ready clock past
+                // the arrival; close its transfer span.
+                if sink.enabled() && ledger.ready[i] > r.arrival {
+                    sink.emit(FleetEvent::CrossRackEnd { id: i, t: ledger.ready[i] });
+                }
+            }
             RouteDecision::Shed => {
                 shed += 1;
                 shed_tokens += r.isl;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::Shed { id: i, t: r.arrival });
+                }
             }
             RouteDecision::Failed => {
                 ledger.failed += 1;
                 ledger.failed_tokens += r.isl;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::Failed { id: i, t: r.arrival });
+                }
             }
         }
     }
@@ -1127,6 +1284,7 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
                 &mut first_token,
                 failures.as_mut(),
                 &mut spills,
+                sink,
             );
         }
         if spills.is_empty() {
@@ -1141,16 +1299,23 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             &mut router,
             bytes_per_token,
             &mut xr,
+            sink,
         );
     }
 
     let gen = GenModel::new(&spec.hw, &spec.model, spec.serving.group_size);
     let mut finish = vec![0.0f64; requests.len()];
     let mut completed = vec![false; requests.len()];
-    for g in &groups {
-        decode_group(&gen, &requests, &g.served, &first_token, &mut finish);
-        for &i in &g.served {
+    for (g, gs) in groups.iter().enumerate() {
+        decode_group(&gen, &requests, &gs.served, &first_token, &mut finish);
+        for &i in &gs.served {
             completed[i] = true;
+        }
+        if sink.enabled() {
+            for &i in &gs.served {
+                sink.emit(FleetEvent::DecodeStart { id: i, t: first_token[i], group: g });
+                sink.emit(FleetEvent::DecodeEnd { id: i, t: finish[i], group: g });
+            }
         }
     }
 
@@ -1184,6 +1349,9 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
             _ => 1.0,
         })
         .collect();
+    if let Some(f) = failures.as_mut() {
+        f.emit_group_states(n_groups, horizon, sink);
+    }
     Ok(FleetOutcome {
         slo,
         offered: requests.len(),
@@ -1241,6 +1409,7 @@ fn sync_cache_failures(
     cache: &mut KvPrefixCache,
     synced: &mut [f64],
     t: f64,
+    sink: &mut dyn FleetEventSink,
 ) {
     let Some(f) = failures.as_mut() else { return };
     if !t.is_finite() {
@@ -1253,6 +1422,9 @@ fn sync_cache_failures(
                 break;
             }
             cache.invalidate_group(g);
+            if sink.enabled() {
+                sink.emit(FleetEvent::CacheInvalidate { group: g, t: down });
+            }
             synced[g] = down;
         }
     }
@@ -1292,6 +1464,7 @@ fn route_session(
     kv_bytes_per_token: f64,
     ce_bw: f64,
     kv_transfer_bytes: &mut f64,
+    sink: &mut dyn FleetEventSink,
 ) -> RouteDecision {
     let r = &requests[idx];
     let resident = r.session.filter(|_| r.is_follow_up()).and_then(|s| cache.locate(s));
@@ -1308,9 +1481,22 @@ fn route_session(
         ready,
         xr,
         affinity,
+        sink,
     );
+    // Whether the admission already opened a transfer span (cross-rack
+    // prompt activations); the KV migration below can open one instead,
+    // and either way a single `CrossRackEnd` closes it at the final ready.
+    let mut xfer_open = match decision {
+        RouteDecision::Admit(_) => ready[idx] > now,
+        _ => false,
+    };
     let RouteDecision::Admit(g) = decision else { return decision };
-    let (Some(sid), Some((cg, cached))) = (r.session, resident) else { return decision };
+    let (Some(sid), Some((cg, cached))) = (r.session, resident) else {
+        if xfer_open && sink.enabled() {
+            sink.emit(FleetEvent::CrossRackEnd { id: idx, t: ready[idx] });
+        }
+        return decision;
+    };
     let prefix = cached.min(r.isl);
     if cg == g {
         // Hit: the resident prefix skips re-prefill; only the fresh
@@ -1320,6 +1506,9 @@ fn route_session(
         hit[idx] = true;
         cache.touch(sid);
         groups[g].pending_tokens -= prefix;
+        if sink.enabled() {
+            sink.emit(FleetEvent::PrefixHit { id: idx, t: now, group: g, tokens: prefix });
+        }
     } else if kv_migrate {
         // Re-steered, but the KV prefix ships to the new group instead of
         // being rebuilt: same token savings, paid for in transfer time on
@@ -1332,11 +1521,8 @@ fn route_session(
         let bytes = prefix as f64 * kv_bytes_per_token;
         *kv_transfer_bytes += bytes;
         let topo = router.topology();
-        let secs = if topo.is_tiered() && topo.rack_of(cg) != topo.rack_of(g) {
-            topo.inter_rack_seconds(bytes)
-        } else {
-            bytes / ce_bw
-        };
+        let cross = topo.is_tiered() && topo.rack_of(cg) != topo.rack_of(g);
+        let secs = if cross { topo.inter_rack_seconds(bytes) } else { bytes / ce_bw };
         // The prompt-activation and KV transfers overlap; the slower one
         // gates the batch.  The queue stays ready-ordered.
         let at = (now + secs).max(ready[idx]);
@@ -1344,10 +1530,30 @@ fn route_session(
             ready[idx] = at;
             reposition(&mut groups[g].pending, idx, ready);
         }
+        if sink.enabled() {
+            sink.emit(FleetEvent::KvMigrate { id: idx, t: now, group: g, bytes, seconds: secs });
+            if !xfer_open && cross && ready[idx] > now {
+                // Cross-rack KV-only transfer: admission opened no
+                // prompt-activation span, so the migration opens one.
+                sink.emit(FleetEvent::CrossRackStart {
+                    id: idx,
+                    t: now,
+                    rack: topo.rack_of(g),
+                    bytes,
+                });
+                xfer_open = true;
+            }
+        }
     } else {
         // Re-steered without migration: the new group rebuilds the whole
         // context from scratch, and the stale copy is dropped.
         cache.remove(sid);
+        if sink.enabled() {
+            sink.emit(FleetEvent::PrefixMiss { id: idx, t: now });
+        }
+    }
+    if xfer_open && sink.enabled() {
+        sink.emit(FleetEvent::CrossRackEnd { id: idx, t: ready[idx] });
     }
     decision
 }
@@ -1375,6 +1581,7 @@ fn process_session_spills(
     kv_bytes_per_token: f64,
     ce_bw: f64,
     kv_transfer_bytes: &mut f64,
+    sink: &mut dyn FleetEventSink,
 ) {
     due.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.idx.cmp(&b.idx)));
     let requeue = failures.as_ref().is_some_and(|f| f.requeue);
@@ -1387,10 +1594,16 @@ fn process_session_spills(
         if !requeue || ledger.respills[s.idx] > MAX_RESPILLS {
             ledger.failed += 1;
             ledger.failed_tokens += isl;
+            if sink.enabled() {
+                sink.emit(FleetEvent::Failed { id: s.idx, t: s.at });
+            }
             continue;
         }
-        sync_cache_failures(failures, cache, synced, s.at);
+        sync_cache_failures(failures, cache, synced, s.at, sink);
         ledger.ready[s.idx] = s.at;
+        if sink.enabled() {
+            sink.emit(FleetEvent::Requeue { id: s.idx, t: s.at });
+        }
         match route_session(
             s.idx,
             s.at,
@@ -1409,11 +1622,15 @@ fn process_session_spills(
             kv_bytes_per_token,
             ce_bw,
             kv_transfer_bytes,
+            sink,
         ) {
             RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
             RouteDecision::Shed | RouteDecision::Failed => {
                 ledger.failed += 1;
                 ledger.failed_tokens += isl;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::Failed { id: s.idx, t: s.at });
+                }
             }
         }
     }
@@ -1429,6 +1646,7 @@ fn process_session_spills(
 fn simulate_sessions(
     spec: &ScenarioSpec,
     prefill: &dyn PrefillOffsets,
+    sink: &mut dyn FleetEventSink,
 ) -> Result<FleetOutcome, String> {
     use std::cmp::Reverse;
     use std::collections::BinaryHeap;
@@ -1524,6 +1742,7 @@ fn simulate_sessions(
                 &mut first_token,
                 failures.as_mut(),
                 &mut spills,
+                sink,
             );
         }
         // Harvest turns served since the last look: install the session's
@@ -1561,7 +1780,7 @@ fn simulate_sessions(
             // before the next opening): re-resolve the earliest event.
             continue;
         }
-        sync_cache_failures(&mut failures, &mut cache, &mut synced, now);
+        sync_cache_failures(&mut failures, &mut cache, &mut synced, now, sink);
         let mut processed_spills = false;
         if !spills.is_empty() {
             // Mirror the open-loop sweep: only spills whose failure
@@ -1589,6 +1808,7 @@ fn simulate_sessions(
                     kv_bytes_per_token,
                     spec.hw.ce_bw,
                     &mut kv_transfer_bytes,
+                    sink,
                 );
             }
         }
@@ -1601,6 +1821,16 @@ fn simulate_sessions(
             continue;
         };
         let at = requests[i].arrival;
+        if sink.enabled() {
+            let r = &requests[i];
+            sink.emit(FleetEvent::Arrival {
+                id: i,
+                t: at,
+                isl: r.isl,
+                osl: r.osl,
+                session: r.session,
+            });
+        }
         match route_session(
             i,
             at,
@@ -1619,25 +1849,36 @@ fn simulate_sessions(
             kv_bytes_per_token,
             spec.hw.ce_bw,
             &mut kv_transfer_bytes,
+            sink,
         ) {
             RouteDecision::Admit(_) => {}
             RouteDecision::Shed => {
                 shed += 1;
                 shed_tokens += requests[i].isl;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::Shed { id: i, t: at });
+                }
             }
             RouteDecision::Failed => {
                 ledger.failed += 1;
                 ledger.failed_tokens += requests[i].isl;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::Failed { id: i, t: at });
+                }
             }
         }
     }
 
     let mut finish = vec![0.0f64; requests.len()];
     let mut completed = vec![false; requests.len()];
-    for g in &groups {
-        decode_group(&gen_est, &requests, &g.served, &first_token, &mut finish);
-        for &i in &g.served {
+    for (g, gs) in groups.iter().enumerate() {
+        decode_group(&gen_est, &requests, &gs.served, &first_token, &mut finish);
+        for &i in &gs.served {
             completed[i] = true;
+            if sink.enabled() {
+                sink.emit(FleetEvent::DecodeStart { id: i, t: first_token[i], group: g });
+                sink.emit(FleetEvent::DecodeEnd { id: i, t: finish[i], group: g });
+            }
         }
     }
 
@@ -1680,6 +1921,9 @@ fn simulate_sessions(
             _ => 1.0,
         })
         .collect();
+    if let Some(f) = failures.as_mut() {
+        f.emit_group_states(n_groups, horizon, sink);
+    }
     Ok(FleetOutcome {
         slo,
         offered: requests.len(),
@@ -1728,6 +1972,18 @@ fn simulate_sessions(
 pub fn simulate_analytic(spec: &ScenarioSpec) -> Result<FleetOutcome, String> {
     let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
     simulate(spec, &lm)
+}
+
+/// [`simulate_analytic`] with a recording [`EventLog`] attached: the same
+/// outcome (bit-for-bit — property-tested) plus the full per-request
+/// lifecycle stream for waterfall attribution and fleet traces.
+pub fn simulate_analytic_logged(
+    spec: &ScenarioSpec,
+) -> Result<(FleetOutcome, EventLog), String> {
+    let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+    let mut log = EventLog::new();
+    let outcome = simulate_with_sink(spec, &lm, &mut log)?;
+    Ok((outcome, log))
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@
 //! its rack-blind behavior.
 
 use super::topology::RackTopology;
+use crate::obs::RouteCandidate;
 
 /// Cluster routing policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -334,6 +335,109 @@ impl ClusterRouter {
             }
         }
     }
+
+    /// Like [`Self::route`], but also returns the policy's reason and the
+    /// full candidate table (every group's predicted and effective wait,
+    /// rejected ones included) for the observability layer.
+    ///
+    /// This *is* the route call — it delegates to [`Self::route`] exactly
+    /// once, so stateful policies (the round-robin cursor) advance exactly
+    /// as they would un-explained, and the decision is bit-identical.  The
+    /// explanation is reconstructed afterwards from the same pure wait
+    /// helpers the placement used.
+    pub fn route_explained(&mut self, loads: &[GroupLoad], ctx: &RouteCtx) -> RouteExplain {
+        let decision = self.route(loads, ctx);
+        let chosen = match decision {
+            RouteDecision::Admit(g) => Some(g),
+            _ => None,
+        };
+        let affinity_credit = matches!(self.policy, ClusterPolicy::PrefixAffinity);
+        let candidates: Vec<RouteCandidate> = loads
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut w = self.effective_wait(i, loads, ctx);
+                if affinity_credit && ctx.affinity == Some(i) {
+                    w -= ctx.affinity_bonus;
+                }
+                RouteCandidate {
+                    group: i,
+                    predicted_wait: l.predicted_wait,
+                    effective_wait: w,
+                    up: l.up,
+                    chosen: Some(i) == chosen,
+                }
+            })
+            .collect();
+        let reason = match (decision, self.policy) {
+            (RouteDecision::Failed, _) => "no serving group (fleet-wide outage)".to_string(),
+            (RouteDecision::Shed, ClusterPolicy::SloAdmission { max_wait }) => {
+                match candidates
+                    .iter()
+                    .filter(|c| c.up && c.predicted_wait.is_finite())
+                    .map(|c| c.effective_wait)
+                    .min_by(f64::total_cmp)
+                {
+                    Some(best) => format!(
+                        "best effective wait {best:.4}s exceeds admission bound {max_wait:.4}s"
+                    ),
+                    None => "every serving group reports a non-finite wait".to_string(),
+                }
+            }
+            (RouteDecision::Shed, _) => {
+                "every serving group reports a non-finite wait".to_string()
+            }
+            (RouteDecision::Admit(g), ClusterPolicy::RoundRobin) => {
+                format!("round-robin cursor landed on group {g}")
+            }
+            (RouteDecision::Admit(g), ClusterPolicy::LeastOutstandingTokens) => format!(
+                "fewest outstanding tokens ({})",
+                loads[g].outstanding_tokens
+            ),
+            (RouteDecision::Admit(g), ClusterPolicy::SloAdmission { max_wait }) => format!(
+                "best effective wait {:.4}s within admission bound {max_wait:.4}s",
+                candidates[g].effective_wait
+            ),
+            (RouteDecision::Admit(g), ClusterPolicy::RackLocalFirst) => format!(
+                "least effective wait {:.4}s (home rack {}, group rack {})",
+                candidates[g].effective_wait,
+                ctx.home_rack,
+                self.topo.rack_of(g)
+            ),
+            (RouteDecision::Admit(g), ClusterPolicy::PrefixAffinity) => {
+                if ctx.affinity == Some(g) {
+                    format!(
+                        "sticky: resident prefix credits {:.4}s against group {g}'s wait",
+                        ctx.affinity_bonus
+                    )
+                } else if ctx.affinity.is_some() {
+                    format!(
+                        "affinity spill: group {g}'s wait beats the cache holder even after its credit"
+                    )
+                } else {
+                    format!(
+                        "no resident prefix; least effective wait {:.4}s",
+                        candidates[g].effective_wait
+                    )
+                }
+            }
+        };
+        RouteExplain { decision, reason, candidates }
+    }
+}
+
+/// A routing verdict plus the evidence behind it: the policy's reason and
+/// every candidate's waits, as captured by
+/// [`ClusterRouter::route_explained`] for the
+/// [`crate::obs::FleetEvent::RouteDecision`] event.
+#[derive(Debug, Clone)]
+pub struct RouteExplain {
+    /// The verdict, identical to what [`ClusterRouter::route`] returns.
+    pub decision: RouteDecision,
+    /// Human-readable policy rationale.
+    pub reason: String,
+    /// Every group's waits at the decision instant (chosen one flagged).
+    pub candidates: Vec<RouteCandidate>,
 }
 
 #[cfg(test)]
@@ -459,10 +563,8 @@ mod tests {
         let mut dead_home = loads(&[0, 0, 3, 1]);
         dead_home[0].up = false;
         dead_home[1].up = false;
-        assert_eq!(
-            r.route(&dead_home, &RouteCtx { home_rack: 0, cross_penalty: 10.0, ..RouteCtx::flat() }),
-            RouteDecision::Admit(3)
-        );
+        let ctx = RouteCtx { home_rack: 0, cross_penalty: 10.0, ..RouteCtx::flat() };
+        assert_eq!(r.route(&dead_home, &ctx), RouteDecision::Admit(3));
     }
 
     #[test]
@@ -587,5 +689,54 @@ mod tests {
         assert!(ClusterPolicy::SloAdmission { max_wait: 0.0 }.validate().is_err());
         assert!(ClusterPolicy::SloAdmission { max_wait: 1.0 }.validate().is_ok());
         assert!(ClusterPolicy::RackLocalFirst.validate().is_ok());
+    }
+
+    /// `route_explained` must advance stateful policies exactly once per
+    /// call (it IS the route call), flag the chosen candidate, and expose
+    /// every rejected group's waits.
+    #[test]
+    fn route_explained_matches_route_and_exposes_candidates() {
+        let l = loads(&[100, 0, 50]);
+        let ctx = RouteCtx::flat();
+
+        // Round-robin cursor: explained calls rotate like plain ones.
+        let mut r = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
+        let seq: Vec<RouteDecision> =
+            (0..4).map(|_| r.route_explained(&l, &ctx).decision).collect();
+        let mut plain = ClusterRouter::new(3, ClusterPolicy::RoundRobin);
+        let want: Vec<RouteDecision> = (0..4).map(|_| plain.route(&l, &ctx)).collect();
+        assert_eq!(seq, want);
+
+        // Candidate table: all groups present, exactly the winner flagged,
+        // rejected candidates carry their predicted waits.
+        let mut r = ClusterRouter::new(3, ClusterPolicy::LeastOutstandingTokens);
+        let ex = r.route_explained(&l, &ctx);
+        assert_eq!(ex.decision, RouteDecision::Admit(1));
+        assert_eq!(ex.candidates.len(), 3);
+        assert_eq!(ex.candidates.iter().filter(|c| c.chosen).count(), 1);
+        assert!(ex.candidates[1].chosen);
+        assert_eq!(ex.candidates[0].predicted_wait, 0.1);
+        assert!(ex.reason.contains("outstanding"));
+
+        // Shed carries the bound-violation rationale.
+        let mut r = ClusterRouter::new(3, ClusterPolicy::SloAdmission { max_wait: 1e-4 });
+        let ex = r.route_explained(&l, &ctx);
+        assert_eq!(ex.decision, RouteDecision::Shed);
+        assert!(ex.reason.contains("admission bound"));
+
+        // Affinity credit shows up in the sticky group's effective wait.
+        let topo = two_racks_of_two();
+        let mut r = ClusterRouter::with_topology(ClusterPolicy::PrefixAffinity, topo);
+        let l4 = loads(&[10, 10, 10, 10]);
+        let ctx = RouteCtx {
+            home_rack: 0,
+            cross_penalty: 0.5,
+            affinity: Some(3),
+            affinity_bonus: 2.0,
+        };
+        let ex = r.route_explained(&l4, &ctx);
+        assert_eq!(ex.decision, RouteDecision::Admit(3));
+        assert!(ex.candidates[3].effective_wait < ex.candidates[0].effective_wait);
+        assert!(ex.reason.contains("sticky"));
     }
 }

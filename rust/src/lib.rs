@@ -78,6 +78,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod placement;
 pub mod roofline;
 #[cfg(feature = "pjrt")]

@@ -7,20 +7,28 @@
 //! requested fidelity, and `fleet` drives the cluster-level simulator
 //! (`dwdp::fleet`) under open-loop arrivals, optionally sweeping DWDP and
 //! DEP in parallel.  `--json` exports any run's report/table through
-//! `util::json`.  Run `dwdp-repro help` for the usage screen (generated
-//! from the registry, so it always matches the scenarios that exist).
+//! `util::json`; `fleet --trace OUT.json` exports a fleet-level Perfetto
+//! trace from the recorded event log, and `bench` emits a
+//! `BENCH_<name>.json` smoke suite.  Run `dwdp-repro help` for the usage
+//! screen (generated from the registry, so it always matches the
+//! scenarios that exist).
 //!
 //! (Argument parsing is hand-rolled: the offline build environment carries
 //! no clap.)
 
 use std::collections::HashMap;
+use std::time::Instant;
 
+use dwdp::bench::{BenchSuite, Bencher};
 use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::contention::contention_distribution;
+use dwdp::coordinator::GroupLatencyModel;
 use dwdp::experiments::{self, calib};
 use dwdp::fleet::{available_threads, fleet_workload, run_sweep, ClusterPolicy, SweepPoint};
+use dwdp::placement::ExpertPlacement;
 use dwdp::serving::registry::{self, RunArtifact};
-use dwdp::serving::{Fidelity, RunReport, ServingStack};
+use dwdp::serving::{run_fleet_analytic_logged, Fidelity, RunReport, ServingStack};
+use dwdp::trace::fleet_trace;
 use dwdp::util::table::Table;
 use dwdp::util::Json;
 use dwdp::workload::{ArrivalProcess, WorkloadTrace};
@@ -46,6 +54,7 @@ fn run(args: &[String]) -> i32 {
         "contention" => contention(&flags),
         "serve" => serve(&flags),
         "fleet" => fleet_cmd(&flags),
+        "bench" => bench_cmd(&flags),
         "info" => {
             info();
             0
@@ -275,7 +284,7 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
     let max_wait: f64 = flags.get("max-wait").and_then(|s| s.parse().ok()).unwrap_or(1.0);
     let seconds: Option<f64> = flags.get("seconds").and_then(|s| s.parse().ok());
 
-    let arrival = if let Some(path) = flags.get("trace") {
+    let arrival = if let Some(path) = flags.get("replay") {
         match WorkloadTrace::read_file(path) {
             Ok(trace) => ArrivalProcess::Replay { trace },
             Err(e) => {
@@ -443,7 +452,116 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
             return 1;
         }
     }
+    // `--trace OUT.json`: re-run the first sweep point with a recording
+    // event sink and export the fleet-level Perfetto trace (one track per
+    // group plus a spine track per rack).  Always analytic fidelity — the
+    // event log is a property of the simulation path, not the backend.
+    if let Some(path) = flags.get("trace") {
+        match run_fleet_analytic_logged(&points[0].spec) {
+            Ok((_, log)) => {
+                if let Err(e) = fleet_trace(&log).write_chrome_trace(path) {
+                    eprintln!("write {path}: {e}");
+                    return 1;
+                }
+                eprintln!("fleet trace: {path} (open in ui.perfetto.dev)");
+            }
+            Err(e) => {
+                eprintln!("fleet trace error: {e}");
+                return 1;
+            }
+        }
+    }
     0
+}
+
+/// `dwdp-repro bench` — a fast, deterministic-workload bench smoke: a few
+/// hot-path micro-benches plus timed fleet sweep points, exported as
+/// `BENCH_<name>.json` (the same schema `cargo bench` suites emit).  CI
+/// runs this to keep the perf-artifact plumbing honest without paying for
+/// the full bench suites.
+fn bench_cmd(flags: &HashMap<String, String>) -> i32 {
+    let name = flags.get("name").cloned().unwrap_or_else(|| "smoke".to_string());
+    std::env::set_var("DWDP_QUICK", "1");
+    std::env::set_var("DWDP_BENCH_QUICK", "1");
+    let t0 = Instant::now();
+
+    let mut b = Bencher::new();
+    b.bench("smoke/contention_distribution_g8", || contention_distribution(8));
+    b.bench("smoke/placement_build_256exp_g4", || ExpertPlacement::minimal(256, 4));
+    let ctx_spec = match calib::context_scenario(ParallelMode::Dwdp, 4).build() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let lm = GroupLatencyModel::new(&ctx_spec.hw, &ctx_spec.model, &ctx_spec.serving);
+    b.bench("smoke/latency_model_prefill_batch4", || {
+        lm.prefill_offsets(&[8192, 7200, 6800, 6600])
+    });
+    b.finish();
+
+    let mut suite = BenchSuite::new(&name);
+    suite.reports = b.reports().to_vec();
+    let sweeps = [
+        (
+            "fleet/dwdp4_poisson",
+            experiments::fleet::fleet_scenario(ParallelMode::Dwdp, 4)
+                .group(4)
+                .requests(48)
+                .rate(20.0)
+                .seed(7),
+        ),
+        (
+            "fleet/dwdp4_sessions",
+            experiments::fleet::fleet_scenario(ParallelMode::Dwdp, 4)
+                .group(4)
+                .requests(48)
+                .rate(20.0)
+                .seed(7)
+                .sessions(true)
+                .session_turns(3),
+        ),
+        (
+            "fleet/dwdp8_racks2",
+            experiments::fleet::fleet_scenario(ParallelMode::Dwdp, 8)
+                .group(4)
+                .requests(48)
+                .rate(20.0)
+                .seed(7)
+                .racks(2),
+        ),
+    ];
+    for (label, scn) in sweeps {
+        let spec = match scn.build() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("config error ({label}): {e}");
+                return 2;
+            }
+        };
+        let t = Instant::now();
+        match ServingStack::new(spec, Fidelity::Analytic).run() {
+            Ok(report) => {
+                suite.sweep_point(label, t.elapsed().as_secs_f64(), report.offered);
+            }
+            Err(e) => {
+                eprintln!("bench sweep {label}: {e}");
+                return 1;
+            }
+        }
+    }
+    suite.wall_seconds = t0.elapsed().as_secs_f64();
+    match suite.write(".") {
+        Ok(path) => {
+            eprintln!("wrote {path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("bench: could not write BENCH_{name}.json: {e}");
+            1
+        }
+    }
 }
 
 fn report_table(r: &RunReport) -> Table {

@@ -194,6 +194,55 @@ impl LatencyDigest {
             stats::percentile_sorted(&v, 99.0),
         )
     }
+
+    /// Extreme-tail percentile (p99.9) — fleet tails under churn routinely
+    /// hide an order of magnitude between p99 and p99.9.
+    pub fn p999(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        stats::percentile_sorted(&v, 99.9)
+    }
+
+    /// Fixed log-spaced histogram bucket bounds, seconds: 1 ms to ~33.6 s
+    /// in ×2 steps.  Fixed (not data-dependent) so histograms from
+    /// different runs/PRs overlay directly.
+    pub const BUCKET_BOUNDS: [f64; 16] = [
+        0.001, 0.002, 0.004, 0.008, 0.016, 0.032, 0.064, 0.128, 0.256, 0.512, 1.024, 2.048,
+        4.096, 8.192, 16.384, 32.768,
+    ];
+
+    /// Cumulative fixed-bucket histogram export (Prometheus style): each
+    /// entry counts samples `<= le`, with a final `+Inf` bucket equal to
+    /// `count`, plus `count`/`mean`/`p50`/`p95`/`p99`/`p999` summary
+    /// fields — tails are inspectable without raw-sample dumps.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::json::{obj, Json};
+        let mut buckets: Vec<Json> = Vec::with_capacity(Self::BUCKET_BOUNDS.len() + 1);
+        for &le in Self::BUCKET_BOUNDS.iter() {
+            let n = self.samples.iter().filter(|&&s| s <= le).count();
+            buckets.push(obj(vec![
+                ("le", Json::Num(le)),
+                ("count", Json::Num(n as f64)),
+            ]));
+        }
+        buckets.push(obj(vec![
+            ("le", Json::Str("+Inf".into())),
+            ("count", Json::Num(self.count() as f64)),
+        ]));
+        let (p50, p95, p99) = self.p50_p95_p99();
+        obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(p50)),
+            ("p95", Json::Num(p95)),
+            ("p99", Json::Num(p99)),
+            ("p999", Json::Num(self.p999())),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
 }
 
 /// Aggregated serving metrics over a run.
@@ -438,6 +487,46 @@ mod tests {
         assert!((p50 - crate::util::stats::percentile(&xs, 50.0)).abs() < 1e-12);
         assert!((p95 - crate::util::stats::percentile(&xs, 95.0)).abs() < 1e-12);
         assert!((p99 - crate::util::stats::percentile(&xs, 99.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p999_tracks_the_extreme_tail() {
+        let mut d = LatencyDigest::new();
+        for i in 1..=1000 {
+            d.add(i as f64 * 1e-3);
+        }
+        let p999 = d.p999();
+        assert!((p999 - crate::util::stats::percentile(&d.samples, 99.9)).abs() < 1e-12);
+        assert!(p999 > d.p50_p95_p99().2, "p99.9 must sit above p99");
+        assert_eq!(LatencyDigest::new().p999(), 0.0);
+    }
+
+    #[test]
+    fn histogram_json_is_cumulative_with_inf_bucket() {
+        let mut d = LatencyDigest::new();
+        // One sample per decade-ish bucket plus an outlier past the top.
+        for s in [0.0005, 0.003, 0.1, 0.9, 3.0, 100.0] {
+            d.add(s);
+        }
+        let j = crate::util::Json::parse(&d.to_json().dump()).unwrap();
+        assert_eq!(j.get("count").as_usize(), Some(6));
+        let buckets = j.get("buckets").as_arr().unwrap();
+        assert_eq!(buckets.len(), LatencyDigest::BUCKET_BOUNDS.len() + 1);
+        // Cumulative: counts never decrease, and +Inf holds everything.
+        let mut prev = 0.0;
+        for b in &buckets[..buckets.len() - 1] {
+            let c = b.get("count").as_f64().unwrap();
+            assert!(c >= prev);
+            prev = c;
+        }
+        let inf = &buckets[buckets.len() - 1];
+        assert_eq!(inf.get("le").as_str(), Some("+Inf"));
+        assert_eq!(inf.get("count").as_usize(), Some(6));
+        // The 100 s outlier is only in +Inf: the last finite bucket sees 5.
+        assert_eq!(buckets[buckets.len() - 2].get("count").as_usize(), Some(5));
+        // Summary fields present.
+        assert!(j.get("p999").as_f64().is_some());
+        assert!(j.get("mean").as_f64().is_some());
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! Fleet-wide observability: typed request-lifecycle events, a zero-cost
+//! sink seam, and per-request TTFT waterfall attribution.
+//!
+//! The fleet simulator emits [`FleetEvent`]s at every decision point —
+//! arrival, routing (with the policy's reason and every rejected
+//! candidate's predicted wait), cross-rack transfers, queueing, prefix-cache
+//! hits, prefill/decode, kills, re-queues, shedding — plus group state
+//! transitions, placement epochs, and migrations.  Emission goes through
+//! the [`FleetEventSink`] trait: the default [`NoopSink`] compiles to a
+//! single always-false branch (`enabled()`), so the simulation hot path is
+//! unperturbed when nobody is listening, and the recording [`EventLog`]
+//! captures everything when somebody is.
+//!
+//! **Determinism guarantee:** sinks only *read* values the simulation has
+//! already computed.  No float is produced, reordered, or consumed
+//! differently because a sink is attached; the property tests pin
+//! sink-on vs. sink-off `RunReport::to_json()` fingerprints byte-for-byte.
+//!
+//! From a recorded log, [`EventLog::waterfalls`] derives per-request TTFT
+//! attribution (queue + cross-rack transfer + warm-up wait + prefill) whose
+//! components sum to the measured TTFT by construction, and
+//! `trace::fleet_trace` (see `rust/src/trace/mod.rs`) renders the log as a
+//! Perfetto/Chrome trace with one track per group and one spine track per
+//! rack.
+
+use std::collections::BTreeMap;
+
+/// Group lifecycle phase, as observed through the failure model's outage
+/// windows (mirrors `fleet::GroupState` without coupling the event
+/// taxonomy to the simulator's internals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupPhase {
+    /// Serving.
+    Up,
+    /// In an outage window; batches started here are killed.
+    Down,
+    /// Repaired but re-fetching expert shards (warm-up priced by tier).
+    Recovering,
+}
+
+/// One candidate group considered by a routing decision.
+#[derive(Debug, Clone)]
+pub struct RouteCandidate {
+    /// Group index.
+    pub group: usize,
+    /// Raw queue-model wait (`GroupLoad::predicted_wait`).
+    pub predicted_wait: f64,
+    /// Wait after policy adjustments (cross-rack penalty, affinity credit).
+    pub effective_wait: f64,
+    /// Whether the failure model considered the group serving.
+    pub up: bool,
+    /// Whether the policy picked this candidate.
+    pub chosen: bool,
+}
+
+/// A typed fleet event.  Timestamps `t` are simulation seconds; `id` is
+/// the request's index into the run's request vector (stable across
+/// re-queues and shared with `metrics::RequestRecord::id`).
+#[derive(Debug, Clone)]
+pub enum FleetEvent {
+    /// A request entered the fleet (first routing attempt only;
+    /// re-queues emit [`FleetEvent::Requeue`] instead).
+    Arrival { id: usize, t: f64, isl: usize, osl: usize, session: Option<u64> },
+    /// The router's verdict, with the policy's reason and every
+    /// candidate's predicted/effective wait (rejected ones included).
+    RouteDecision {
+        id: usize,
+        t: f64,
+        policy: &'static str,
+        chosen: Option<usize>,
+        reason: String,
+        candidates: Vec<RouteCandidate>,
+    },
+    /// A transfer charged to the request's ready time began (prompt bytes
+    /// over the spine, or a KV-prefix migration; `rack` is the
+    /// destination group's rack).
+    CrossRackStart { id: usize, t: f64, rack: usize, bytes: f64 },
+    /// The transfer completed; the request is ready to batch.
+    CrossRackEnd { id: usize, t: f64 },
+    /// Admitted into a group's pending queue.
+    QueueEnter { id: usize, t: f64, group: usize },
+    /// Left the pending queue into a prefill batch.
+    QueueLeave { id: usize, t: f64, group: usize },
+    /// The routed group held the session's resident KV prefix.
+    PrefixHit { id: usize, t: f64, group: usize, tokens: usize },
+    /// A resident prefix existed but was not reusable in place.
+    PrefixMiss { id: usize, t: f64 },
+    /// The resident prefix was shipped to the routed group.
+    KvMigrate { id: usize, t: f64, group: usize, bytes: f64, seconds: f64 },
+    /// The batch head waited for a recovering group's warm-up; `seconds`
+    /// is this member's share (overlap of the warm-up with its wait).
+    WarmupWait { id: usize, t: f64, group: usize, seconds: f64 },
+    /// Prefill batch containing this request started.
+    PrefillStart { id: usize, t: f64, group: usize },
+    /// First token produced (prefill offset reached).
+    PrefillEnd { id: usize, t: f64, group: usize },
+    /// Decode (continuous batching) began.
+    DecodeStart { id: usize, t: f64, group: usize },
+    /// Last token produced.
+    DecodeEnd { id: usize, t: f64, group: usize },
+    /// The in-flight batch was killed by a group failure.
+    Kill { id: usize, t: f64, group: usize },
+    /// The killed request re-entered routing.
+    Requeue { id: usize, t: f64 },
+    /// Terminal: shed by admission control.
+    Shed { id: usize, t: f64 },
+    /// Terminal: failed (fleet-wide outage at routing, or re-spill cap).
+    Failed { id: usize, t: f64 },
+    /// A group crossed a lifecycle phase boundary.
+    GroupState { group: usize, t: f64, phase: GroupPhase },
+    /// Dynamic placement re-targeted the group's expert layout.
+    PlacementEpoch { group: usize, t: f64 },
+    /// The re-placement shipped weights; the group stalled for `seconds`.
+    Migration { group: usize, t: f64, seconds: f64 },
+    /// A group outage wiped its resident KV prefixes.
+    CacheInvalidate { group: usize, t: f64 },
+}
+
+impl FleetEvent {
+    /// The request this event belongs to, if any (fleet-scoped events
+    /// like [`FleetEvent::GroupState`] return `None`).
+    pub fn request(&self) -> Option<usize> {
+        use FleetEvent::*;
+        match *self {
+            Arrival { id, .. }
+            | RouteDecision { id, .. }
+            | CrossRackStart { id, .. }
+            | CrossRackEnd { id, .. }
+            | QueueEnter { id, .. }
+            | QueueLeave { id, .. }
+            | PrefixHit { id, .. }
+            | PrefixMiss { id, .. }
+            | KvMigrate { id, .. }
+            | WarmupWait { id, .. }
+            | PrefillStart { id, .. }
+            | PrefillEnd { id, .. }
+            | DecodeStart { id, .. }
+            | DecodeEnd { id, .. }
+            | Kill { id, .. }
+            | Requeue { id, .. }
+            | Shed { id, .. }
+            | Failed { id, .. } => Some(id),
+            GroupState { .. } | PlacementEpoch { .. } | Migration { .. }
+            | CacheInvalidate { .. } => None,
+        }
+    }
+
+    /// The event's timestamp in simulation seconds.
+    pub fn at(&self) -> f64 {
+        use FleetEvent::*;
+        match *self {
+            Arrival { t, .. }
+            | RouteDecision { t, .. }
+            | CrossRackStart { t, .. }
+            | CrossRackEnd { t, .. }
+            | QueueEnter { t, .. }
+            | QueueLeave { t, .. }
+            | PrefixHit { t, .. }
+            | PrefixMiss { t, .. }
+            | KvMigrate { t, .. }
+            | WarmupWait { t, .. }
+            | PrefillStart { t, .. }
+            | PrefillEnd { t, .. }
+            | DecodeStart { t, .. }
+            | DecodeEnd { t, .. }
+            | Kill { t, .. }
+            | Requeue { t, .. }
+            | Shed { t, .. }
+            | Failed { t, .. }
+            | GroupState { t, .. }
+            | PlacementEpoch { t, .. }
+            | Migration { t, .. }
+            | CacheInvalidate { t, .. } => t,
+        }
+    }
+
+    /// Short kind tag (stable, used by tests and trace categories).
+    pub fn kind(&self) -> &'static str {
+        use FleetEvent::*;
+        match self {
+            Arrival { .. } => "arrival",
+            RouteDecision { .. } => "route",
+            CrossRackStart { .. } => "xfer_start",
+            CrossRackEnd { .. } => "xfer_end",
+            QueueEnter { .. } => "queue_enter",
+            QueueLeave { .. } => "queue_leave",
+            PrefixHit { .. } => "prefix_hit",
+            PrefixMiss { .. } => "prefix_miss",
+            KvMigrate { .. } => "kv_migrate",
+            WarmupWait { .. } => "warmup",
+            PrefillStart { .. } => "prefill_start",
+            PrefillEnd { .. } => "prefill_end",
+            DecodeStart { .. } => "decode_start",
+            DecodeEnd { .. } => "decode_end",
+            Kill { .. } => "kill",
+            Requeue { .. } => "requeue",
+            Shed { .. } => "shed",
+            Failed { .. } => "failed",
+            GroupState { .. } => "group_state",
+            PlacementEpoch { .. } => "placement_epoch",
+            Migration { .. } => "migration",
+            CacheInvalidate { .. } => "cache_invalidate",
+        }
+    }
+}
+
+/// Where fleet events go.  The default implementation is a no-op whose
+/// `enabled()` returns `false`; emission sites guard event *construction*
+/// behind that flag, so a disabled sink costs one predictable branch.
+pub trait FleetEventSink {
+    /// Whether this sink wants events (gates construction cost).
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+    /// Receive one event.  Only called when [`FleetEventSink::enabled`]
+    /// returned `true` at the emission site.
+    #[inline]
+    fn emit(&mut self, _event: FleetEvent) {}
+}
+
+/// The zero-cost default sink.
+pub struct NoopSink;
+
+impl FleetEventSink for NoopSink {}
+
+/// A recording sink: appends every event in emission order.
+#[derive(Default)]
+pub struct EventLog {
+    /// Events in emission order (per-request causal order; not globally
+    /// sorted by timestamp — decode events are appended at assembly).
+    pub events: Vec<FleetEvent>,
+}
+
+impl FleetEventSink for EventLog {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+    #[inline]
+    fn emit(&mut self, event: FleetEvent) {
+        self.events.push(event);
+    }
+}
+
+/// Per-request TTFT attribution.  `queue` is the residual after the
+/// directly-measured components, so the four parts sum to `ttft` by
+/// construction; the conservation property additionally checks every
+/// component is non-negative (which *would* fail if warm-up or transfer
+/// time were double-counted).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Waterfall {
+    /// Time waiting in a pending queue (includes time lost to killed
+    /// batch attempts).
+    pub queue: f64,
+    /// Time in transfers charged to the ready clock (cross-rack prompt
+    /// bytes, KV-prefix migration).
+    pub cross_rack: f64,
+    /// This request's share of a recovery warm-up in its final batch.
+    pub warmup: f64,
+    /// Batch start to first token.
+    pub prefill: f64,
+    /// Measured TTFT (first token − arrival), exactly as simulated.
+    pub ttft: f64,
+}
+
+impl Waterfall {
+    /// Sum of the four attribution components.
+    pub fn total(&self) -> f64 {
+        self.queue + self.cross_rack + self.warmup + self.prefill
+    }
+}
+
+/// Lifecycle tally returned by [`EventLog::check_lifecycles`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LifecycleSummary {
+    /// Requests that produced a first token.
+    pub admitted: usize,
+    /// Requests shed by admission control.
+    pub shed: usize,
+    /// Requests that failed (outage at routing or re-spill cap).
+    pub failed: usize,
+}
+
+#[derive(Default)]
+struct ReqAcc {
+    arrival: Option<f64>,
+    xfer: f64,
+    xfer_open: Option<f64>,
+    warmup: f64,
+    prefill_start: Option<f64>,
+    prefill_end: Option<f64>,
+    group: usize,
+}
+
+impl EventLog {
+    /// Empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Derive the TTFT waterfall for every request that produced a first
+    /// token.  A [`FleetEvent::Kill`] resets the in-flight prefill and
+    /// warm-up attribution (that time becomes queue residual); transfer
+    /// intervals accumulate across attempts.
+    pub fn waterfalls(&self) -> BTreeMap<usize, Waterfall> {
+        let mut acc: BTreeMap<usize, ReqAcc> = BTreeMap::new();
+        for ev in &self.events {
+            let Some(id) = ev.request() else { continue };
+            let a = acc.entry(id).or_default();
+            match *ev {
+                FleetEvent::Arrival { t, .. } => a.arrival = Some(t),
+                FleetEvent::CrossRackStart { t, .. } => a.xfer_open = Some(t),
+                FleetEvent::CrossRackEnd { t, .. } => {
+                    if let Some(s) = a.xfer_open.take() {
+                        a.xfer += t - s;
+                    }
+                }
+                FleetEvent::WarmupWait { seconds, .. } => a.warmup = seconds,
+                FleetEvent::PrefillStart { t, group, .. } => {
+                    a.prefill_start = Some(t);
+                    a.group = group;
+                }
+                FleetEvent::Kill { .. } => {
+                    a.prefill_start = None;
+                    a.warmup = 0.0;
+                }
+                FleetEvent::PrefillEnd { t, .. } => a.prefill_end = Some(t),
+                _ => {}
+            }
+        }
+        acc.into_iter()
+            .filter_map(|(id, a)| {
+                let (arrival, start, end) = (a.arrival?, a.prefill_start?, a.prefill_end?);
+                let ttft = end - arrival;
+                let prefill = end - start;
+                let queue = ttft - a.xfer - a.warmup - prefill;
+                Some((
+                    id,
+                    Waterfall { queue, cross_rack: a.xfer, warmup: a.warmup, prefill, ttft },
+                ))
+            })
+            .collect()
+    }
+
+    /// Verify every request has a complete, ordered lifecycle and return
+    /// the terminal tally.  Rules: exactly one [`FleetEvent::Arrival`]
+    /// per request, per-request timestamps non-decreasing, every
+    /// transfer start paired with an end, and exactly one terminal
+    /// outcome — a first token (with queue enter/leave, prefill
+    /// start/end, decode start/end), a shed, or a failure.
+    pub fn check_lifecycles(&self) -> Result<LifecycleSummary, String> {
+        #[derive(Default)]
+        struct Life {
+            arrivals: usize,
+            last_t: f64,
+            order_ok: bool,
+            kinds: Vec<&'static str>,
+        }
+        let mut lives: BTreeMap<usize, Life> = BTreeMap::new();
+        for ev in &self.events {
+            let Some(id) = ev.request() else { continue };
+            let l = lives.entry(id).or_insert_with(|| Life {
+                arrivals: 0,
+                last_t: f64::NEG_INFINITY,
+                order_ok: true,
+                kinds: Vec::new(),
+            });
+            if let FleetEvent::Arrival { .. } = ev {
+                l.arrivals += 1;
+            }
+            let t = ev.at();
+            if t < l.last_t - 1e-12 {
+                l.order_ok = false;
+            }
+            l.last_t = l.last_t.max(t);
+            l.kinds.push(ev.kind());
+        }
+        let mut out = LifecycleSummary::default();
+        for (id, l) in &lives {
+            let n = |k: &str| l.kinds.iter().filter(|&&x| x == k).count();
+            if l.arrivals != 1 {
+                return Err(format!("request {id}: {} arrival events", l.arrivals));
+            }
+            if !l.order_ok {
+                return Err(format!("request {id}: timestamps regress"));
+            }
+            if n("xfer_start") != n("xfer_end") {
+                return Err(format!("request {id}: unpaired transfer events"));
+            }
+            let (served, shed, failed) = (n("prefill_end"), n("shed"), n("failed"));
+            let terminals = usize::from(served > 0) + shed + failed;
+            if terminals != 1 {
+                return Err(format!(
+                    "request {id}: {terminals} terminal outcomes (served={served} shed={shed} failed={failed})"
+                ));
+            }
+            if served > 0 {
+                for k in [
+                    "route",
+                    "queue_enter",
+                    "queue_leave",
+                    "prefill_start",
+                    "decode_start",
+                    "decode_end",
+                ] {
+                    if n(k) == 0 {
+                        return Err(format!("request {id}: served but no {k} event"));
+                    }
+                }
+                out.admitted += 1;
+            } else if shed > 0 {
+                out.shed += 1;
+            } else {
+                out.failed += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn served_log() -> EventLog {
+        let mut log = EventLog::new();
+        let g = 0;
+        log.emit(FleetEvent::Arrival { id: 7, t: 1.0, isl: 128, osl: 8, session: None });
+        log.emit(FleetEvent::RouteDecision {
+            id: 7,
+            t: 1.0,
+            policy: "round_robin",
+            chosen: Some(g),
+            reason: "cursor".into(),
+            candidates: vec![],
+        });
+        log.emit(FleetEvent::QueueEnter { id: 7, t: 1.0, group: g });
+        log.emit(FleetEvent::CrossRackStart { id: 7, t: 1.0, rack: 1, bytes: 1e6 });
+        log.emit(FleetEvent::CrossRackEnd { id: 7, t: 1.25 });
+        log.emit(FleetEvent::QueueLeave { id: 7, t: 2.0, group: g });
+        log.emit(FleetEvent::WarmupWait { id: 7, t: 2.0, group: g, seconds: 0.5 });
+        log.emit(FleetEvent::PrefillStart { id: 7, t: 2.0, group: g });
+        log.emit(FleetEvent::PrefillEnd { id: 7, t: 2.75, group: g });
+        log.emit(FleetEvent::DecodeStart { id: 7, t: 2.75, group: g });
+        log.emit(FleetEvent::DecodeEnd { id: 7, t: 3.5, group: g });
+        log
+    }
+
+    #[test]
+    fn waterfall_components_sum_to_ttft() {
+        let log = served_log();
+        let wf = log.waterfalls();
+        assert_eq!(wf.len(), 1);
+        let w = wf[&7];
+        assert_eq!(w.ttft, 1.75);
+        assert_eq!(w.cross_rack, 0.25);
+        assert_eq!(w.warmup, 0.5);
+        assert_eq!(w.prefill, 0.75);
+        assert!((w.total() - w.ttft).abs() < 1e-12);
+        assert!(w.queue >= 0.0);
+    }
+
+    #[test]
+    fn kill_resets_attribution_to_the_final_attempt() {
+        let mut log = EventLog::new();
+        log.emit(FleetEvent::Arrival { id: 0, t: 0.0, isl: 64, osl: 4, session: None });
+        log.emit(FleetEvent::QueueEnter { id: 0, t: 0.0, group: 0 });
+        log.emit(FleetEvent::QueueLeave { id: 0, t: 1.0, group: 0 });
+        log.emit(FleetEvent::WarmupWait { id: 0, t: 1.0, group: 0, seconds: 0.9 });
+        log.emit(FleetEvent::PrefillStart { id: 0, t: 1.0, group: 0 });
+        log.emit(FleetEvent::Kill { id: 0, t: 1.5, group: 0 });
+        log.emit(FleetEvent::Requeue { id: 0, t: 1.5 });
+        log.emit(FleetEvent::QueueEnter { id: 0, t: 1.5, group: 1 });
+        log.emit(FleetEvent::QueueLeave { id: 0, t: 2.0, group: 1 });
+        log.emit(FleetEvent::PrefillStart { id: 0, t: 2.0, group: 1 });
+        log.emit(FleetEvent::PrefillEnd { id: 0, t: 2.5, group: 1 });
+        let w = log.waterfalls()[&0];
+        assert_eq!(w.warmup, 0.0, "killed attempt's warm-up must not count");
+        assert_eq!(w.prefill, 0.5);
+        assert_eq!(w.queue, 2.0, "time lost to the killed attempt is queue residual");
+        assert!((w.total() - w.ttft).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifecycle_checker_accepts_complete_and_rejects_truncated() {
+        let log = served_log();
+        let s = log.check_lifecycles().expect("complete lifecycle");
+        assert_eq!(s, LifecycleSummary { admitted: 1, shed: 0, failed: 0 });
+
+        // Drop the terminal decode events: still one terminal (prefill_end)
+        // but the served-lifecycle kinds are incomplete.
+        let mut trunc = EventLog::new();
+        trunc.events = log.events[..log.events.len() - 2].to_vec();
+        assert!(trunc.check_lifecycles().is_err());
+
+        // A request with no terminal at all.
+        let mut open = EventLog::new();
+        open.emit(FleetEvent::Arrival { id: 1, t: 0.0, isl: 1, osl: 1, session: None });
+        assert!(open.check_lifecycles().is_err());
+    }
+
+    #[test]
+    fn noop_sink_is_disabled() {
+        let sink = NoopSink;
+        assert!(!sink.enabled());
+        let mut log = EventLog::new();
+        assert!(log.is_empty());
+        log.emit(FleetEvent::Shed { id: 0, t: 0.0 });
+        log.emit(FleetEvent::Failed { id: 1, t: 0.0 });
+        let s = log.check_lifecycles();
+        // No arrivals recorded for these ids → checker flags them.
+        assert!(s.is_err());
+        assert_eq!(log.len(), 2);
+    }
+}

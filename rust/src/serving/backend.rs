@@ -452,6 +452,19 @@ impl ExecutionBackend for AnalyticBackend {
     }
 }
 
+/// The analytic fleet run with a recording [`crate::obs::EventLog`]
+/// attached: the identical [`RunReport`] (the sink-on/off fingerprint
+/// property pins `to_json()` byte-for-byte) plus the full request-lifecycle
+/// event stream for waterfall attribution and `fleet --trace` export.
+pub fn run_fleet_analytic_logged(
+    spec: &ScenarioSpec,
+) -> Result<(RunReport, crate::obs::EventLog), String> {
+    let mut report = base_report(spec, "analytic");
+    let (out, log) = fleet::simulate_analytic_logged(spec)?;
+    fill_fleet_report(&mut report, spec, &out);
+    Ok((report, log))
+}
+
 // ---------------------------------------------------------------------------
 // Discrete-event
 // ---------------------------------------------------------------------------

@@ -35,7 +35,10 @@ pub mod backend;
 pub mod registry;
 pub mod scenario;
 
-pub use backend::{AnalyticBackend, DesBackend, ExecutionBackend, PjrtBackend, RunReport};
+pub use backend::{
+    run_fleet_analytic_logged, AnalyticBackend, DesBackend, ExecutionBackend, PjrtBackend,
+    RunReport,
+};
 pub use scenario::{Scenario, ScenarioKind, ScenarioSpec};
 
 /// The fidelity levels a scenario can run at.

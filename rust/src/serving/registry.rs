@@ -297,12 +297,13 @@ pub fn usage_text() -> String {
     out.push_str("                   [--policy rr|lot|slo|rlf|affinity] [--max-wait W]\n");
     out.push_str("                   [--sessions] [--turns N] [--think-time S]\n");
     out.push_str("                   [--kv-migrate] [--kv-capacity GB]\n");
-    out.push_str("                   [--trace FILE.json] [--record-trace FILE.json]\n");
-    out.push_str("                   [--fidelity analytic|des]\n");
+    out.push_str("                   [--replay FILE.json] [--record-trace FILE.json]\n");
+    out.push_str("                   [--trace PERFETTO_OUT.json] [--fidelity analytic|des]\n");
     out.push_str("                   [--skew Z] [--replace N] [--local-experts L]\n");
     out.push_str("                   [--mtbf S] [--mttr S] [--requeue]\n");
     out.push_str("                   [--racks R] [--inter-rack-gbps G] [--inter-rack-latency S]\n");
     out.push_str("                   [--rack-blast] [--threads T] [--json FILE]\n");
+    out.push_str("  dwdp-repro bench [--name NAME]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");
     for group in ["context", "e2e", "fleet", "power", "analysis"] {
@@ -374,6 +375,9 @@ mod tests {
         assert!(text.contains("--inter-rack-gbps"));
         assert!(text.contains("--sessions"));
         assert!(text.contains("--think-time"));
+        assert!(text.contains("dwdp-repro bench"));
+        assert!(text.contains("--replay"));
+        assert!(text.contains("--trace PERFETTO_OUT.json"));
         assert!(text.contains("  fleet:\n"));
     }
 

@@ -7,6 +7,7 @@
 
 use std::io::Write;
 
+use crate::obs::{EventLog, FleetEvent, GroupPhase};
 use crate::util::json::{obj, Json};
 
 /// One complete span on an engine timeline.
@@ -122,6 +123,129 @@ impl TraceSink {
     }
 }
 
+/// Render a recorded fleet [`EventLog`] as a trace: one track per serving
+/// group carrying each request's queue/warm-up/prefill/decode spans (and
+/// the group's own outage/recovery and migration windows), plus one spine
+/// track per rack carrying cross-rack transfer spans.  Serialize with
+/// [`TraceSink::to_chrome_trace`] / [`TraceSink::write_chrome_trace`].
+pub fn fleet_trace(log: &EventLog) -> TraceSink {
+    use std::collections::BTreeMap;
+
+    let mut sink = TraceSink::enabled();
+    let group_track = |g: usize| format!("group{g:02}");
+    // Per-request in-flight state.
+    let mut queued: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+    let mut prefilling: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+    let mut decoding: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+    let mut in_transit: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+    // Per-group last Down/Recovering transition instants.
+    let mut down_at: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut recovering_at: BTreeMap<usize, f64> = BTreeMap::new();
+
+    for ev in &log.events {
+        match *ev {
+            FleetEvent::QueueEnter { id, t, group } => {
+                queued.insert(id, (t, group));
+            }
+            FleetEvent::QueueLeave { id, t, .. } => {
+                if let Some((start, g)) = queued.remove(&id) {
+                    let name = format!("queue r{id}");
+                    sink.record(&group_track(g), &name, "queue", start, t - start);
+                }
+            }
+            FleetEvent::WarmupWait { id, t, group, seconds } => {
+                sink.record(
+                    &group_track(group),
+                    &format!("warmup r{id}"),
+                    "warmup",
+                    t - seconds,
+                    seconds,
+                );
+            }
+            FleetEvent::PrefillStart { id, t, group } => {
+                prefilling.insert(id, (t, group));
+            }
+            FleetEvent::PrefillEnd { id, t, .. } => {
+                if let Some((start, g)) = prefilling.remove(&id) {
+                    sink.record(
+                        &group_track(g),
+                        &format!("prefill r{id}"),
+                        "prefill",
+                        start,
+                        t - start,
+                    );
+                }
+            }
+            FleetEvent::Kill { id, t, .. } => {
+                if let Some((start, g)) = prefilling.remove(&id) {
+                    sink.record(
+                        &group_track(g),
+                        &format!("killed r{id}"),
+                        "killed",
+                        start,
+                        t - start,
+                    );
+                }
+            }
+            FleetEvent::DecodeStart { id, t, group } => {
+                decoding.insert(id, (t, group));
+            }
+            FleetEvent::DecodeEnd { id, t, .. } => {
+                if let Some((start, g)) = decoding.remove(&id) {
+                    sink.record(
+                        &group_track(g),
+                        &format!("decode r{id}"),
+                        "decode",
+                        start,
+                        t - start,
+                    );
+                }
+            }
+            FleetEvent::CrossRackStart { id, t, rack, .. } => {
+                in_transit.insert(id, (t, rack));
+            }
+            FleetEvent::CrossRackEnd { id, t } => {
+                if let Some((start, rack)) = in_transit.remove(&id) {
+                    sink.record(
+                        &format!("rack{rack:02}.spine"),
+                        &format!("xfer r{id}"),
+                        "xfer",
+                        start,
+                        t - start,
+                    );
+                }
+            }
+            FleetEvent::Migration { group, t, seconds } => {
+                sink.record(&group_track(group), "migration", "migration", t, seconds);
+            }
+            FleetEvent::GroupState { group, t, phase } => match phase {
+                GroupPhase::Down => {
+                    down_at.insert(group, t);
+                }
+                GroupPhase::Recovering => {
+                    if let Some(start) = down_at.remove(&group) {
+                        sink.record(&group_track(group), "down", "down", start, t - start);
+                    }
+                    recovering_at.insert(group, t);
+                }
+                GroupPhase::Up => {
+                    if let Some(start) = recovering_at.remove(&group) {
+                        sink.record(
+                            &group_track(group),
+                            "recovering",
+                            "recovering",
+                            start,
+                            t - start,
+                        );
+                    }
+                }
+            },
+            _ => {}
+        }
+    }
+    sink
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +303,30 @@ mod tests {
             .unwrap();
         assert_eq!(span.get("ph").as_str(), Some("X"));
         assert!((span.get("dur").as_f64().unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_trace_builds_group_and_spine_tracks() {
+        use crate::obs::FleetEventSink;
+        let mut log = EventLog::new();
+        log.emit(FleetEvent::QueueEnter { id: 3, t: 1.0, group: 2 });
+        log.emit(FleetEvent::CrossRackStart { id: 3, t: 1.0, rack: 1, bytes: 1e6 });
+        log.emit(FleetEvent::CrossRackEnd { id: 3, t: 1.5 });
+        log.emit(FleetEvent::QueueLeave { id: 3, t: 2.0, group: 2 });
+        log.emit(FleetEvent::PrefillStart { id: 3, t: 2.0, group: 2 });
+        log.emit(FleetEvent::PrefillEnd { id: 3, t: 2.5, group: 2 });
+        log.emit(FleetEvent::DecodeStart { id: 3, t: 2.5, group: 2 });
+        log.emit(FleetEvent::DecodeEnd { id: 3, t: 4.0, group: 2 });
+        log.emit(FleetEvent::GroupState { group: 0, t: 0.5, phase: GroupPhase::Down });
+        log.emit(FleetEvent::GroupState { group: 0, t: 0.8, phase: GroupPhase::Recovering });
+        log.emit(FleetEvent::GroupState { group: 0, t: 1.1, phase: GroupPhase::Up });
+        let t = fleet_trace(&log);
+        assert!((t.busy_time("rack01.spine") - 0.5).abs() < 1e-12);
+        // queue 1.0 + prefill 0.5 + decode 1.5 on the group track.
+        assert!((t.busy_time("group02") - 3.0).abs() < 1e-12);
+        assert!((t.busy_time("group00") - 0.6).abs() < 1e-12, "down + recovering windows");
+        let j = t.to_chrome_trace();
+        assert!(crate::util::Json::parse(&j.dump()).is_ok());
     }
 
     #[test]

@@ -8,10 +8,12 @@
 use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::dwdp::{build_copy_plan, plan_bytes};
-use dwdp::fleet::{run_sweep, simulate_analytic, ClusterPolicy, SweepPoint};
+use dwdp::fleet::{
+    run_sweep, simulate_analytic, simulate_analytic_logged, ClusterPolicy, SweepPoint,
+};
 use dwdp::model::Category;
 use dwdp::placement::{migration_cost, migration_fetches, target_placement, ExpertPlacement};
-use dwdp::serving::{Fidelity, Scenario, ServingStack};
+use dwdp::serving::{run_fleet_analytic_logged, Fidelity, Scenario, ScenarioSpec, ServingStack};
 use dwdp::util::Rng;
 use dwdp::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, Request, WorkloadTrace};
 
@@ -878,6 +880,140 @@ fn prop_fleet_sweep_thread_invariance_with_sessions() {
                 b.to_json().dump(),
                 "point {i} differs at {threads} threads"
             );
+        }
+    }
+}
+
+/// One randomized fleet spec that exercises the full event surface:
+/// every cluster policy, sessions on/off, churn on/off, flat and tiered
+/// rack topologies, KV migration, and tight cache budgets.  Deterministic
+/// in `seed` so a failure reproduces.
+fn obs_fleet_spec(seed: u64) -> ScenarioSpec {
+    let mut rng = Rng::new(18_000 + seed);
+    let n_groups = 2 + rng.below(4) as usize;
+    let rate = if seed % 4 == 0 { 200.0 } else { 2.0 + rng.f64() * 20.0 };
+    let policy = match seed % 5 {
+        0 => ClusterPolicy::SloAdmission { max_wait: 0.01 + rng.f64() },
+        1 => ClusterPolicy::RoundRobin,
+        2 => ClusterPolicy::LeastOutstandingTokens,
+        3 => ClusterPolicy::RackLocalFirst,
+        _ => ClusterPolicy::PrefixAffinity,
+    };
+    // Affinity routing only makes sense with sessions; otherwise alternate.
+    let sessions = seed % 5 == 4 || seed % 2 == 0;
+    let mut scn = tiny_fleet_scenario(n_groups)
+        .arrival(ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 6.0 })
+        .cluster_policy(policy)
+        .requests(8 + rng.below(28) as usize)
+        .seed(seed);
+    if sessions {
+        scn = scn
+            .sessions(true)
+            .session_turns(1 + rng.below(4) as usize)
+            .think_time(rng.f64())
+            .kv_migrate(seed % 3 == 0);
+        if seed % 6 == 0 {
+            scn = scn.kv_capacity_gb(1e-3);
+        }
+    }
+    if seed % 3 != 2 {
+        // Churn: outages, warm-up recoveries, kills, and re-queues.
+        scn = scn
+            .mtbf(0.5 + rng.f64() * 3.0)
+            .mttr(0.05 + rng.f64() * 1.5)
+            .requeue_on_failure(seed % 2 == 0);
+    }
+    if seed % 2 == 1 {
+        // Tiered topology: cross-rack transfer spans on the spine.
+        scn = scn.racks(2).inter_rack_gbps(1.0).inter_rack_latency(3e-6);
+    }
+    scn.build().unwrap_or_else(|e| panic!("seed {seed}: {e}"))
+}
+
+/// Property (obs): recording the event log never moves the report — the
+/// sink-on and sink-off `RunReport::to_json()` fingerprints are
+/// byte-identical across sessions, multi-rack, and churn scenarios.  The
+/// sink only observes values the simulation already computed; this is the
+/// "observability does not perturb the experiment" contract.
+#[test]
+fn prop_event_sink_never_moves_the_report_fingerprint() {
+    for seed in 0..15 {
+        let spec = obs_fleet_spec(seed);
+        let (logged, log) = run_fleet_analytic_logged(&spec)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(!log.is_empty(), "seed {seed}: recording run captured no events");
+        let plain = ServingStack::new(obs_fleet_spec(seed), Fidelity::Analytic)
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(
+            logged.to_json().dump(),
+            plain.to_json().dump(),
+            "seed {seed}: the recording sink moved the report fingerprint"
+        );
+    }
+}
+
+/// Property (obs): the event log is complete — every request has exactly
+/// one arrival, non-decreasing timestamps, paired transfer spans, and
+/// exactly one terminal outcome; served requests carry the full route /
+/// queue / prefill / decode lifecycle; and the terminal tally agrees with
+/// the simulator's own counters, across all policies x sessions x churn x
+/// racks.
+#[test]
+fn prop_event_log_lifecycles_are_complete() {
+    for seed in 0..20 {
+        let spec = obs_fleet_spec(seed);
+        let (out, log) =
+            simulate_analytic_logged(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let tally = log.check_lifecycles().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(tally.admitted, out.admitted, "seed {seed}: admitted tally");
+        assert_eq!(tally.shed, out.shed, "seed {seed}: shed tally");
+        assert_eq!(tally.failed, out.failed, "seed {seed}: failed tally");
+        assert_eq!(
+            tally.admitted + tally.shed + tally.failed,
+            out.offered,
+            "seed {seed}: lifecycle tally does not cover the offered load"
+        );
+    }
+}
+
+/// Property (obs): TTFT attribution conserves — for every admitted
+/// request the queue + cross-rack + warm-up + prefill components are
+/// individually non-negative and sum to the measured TTFT, and the
+/// waterfall TTFTs are exactly the simulator's recorded TTFTs (so the
+/// attribution describes the same run it claims to).
+#[test]
+fn prop_ttft_waterfall_conserves_for_every_admitted_request() {
+    for seed in 0..20 {
+        let spec = obs_fleet_spec(seed);
+        let (out, log) =
+            simulate_analytic_logged(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let wf = log.waterfalls();
+        assert_eq!(wf.len(), out.admitted, "seed {seed}: one waterfall per admitted request");
+        for (id, w) in &wf {
+            for (name, v) in [
+                ("queue", w.queue),
+                ("cross_rack", w.cross_rack),
+                ("warmup", w.warmup),
+                ("prefill", w.prefill),
+            ] {
+                assert!(v >= -1e-9, "seed {seed} req {id}: negative {name} component {v}");
+            }
+            assert!(
+                (w.total() - w.ttft).abs() < 1e-9,
+                "seed {seed} req {id}: components sum {} != ttft {}",
+                w.total(),
+                w.ttft
+            );
+        }
+        let mut from_log: Vec<f64> = wf.values().map(|w| w.ttft).collect();
+        let mut from_metrics: Vec<f64> =
+            out.metrics.records.iter().map(|r| r.first_token - r.arrival).collect();
+        from_log.sort_by(f64::total_cmp);
+        from_metrics.sort_by(f64::total_cmp);
+        assert_eq!(from_log.len(), from_metrics.len(), "seed {seed}");
+        for (a, b) in from_log.iter().zip(&from_metrics) {
+            assert!((a - b).abs() < 1e-9, "seed {seed}: waterfall ttft {a} != recorded {b}");
         }
     }
 }
