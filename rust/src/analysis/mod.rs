@@ -1,0 +1,1066 @@
+//! Static analysis over compiled rank programs, scenario configurations,
+//! and the simulator sources — three dependency-free passes, run by the
+//! `lint` CLI subcommand and (for the program verifier) always-on inside
+//! [`crate::engine`] before any compiled program reaches the DES.
+//!
+//! 1. **Rank-program verifier** ([`verify_rank_program`],
+//!    [`verify_lockstep`]): an abstract interpreter over [`Step`] sequences
+//!    that proves the Issue/Wait prefetch pipeline well-formed per rank
+//!    (no use-before-issue, no WAW double-issue, bounded in-flight depth,
+//!    no leaked DMA, no dead or colliding plans, plan bytes conserved) and
+//!    the cross-rank `Barrier`/`Collective` sequences deadlock-free for
+//!    lockstep (DEP) programs.
+//! 2. **Config/scenario linter** ([`lint_spec`],
+//!    [`lint_override_roundtrip`]): flags contradictory knob combinations
+//!    in a frozen [`ScenarioSpec`] that pass `validate()` but can never do
+//!    what they claim, and proves the JSON-override surface round-trips
+//!    every `ServingConfig` field.
+//! 3. **Determinism source lint** ([`lint_sources`], [`scan_source`]): a
+//!    line scanner over `rust/src/` that flags wall-clock reads, ambient
+//!    RNG, and iteration-order-unstable hash containers in
+//!    simulator-critical modules, outside explicit
+//!    `det-lint: allow(<rule>)` comments.
+//!
+//! DESIGN.md §10 documents the invariants table, the linter rules, and the
+//! allowlist convention.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::config::{
+    apply_json_overrides, serving_override_json, HardwareConfig, PaperModelConfig, ParallelMode,
+    ServingConfig,
+};
+use crate::dwdp::{plan_bytes, ChunkSpec, CompiledProgram};
+use crate::serving::registry;
+use crate::serving::{ScenarioKind, ScenarioSpec};
+use crate::sim::{PlanKey, Slice, Step};
+
+// ---------------------------------------------------------------------------
+// Pass 1: rank-program verifier
+// ---------------------------------------------------------------------------
+
+/// Tolerance for plan-byte conservation checks, in bytes.
+///
+/// `build_copy_plan` accumulates slice sizes in f64; a TDM plan splits a
+/// multi-GB shard into hundreds of ~1 MB slices, so the sum carries
+/// accumulated rounding on the order of 1e-5 bytes at terabyte scale —
+/// far below one byte, far above exact equality.  One shared epsilon, used
+/// by the verifier and the `dwdp` unit tests, so the two can never drift
+/// into flapping against each other.
+pub const PLAN_BYTES_EPS: f64 = 1.0;
+
+/// In-flight bound for compiled DWDP programs: double buffering means one
+/// receive buffer is being consumed (its plan already waited on) while at
+/// most ONE other plan streams into the second buffer — so at any program
+/// point at most one plan is issued-but-unwaited.
+pub const DWDP_INFLIGHT_DEPTH: usize = 1;
+
+/// A statically-detected program hazard.  Each variant names the invariant
+/// it violates; `rank`/`step` locate the first offending program point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerifyError {
+    /// `WaitPrefetch` on a key with no in-flight `IssuePrefetch` (either
+    /// never issued, or already waited).
+    WaitBeforeIssue { rank: usize, step: usize, key: PlanKey },
+    /// `IssuePrefetch` on a key that is already in flight or already
+    /// consumed — a WAW hazard on the staging buffer.
+    DoubleIssue { rank: usize, step: usize, key: PlanKey },
+    /// More plans issued-but-unwaited than the double-buffer depth allows.
+    InFlightExceedsDepth { rank: usize, step: usize, depth: usize, in_flight: usize },
+    /// An issued plan is never waited on — the program ends with the DMA
+    /// still (logically) in flight.
+    LeakedPlan { rank: usize, key: PlanKey },
+    /// A step references a key with no registered plan.
+    UnknownKey { rank: usize, step: usize, key: PlanKey },
+    /// A registered plan is never issued by any step.
+    DeadPlan { rank: usize, key: PlanKey },
+    /// Two plans registered under the same key (e.g. the migration-key
+    /// offset trick colliding with the per-layer plan space).
+    KeyCollision { rank: usize, key: PlanKey },
+    /// Total registered plan bytes do not conserve to the expected remote
+    /// shard bytes (tolerance [`PLAN_BYTES_EPS`]).
+    PlanBytesMismatch { rank: usize, expected: f64, actual: f64 },
+    /// A lockstep (DEP) program diverges from rank 0's
+    /// `Barrier`/`Collective` sequence — a guaranteed deadlock.  `step` is
+    /// the diverging rank's program index of the first mismatched sync op
+    /// (or its program length if the rank runs out of sync ops early).
+    LockstepDivergence { rank: usize, step: usize, detail: String },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::WaitBeforeIssue { rank, step, key } => write!(
+                f,
+                "rank {rank} step {step}: WaitPrefetch({key:?}) with no in-flight IssuePrefetch"
+            ),
+            VerifyError::DoubleIssue { rank, step, key } => write!(
+                f,
+                "rank {rank} step {step}: IssuePrefetch({key:?}) double-issued (WAW hazard)"
+            ),
+            VerifyError::InFlightExceedsDepth { rank, step, depth, in_flight } => write!(
+                f,
+                "rank {rank} step {step}: {in_flight} plans in flight exceeds double-buffer depth {depth}"
+            ),
+            VerifyError::LeakedPlan { rank, key } => {
+                write!(f, "rank {rank}: issued plan {key:?} is never waited (leaked DMA)")
+            }
+            VerifyError::UnknownKey { rank, step, key } => {
+                write!(f, "rank {rank} step {step}: key {key:?} has no registered plan")
+            }
+            VerifyError::DeadPlan { rank, key } => {
+                write!(f, "rank {rank}: registered plan {key:?} is never issued (dead plan)")
+            }
+            VerifyError::KeyCollision { rank, key } => {
+                write!(f, "rank {rank}: plan key {key:?} registered twice (key collision)")
+            }
+            VerifyError::PlanBytesMismatch { rank, expected, actual } => write!(
+                f,
+                "rank {rank}: plan bytes {actual:.3} do not conserve to expected {expected:.3} \
+                 (eps {PLAN_BYTES_EPS})"
+            ),
+            VerifyError::LockstepDivergence { rank, step, detail } => write!(
+                f,
+                "rank {rank} step {step}: barrier/collective sequence diverges from rank 0 \
+                 ({detail}) — lockstep deadlock"
+            ),
+        }
+    }
+}
+
+/// Statically verify one rank's compiled program against its registered
+/// plans: abstract-interpret the step sequence tracking the set of
+/// in-flight (issued-but-unwaited) and consumed plans.
+///
+/// `depth` bounds the in-flight count ([`DWDP_INFLIGHT_DEPTH`] for
+/// compiled DWDP programs).  `expected_bytes`, when given, asserts total
+/// registered plan bytes conserve to the remote shard bytes the chunk
+/// specs demanded (tolerance [`PLAN_BYTES_EPS`]).
+pub fn verify_rank_program(
+    rank: usize,
+    steps: &[Step],
+    plans: &[(PlanKey, Vec<Slice>)],
+    depth: usize,
+    expected_bytes: Option<f64>,
+) -> Result<(), VerifyError> {
+    // Registered-plan table; duplicate registration is a key collision.
+    let mut registered: BTreeSet<PlanKey> = BTreeSet::new();
+    for (key, _) in plans {
+        if !registered.insert(*key) {
+            return Err(VerifyError::KeyCollision { rank, key: *key });
+        }
+    }
+
+    // Byte conservation over the registered plans.
+    if let Some(expected) = expected_bytes {
+        let actual: f64 = plans.iter().map(|(_, p)| plan_bytes(p)).sum();
+        if (actual - expected).abs() > PLAN_BYTES_EPS {
+            return Err(VerifyError::PlanBytesMismatch { rank, expected, actual });
+        }
+    }
+
+    // Abstract interpretation of the Issue/Wait pipeline.
+    let mut in_flight: BTreeSet<PlanKey> = BTreeSet::new();
+    let mut consumed: BTreeSet<PlanKey> = BTreeSet::new();
+    for (i, step) in steps.iter().enumerate() {
+        match step {
+            Step::IssuePrefetch { key } => {
+                if !registered.contains(key) {
+                    return Err(VerifyError::UnknownKey { rank, step: i, key: *key });
+                }
+                if in_flight.contains(key) || consumed.contains(key) {
+                    return Err(VerifyError::DoubleIssue { rank, step: i, key: *key });
+                }
+                in_flight.insert(*key);
+                if in_flight.len() > depth {
+                    return Err(VerifyError::InFlightExceedsDepth {
+                        rank,
+                        step: i,
+                        depth,
+                        in_flight: in_flight.len(),
+                    });
+                }
+            }
+            Step::WaitPrefetch { key } => {
+                if !registered.contains(key) {
+                    return Err(VerifyError::UnknownKey { rank, step: i, key: *key });
+                }
+                if !in_flight.remove(key) {
+                    return Err(VerifyError::WaitBeforeIssue { rank, step: i, key: *key });
+                }
+                consumed.insert(*key);
+            }
+            // Compute, barriers, collectives, copies, sleeps, marks carry
+            // no plan keys; the cross-rank pass handles barrier hazards.
+            _ => {}
+        }
+    }
+    if let Some(key) = in_flight.iter().next() {
+        return Err(VerifyError::LeakedPlan { rank, key: *key });
+    }
+    if let Some(key) = registered.difference(&consumed).next() {
+        return Err(VerifyError::DeadPlan { rank, key: *key });
+    }
+    Ok(())
+}
+
+/// Convenience wrapper over a [`CompiledProgram`].
+pub fn verify_compiled(
+    rank: usize,
+    program: &CompiledProgram,
+    depth: usize,
+    expected_bytes: Option<f64>,
+) -> Result<(), VerifyError> {
+    verify_rank_program(rank, &program.steps, &program.plans, depth, expected_bytes)
+}
+
+/// Remote shard bytes a DWDP rank program must move for `chunks`: one
+/// layer's shard per per-layer fetch, all layers' shards per migrated
+/// expert (see `dwdp::compile_rank_program`).
+pub fn expected_plan_bytes(model: &PaperModelConfig, chunks: &[ChunkSpec]) -> f64 {
+    let eb = model.expert_bytes();
+    let n_moe = model.n_moe_layers() as f64;
+    chunks
+        .iter()
+        .map(|c| {
+            let per_layer: usize = c.fetches_per_layer.iter().map(|f| f.len()).sum();
+            per_layer as f64 * eb + c.migration.len() as f64 * eb * n_moe
+        })
+        .sum()
+}
+
+/// The sync footprint of one step, if any.
+fn sync_op(step: &Step) -> Option<String> {
+    match step {
+        Step::Barrier { id } => Some(format!("Barrier({id})")),
+        Step::Collective { .. } => Some("Collective".to_string()),
+        _ => None,
+    }
+}
+
+/// Cross-rank deadlock check for lockstep (DEP / coupled) programs: every
+/// rank must traverse the identical `Barrier`-id / `Collective` sequence.
+/// A divergence — different id, different op, or a rank running out of
+/// sync ops early — is a guaranteed deadlock in the DES (and the real
+/// runtime), reported with the diverging rank and its program step index.
+pub fn verify_lockstep(programs: &[Vec<Step>]) -> Result<(), VerifyError> {
+    if programs.len() < 2 {
+        return Ok(());
+    }
+    // (program step index, op) sequence per rank.
+    let seqs: Vec<Vec<(usize, String)>> = programs
+        .iter()
+        .map(|p| {
+            p.iter().enumerate().filter_map(|(i, s)| sync_op(s).map(|op| (i, op))).collect()
+        })
+        .collect();
+    let reference = &seqs[0];
+    for (rank, seq) in seqs.iter().enumerate().skip(1) {
+        for (j, (step, op)) in seq.iter().enumerate() {
+            match reference.get(j) {
+                Some((_, ref_op)) if ref_op == op => {}
+                Some((_, ref_op)) => {
+                    return Err(VerifyError::LockstepDivergence {
+                        rank,
+                        step: *step,
+                        detail: format!("{op} vs rank 0's {ref_op}"),
+                    });
+                }
+                None => {
+                    return Err(VerifyError::LockstepDivergence {
+                        rank,
+                        step: *step,
+                        detail: format!("{op} after rank 0's sequence ended"),
+                    });
+                }
+            }
+        }
+        if seq.len() < reference.len() {
+            let (_, missing) = &reference[seq.len()];
+            return Err(VerifyError::LockstepDivergence {
+                rank,
+                step: programs[rank].len(),
+                detail: format!("program ends before rank 0's {missing}"),
+            });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: config/scenario linter
+// ---------------------------------------------------------------------------
+
+/// Finding severity: `Error` fails the `lint` CLI (exit 1); `Warning` is
+/// reported but non-fatal (used for suspicious-but-intentional combos,
+/// e.g. the re-placement sweep's skew-0 no-op contract rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// One linter finding, locatable by scenario label or `file:line`.
+#[derive(Debug, Clone)]
+pub struct LintFinding {
+    pub severity: Severity,
+    /// Stable rule id, e.g. `kv-migrate-without-sessions`, `wall-clock`.
+    pub rule: &'static str,
+    /// Where: a scenario label or a `path:line` source location.
+    pub location: String,
+    pub message: String,
+}
+
+impl fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        write!(f, "{sev}[{}] {}: {}", self.rule, self.location, self.message)
+    }
+}
+
+fn finding(severity: Severity, rule: &'static str, location: &str, message: String) -> LintFinding {
+    LintFinding { severity, rule, location: location.to_string(), message }
+}
+
+/// Statically lint one frozen scenario: contradictory knob combinations
+/// that pass `ServingConfig::validate` but cannot do what they claim.
+pub fn lint_spec(spec: &ScenarioSpec) -> Vec<LintFinding> {
+    let s = &spec.serving;
+    let loc = &spec.label;
+    let mut out = Vec::new();
+
+    if s.kv_migrate && !s.sessions {
+        out.push(finding(
+            Severity::Error,
+            "kv-migrate-without-sessions",
+            loc,
+            "kv_migrate moves KV prefixes between groups, which only exist with sessions on"
+                .to_string(),
+        ));
+    }
+    if s.kv_capacity_gb > 0.0 && !s.sessions {
+        out.push(finding(
+            Severity::Warning,
+            "kv-capacity-without-sessions",
+            loc,
+            format!("kv_capacity_gb {} bounds a prefix cache no scenario path uses", s.kv_capacity_gb),
+        ));
+    }
+    if s.rack_blast_radius && s.racks < 2 {
+        out.push(finding(
+            Severity::Error,
+            "rack-blast-single-rack",
+            loc,
+            "rack_blast_radius needs racks >= 2 to differ from per-group failures".to_string(),
+        ));
+    }
+    if s.sessions && s.think_time.is_infinite() {
+        out.push(finding(
+            Severity::Warning,
+            "sessions-never-return",
+            loc,
+            "think_time = inf degenerates sessions to the open loop (no follow-up ever arrives)"
+                .to_string(),
+        ));
+    }
+    if s.replacement_interval > 0 && (s.mode != ParallelMode::Dwdp || s.routing_skew == 0.0) {
+        out.push(finding(
+            Severity::Warning,
+            "replacement-noop",
+            loc,
+            format!(
+                "replacement_interval {} is a no-op (mode {}, routing_skew {})",
+                s.replacement_interval,
+                s.mode.name(),
+                s.routing_skew
+            ),
+        ));
+    }
+
+    // Re-placement interval beyond the horizon: the epoch boundary can
+    // never fire within the work the scenario offers.
+    let replace_active =
+        s.mode == ParallelMode::Dwdp && s.routing_skew > 0.0 && s.replacement_interval > 0;
+    if replace_active {
+        let ct = crate::engine::chunk_tokens(s);
+        // Lower bound on chunks per request (shortest sampled prompt).
+        let min_isl = ((s.isl as f64 * s.isl_ratio) as usize).max(1);
+        let chunks_per_req = min_isl.div_ceil(ct).max(1);
+        let (per_worker, total) = match &spec.kind {
+            ScenarioKind::Context { requests_per_rank } => (*requests_per_rank, *requests_per_rank),
+            ScenarioKind::Disagg { n_ctx_groups, n_requests, .. } => {
+                (n_requests.div_ceil((*n_ctx_groups).max(1)), *n_requests)
+            }
+            ScenarioKind::Fleet { n_groups, n_requests, .. } => {
+                (n_requests.div_ceil((*n_groups).max(1)), *n_requests)
+            }
+        };
+        if s.replacement_interval >= total * chunks_per_req {
+            out.push(finding(
+                Severity::Error,
+                "replacement-beyond-horizon",
+                loc,
+                format!(
+                    "replacement_interval {} can never fire: at most {} chunk iterations total",
+                    s.replacement_interval,
+                    total * chunks_per_req
+                ),
+            ));
+        } else if s.replacement_interval >= per_worker * chunks_per_req {
+            out.push(finding(
+                Severity::Warning,
+                "replacement-beyond-horizon",
+                loc,
+                format!(
+                    "replacement_interval {} exceeds the ~{} chunk iterations a balanced worker sees",
+                    s.replacement_interval,
+                    per_worker * chunks_per_req
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Prove the JSON-override surface covers every `ServingConfig` field:
+/// serialize a probe config (every field differing from the default)
+/// through [`serving_override_json`], apply it onto a default via
+/// [`apply_json_overrides`], and require exact equality.  A field missing
+/// from either side leaves the default in place and fails the comparison;
+/// the probe itself is a struct literal, so a newly added field breaks the
+/// build until it is enumerated here.
+pub fn lint_override_roundtrip() -> Result<(), String> {
+    let probe = ServingConfig {
+        mode: ParallelMode::Dep,
+        group_size: 3,
+        max_num_tokens: 12345,
+        isl: 2222,
+        osl: 333,
+        isl_ratio: 0.44,
+        isl_std: 55.0,
+        local_experts: 66,
+        merge_elim: false,
+        tdm: false,
+        slice_bytes: 777,
+        prefetch_fraction: 0.88,
+        routing_skew: 0.99,
+        replacement_interval: 11,
+        mtbf: 12.0,
+        mttr: 13.0,
+        requeue_on_failure: true,
+        racks: 14,
+        inter_rack_gbps: 15.0,
+        inter_rack_latency: 16e-6,
+        rack_blast_radius: true,
+        sessions: true,
+        session_turns: 17,
+        think_time: 18.0,
+        kv_migrate: true,
+        kv_capacity_gb: 19.0,
+        seed: 20,
+    };
+    let json = serving_override_json(&probe);
+    let mut hw = HardwareConfig::gb200();
+    let mut model = PaperModelConfig::tiny();
+    let mut got = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+    apply_json_overrides(&json, &mut hw, &mut model, &mut got)
+        .map_err(|e| format!("override surface rejects its own encoding: {e}"))?;
+    if got != probe {
+        return Err(format!(
+            "ServingConfig does not round-trip through the JSON override surface:\n \
+             sent {probe:?}\n got  {got:?}"
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: determinism source lint
+// ---------------------------------------------------------------------------
+
+/// Top-level `rust/src` entries exempt from the determinism lint: the CLI
+/// and bench harness legitimately read wall clocks, and the PJRT runtime
+/// wraps real hardware.  Everything else is simulator-critical.
+const LINT_EXEMPT: &[&str] = &["main.rs", "bench", "runtime"];
+
+/// Banned patterns per rule.  Built at runtime from fragments so this
+/// file's own pattern table never matches itself when the scanner runs
+/// over `analysis/`.
+fn banned_patterns() -> Vec<(&'static str, String)> {
+    vec![
+        ("hash-container", ["Hash", "Map"].concat()),
+        ("hash-container", ["Hash", "Set"].concat()),
+        ("wall-clock", ["Instant", "::now"].concat()),
+        ("wall-clock", ["System", "Time"].concat()),
+        ("rng", ["thread", "_rng"].concat()),
+    ]
+}
+
+/// Scan one source file's contents for banned determinism patterns.
+///
+/// Rules: `hash-container` (std hash maps/sets — iteration order varies
+/// across runs and toolchains, so simulator-critical modules must hold
+/// keyed state in `BTreeMap`/`BTreeSet`; possession is flagged because a
+/// line scanner cannot prove iteration absent), `wall-clock`
+/// (`Instant::now`/`SystemTime`), `rng` (`thread_rng`).  Comment text is
+/// ignored.  A finding is suppressed by a `det-lint: allow(<rule>)`
+/// comment on the same or the immediately preceding line.
+pub fn scan_source(path_label: &str, contents: &str) -> Vec<LintFinding> {
+    let patterns = banned_patterns();
+    let mut out = Vec::new();
+    let mut prev_line: &str = "";
+    for (i, line) in contents.lines().enumerate() {
+        // Code portion only: everything from `//` on is comment text
+        // (doc comments and prose mentioning a banned name stay legal).
+        let code = line.split("//").next().unwrap_or("");
+        for (rule, pat) in &patterns {
+            if !code.contains(pat.as_str()) {
+                continue;
+            }
+            let marker = format!("det-lint: allow({rule})");
+            if line.contains(&marker) || prev_line.contains(&marker) {
+                continue;
+            }
+            out.push(finding(
+                Severity::Error,
+                rule,
+                &format!("{path_label}:{}", i + 1),
+                format!("banned pattern `{pat}` in simulator-critical module"),
+            ));
+        }
+        prev_line = line;
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for deterministic
+/// reporting order.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the determinism lint over every simulator-critical `.rs` file under
+/// `src_root` (a `rust/src` directory).  Returns the findings plus the
+/// number of files scanned.
+pub fn lint_sources(src_root: &Path) -> Result<(Vec<LintFinding>, usize), String> {
+    let mut files = Vec::new();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(src_root)
+        .map_err(|e| format!("read_dir {}: {e}", src_root.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if LINT_EXEMPT.contains(&name) {
+            continue;
+        }
+        if path.is_dir() {
+            rs_files(&path, &mut files)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            files.push(path);
+        }
+    }
+    let mut findings = Vec::new();
+    let n = files.len();
+    for path in &files {
+        let contents =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let label = path
+            .strip_prefix(src_root)
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|_| path.display().to_string());
+        findings.extend(scan_source(&label, &contents));
+    }
+    Ok((findings, n))
+}
+
+/// Locate the crate's `src/` directory: the compile-time manifest dir
+/// (valid whenever the binary runs in the checkout that built it, e.g.
+/// CI), else `rust/src` / `src` relative to the working directory.
+pub fn default_src_root() -> Option<PathBuf> {
+    let baked = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    for cand in [baked, PathBuf::from("rust/src"), PathBuf::from("src")] {
+        if cand.join("lib.rs").is_file() {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Registry-wide driver (the `lint` CLI subcommand)
+// ---------------------------------------------------------------------------
+
+/// Requests per rank to compile when statically verifying a spec's
+/// programs: enough chunk iterations to cross at least one re-placement
+/// epoch boundary when the spec re-places, small otherwise.
+fn representative_requests(spec: &ScenarioSpec) -> usize {
+    let s = &spec.serving;
+    let base = match spec.kind {
+        ScenarioKind::Context { requests_per_rank } => requests_per_rank.clamp(1, 4),
+        _ => 2,
+    };
+    let replace_active =
+        s.mode == ParallelMode::Dwdp && s.routing_skew > 0.0 && s.replacement_interval > 0;
+    if !replace_active {
+        return base;
+    }
+    let ct = crate::engine::chunk_tokens(s);
+    let min_isl = ((s.isl as f64 * s.isl_ratio) as usize).max(1);
+    let chunks_per_req = min_isl.div_ceil(ct).max(1);
+    base.max(s.replacement_interval / chunks_per_req + 1)
+}
+
+/// Compile the rank programs a spec's serving config produces (for a
+/// representative request count) and verify every one of them — the same
+/// always-on check `engine` runs, exercised statically across the whole
+/// registry by the `lint` subcommand.  Returns the number of rank
+/// programs verified.
+pub fn verify_spec_programs(spec: &ScenarioSpec) -> Result<usize, String> {
+    let n = representative_requests(spec);
+    let group = crate::engine::compile_context_group(&spec.hw, &spec.model, &spec.serving, n)?;
+    Ok(group.programs.len())
+}
+
+/// Aggregate result of a full lint run.
+pub struct LintReport {
+    pub findings: Vec<LintFinding>,
+    /// Scenario specs built and linted across the registry.
+    pub specs_checked: usize,
+    /// Rank programs compiled and verified (over deduplicated program
+    /// configurations).
+    pub programs_verified: usize,
+    /// Source files scanned by the determinism lint.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+}
+
+/// Fingerprint of the fields that shape a spec's compiled rank programs —
+/// sweeps vary arrival rates and pool sizes over identical serving
+/// configs, so program verification dedups on this.
+fn program_signature(spec: &ScenarioSpec, n_requests: usize) -> String {
+    format!("{:?}|{:?}|{:?}|{n_requests}", spec.hw, spec.model, spec.serving)
+}
+
+/// Run all three passes over the whole registry and the source tree.
+///
+/// `src_root` of `None` skips the determinism lint (the CLI resolves
+/// [`default_src_root`] and treats a miss as an error instead).
+pub fn run_full_lint(src_root: Option<&Path>) -> Result<LintReport, String> {
+    let mut findings = Vec::new();
+    let mut specs_checked = 0usize;
+    let mut programs_verified = 0usize;
+    let mut seen_programs: BTreeSet<String> = BTreeSet::new();
+
+    // Pass 2 first (cheap): every registry scenario's swept specs.
+    let mut specs_by_entry: BTreeMap<&'static str, Vec<ScenarioSpec>> = BTreeMap::new();
+    for entry in registry::registry() {
+        let specs = (entry.specs)()
+            .map_err(|e| format!("scenario {}: building swept specs failed: {e}", entry.id))?;
+        specs_checked += specs.len();
+        for spec in &specs {
+            findings.extend(lint_spec(spec));
+        }
+        specs_by_entry.insert(entry.id, specs);
+    }
+    if let Err(e) = lint_override_roundtrip() {
+        findings.push(finding(Severity::Error, "override-roundtrip", "config", e));
+    }
+
+    // Pass 1: compile + verify every distinct program configuration.
+    for (id, specs) in &specs_by_entry {
+        for spec in specs {
+            let n = representative_requests(spec);
+            if !seen_programs.insert(program_signature(spec, n)) {
+                continue;
+            }
+            match verify_spec_programs(spec) {
+                Ok(k) => programs_verified += k,
+                Err(e) => findings.push(finding(
+                    Severity::Error,
+                    "program-verify",
+                    &format!("{id}: {}", spec.label),
+                    e,
+                )),
+            }
+        }
+    }
+
+    // Pass 3: determinism lint over the sources.
+    let mut files_scanned = 0usize;
+    if let Some(root) = src_root {
+        let (src_findings, n) = lint_sources(root)?;
+        findings.extend(src_findings);
+        files_scanned = n;
+    }
+
+    Ok(LintReport { findings, specs_checked, programs_verified, files_scanned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::dwdp;
+    use crate::model::ChunkWorkload;
+    use crate::placement::ExpertPlacement;
+    use crate::util::Rng;
+
+    fn tiny_setup() -> (HardwareConfig, PaperModelConfig, ServingConfig, ExpertPlacement) {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::tiny();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        let p = ExpertPlacement::minimal(m.n_experts, 4);
+        (hw, m, s, p)
+    }
+
+    fn compiled(n_chunks: usize) -> (PaperModelConfig, Vec<ChunkSpec>, CompiledProgram) {
+        let (hw, m, s, p) = tiny_setup();
+        let mut rng = Rng::new(9);
+        let w = ChunkWorkload::uniform(1024, 512, &m);
+        let chunks: Vec<ChunkSpec> =
+            (0..n_chunks).map(|_| ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng)).collect();
+        let cp = dwdp::compile_rank_program(&hw, &m, &s, 0, &chunks);
+        (m, chunks, cp)
+    }
+
+    #[test]
+    fn valid_dwdp_program_verifies() {
+        let (m, chunks, cp) = compiled(3);
+        let expected = expected_plan_bytes(&m, &chunks);
+        verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, Some(expected)).unwrap();
+    }
+
+    #[test]
+    fn valid_migration_program_verifies() {
+        let (hw, m, s, p) = tiny_setup();
+        let mut rng = Rng::new(3);
+        let w = ChunkWorkload::uniform(1024, 512, &m);
+        let c0 = ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng);
+        let mut c1 = ChunkSpec::sample(w, &m, &s, &p, 0, &mut rng);
+        c1.migration = vec![(1, 0), (2, 5)];
+        let chunks = vec![c0, c1];
+        let cp = dwdp::compile_rank_program(&hw, &m, &s, 0, &chunks);
+        let expected = expected_plan_bytes(&m, &chunks);
+        verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, Some(expected)).unwrap();
+    }
+
+    #[test]
+    fn mutation_dropped_wait_is_leaked_plan() {
+        let (_, _, mut cp) = compiled(1);
+        // Drop the LAST WaitPrefetch: nothing re-fills the pipeline after
+        // it, so the final plan stays in flight forever.
+        let last_wait = cp
+            .steps
+            .iter()
+            .rposition(|s| matches!(s, Step::WaitPrefetch { .. }))
+            .expect("program has waits");
+        cp.steps.remove(last_wait);
+        let err = verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, None).unwrap_err();
+        assert!(matches!(err, VerifyError::LeakedPlan { rank: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn mutation_dropped_mid_wait_overflows_depth() {
+        let (_, _, mut cp) = compiled(1);
+        let first_wait = cp
+            .steps
+            .iter()
+            .position(|s| matches!(s, Step::WaitPrefetch { .. }))
+            .expect("program has waits");
+        cp.steps.remove(first_wait);
+        let err = verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, None).unwrap_err();
+        assert!(matches!(err, VerifyError::InFlightExceedsDepth { rank: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn mutation_duplicated_issue_is_double_issue() {
+        let (_, _, mut cp) = compiled(1);
+        let first_issue = cp
+            .steps
+            .iter()
+            .position(|s| matches!(s, Step::IssuePrefetch { .. }))
+            .expect("program has issues");
+        let dup = cp.steps[first_issue].clone();
+        cp.steps.insert(first_issue + 1, dup);
+        let err = verify_compiled(0, &cp, 8, None).unwrap_err();
+        assert!(matches!(err, VerifyError::DoubleIssue { rank: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn mutation_orphaned_plan_is_dead_plan() {
+        let (_, _, mut cp) = compiled(1);
+        cp.plans.push(((0, 9999), Vec::new()));
+        let err = verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, None).unwrap_err();
+        assert_eq!(err, VerifyError::DeadPlan { rank: 0, key: (0, 9999) });
+    }
+
+    #[test]
+    fn mutation_duplicate_key_is_key_collision() {
+        let (_, _, mut cp) = compiled(1);
+        let key = cp.plans[0].0;
+        cp.plans.push((key, Vec::new()));
+        let err = verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, None).unwrap_err();
+        assert_eq!(err, VerifyError::KeyCollision { rank: 0, key });
+    }
+
+    #[test]
+    fn mutation_wrong_bytes_is_mismatch() {
+        let (m, chunks, cp) = compiled(1);
+        let expected = expected_plan_bytes(&m, &chunks) + 10.0;
+        let err = verify_compiled(0, &cp, DWDP_INFLIGHT_DEPTH, Some(expected)).unwrap_err();
+        assert!(matches!(err, VerifyError::PlanBytesMismatch { rank: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn wait_without_issue_and_unknown_key() {
+        let plans = vec![((0usize, 0u32), Vec::new())];
+        let steps = vec![Step::WaitPrefetch { key: (0, 0) }];
+        let err = verify_rank_program(0, &steps, &plans, 1, None).unwrap_err();
+        assert_eq!(err, VerifyError::WaitBeforeIssue { rank: 0, step: 0, key: (0, 0) });
+        let steps = vec![Step::IssuePrefetch { key: (0, 7) }];
+        let err = verify_rank_program(0, &steps, &plans, 1, None).unwrap_err();
+        assert_eq!(err, VerifyError::UnknownKey { rank: 0, step: 0, key: (0, 7) });
+    }
+
+    #[test]
+    fn synthetic_over_depth_is_exceeded() {
+        let plans = vec![((0usize, 0u32), Vec::new()), ((0usize, 1u32), Vec::new())];
+        let steps = vec![
+            Step::IssuePrefetch { key: (0, 0) },
+            Step::IssuePrefetch { key: (0, 1) },
+            Step::WaitPrefetch { key: (0, 0) },
+            Step::WaitPrefetch { key: (0, 1) },
+        ];
+        let err = verify_rank_program(0, &steps, &plans, 1, None).unwrap_err();
+        assert_eq!(
+            err,
+            VerifyError::InFlightExceedsDepth { rank: 0, step: 1, depth: 1, in_flight: 2 }
+        );
+        // Depth 2 accepts the same pipeline.
+        verify_rank_program(0, &steps, &plans, 2, None).unwrap();
+    }
+
+    fn dep_programs() -> Vec<Vec<Step>> {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::tiny();
+        let mut s = ServingConfig::default_context(ParallelMode::Dep, 4);
+        s.validate(&m).unwrap();
+        let w = ChunkWorkload::uniform(1024, 512, &m);
+        (0..2).map(|r| crate::dep::compile_rank_program(&hw, &m, &s, r, &[w, w], None)).collect()
+    }
+
+    #[test]
+    fn lockstep_dep_programs_verify() {
+        verify_lockstep(&dep_programs()).unwrap();
+    }
+
+    #[test]
+    fn mutation_barrier_skew_is_lockstep_divergence() {
+        let mut programs = dep_programs();
+        // Swap rank 1's first two Barrier ids.
+        let barrier_idx: Vec<usize> = programs[1]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| matches!(s, Step::Barrier { .. }).then_some(i))
+            .take(2)
+            .collect();
+        let (a, b) = (barrier_idx[0], barrier_idx[1]);
+        programs[1].swap(a, b);
+        let err = verify_lockstep(&programs).unwrap_err();
+        assert!(
+            matches!(err, VerifyError::LockstepDivergence { rank: 1, step, .. } if step == a),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn mutation_truncated_rank_is_lockstep_divergence() {
+        let mut programs = dep_programs();
+        let last_barrier = programs[1]
+            .iter()
+            .rposition(|s| matches!(s, Step::Barrier { .. }))
+            .expect("dep program has barriers");
+        programs[1].truncate(last_barrier);
+        let err = verify_lockstep(&programs).unwrap_err();
+        assert!(matches!(err, VerifyError::LockstepDivergence { rank: 1, .. }), "{err}");
+    }
+
+    /// Satellite: every program compiled across a randomized sweep of
+    /// (redundancy x chunk counts x migration epochs x DWDP/DEP) passes
+    /// the always-on verifier inside `engine::compile_context_group` —
+    /// including the coupled cross-rank lockstep pass.
+    #[test]
+    fn property_randomized_sweep_compiles_verified() {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::tiny();
+        let mut rng = Rng::new(0xA11A);
+        for mode in [ParallelMode::Dwdp, ParallelMode::Dep] {
+            for &local in &[2usize, 4, 6] {
+                for &(skew, interval) in &[(0.0, 0usize), (1.0, 0), (1.0, 2), (1.5, 5)] {
+                    let mut s = ServingConfig::default_context(mode, 4);
+                    s.local_experts = local;
+                    s.routing_skew = skew;
+                    s.replacement_interval = interval;
+                    s.max_num_tokens = 4096;
+                    s.isl = *rng.choose(&[768usize, 1500, 3000]);
+                    s.prefetch_fraction = *rng.choose(&[0.15, 0.6, 1.0]);
+                    s.tdm = rng.f64() < 0.5;
+                    s.merge_elim = rng.f64() < 0.5;
+                    s.seed = rng.next_u64();
+                    s.validate(&m).unwrap();
+                    let n_req = 1 + (rng.next_u64() % 2) as usize;
+                    let g = crate::engine::compile_context_group(&hw, &m, &s, n_req)
+                        .unwrap_or_else(|e| panic!("{mode:?} local={local} skew={skew}: {e}"));
+                    assert_eq!(g.programs.len(), 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn override_surface_roundtrips_every_field() {
+        lint_override_roundtrip().unwrap();
+    }
+
+    #[test]
+    fn spec_linter_flags_contradictory_combos() {
+        let spec = crate::serving::Scenario::fleet()
+            .mode(ParallelMode::Dwdp)
+            .group(4)
+            .groups(2)
+            .kv_migrate(true)
+            .build()
+            .unwrap();
+        let findings = lint_spec(&spec);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.rule == "kv-migrate-without-sessions" && f.severity == Severity::Error),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn spec_linter_flags_unreachable_replacement_interval() {
+        let spec = crate::serving::Scenario::context()
+            .mode(ParallelMode::Dwdp)
+            .group(4)
+            .requests(1)
+            .routing_skew(1.0)
+            .replacement_interval(10_000)
+            .build()
+            .unwrap();
+        let findings = lint_spec(&spec);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.rule == "replacement-beyond-horizon" && f.severity == Severity::Error),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn registry_specs_build_and_lint_without_errors() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let mut total = 0usize;
+        for entry in registry::registry() {
+            let specs = (entry.specs)().unwrap_or_else(|e| panic!("{}: {e}", entry.id));
+            for spec in &specs {
+                let findings = lint_spec(spec);
+                assert!(
+                    !findings.iter().any(|f| f.severity == Severity::Error),
+                    "{}: {findings:?}",
+                    entry.id
+                );
+            }
+            total += specs.len();
+        }
+        assert!(total > 50, "registry sweeps should enumerate many specs, got {total}");
+    }
+
+    #[test]
+    fn scanner_flags_banned_patterns_and_honors_allowlist() {
+        let hash_map = ["Hash", "Map"].concat();
+        let now = ["Instant", "::now"].concat();
+        // Flagged: bare use in code.
+        let src = format!("let m = std::collections::{hash_map}::new();\n");
+        let f = scan_source("x.rs", &src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "hash-container");
+        assert_eq!(f[0].location, "x.rs:1");
+        // Suppressed: same-line allow marker.
+        let src = format!("let m = {hash_map}::new(); // det-lint: allow(hash-container) keyed\n");
+        assert!(scan_source("x.rs", &src).is_empty());
+        // Suppressed: preceding-line allow marker.
+        let src = format!("// det-lint: allow(wall-clock) real time\nlet t = {now}();\n");
+        assert!(scan_source("x.rs", &src).is_empty());
+        // A marker for the WRONG rule does not suppress.
+        let src = format!("let t = {now}(); // det-lint: allow(rng)\n");
+        assert_eq!(scan_source("x.rs", &src).len(), 1);
+        // Comment-only mentions are ignored.
+        let src = format!("/// docs about {hash_map} iteration\nlet x = 1;\n");
+        assert!(scan_source("x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn determinism_lint_passes_on_this_source_tree() {
+        let root = default_src_root().expect("source tree locatable");
+        let (findings, files) = lint_sources(&root).unwrap();
+        assert!(files > 20, "expected to scan the crate, saw {files} files");
+        assert!(
+            findings.is_empty(),
+            "unallowlisted determinism findings:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn verify_spec_programs_covers_context_and_replacement() {
+        std::env::set_var("DWDP_QUICK", "1");
+        // Tiny-model specs keep this fast while exercising both modes and
+        // the migration-epoch path end to end.
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::tiny();
+        for (mode, skew, interval) in [
+            (ParallelMode::Dep, 0.0, 0usize),
+            (ParallelMode::Dwdp, 0.0, 0),
+            (ParallelMode::Dwdp, 1.0, 3),
+        ] {
+            let mut s = ServingConfig::default_context(mode, 4);
+            s.routing_skew = skew;
+            s.replacement_interval = interval;
+            s.max_num_tokens = 4096;
+            s.isl = 2048;
+            s.validate(&m).unwrap();
+            let g = crate::engine::compile_context_group(&hw, &m, &s, 2).unwrap();
+            assert_eq!(g.programs.len(), 4);
+        }
+    }
+}

@@ -282,7 +282,7 @@ impl PaperModelConfig {
 }
 
 /// Per-experiment serving configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
     pub mode: ParallelMode,
     /// Execution-group size (DEP-N / DWDP-N).
@@ -577,6 +577,44 @@ pub fn apply_json_overrides(
         }
     }
     Ok(())
+}
+
+/// Encode a full [`ServingConfig`] as a JSON-override object whose keys are
+/// exactly the serving keys [`apply_json_overrides`] accepts.  The static
+/// linter ([`crate::analysis::lint_override_roundtrip`]) round-trips a probe
+/// config through this pair to prove the override surface covers every
+/// field — add a `ServingConfig` field without extending both sides and the
+/// lint fails.
+pub fn serving_override_json(s: &ServingConfig) -> Json {
+    crate::util::json::obj(vec![
+        ("mode", Json::Str(s.mode.name().to_string())),
+        ("group_size", Json::Num(s.group_size as f64)),
+        ("max_num_tokens", Json::Num(s.max_num_tokens as f64)),
+        ("isl", Json::Num(s.isl as f64)),
+        ("osl", Json::Num(s.osl as f64)),
+        ("isl_ratio", Json::Num(s.isl_ratio)),
+        ("isl_std", Json::Num(s.isl_std)),
+        ("local_experts", Json::Num(s.local_experts as f64)),
+        ("merge_elim", Json::Bool(s.merge_elim)),
+        ("tdm", Json::Bool(s.tdm)),
+        ("slice_bytes", Json::Num(s.slice_bytes as f64)),
+        ("prefetch_fraction", Json::Num(s.prefetch_fraction)),
+        ("routing_skew", Json::Num(s.routing_skew)),
+        ("replacement_interval", Json::Num(s.replacement_interval as f64)),
+        ("mtbf", Json::Num(s.mtbf)),
+        ("mttr", Json::Num(s.mttr)),
+        ("requeue_on_failure", Json::Bool(s.requeue_on_failure)),
+        ("racks", Json::Num(s.racks as f64)),
+        ("inter_rack_gbps", Json::Num(s.inter_rack_gbps)),
+        ("inter_rack_latency", Json::Num(s.inter_rack_latency)),
+        ("rack_blast_radius", Json::Bool(s.rack_blast_radius)),
+        ("sessions", Json::Bool(s.sessions)),
+        ("session_turns", Json::Num(s.session_turns as f64)),
+        ("think_time", Json::Num(s.think_time)),
+        ("kv_migrate", Json::Bool(s.kv_migrate)),
+        ("kv_capacity_gb", Json::Num(s.kv_capacity_gb)),
+        ("seed", Json::Num(s.seed as f64)),
+    ])
 }
 
 #[cfg(test)]

@@ -19,13 +19,14 @@
 //! 16` lands the per-iteration GroupedGEMM time at the paper's Table 1
 //! scale (342 µs ⇔ 2048 tokens at MNT = 32768).  See EXPERIMENTS.md §E3.
 
+use crate::analysis;
 use crate::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
 use crate::dep;
 use crate::dwdp::{self, ChunkSpec};
 use crate::metrics::Breakdown;
 use crate::model::ChunkWorkload;
 use crate::placement::{self, ExpertPlacement};
-use crate::sim::{SimResult, Simulation, Step};
+use crate::sim::{PlanKey, SimResult, Simulation, Slice, Step};
 use crate::util::stats;
 use crate::util::Rng;
 use crate::workload::{IslDist, RoutingSkew};
@@ -135,17 +136,42 @@ pub(crate) fn run_context(
     serving: &ServingConfig,
     n_requests: usize,
     enable_trace: bool,
-) -> ContextRun {
-    let chunk_tokens = chunk_tokens(serving);
+) -> Result<ContextRun, String> {
     let mut root = Rng::new(serving.seed);
-    // Per-rank request plans (independent streams -> imbalance).
-    let per_rank: Vec<Vec<PlannedRequest>> = (0..serving.group_size)
+    let per_rank = plan_context_requests(model, serving, n_requests, &mut root);
+    run_planned(hw, model, serving, per_rank, &mut root, enable_trace)
+}
+
+/// Per-rank request plans for a context run (independent streams ->
+/// imbalance); shared by [`run_context`] and [`compile_context_group`] so
+/// the static verifier sees byte-identical programs.
+fn plan_context_requests(
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    n_requests: usize,
+    root: &mut Rng,
+) -> Vec<Vec<PlannedRequest>> {
+    let chunk_tokens = chunk_tokens(serving);
+    (0..serving.group_size)
         .map(|r| {
             let mut rng = root.fork(r as u64);
             plan_requests(model, serving, n_requests, chunk_tokens, &mut rng)
         })
-        .collect();
-    run_planned(hw, model, serving, per_rank, &mut root, enable_trace)
+        .collect()
+}
+
+/// Compile (and statically verify) the rank programs a context run would
+/// execute, without running the DES — the `lint` subcommand's way of
+/// proving every registry scenario's programs hazard-free.
+pub(crate) fn compile_context_group(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    n_requests: usize,
+) -> Result<CompiledGroup, String> {
+    let mut root = Rng::new(serving.seed);
+    let per_rank = plan_context_requests(model, serving, n_requests, &mut root);
+    compile_group(hw, model, serving, per_rank, &mut root)
 }
 
 /// Run one explicit batch of prompts through the context-group DES:
@@ -162,7 +188,7 @@ pub(crate) fn run_context_batch(
     serving: &ServingConfig,
     isls: &[usize],
     enable_trace: bool,
-) -> ContextRun {
+) -> Result<ContextRun, String> {
     let n = serving.group_size;
     let chunk_tokens = chunk_tokens(serving);
     // Batch runs get their own stream family; folding the batch contents
@@ -183,20 +209,33 @@ pub(crate) fn run_context_batch(
     run_planned(hw, model, serving, per_rank, &mut root, enable_trace)
 }
 
-/// Shared core: compile per-rank plans into simulator programs and run the
-/// group to completion.  The compile forks draw stream ids `1000+r` /
-/// `2000+r` from whatever state `root` is in: `run_context` hands over a
-/// root that already consumed its `0..n` sampling forks (preserving the
-/// historical stream layout), while `run_context_batch` hands over a fresh
-/// batch-seeded root — both are valid, the streams just differ.
-fn run_planned(
+/// A fully compiled, statically verified context group: one program (with
+/// completion marks) plus its registered copy plans per rank, ready to run
+/// — or to be inspected by the `lint` subcommand without running.
+pub(crate) struct CompiledGroup {
+    pub(crate) programs: Vec<Vec<Step>>,
+    pub(crate) rank_plans: Vec<Vec<(PlanKey, Vec<Slice>)>>,
+    pub(crate) rank_tokens: Vec<f64>,
+    pub(crate) total_tokens: f64,
+    pub(crate) iterations: usize,
+}
+
+/// Compile per-rank plans into simulator programs, running the static
+/// verifier ([`crate::analysis`]) over every rank program before anything
+/// reaches the DES: a hazard in the hand-scheduled Issue/Wait pipeline is
+/// an `Err` here, not a plausible-but-wrong number downstream.  The
+/// compile forks draw stream ids `1000+r` / `2000+r` from whatever state
+/// `root` is in: `run_context` hands over a root that already consumed its
+/// `0..n` sampling forks (preserving the historical stream layout), while
+/// `run_context_batch` hands over a fresh batch-seeded root — both are
+/// valid, the streams just differ.
+fn compile_group(
     hw: &HardwareConfig,
     model: &PaperModelConfig,
     serving: &ServingConfig,
     mut per_rank: Vec<Vec<PlannedRequest>>,
     root: &mut Rng,
-    enable_trace: bool,
-) -> ContextRun {
+) -> Result<CompiledGroup, String> {
     let n = serving.group_size;
     let placement =
         ExpertPlacement::balanced(model.n_experts, n, serving.local_experts.max(1));
@@ -272,23 +311,19 @@ fn run_planned(
         }
     }
 
-    let mut sim = Simulation::new(hw, n, serving.seed ^ 0xD17D);
-    if enable_trace {
-        sim.enable_trace();
-    }
-    if serving.tdm {
-        sim.dst_inflight = hw.ce_inflight;
-    }
-
     let mut total_tokens = 0.0;
     let mut rank_tokens = vec![0.0f64; n];
     let mut iterations = 0usize;
+    let mut programs: Vec<Vec<Step>> = Vec::with_capacity(n);
+    let mut rank_plans: Vec<Vec<(PlanKey, Vec<Slice>)>> = Vec::with_capacity(n);
     for (r, reqs) in per_rank.iter().enumerate() {
         let (chunks, finishes) = rank_schedule(reqs);
         iterations = iterations.max(chunks.len());
         rank_tokens[r] = chunks.iter().map(|c| c.new_tokens as f64).sum::<f64>();
         total_tokens += rank_tokens[r];
         let mut program: Vec<Step>;
+        let plans: Vec<(PlanKey, Vec<Slice>)>;
+        let expected_bytes: f64;
         match serving.mode {
             ParallelMode::Dwdp => {
                 let mut rng = root.fork(1000 + r as u64);
@@ -319,10 +354,9 @@ fn run_planned(
                         spec
                     })
                     .collect();
+                expected_bytes = analysis::expected_plan_bytes(model, &specs);
                 let compiled = dwdp::compile_rank_program(hw, model, serving, r, &specs);
-                for (key, plan) in compiled.plans {
-                    sim.register_plan(key, plan);
-                }
+                plans = compiled.plans;
                 program = compiled.steps;
             }
             ParallelMode::Dep => {
@@ -345,10 +379,59 @@ fn run_planned(
                     .collect();
                 program =
                     dep::compile_rank_program(hw, model, serving, r, &chunks, Some(&skews));
+                plans = Vec::new();
+                expected_bytes = 0.0;
             }
         }
         // Insert request-completion marks.
         program = insert_marks(program, &finishes, serving.mode, model);
+        // Always-on static verification: the marked program is exactly
+        // what the DES will execute.
+        analysis::verify_rank_program(
+            r,
+            &program,
+            &plans,
+            analysis::DWDP_INFLIGHT_DEPTH,
+            Some(expected_bytes),
+        )
+        .map_err(|e| format!("rank-program verification failed: {e}"))?;
+        programs.push(program);
+        rank_plans.push(plans);
+    }
+    // Cross-rank lockstep check: DEP's Barrier/Collective sequences must
+    // agree on every rank (a DWDP group has none — the pass then also
+    // proves no stray sync op slipped into an async program).
+    analysis::verify_lockstep(&programs)
+        .map_err(|e| format!("lockstep verification failed: {e}"))?;
+
+    Ok(CompiledGroup { programs, rank_plans, rank_tokens, total_tokens, iterations })
+}
+
+/// Shared core: compile + verify via [`compile_group`], then run the group
+/// to completion on the DES.
+fn run_planned(
+    hw: &HardwareConfig,
+    model: &PaperModelConfig,
+    serving: &ServingConfig,
+    per_rank: Vec<Vec<PlannedRequest>>,
+    root: &mut Rng,
+    enable_trace: bool,
+) -> Result<ContextRun, String> {
+    let n = serving.group_size;
+    let group = compile_group(hw, model, serving, per_rank, root)?;
+    let CompiledGroup { programs, rank_plans, rank_tokens, total_tokens, iterations } = group;
+
+    let mut sim = Simulation::new(hw, n, serving.seed ^ 0xD17D);
+    if enable_trace {
+        sim.enable_trace();
+    }
+    if serving.tdm {
+        sim.dst_inflight = hw.ce_inflight;
+    }
+    for (r, (program, plans)) in programs.into_iter().zip(rank_plans).enumerate() {
+        for (key, plan) in plans {
+            sim.register_plan(key, plan);
+        }
         sim.set_program(r, program);
     }
 
@@ -387,7 +470,7 @@ fn run_planned(
     let mean_freq =
         res.ranks.iter().map(|r| r.mean_freq).sum::<f64>() / res.ranks.len() as f64;
 
-    ContextRun {
+    Ok(ContextRun {
         sim: res,
         total_tokens,
         makespan,
@@ -396,7 +479,7 @@ fn run_planned(
         per_layer_breakdown,
         iterations,
         mean_freq,
-    }
+    })
 }
 
 /// DEP weight-level imbalance: the load factor of rank `r`'s expert shard
@@ -482,7 +565,7 @@ mod tests {
     #[test]
     fn dep_run_produces_sync_and_comm() {
         let (hw, m, s) = setup(ParallelMode::Dep);
-        let run = run_context(&hw, &m, &s, 3, false);
+        let run = run_context(&hw, &m, &s, 3, false).unwrap();
         assert!(run.tps_per_gpu > 0.0);
         assert!(run.per_layer_breakdown.get(Category::Communication) > 0.0);
         assert!(run.per_layer_breakdown.get(Category::Synchronization) > 0.0);
@@ -492,7 +575,7 @@ mod tests {
     #[test]
     fn dwdp_run_has_p2p_but_no_collectives() {
         let (hw, m, s) = setup(ParallelMode::Dwdp);
-        let run = run_context(&hw, &m, &s, 3, false);
+        let run = run_context(&hw, &m, &s, 3, false).unwrap();
         assert!(run.tps_per_gpu > 0.0);
         assert_eq!(run.per_layer_breakdown.get(Category::Communication), 0.0);
         assert!(run.per_layer_breakdown.get(Category::P2pCopy) > 0.0);
@@ -502,9 +585,9 @@ mod tests {
     fn dwdp_beats_dep_under_imbalance() {
         let (hw, m, mut s) = setup(ParallelMode::Dep);
         s.isl_ratio = 0.5; // strong request-level imbalance
-        let dep = run_context(&hw, &m, &s, 4, false);
+        let dep = run_context(&hw, &m, &s, 4, false).unwrap();
         s.mode = ParallelMode::Dwdp;
-        let dwdp = run_context(&hw, &m, &s, 4, false);
+        let dwdp = run_context(&hw, &m, &s, 4, false).unwrap();
         let speedup = dwdp.tps_per_gpu / dep.tps_per_gpu;
         assert!(speedup > 1.0, "speedup {speedup}");
     }
@@ -512,7 +595,7 @@ mod tests {
     #[test]
     fn ttft_marks_recorded_per_request() {
         let (hw, m, s) = setup(ParallelMode::Dwdp);
-        let run = run_context(&hw, &m, &s, 3, false);
+        let run = run_context(&hw, &m, &s, 3, false).unwrap();
         let n_marks: usize = run.sim.ranks.iter().map(|r| r.marks.len()).sum();
         assert_eq!(n_marks, 3 * 4);
         assert!(run.median_ttft > 0.0);
@@ -522,8 +605,8 @@ mod tests {
     #[test]
     fn deterministic_across_runs() {
         let (hw, m, s) = setup(ParallelMode::Dwdp);
-        let a = run_context(&hw, &m, &s, 2, false);
-        let b = run_context(&hw, &m, &s, 2, false);
+        let a = run_context(&hw, &m, &s, 2, false).unwrap();
+        let b = run_context(&hw, &m, &s, 2, false).unwrap();
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.median_ttft, b.median_ttft);
     }
@@ -534,8 +617,8 @@ mod tests {
         s.routing_skew = 1.5;
         s.local_experts = 6; // redundant placement over the 8 tiny experts
         s.replacement_interval = 2;
-        let a = run_context(&hw, &m, &s, 4, false);
-        let b = run_context(&hw, &m, &s, 4, false);
+        let a = run_context(&hw, &m, &s, 4, false).unwrap();
+        let b = run_context(&hw, &m, &s, 4, false).unwrap();
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.median_ttft, b.median_ttft);
         assert!(a.makespan > 0.0 && a.makespan.is_finite());
@@ -546,7 +629,7 @@ mod tests {
         assert_eq!(n_marks, 4 * 4);
         // The static-placement variant runs the same workload.
         s.replacement_interval = 0;
-        let stat = run_context(&hw, &m, &s, 4, false);
+        let stat = run_context(&hw, &m, &s, 4, false).unwrap();
         assert!(stat.makespan > 0.0 && stat.makespan.is_finite());
         assert_eq!(
             stat.total_tokens, a.total_tokens,
@@ -557,7 +640,7 @@ mod tests {
     #[test]
     fn trace_enabled_collects_spans() {
         let (hw, m, s) = setup(ParallelMode::Dwdp);
-        let run = run_context(&hw, &m, &s, 1, true);
+        let run = run_context(&hw, &m, &s, 1, true).unwrap();
         assert!(!run.sim.trace.spans.is_empty());
     }
 

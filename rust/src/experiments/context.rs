@@ -11,7 +11,7 @@ use super::calib;
 use super::ratio;
 use crate::config::ParallelMode;
 use crate::model::Category;
-use crate::serving::{Fidelity, RunReport, Scenario, ServingStack};
+use crate::serving::{Fidelity, RunReport, Scenario, ScenarioSpec, ServingStack};
 use crate::trace::TraceSink;
 use crate::util::table::{f, us, Table};
 
@@ -380,6 +380,120 @@ pub fn ablation_redundancy() -> Table {
         ]);
     }
     t
+}
+
+/// The swept scenario specs behind each context regenerator, for the
+/// registry's static linter — every configuration a regenerator runs,
+/// built (and so validated) without running anything.
+///
+/// Keep each arm's axes in sync with its regenerator above; the linter
+/// covers exactly what is enumerated here.
+pub fn registry_specs(id: &str) -> Result<Vec<ScenarioSpec>, String> {
+    use ParallelMode::{Dep, Dwdp};
+    let mut scns: Vec<Scenario> = Vec::new();
+    match id {
+        "fig1" => {
+            for ratio_in in [1.0, 0.9, 0.8, 0.65, 0.5] {
+                scns.push(calib::context_scenario(Dep, 4).isl(8192).ratio(ratio_in));
+            }
+        }
+        "table1" => {
+            scns.push(calib::context_scenario(Dep, 4).isl(8192).ratio(0.8).mnt(32768));
+            scns.push(
+                calib::context_scenario(Dwdp, 4)
+                    .isl(8192)
+                    .ratio(0.8)
+                    .mnt(32768)
+                    .merge_elim(false)
+                    .tdm(false),
+            );
+        }
+        "table3a" => {
+            for isl in [1024usize, 8192, 16384, 32768] {
+                for mode in [Dep, Dwdp] {
+                    scns.push(calib::context_scenario(mode, 4).isl(isl).mnt(32768));
+                }
+            }
+        }
+        "table3b" => {
+            for mnt in [16384usize, 32768] {
+                for mode in [Dep, Dwdp] {
+                    scns.push(calib::context_scenario(mode, 4).isl(8192).mnt(mnt));
+                }
+            }
+        }
+        "table3c" => {
+            for std in [0.0f64, 1024.0, 2048.0, 4096.0] {
+                for mode in [Dep, Dwdp] {
+                    scns.push(
+                        calib::context_scenario(mode, 4).isl(16384).ratio(1.0).isl_std(std),
+                    );
+                }
+            }
+        }
+        "table3d" => {
+            for g in [3usize, 4] {
+                for mode in [Dep, Dwdp] {
+                    scns.push(calib::context_scenario(mode, g).isl(16384).mnt(32768));
+                }
+            }
+        }
+        "table4" => {
+            for isl_ratio in [0.5f64, 0.8] {
+                for mnt in [16384usize, 32768] {
+                    let base =
+                        |mode| calib::context_scenario(mode, 4).isl(8192).ratio(isl_ratio).mnt(mnt);
+                    scns.push(base(Dep));
+                    scns.push(base(Dwdp).merge_elim(true).tdm(false));
+                    scns.push(base(Dwdp).merge_elim(true).tdm(true));
+                }
+            }
+        }
+        "merge_elim" => {
+            for elim in [false, true] {
+                scns.push(
+                    calib::context_scenario(Dwdp, 4)
+                        .isl(8192)
+                        .mnt(32768)
+                        .tdm(false)
+                        .merge_elim(elim),
+                );
+            }
+        }
+        "fig4" => {
+            scns.push(
+                calib::context_scenario(Dwdp, 4)
+                    .isl(8192)
+                    .ratio(0.5)
+                    .mnt(16384)
+                    .tdm(false)
+                    .merge_elim(true)
+                    .trace(true),
+            );
+        }
+        "ablation_slice" => {
+            for &slice in &[16usize << 20, 4 << 20, 1 << 20, 256 << 10, 64 << 10] {
+                scns.push(
+                    calib::context_scenario(Dwdp, 4).ratio(0.5).mnt(16384).slice_bytes(slice),
+                );
+            }
+        }
+        "ablation_redundancy" => {
+            for &local in &[64usize, 96, 128, 192] {
+                scns.push(calib::context_scenario(Dwdp, 4).mnt(16384).local_experts(local));
+            }
+        }
+        "ablation_fraction" => {
+            scns.push(calib::context_scenario(Dep, 4).isl(8192));
+            for &frac in &[0.03f64, 0.07, 0.15, 0.3, 0.6, 1.0] {
+                scns.push(
+                    calib::context_scenario(Dwdp, 4).isl(8192).prefetch_fraction(frac),
+                );
+            }
+        }
+        other => return Err(format!("no context specs registered for {other:?}")),
+    }
+    scns.into_iter().map(|s| s.build()).collect()
 }
 
 /// Ablation — sensitivity of the Table-1 calibration to the on-demand

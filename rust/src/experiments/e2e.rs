@@ -11,7 +11,7 @@
 
 use super::calib;
 use crate::config::ParallelMode;
-use crate::serving::{Fidelity, RunReport, ServingStack};
+use crate::serving::{Fidelity, RunReport, Scenario, ScenarioSpec, ServingStack};
 use crate::util::table::{f, Table};
 
 fn n_reqs() -> usize {
@@ -26,7 +26,7 @@ fn n_reqs() -> usize {
 /// generation pool size.  Memoized per mode (fig5/table5/table6 share it).
 pub fn sweep(mode: ParallelMode) -> Vec<RunReport> {
     static CACHE: std::sync::OnceLock<
-        std::sync::Mutex<std::collections::HashMap<&'static str, Vec<RunReport>>>,
+        std::sync::Mutex<std::collections::BTreeMap<&'static str, Vec<RunReport>>>,
     > = std::sync::OnceLock::new();
     let cache = CACHE.get_or_init(Default::default);
     if let Some(hit) = cache.lock().unwrap().get(mode.name()) {
@@ -37,27 +37,41 @@ pub fn sweep(mode: ParallelMode) -> Vec<RunReport> {
     pts
 }
 
-fn sweep_uncached(mode: ParallelMode) -> Vec<RunReport> {
-    let mut pts = Vec::new();
+/// The frontier sweep's full scenario grid for one mode — the single
+/// source of truth for both [`sweep`] and the static linter's registry
+/// specs (fig5/table5/table6 enumerate through here, so the linter can
+/// never drift from what actually runs).
+pub fn sweep_scenarios(mode: ParallelMode) -> Vec<Scenario> {
+    let mut scns = Vec::new();
     for &n_ctx in &[1usize, 2, 3, 4, 6] {
         for &n_gen in &[16usize, 32] {
             for &rate in &[2.0f64, 5.0, 9.0, 11.0, 12.5, 14.0, 15.0, 16.0] {
-                let spec = calib::e2e_scenario(mode)
-                    .ctx_groups(n_ctx)
-                    .gen_gpus(n_gen)
-                    .rate(rate)
-                    .requests(n_reqs())
-                    .build()
-                    .expect("e2e scenario");
-                pts.push(
-                    ServingStack::new(spec, Fidelity::Analytic)
-                        .run()
-                        .expect("analytic backend"),
+                scns.push(
+                    calib::e2e_scenario(mode)
+                        .ctx_groups(n_ctx)
+                        .gen_gpus(n_gen)
+                        .rate(rate)
+                        .requests(n_reqs()),
                 );
             }
         }
     }
-    pts
+    scns
+}
+
+/// The swept specs for the registry's static linter.
+pub fn registry_specs(mode: ParallelMode) -> Result<Vec<ScenarioSpec>, String> {
+    sweep_scenarios(mode).into_iter().map(|s| s.build()).collect()
+}
+
+fn sweep_uncached(mode: ParallelMode) -> Vec<RunReport> {
+    sweep_scenarios(mode)
+        .into_iter()
+        .map(|scn| {
+            let spec = scn.build().expect("e2e scenario");
+            ServingStack::new(spec, Fidelity::Analytic).run().expect("analytic backend")
+        })
+        .collect()
 }
 
 /// Keep only Pareto-optimal points (maximize both TPS/user and TPS/GPU).

@@ -13,7 +13,7 @@
 
 use crate::config::ParallelMode;
 use crate::fleet::{available_threads, rack_axis, run_sweep, ClusterPolicy, SweepPoint};
-use crate::serving::{Fidelity, RunReport, Scenario};
+use crate::serving::{Fidelity, RunReport, Scenario, ScenarioSpec};
 use crate::util::table::{f, Table};
 use crate::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, WorkloadTrace};
 
@@ -640,6 +640,123 @@ pub fn sessions() -> Table {
     row.resize(SESSIONS_HEADER.len(), "-".into());
     t.row(row);
     t
+}
+
+/// The swept specs for the registry's static linter — one arm per fleet
+/// regenerator, mirroring the exact scenario grids above (same builders,
+/// same axes) so `dwdp-repro lint` verifies what actually runs.  The
+/// trace-replay rows use the in-memory recording (no temp-file round
+/// trip: the linter only needs the compiled programs, not the I/O path).
+pub fn registry_specs(id: &str) -> Result<Vec<ScenarioSpec>, String> {
+    let mut scns: Vec<Scenario> = Vec::new();
+    match id {
+        "fleet_frontier" => {
+            let rate = 6.0;
+            let trace = recorded_trace(rate);
+            let arrivals: Vec<ArrivalProcess> = vec![
+                ArrivalProcess::Poisson { rate },
+                ArrivalProcess::GammaBurst { rate, cv2: 8.0 },
+                ArrivalProcess::Replay { trace },
+            ];
+            for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+                for process in &arrivals {
+                    scns.push(fleet_scenario(mode, 4).arrival(process.clone()));
+                }
+            }
+        }
+        "fleet_burst" => {
+            for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+                for cv2 in [1.0, 4.0, 16.0] {
+                    scns.push(
+                        fleet_scenario(mode, 4)
+                            .arrival(ArrivalProcess::GammaBurst { rate: 6.0, cv2 }),
+                    );
+                }
+            }
+        }
+        "fleet_trace" => {
+            let trace = recorded_trace(10.0);
+            for policy in [
+                ClusterPolicy::RoundRobin,
+                ClusterPolicy::LeastOutstandingTokens,
+                ClusterPolicy::SloAdmission { max_wait: 1.0 },
+            ] {
+                scns.push(
+                    fleet_scenario(ParallelMode::Dwdp, 4)
+                        .arrival(ArrivalProcess::Replay { trace: trace.clone() })
+                        .cluster_policy(policy),
+                );
+            }
+        }
+        "replacement_skew" => {
+            for &skew in &[0.0, 1.0, 1.5] {
+                for &local in &[64usize, 96] {
+                    for interval in [0usize, 8] {
+                        scns.push(replacement_scenario(
+                            ParallelMode::Dwdp,
+                            skew,
+                            local,
+                            interval,
+                        ));
+                    }
+                }
+                scns.push(replacement_scenario(ParallelMode::Dep, skew, 64, 0));
+            }
+        }
+        "fleet_churn" => {
+            for mode in [ParallelMode::Dep, ParallelMode::Dwdp] {
+                for mtbf in [0.0, 20.0, 5.0] {
+                    scns.push(churn_scenario(mode, mtbf, 2.0));
+                }
+            }
+        }
+        "multirack" => {
+            let mut specs = Vec::new();
+            let blind = multirack_scenario(ClusterPolicy::LeastOutstandingTokens, 1);
+            specs.extend(
+                rack_axis(&blind, &[1, 2, 4], Fidelity::Analytic)?
+                    .into_iter()
+                    .map(|p| p.spec),
+            );
+            let local = multirack_scenario(ClusterPolicy::RackLocalFirst, 1);
+            specs.extend(
+                rack_axis(&local, &[2, 4], Fidelity::Analytic)?.into_iter().map(|p| p.spec),
+            );
+            for blast in [false, true] {
+                scns.push(
+                    multirack_scenario(ClusterPolicy::RackLocalFirst, 2)
+                        .mtbf(15.0)
+                        .mttr(2.0)
+                        .requeue_on_failure(true)
+                        .rack_blast_radius(blast),
+                );
+            }
+            for scn in scns {
+                specs.push(scn.build()?);
+            }
+            return Ok(specs);
+        }
+        "sessions" => {
+            for policy in [
+                ClusterPolicy::PrefixAffinity,
+                ClusterPolicy::LeastOutstandingTokens,
+                ClusterPolicy::SloAdmission { max_wait: 1.0 },
+            ] {
+                for think in [0.5, 4.0] {
+                    scns.push(sessions_scenario(policy, think));
+                }
+            }
+            scns.push(
+                sessions_scenario(ClusterPolicy::PrefixAffinity, 0.5)
+                    .mtbf(15.0)
+                    .mttr(2.0)
+                    .requeue_on_failure(true)
+                    .slo(1e4, 1e4),
+            );
+        }
+        other => return Err(format!("no fleet spec enumerator for '{other}'")),
+    }
+    scns.into_iter().map(|s| s.build()).collect()
 }
 
 #[cfg(test)]

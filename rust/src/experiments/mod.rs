@@ -18,7 +18,7 @@ pub mod power;
 use crate::config::ParallelMode;
 use crate::contention::{contention_distribution, monte_carlo_contention};
 use crate::roofline::{crossover_isl, fig3_sweep};
-use crate::serving::Scenario;
+use crate::serving::{Scenario, ScenarioSpec};
 use crate::util::table::{pct, speedup, us, Table};
 
 /// Calibration presets (see EXPERIMENTS.md §Calibration for derivations).
@@ -114,6 +114,16 @@ pub fn fig3() -> Table {
         ]);
     }
     t
+}
+
+/// The fig3 spec for the registry's static linter — the roofline sweep
+/// reuses this single calibrated scenario across all ISLs.
+pub fn fig3_registry_specs() -> Result<Vec<ScenarioSpec>, String> {
+    Ok(vec![Scenario::context()
+        .mode(ParallelMode::Dwdp)
+        .group(4)
+        .ce_bw(calib::FIG3_CE_BW)
+        .build()?])
 }
 
 /// E4 — Table 2: contention probabilities under the random model, with a

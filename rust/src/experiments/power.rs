@@ -165,7 +165,7 @@ mod tests {
     #[test]
     fn fig7_trace_has_all_patterns() {
         let tr = fig7_trace();
-        let tracks: std::collections::HashSet<&str> =
+        let tracks: std::collections::BTreeSet<&str> =
             tr.spans.iter().map(|s| s.track.as_str()).collect();
         assert!(tracks.iter().any(|t| t.starts_with("Intermittent")));
         assert!(tracks.iter().any(|t| t.starts_with("Short-Duration")));

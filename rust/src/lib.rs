@@ -67,6 +67,7 @@
     clippy::uninlined_format_args
 )]
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod contention;

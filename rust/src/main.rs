@@ -55,6 +55,7 @@ fn run(args: &[String]) -> i32 {
         "serve" => serve(&flags),
         "fleet" => fleet_cmd(&flags),
         "bench" => bench_cmd(&flags),
+        "lint" => lint_cmd(&flags),
         "info" => {
             info();
             0
@@ -628,6 +629,47 @@ fn report_table(r: &RunReport) -> Table {
         t.row(vec![k.clone(), v.clone()]);
     }
     t
+}
+
+/// `lint` — the static analysis gate: validate every registry scenario's
+/// swept specs, verify their compiled rank programs, round-trip the JSON
+/// override surface, and scan the source tree for determinism hazards.
+/// Exit 0 when clean (warnings allowed), 1 on any error finding, 2 when
+/// the linter itself could not run.
+fn lint_cmd(flags: &HashMap<String, String>) -> i32 {
+    std::env::set_var("DWDP_QUICK", "1");
+    let src_root = match flags.get("src") {
+        Some(dir) => Some(std::path::PathBuf::from(dir)),
+        None => {
+            let found = dwdp::analysis::default_src_root();
+            if found.is_none() {
+                eprintln!("lint: cannot locate rust/src (pass --src DIR)");
+                return 2;
+            }
+            found
+        }
+    };
+    let report = match dwdp::analysis::run_full_lint(src_root.as_deref()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint failed to run: {e}");
+            return 2;
+        }
+    };
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    let (errors, warnings) = (report.errors(), report.warnings());
+    println!(
+        "lint: {} specs validated, {} compiled programs verified, {} source files scanned: \
+         {errors} errors, {warnings} warnings",
+        report.specs_checked, report.programs_verified, report.files_scanned
+    );
+    if errors > 0 {
+        1
+    } else {
+        0
+    }
 }
 
 fn info() {

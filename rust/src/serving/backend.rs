@@ -474,12 +474,32 @@ pub fn run_fleet_analytic_logged(
 /// offsets.
 struct DesPrefill<'a> {
     spec: &'a ScenarioSpec,
+    /// First compile/verification error hit by any batch.  The
+    /// [`PrefillOffsets`] trait is infallible (the analytic model cannot
+    /// fail), so the DES adapter parks the error here and the backend
+    /// surfaces it after the serving loop returns.
+    err: std::cell::RefCell<Option<String>>,
 }
 
-impl DesPrefill<'_> {
+impl<'a> DesPrefill<'a> {
+    fn new(spec: &'a ScenarioSpec) -> Self {
+        DesPrefill { spec, err: std::cell::RefCell::new(None) }
+    }
+
     fn run_batch(&self, serving: &crate::config::ServingConfig, isls: &[usize]) -> Vec<f64> {
-        let run =
-            engine::run_context_batch(&self.spec.hw, &self.spec.model, serving, isls, false);
+        let run = match engine::run_context_batch(
+            &self.spec.hw,
+            &self.spec.model,
+            serving,
+            isls,
+            false,
+        ) {
+            Ok(run) => run,
+            Err(e) => {
+                self.err.borrow_mut().get_or_insert(e);
+                return vec![0.0; isls.len()];
+            }
+        };
         let mut offsets = vec![0.0f64; isls.len()];
         for rank in &run.sim.ranks {
             for &(tag, t) in &rank.marks {
@@ -530,7 +550,7 @@ impl ExecutionBackend for DesBackend {
                     &spec.serving,
                     requests_per_rank,
                     spec.capture_trace,
-                );
+                )?;
                 report.n_requests = spec.serving.group_size * requests_per_rank;
                 report.total_tokens = run.total_tokens;
                 report.makespan = run.makespan;
@@ -556,8 +576,11 @@ impl ExecutionBackend for DesBackend {
                             .into(),
                     );
                 }
-                let prefill = DesPrefill { spec };
+                let prefill = DesPrefill::new(spec);
                 let p = disagg_sim(spec)?.run_with(n_requests, arrival_rate, &prefill);
+                if let Some(e) = prefill.err.into_inner() {
+                    return Err(e);
+                }
                 report.n_requests = p.n_requests;
                 report.tps_per_user = p.tps_user;
                 report.tps_per_gpu = p.tps_gpu;
@@ -574,8 +597,11 @@ impl ExecutionBackend for DesBackend {
                             .into(),
                     );
                 }
-                let prefill = DesPrefill { spec };
+                let prefill = DesPrefill::new(spec);
                 let out = fleet::simulate(spec, &prefill)?;
+                if let Some(e) = prefill.err.into_inner() {
+                    return Err(e);
+                }
                 fill_fleet_report(&mut report, spec, &out);
                 Ok(report)
             }
@@ -702,6 +728,7 @@ impl ExecutionBackend for PjrtBackend {
             batcher.push(r);
         }
 
+        // det-lint: allow(wall-clock) PJRT runs real hardware in real time.
         let serve_start = Instant::now();
         let mut metrics = ServingMetrics::new();
         let mut total_prefetch_bytes = 0u64;

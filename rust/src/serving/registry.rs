@@ -7,6 +7,7 @@
 //! or docs edits.
 
 use crate::experiments;
+use crate::serving::ScenarioSpec;
 use crate::trace::TraceSink;
 use crate::util::table::Table;
 
@@ -32,7 +33,66 @@ pub struct ScenarioEntry {
     /// Grouping for the usage text: "context", "e2e", "power", "analysis".
     pub group: &'static str,
     pub run: fn() -> RunArtifact,
+    /// The scenario specs this regenerator sweeps — the static linter
+    /// (`dwdp-repro lint`) validates and verifies every one without
+    /// running the sweep.  Empty for purely analytic entries (no
+    /// [`ScenarioSpec`] behind them).
+    pub specs: fn() -> Result<Vec<ScenarioSpec>, String>,
 }
+
+/// Purely analytic entries (table2's contention closed form, table7's
+/// DVFS trace) have no scenario specs to lint.
+fn specs_none() -> Result<Vec<ScenarioSpec>, String> {
+    Ok(Vec::new())
+}
+fn specs_fig3() -> Result<Vec<ScenarioSpec>, String> {
+    experiments::fig3_registry_specs()
+}
+/// fig5/table5/table6 all consume the same memoized frontier sweep, so
+/// they share one enumerator over both modes.
+fn specs_e2e() -> Result<Vec<ScenarioSpec>, String> {
+    use crate::config::ParallelMode;
+    let mut specs = experiments::e2e::registry_specs(ParallelMode::Dep)?;
+    specs.extend(experiments::e2e::registry_specs(ParallelMode::Dwdp)?);
+    Ok(specs)
+}
+macro_rules! context_specs {
+    ($($f:ident => $id:literal),* $(,)?) => {
+        $(fn $f() -> Result<Vec<ScenarioSpec>, String> {
+            experiments::context::registry_specs($id)
+        })*
+    };
+}
+context_specs!(
+    specs_fig1 => "fig1",
+    specs_fig4 => "fig4",
+    specs_table1 => "table1",
+    specs_table3a => "table3a",
+    specs_table3b => "table3b",
+    specs_table3c => "table3c",
+    specs_table3d => "table3d",
+    specs_table4 => "table4",
+    specs_merge_elim => "merge_elim",
+    specs_ablation_slice => "ablation_slice",
+    specs_ablation_redundancy => "ablation_redundancy",
+    specs_ablation_fraction => "ablation_fraction",
+);
+macro_rules! fleet_specs {
+    ($($f:ident => $id:literal),* $(,)?) => {
+        $(fn $f() -> Result<Vec<ScenarioSpec>, String> {
+            experiments::fleet::registry_specs($id)
+        })*
+    };
+}
+fleet_specs!(
+    specs_fleet_frontier => "fleet_frontier",
+    specs_fleet_burst => "fleet_burst",
+    specs_fleet_trace => "fleet_trace",
+    specs_replacement_skew => "replacement_skew",
+    specs_fleet_churn => "fleet_churn",
+    specs_multirack => "multirack",
+    specs_sessions => "sessions",
+);
 
 fn run_fig1() -> RunArtifact {
     RunArtifact::table(experiments::context::fig1())
@@ -117,150 +177,175 @@ static REGISTRY: &[ScenarioEntry] = &[
         title: "DEP sync overhead vs workload imbalance",
         group: "context",
         run: run_fig1,
+        specs: specs_fig1,
     },
     ScenarioEntry {
         id: "fig3",
         title: "roofline compute/prefetch ratios vs ISL",
         group: "analysis",
         run: run_fig3,
+        specs: specs_fig3,
     },
     ScenarioEntry {
         id: "fig4",
         title: "many-to-one contention trace (no TDM)",
         group: "context",
         run: run_fig4,
+        specs: specs_fig4,
     },
     ScenarioEntry {
         id: "table1",
         title: "context per-layer latency breakdown, DEP4 vs DWDP4",
         group: "context",
         run: run_table1,
+        specs: specs_table1,
     },
     ScenarioEntry {
         id: "table2",
         title: "analytic contention distribution Pr[C=c]",
         group: "analysis",
         run: run_table2,
+        specs: specs_none,
     },
     ScenarioEntry {
         id: "table3a",
         title: "speedup vs ISL",
         group: "context",
         run: run_table3a,
+        specs: specs_table3a,
     },
     ScenarioEntry {
         id: "table3b",
         title: "speedup vs MNT",
         group: "context",
         run: run_table3b,
+        specs: specs_table3b,
     },
     ScenarioEntry {
         id: "table3c",
         title: "speedup vs ISL std (imbalance)",
         group: "context",
         run: run_table3c,
+        specs: specs_table3c,
     },
     ScenarioEntry {
         id: "table3d",
         title: "speedup vs group size",
         group: "context",
         run: run_table3d,
+        specs: specs_table3d,
     },
     ScenarioEntry {
         id: "table4",
         title: "TDM contention mitigation",
         group: "context",
         run: run_table4,
+        specs: specs_table4,
     },
     ScenarioEntry {
         id: "merge_elim",
         title: "split-weight merge-elimination ablation",
         group: "context",
         run: run_merge_elim,
+        specs: specs_merge_elim,
     },
     ScenarioEntry {
         id: "fig5",
         title: "end-to-end Pareto frontier, DEP vs DWDP",
         group: "e2e",
         run: run_fig5,
+        specs: specs_e2e,
     },
     ScenarioEntry {
         id: "table5",
         title: "e2e speedups per TPS/user range",
         group: "e2e",
         run: run_table5,
+        specs: specs_e2e,
     },
     ScenarioEntry {
         id: "table6",
         title: "e2e median TTFT comparison",
         group: "e2e",
         run: run_table6,
+        specs: specs_e2e,
     },
     ScenarioEntry {
         id: "table7",
         title: "overlap patterns vs DVFS frequency",
         group: "power",
         run: run_table7,
+        specs: specs_none,
     },
     ScenarioEntry {
         id: "ablation_slice",
         title: "TDM slice-size sweep",
         group: "context",
         run: run_ablation_slice,
+        specs: specs_ablation_slice,
     },
     ScenarioEntry {
         id: "ablation_redundancy",
         title: "redundant expert placement sweep",
         group: "context",
         run: run_ablation_redundancy,
+        specs: specs_ablation_redundancy,
     },
     ScenarioEntry {
         id: "ablation_fraction",
         title: "on-demand prefetch fraction sweep",
         group: "context",
         run: run_ablation_fraction,
+        specs: specs_ablation_fraction,
     },
     ScenarioEntry {
         id: "fleet_frontier",
         title: "cluster frontier: DWDP vs DEP, 4 groups, 3 arrival processes",
         group: "fleet",
         run: run_fleet_frontier,
+        specs: specs_fleet_frontier,
     },
     ScenarioEntry {
         id: "fleet_burst",
         title: "burst robustness: rising CV2 at fixed mean arrival rate",
         group: "fleet",
         run: run_fleet_burst,
+        specs: specs_fleet_burst,
     },
     ScenarioEntry {
         id: "fleet_trace",
         title: "trace replay: one recorded workload, 3 cluster policies",
         group: "fleet",
         run: run_fleet_trace,
+        specs: specs_fleet_trace,
     },
     ScenarioEntry {
         id: "replacement_skew",
         title: "online expert re-placement: DWDP static vs dynamic vs DEP",
         group: "fleet",
         run: run_replacement_skew,
+        specs: specs_replacement_skew,
     },
     ScenarioEntry {
         id: "fleet_churn",
         title: "failure injection: DWDP independence vs DEP lockstep under churn",
         group: "fleet",
         run: run_fleet_churn,
+        specs: specs_fleet_churn,
     },
     ScenarioEntry {
         id: "multirack",
         title: "rack-tiered topology: flat vs tiered, rack-blind vs rack-local routing",
         group: "fleet",
         run: run_multirack,
+        specs: specs_multirack,
     },
     ScenarioEntry {
         id: "sessions",
         title: "closed-loop sessions: KV-prefix affinity vs rack-blind routing",
         group: "fleet",
         run: run_sessions,
+        specs: specs_sessions,
     },
 ];
 
@@ -304,6 +389,7 @@ pub fn usage_text() -> String {
     out.push_str("                   [--racks R] [--inter-rack-gbps G] [--inter-rack-latency S]\n");
     out.push_str("                   [--rack-blast] [--threads T] [--json FILE]\n");
     out.push_str("  dwdp-repro bench [--name NAME]\n");
+    out.push_str("  dwdp-repro lint [--src DIR]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");
     for group in ["context", "e2e", "fleet", "power", "analysis"] {
@@ -354,7 +440,7 @@ mod tests {
 
     #[test]
     fn ids_are_unique() {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for e in registry() {
             assert!(seen.insert(e.id), "duplicate id {}", e.id);
         }

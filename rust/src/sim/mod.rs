@@ -26,7 +26,7 @@
 pub mod power;
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use crate::config::HardwareConfig;
 use crate::metrics::Breakdown;
@@ -188,8 +188,9 @@ struct RankRt {
     cur_remaining: Time,
     cur_started: Time,
     cur_quantum: Time,
-    // Prefetch issue state, per plan.
-    issue: HashMap<PlanKey, PlanProgress>,
+    // Prefetch issue state, per plan (BTreeMap: iteration order must stay
+    // deterministic for bit-identical replays).
+    issue: BTreeMap<PlanKey, PlanProgress>,
     blocked_since: Time,
     breakdown: Breakdown,
     prefetch_wait: Time,
@@ -230,10 +231,10 @@ pub struct Simulation {
     ranks: Vec<RankRt>,
     engines: Vec<CopyEngine>,
     power: Vec<PowerState>,
-    plans: HashMap<PlanKey, Vec<Slice>>,
+    plans: BTreeMap<PlanKey, Vec<Slice>>,
     /// How many slices a destination keeps in flight (1 = serial pulls).
     pub dst_inflight: usize,
-    barriers: HashMap<u32, BarrierState>,
+    barriers: BTreeMap<u32, BarrierState>,
     /// Ranks participating in each barrier (all by default).
     barrier_width: usize,
     /// Incoming-transfer counts per rank (for comm-power accounting).
@@ -255,7 +256,7 @@ impl Simulation {
                 cur_remaining: 0.0,
                 cur_started: 0.0,
                 cur_quantum: 0.0,
-                issue: HashMap::new(),
+                issue: BTreeMap::new(),
                 blocked_since: 0.0,
                 breakdown: Breakdown::new(),
                 prefetch_wait: 0.0,
@@ -278,9 +279,9 @@ impl Simulation {
             ranks,
             engines,
             power: (0..n_ranks).map(|_| PowerState::new(hw)).collect(),
-            plans: HashMap::new(),
+            plans: BTreeMap::new(),
             dst_inflight: 1,
-            barriers: HashMap::new(),
+            barriers: BTreeMap::new(),
             barrier_width: n_ranks,
             incoming: vec![0; n_ranks],
             rng: Rng::new(seed),
