@@ -253,6 +253,114 @@ impl BenchSuite {
     }
 }
 
+/// Regression tolerance of the perf-trajectory gate, in percent
+/// (`DWDP_BENCH_GATE_PCT` overrides; default 25).  Generous by design:
+/// CI boxes are noisy, and the gate is after trajectory-scale
+/// regressions (an accidentally quadratic router, a serialized core),
+/// not single-digit jitter.
+pub fn gate_threshold_pct() -> f64 {
+    std::env::var("DWDP_BENCH_GATE_PCT")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|p| p.is_finite() && *p >= 0.0)
+        .unwrap_or(25.0)
+}
+
+/// Outcome of gating a fresh suite against a committed baseline
+/// ([`gate_against_baseline`]).
+#[derive(Debug, Default)]
+pub struct BenchGate {
+    /// Informational lines: pending baseline, new unbaselined cases.
+    pub notes: Vec<String>,
+    /// Hard failures: regressions past the threshold, lost coverage, or
+    /// a malformed baseline.
+    pub regressions: Vec<String>,
+}
+
+impl BenchGate {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn json_entries<'a>(doc: &'a Json, list: &str, key: &str) -> Vec<(&'a str, &'a Json)> {
+    doc.get(list)
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|e| e.get(key).as_str().map(|n| (n, e)))
+        .collect()
+}
+
+/// The perf-trajectory gate: compare a fresh [`BenchSuite::to_json`]
+/// document against a committed baseline of the same schema.
+///
+/// * Micro-bench cases regress when `median_ns` exceeds the baseline by
+///   more than `max_regress_pct` percent (median, not mean — one noisy
+///   outlier batch must not fail CI).
+/// * Sweep points regress when `requests_per_sec` falls below the
+///   baseline by more than the threshold.
+/// * A case or sweep point present in the baseline but missing from the
+///   fresh suite is a hard failure: deleting a bench silently resets the
+///   trajectory.  New unbaselined cases are notes, not failures.
+/// * A baseline whose `pending` field is non-null passes with a notice —
+///   the bootstrap state before the first refresh commits real numbers.
+pub fn gate_against_baseline(current: &Json, baseline: &Json, max_regress_pct: f64) -> BenchGate {
+    let mut gate = BenchGate::default();
+    if *baseline.get("pending") != Json::Null {
+        gate.notes.push(
+            "baseline is a pending marker: gate passes vacuously; \
+             refresh it from this run's JSON to arm the trajectory"
+                .to_string(),
+        );
+        return gate;
+    }
+    let checks: [(&str, &str, &str, bool); 2] = [
+        // (list, id key, metric, higher-is-better)
+        ("benches", "name", "median_ns", false),
+        ("sweep", "label", "requests_per_sec", true),
+    ];
+    let mut any_base = false;
+    for (list, id, metric, higher_better) in checks {
+        let base = json_entries(baseline, list, id);
+        let cur = json_entries(current, list, id);
+        any_base |= !base.is_empty();
+        for (name, b) in &base {
+            let Some(base_v) = b.get(metric).as_f64().filter(|v| *v > 0.0) else {
+                // A zero/absent baseline metric carries no signal.
+                continue;
+            };
+            let Some(&(_, c)) = cur.iter().find(|(n, _)| n == name) else {
+                gate.regressions.push(format!("{list}/{name}: missing from current suite"));
+                continue;
+            };
+            let cur_v = c.get(metric).as_f64().unwrap_or(0.0);
+            let ratio = if higher_better { base_v / cur_v.max(1e-12) } else { cur_v / base_v };
+            let limit = 1.0 + max_regress_pct / 100.0;
+            if ratio > limit {
+                gate.regressions.push(format!(
+                    "{list}/{name}: {metric} {cur_v:.1} vs baseline {base_v:.1} \
+                     ({:+.1}% past the {max_regress_pct}% threshold)",
+                    (ratio - 1.0) * 100.0
+                ));
+            }
+        }
+        for (name, _) in &cur {
+            if !base.iter().any(|(n, _)| n == name) {
+                gate.notes.push(format!("{list}/{name}: new case, no baseline yet"));
+            }
+        }
+    }
+    if !any_base {
+        gate.regressions.push(
+            "baseline has no bench cases and no sweep points (malformed, \
+             and not marked pending)"
+                .to_string(),
+        );
+    }
+    gate
+}
+
 /// The shared `cargo bench` entry point: run `f`'s cases on a fresh
 /// [`Bencher`], print the footer, and emit `BENCH_<name>.json` into the
 /// working directory (the workspace root under `cargo bench`).  Returns
@@ -371,5 +479,73 @@ mod tests {
     fn zero_wall_sweep_point_reports_zero_rate() {
         let s = SweepTiming { label: "x".into(), wall_seconds: 0.0, requests: 10 };
         assert_eq!(s.requests_per_sec(), 0.0);
+    }
+
+    fn suite_json(median_ns: f64, rps: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"name":"fleet_core","wall_seconds":1.0,
+                "benches":[{{"name":"core","median_ns":{median_ns},"mean_ns":{median_ns}}}],
+                "sweep":[{{"label":"fleet/a","requests_per_sec":{rps},"requests":48}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_fails_past_it() {
+        let base = suite_json(1000.0, 100.0);
+        // 20% slower median, 20% lower throughput: inside a 25% gate.
+        let ok = gate_against_baseline(&suite_json(1200.0, 80.0), &base, 25.0);
+        assert!(ok.passed(), "{:?}", ok.regressions);
+        // 30% slower median: out.
+        let slow = gate_against_baseline(&suite_json(1300.0, 100.0), &base, 25.0);
+        assert_eq!(slow.regressions.len(), 1, "{:?}", slow.regressions);
+        assert!(slow.regressions[0].contains("benches/core"));
+        // Throughput collapse fails on the sweep axis.
+        let cold = gate_against_baseline(&suite_json(1000.0, 60.0), &base, 25.0);
+        assert_eq!(cold.regressions.len(), 1, "{:?}", cold.regressions);
+        assert!(cold.regressions[0].contains("sweep/fleet/a"));
+        // An *improvement* never trips the gate.
+        let fast = gate_against_baseline(&suite_json(10.0, 1e6), &base, 25.0);
+        assert!(fast.passed());
+    }
+
+    #[test]
+    fn gate_flags_lost_coverage_and_notes_new_cases() {
+        let base = suite_json(1000.0, 100.0);
+        let renamed = Json::parse(
+            r#"{"name":"fleet_core","benches":[{"name":"other","median_ns":1.0}],
+                "sweep":[{"label":"fleet/a","requests_per_sec":100.0}]}"#,
+        )
+        .unwrap();
+        let g = gate_against_baseline(&renamed, &base, 25.0);
+        assert!(!g.passed());
+        assert!(g.regressions.iter().any(|r| r.contains("missing from current suite")));
+        assert!(g.notes.iter().any(|n| n.contains("no baseline yet")));
+    }
+
+    #[test]
+    fn gate_accepts_pending_marker_and_rejects_empty_baseline() {
+        let cur = suite_json(1000.0, 100.0);
+        let pending =
+            Json::parse(r#"{"name":"fleet_core","pending":"first CI run refreshes"}"#).unwrap();
+        let g = gate_against_baseline(&cur, &pending, 25.0);
+        assert!(g.passed());
+        assert!(g.notes[0].contains("pending"));
+
+        let empty = Json::parse(r#"{"name":"fleet_core","benches":[],"sweep":[]}"#).unwrap();
+        let g = gate_against_baseline(&cur, &empty, 25.0);
+        assert!(!g.passed());
+        assert!(g.regressions[0].contains("malformed"));
+    }
+
+    #[test]
+    fn gate_threshold_env_override() {
+        std::env::remove_var("DWDP_BENCH_GATE_PCT");
+        assert_eq!(gate_threshold_pct(), 25.0);
+        std::env::set_var("DWDP_BENCH_GATE_PCT", "40");
+        assert_eq!(gate_threshold_pct(), 40.0);
+        std::env::set_var("DWDP_BENCH_GATE_PCT", "not-a-number");
+        assert_eq!(gate_threshold_pct(), 25.0);
+        std::env::remove_var("DWDP_BENCH_GATE_PCT");
     }
 }

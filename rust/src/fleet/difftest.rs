@@ -1,0 +1,220 @@
+//! Differential property tests pinning the event-driven fleet core to the
+//! legacy batch-serial core (`src/fleet/legacy.rs`).
+//!
+//! Both cores share setup, routing, spill, and assembly helpers; only the
+//! iteration skeleton differs (one time-ordered event heap vs the old
+//! per-arrival `for` loop / sessions request heap).  These tests assert
+//! the refactor is *behaviour-preserving to the byte*: for every point of
+//! the scenario cross-product — sessions × churn × racks × all five
+//! cluster policies — and for worker thread counts 1/2/8, the two cores
+//! produce byte-identical `RunReport::to_json()` fingerprints and
+//! element-identical [`EventLog`] streams.
+//!
+//! Fingerprints go through [`crate::serving::fleet_report`] — the same
+//! report assembly the CLI and the golden corpus use — so a drift in any
+//! reported metric (goodput, availability, churn tallies, per-group
+//! loads) fails here before it can fail a golden replay.
+
+use super::*;
+use crate::config::{PaperModelConfig, ParallelMode};
+use crate::serving::Scenario;
+
+/// The five cluster policies; every grid point runs under each.
+const POLICIES: [ClusterPolicy; 5] = [
+    ClusterPolicy::RoundRobin,
+    ClusterPolicy::LeastOutstandingTokens,
+    ClusterPolicy::SloAdmission { max_wait: 0.5 },
+    ClusterPolicy::RackLocalFirst,
+    ClusterPolicy::PrefixAffinity,
+];
+
+/// One point of the scenario cross-product.
+#[derive(Clone, Copy)]
+struct GridPoint {
+    sessions: bool,
+    churn: bool,
+    racks: usize,
+    policy: ClusterPolicy,
+}
+
+impl GridPoint {
+    fn label(&self) -> String {
+        format!(
+            "sessions={} churn={} racks={} policy={}",
+            self.sessions,
+            self.churn,
+            self.racks,
+            self.policy.name()
+        )
+    }
+
+    /// Build the spec: small enough to keep the full grid fast, rich
+    /// enough that every subsystem the point names actually fires
+    /// (failures kill batches, racks price transfers, sessions spawn
+    /// follow-ups, caches hit and migrate).
+    fn spec(&self) -> ScenarioSpec {
+        let mut s = Scenario::fleet()
+            .model(PaperModelConfig::tiny())
+            .mode(ParallelMode::Dwdp)
+            .group(4)
+            .groups(4)
+            .isl(1024)
+            .mnt(16384)
+            .osl(16)
+            .rate(30.0)
+            .requests(24)
+            .seed(17)
+            .racks(self.racks)
+            .cluster_policy(self.policy);
+        if self.churn {
+            // Aggressive churn relative to the run span so kills,
+            // re-queues, and re-spill chains actually occur.
+            s = s.mtbf(2.0).mttr(0.5).requeue_on_failure(true);
+            if self.racks > 1 {
+                s = s.rack_blast_radius(true);
+            }
+        }
+        if self.sessions {
+            s = s.sessions(true).session_turns(3).think_time(0.2);
+            if self.racks > 1 {
+                s = s.kv_migrate(true);
+            }
+        }
+        s.build().expect("grid spec builds")
+    }
+}
+
+/// Run one core over a spec and return (fingerprint, event stream).
+fn run(
+    spec: &ScenarioSpec,
+    core: impl FnOnce(&ScenarioSpec, &GroupLatencyModel, &mut EventLog) -> Result<FleetOutcome, String>,
+) -> (String, Vec<FleetEvent>) {
+    let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+    let mut log = EventLog::new();
+    let out = core(spec, &lm, &mut log).expect("simulation succeeds");
+    let fp = crate::serving::fleet_report(spec, "analytic", &out).to_json().dump();
+    (fp, log.events)
+}
+
+fn grid() -> Vec<GridPoint> {
+    let mut points = Vec::new();
+    for &sessions in &[false, true] {
+        for &churn in &[false, true] {
+            for &racks in &[1usize, 3] {
+                for &policy in &POLICIES {
+                    points.push(GridPoint { sessions, churn, racks, policy });
+                }
+            }
+        }
+    }
+    points
+}
+
+#[test]
+fn event_core_matches_legacy_core_over_the_full_grid() {
+    let mut churn_kills = 0usize;
+    let mut session_follow_ups = 0usize;
+    for p in grid() {
+        let spec = p.spec();
+        let (legacy_fp, legacy_events) =
+            run(&spec, |s, lm, log| legacy::simulate_with_sink_legacy(s, lm, log));
+        let (core_fp, core_events) =
+            run(&spec, |s, lm, log| simulate_with_sink(s, lm, log));
+        assert_eq!(
+            legacy_fp,
+            core_fp,
+            "fingerprint drift between cores at {}",
+            p.label()
+        );
+        assert_eq!(
+            legacy_events,
+            core_events,
+            "event-log drift between cores at {}",
+            p.label()
+        );
+        if p.churn {
+            churn_kills += core_events.iter().filter(|e| e.kind() == "kill").count();
+        }
+        if p.sessions {
+            session_follow_ups += core_events
+                .iter()
+                .filter(|e| matches!(e, FleetEvent::Arrival { session: Some(_), .. }))
+                .count();
+        }
+    }
+    // The differential harness is only meaningful if the grid exercises
+    // the machinery its axes name: failure churn must kill batches
+    // somewhere, and the sessions half must spawn session-tagged traffic.
+    assert!(churn_kills > 0, "no churn grid point ever killed a batch");
+    assert!(session_follow_ups > 0, "no session grid point produced session traffic");
+}
+
+#[test]
+fn event_core_is_thread_count_invariant() {
+    // Worker-count invariance: per-group advances spread over 2 or 8
+    // threads must replay the exact serial event stream and fingerprint.
+    // Run the heaviest grid points (churn on — RNG-coupled failure
+    // streams are where parallelism could leak nondeterminism).
+    for p in grid().into_iter().filter(|p| p.churn) {
+        let spec = p.spec();
+        let (base_fp, base_events) =
+            run(&spec, |s, lm, log| simulate_parallel_with_sink(s, lm, log, 1));
+        for threads in [2usize, 8] {
+            let (fp, events) = run(&spec, |s, lm, log| {
+                simulate_parallel_with_sink(s, lm, log, threads)
+            });
+            assert_eq!(
+                base_fp, fp,
+                "fingerprint drift at {} with {threads} threads",
+                p.label()
+            );
+            assert_eq!(
+                base_events, events,
+                "event-log drift at {} with {threads} threads",
+                p.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn sink_attachment_does_not_perturb_the_outcome() {
+    // The logged and unlogged runs must agree byte-for-byte: emission
+    // sites are gated on `sink.enabled()` and construct no events for a
+    // `NoopSink`.
+    for p in grid().into_iter().filter(|p| p.churn && p.racks > 1) {
+        let spec = p.spec();
+        let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+        let quiet = simulate(&spec, &lm).expect("unlogged run");
+        let quiet_fp =
+            crate::serving::fleet_report(&spec, "analytic", &quiet).to_json().dump();
+        let (logged_fp, events) = run(&spec, |s, lm, log| simulate_with_sink(s, lm, log));
+        assert_eq!(quiet_fp, logged_fp, "sink perturbed the outcome at {}", p.label());
+        // And the stream the diff harness compares is lifecycle-complete.
+        let mut log = EventLog::new();
+        log.events = events;
+        log.check_lifecycles().unwrap_or_else(|e| {
+            panic!("incomplete lifecycle at {}: {e}", p.label());
+        });
+    }
+}
+
+#[test]
+fn legacy_feature_gate_compiles_the_reference_core() {
+    // `legacy-core` (or any test build) must expose the reference driver
+    // with the same signature surface as the event core: spec + prefill
+    // in, outcome out.  A type error here means the differential harness
+    // can no longer pin the refactor.
+    let spec = GridPoint {
+        sessions: false,
+        churn: false,
+        racks: 1,
+        policy: ClusterPolicy::RoundRobin,
+    }
+    .spec();
+    let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);
+    let a = legacy::simulate_legacy(&spec, &lm).expect("legacy run");
+    let b = simulate(&spec, &lm).expect("event-core run");
+    assert_eq!(a.admitted, b.admitted);
+    assert_eq!(a.offered, b.offered);
+}

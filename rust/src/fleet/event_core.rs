@@ -1,0 +1,485 @@
+//! The event-driven fleet core: both fleet drivers (open-loop and
+//! closed-loop sessions) run off a single time-ordered event heap, and
+//! per-group discrete-event advances between consecutive clock reads are
+//! spread over worker threads — bit-identical to the legacy batch-serial
+//! loop (`src/fleet/legacy.rs`) for every thread count.
+//!
+//! # Event taxonomy
+//!
+//! The *driver* heap carries exactly the events that move the fleet clock
+//! or re-enter routing:
+//!
+//! * [`FleetCoreEvent::Arrival`] — an open-loop request (or session
+//!   opening) enters the cluster.
+//! * [`FleetCoreEvent::FollowUpSpawn`] — a scheduled session follow-up
+//!   turn arrives, pushed by the harvest step when its previous turn's
+//!   response has streamed and the think time elapsed.
+//! * [`FleetCoreEvent::SpillRetry`] — a failure killed the request's
+//!   in-flight batch; it re-enters routing at the kill instant.
+//!
+//! Everything *group-local* — batch completions, kills, placement epochs,
+//! migrations, failure/recovery transitions — stays inside
+//! [`GroupSim::advance`]'s own chronological sweep between two driver
+//! clock reads: those events never reorder across groups (groups interact
+//! only through routing, which the driver serializes), so hoisting them
+//! into the global heap would cost heap traffic without changing any
+//! observable ordering.
+//!
+//! # Ordering and determinism
+//!
+//! Heap order is the total order on `(time.to_bits(), class, index)`.
+//! Simulation times are non-negative finite f64, whose IEEE-754 bit
+//! patterns sort identically to the floats, so no `Ord`-on-f64 hazard
+//! exists.  `class` puts spill retries *before* request arrivals at the
+//! same instant — the legacy loop re-routes due spills before the arrival
+//! that observed them — and `index` reproduces the legacy enumeration
+//! order among same-time arrivals.  Every event insertion is a pure
+//! function of simulation state, so the drained sequence — and with it
+//! every route decision, float, and emitted [`FleetEvent`] — is a pure
+//! function of the spec.
+//!
+//! # Parallel group advances
+//!
+//! [`advance_all`] advances every group to the next clock read.  Groups
+//! are independent between clock reads except for shared failure-stream
+//! RNG, so the parallel path partitions groups by *failure domain* (no
+//! failures: one task per group), giving each task its own
+//! [`FailProbe`]; within a task groups advance in ascending index —
+//! exactly the serial query order on that domain's stream — and
+//! first-token writes/spills/events are buffered per task and committed
+//! in group order afterwards.  DEP-coupled failures make every query read
+//! every stream, so that configuration stays on the serial path (the
+//! sweep-level parallelism in [`super::sweep`] still applies).
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use super::*;
+
+/// A driver-level event: everything that moves the fleet clock or
+/// re-enters routing.  See the module docs for the taxonomy.
+pub(super) enum FleetCoreEvent {
+    /// Request `idx` (open-loop, or a session opening) arrives at `at`.
+    Arrival { at: f64, idx: usize },
+    /// Scheduled session follow-up `idx` arrives at `at`.
+    FollowUpSpawn { at: f64, idx: usize },
+    /// A failure killed request `idx`'s batch at `at`; it re-enters
+    /// routing (or fails) once the clock reaches `at`.
+    SpillRetry { at: f64, idx: usize },
+}
+
+impl FleetCoreEvent {
+    /// The total order `(time bits, class, request index)`: non-negative
+    /// times sort by bit pattern, spill retries (class 0) precede
+    /// same-instant request arrivals (class 1) — the legacy loop
+    /// re-routes due spills before the arrival that observed them — and
+    /// the index reproduces the legacy same-time enumeration order.
+    fn key(&self) -> (u64, u8, usize) {
+        match *self {
+            FleetCoreEvent::SpillRetry { at, idx } => (at.to_bits(), 0, idx),
+            FleetCoreEvent::Arrival { at, idx } => (at.to_bits(), 1, idx),
+            FleetCoreEvent::FollowUpSpawn { at, idx } => (at.to_bits(), 1, idx),
+        }
+    }
+}
+
+impl PartialEq for FleetCoreEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for FleetCoreEvent {}
+
+impl PartialOrd for FleetCoreEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FleetCoreEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// The driver's min-heap of [`FleetCoreEvent`]s.
+pub(super) struct EventHeap {
+    heap: BinaryHeap<Reverse<FleetCoreEvent>>,
+}
+
+impl EventHeap {
+    pub(super) fn new() -> EventHeap {
+        EventHeap { heap: BinaryHeap::new() }
+    }
+
+    pub(super) fn push(&mut self, e: FleetCoreEvent) {
+        self.heap.push(Reverse(e));
+    }
+
+    /// Pop every [`FleetCoreEvent::SpillRetry`] at the head into the
+    /// driver's spill pool.  Afterwards the head is a request-class event
+    /// or the heap is empty — and every surfaced spill is due at or
+    /// before the next request time (class 0 sorts same-instant spills
+    /// ahead of arrivals).
+    pub(super) fn surface(&mut self, pool: &mut Vec<Spill>) {
+        while let Some(Reverse(FleetCoreEvent::SpillRetry { .. })) = self.heap.peek() {
+            let Some(Reverse(FleetCoreEvent::SpillRetry { at, idx })) = self.heap.pop() else {
+                unreachable!("peek said the head is a spill");
+            };
+            pool.push(Spill { idx, at });
+        }
+    }
+
+    /// Time of the earliest request-class event, or `+inf` on an empty
+    /// heap — the next fleet clock read.  Callers [`EventHeap::surface`]
+    /// first, so a spill head cannot be observed here.
+    pub(super) fn next_request_time(&self) -> f64 {
+        match self.heap.peek() {
+            Some(Reverse(FleetCoreEvent::Arrival { at, .. }))
+            | Some(Reverse(FleetCoreEvent::FollowUpSpawn { at, .. })) => *at,
+            Some(Reverse(FleetCoreEvent::SpillRetry { .. })) => {
+                debug_assert!(false, "surface() must drain head spills first");
+                f64::INFINITY
+            }
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Pop the earliest request-class event's request index; `None` once
+    /// the heap is drained (which, post-surface, means *fully* empty —
+    /// no spill can hide behind a request-class head).
+    pub(super) fn pop_request(&mut self) -> Option<usize> {
+        match self.heap.pop() {
+            Some(Reverse(FleetCoreEvent::Arrival { idx, .. }))
+            | Some(Reverse(FleetCoreEvent::FollowUpSpawn { idx, .. })) => Some(idx),
+            Some(Reverse(e @ FleetCoreEvent::SpillRetry { .. })) => {
+                debug_assert!(false, "pop_request() before surface()");
+                self.heap.push(Reverse(e));
+                None
+            }
+            None => None,
+        }
+    }
+}
+
+/// One parallel unit of [`advance_all`]: the groups of one failure domain
+/// (or a single group when failure injection is off), with everything
+/// their advances write buffered locally for an in-order commit.
+struct AdvanceTask<'a> {
+    /// `(group index, group)` in ascending index order — the serial query
+    /// order on this domain's failure stream.
+    members: Vec<(usize, &'a mut GroupSim)>,
+    /// The domain's own failure stream (`None` without failure injection).
+    stream: Option<&'a mut GroupFailures>,
+    /// Buffered `(request, first-token instant)` writes.
+    first_token: Vec<(usize, f64)>,
+    /// Buffered batch-kill spills.
+    spills: Vec<Spill>,
+    /// Per-member buffered event streams, `(group, events)` — replayed
+    /// into the caller's sink in group order, reproducing the serial
+    /// emission sequence exactly.
+    logs: Vec<(usize, EventLog)>,
+}
+
+impl AdvanceTask<'_> {
+    /// Advance every member group to `now`, buffering all output.
+    fn run(
+        &mut self,
+        now: f64,
+        mnt: usize,
+        isls_of: &[usize],
+        ready: &[f64],
+        prefill: &(dyn PrefillOffsets + Sync),
+        record: bool,
+    ) {
+        for (g, gs) in self.members.iter_mut() {
+            let mut probe = match self.stream.as_deref_mut() {
+                Some(s) => FailProbe::Domain(s),
+                None => FailProbe::None,
+            };
+            if record {
+                let mut log = EventLog::new();
+                gs.advance(
+                    now,
+                    *g,
+                    mnt,
+                    isls_of,
+                    ready,
+                    prefill,
+                    &mut self.first_token,
+                    &mut probe,
+                    &mut self.spills,
+                    &mut log,
+                );
+                self.logs.push((*g, log));
+            } else {
+                gs.advance(
+                    now,
+                    *g,
+                    mnt,
+                    isls_of,
+                    ready,
+                    prefill,
+                    &mut self.first_token,
+                    &mut probe,
+                    &mut self.spills,
+                    &mut NoopSink,
+                );
+            }
+        }
+    }
+}
+
+/// Advance every group to the clock read `now`, spreading independent
+/// failure domains over up to `threads` worker threads.  Bit-identical to
+/// the serial ascending-group loop for every thread count: domains never
+/// share RNG state, within-domain query order is preserved, first-token
+/// writes are disjoint per request, and buffered events are re-emitted in
+/// group order.  DEP-coupled failures (any query reads every stream) and
+/// trivial shapes stay on the serial path.
+pub(super) fn advance_all(
+    groups: &mut [GroupSim],
+    failures: &mut Option<FleetFailures>,
+    now: f64,
+    mnt: usize,
+    isls_of: &[usize],
+    ready: &[f64],
+    prefill: &(dyn PrefillOffsets + Sync),
+    first_token: &mut [f64],
+    spills: &mut Vec<Spill>,
+    sink: &mut dyn FleetEventSink,
+    threads: usize,
+) {
+    let coupled = failures.as_ref().is_some_and(|f| f.coupled);
+    if threads <= 1 || groups.len() <= 1 || coupled {
+        let mut pairs: Vec<(usize, f64)> = Vec::new();
+        for (g, gs) in groups.iter_mut().enumerate() {
+            let mut probe = FailProbe::fleet(failures.as_mut());
+            gs.advance(
+                now, g, mnt, isls_of, ready, prefill, &mut pairs, &mut probe, spills, sink,
+            );
+        }
+        for (i, t) in pairs {
+            first_token[i] = t;
+        }
+        return;
+    }
+
+    // One task per failure domain (per group without failure injection).
+    // Domains are contiguous ascending blocks of groups (identity, or the
+    // rack blocks under `rack_blast_radius`), so building tasks by first
+    // appearance keeps both tasks and members in ascending group order.
+    let mut tasks: Vec<AdvanceTask> = Vec::new();
+    match failures.as_mut() {
+        None => {
+            for (g, gs) in groups.iter_mut().enumerate() {
+                tasks.push(AdvanceTask {
+                    members: vec![(g, gs)],
+                    stream: None,
+                    first_token: Vec::new(),
+                    spills: Vec::new(),
+                    logs: Vec::new(),
+                });
+            }
+        }
+        Some(f) => {
+            // Split borrows: each task owns exactly one stream.
+            let FleetFailures { streams, domain_of, .. } = f;
+            let mut slots: Vec<Option<&mut GroupFailures>> =
+                streams.iter_mut().map(Some).collect();
+            let mut task_of_domain: Vec<Option<usize>> = vec![None; slots.len()];
+            for (g, gs) in groups.iter_mut().enumerate() {
+                let d = domain_of[g];
+                match task_of_domain[d] {
+                    Some(t) => tasks[t].members.push((g, gs)),
+                    None => {
+                        task_of_domain[d] = Some(tasks.len());
+                        tasks.push(AdvanceTask {
+                            members: vec![(g, gs)],
+                            stream: slots[d].take(),
+                            first_token: Vec::new(),
+                            spills: Vec::new(),
+                            logs: Vec::new(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    let record = sink.enabled();
+    let workers = threads.min(tasks.len()).max(1);
+    let per = tasks.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        for chunk in tasks.chunks_mut(per) {
+            scope.spawn(move || {
+                for task in chunk.iter_mut() {
+                    task.run(now, mnt, isls_of, ready, prefill, record);
+                }
+            });
+        }
+    });
+
+    // Commit in task (= ascending group) order.  First-token writes are
+    // disjoint per request; spill order is canonicalized downstream (the
+    // heap key, or `process_spills`' sort); events replay in group order.
+    for task in tasks {
+        for (i, t) in task.first_token {
+            first_token[i] = t;
+        }
+        spills.extend(task.spills);
+        for (_, log) in task.logs {
+            for e in log.events {
+                sink.emit(e);
+            }
+        }
+    }
+}
+
+/// Run a fleet spec on the event-driven core — the single entry point
+/// behind [`super::simulate`] and friends.
+pub(super) fn simulate_core(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    sink: &mut dyn FleetEventSink,
+    threads: usize,
+) -> Result<FleetOutcome, String> {
+    if spec.serving.sessions {
+        simulate_sessions_core(spec, prefill, sink, threads)
+    } else {
+        simulate_open_core(spec, prefill, sink, threads)
+    }
+}
+
+/// Open-loop driver: arrivals and spill retries drain from one heap.
+///
+/// Each iteration mirrors one legacy per-arrival step — surface due
+/// spills, read the clock, advance all groups to it, re-route due spills,
+/// route one arrival — so the two cores execute the same calls in the
+/// same order (the differential tests assert byte equality).
+fn simulate_open_core(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    sink: &mut dyn FleetEventSink,
+    threads: usize,
+) -> Result<FleetOutcome, String> {
+    let mut st = open_setup(spec)?;
+    let mut heap = EventHeap::new();
+    for (i, r) in st.requests.iter().enumerate() {
+        heap.push(FleetCoreEvent::Arrival { at: r.arrival, idx: i });
+    }
+    let mut pool: Vec<Spill> = Vec::new();
+    let mut fresh: Vec<Spill> = Vec::new();
+    loop {
+        heap.surface(&mut pool);
+        // The clock: the earliest unrouted arrival, or a full drain.
+        let now = heap.next_request_time();
+        advance_all(
+            &mut st.groups,
+            &mut st.failures,
+            now,
+            st.mnt,
+            &st.isls,
+            &st.ledger.ready,
+            prefill,
+            &mut st.first_token,
+            &mut fresh,
+            sink,
+            threads,
+        );
+        for s in fresh.drain(..) {
+            heap.push(FleetCoreEvent::SpillRetry { at: s.at, idx: s.idx });
+        }
+        // A fresh spill killed at or before `now` must re-route before
+        // this clock read's arrival, exactly like the legacy partition.
+        heap.surface(&mut pool);
+        let (mut due, rest): (Vec<Spill>, Vec<Spill>) =
+            std::mem::take(&mut pool).into_iter().partition(|s| s.at <= now);
+        pool = rest;
+        let processed = !due.is_empty();
+        if processed {
+            open_process_due(&mut st, &mut due, sink);
+        }
+        match heap.pop_request() {
+            Some(i) => open_route_and_account(&mut st, i, sink),
+            None => {
+                // Heap empty: if nothing re-queued this round and no spill
+                // is buffered for a later instant, the fleet ran dry.
+                if pool.is_empty() && !processed {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(assemble_open(st, spec, sink))
+}
+
+/// Sessions driver: arrivals, follow-up spawns, and spill retries drain
+/// from one heap; served turns harvested after each advance schedule
+/// their follow-ups as [`FleetCoreEvent::FollowUpSpawn`] events.
+fn simulate_sessions_core(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    sink: &mut dyn FleetEventSink,
+    threads: usize,
+) -> Result<FleetOutcome, String> {
+    let mut st = sessions_setup(spec)?;
+    let mut heap = EventHeap::new();
+    for (i, r) in st.requests.iter().enumerate() {
+        heap.push(FleetCoreEvent::Arrival { at: r.arrival, idx: i });
+    }
+    let mut pool: Vec<Spill> = Vec::new();
+    let mut fresh: Vec<Spill> = Vec::new();
+    loop {
+        heap.surface(&mut pool);
+        // The clock: the earliest unrouted arrival, or a full drain.
+        let now = heap.next_request_time();
+        advance_all(
+            &mut st.groups,
+            &mut st.failures,
+            now,
+            st.mnt,
+            &st.charged,
+            &st.ledger.ready,
+            prefill,
+            &mut st.first_token,
+            &mut fresh,
+            sink,
+            threads,
+        );
+        for s in fresh.drain(..) {
+            heap.push(FleetCoreEvent::SpillRetry { at: s.at, idx: s.idx });
+        }
+        heap.surface(&mut pool);
+        if sessions_harvest(&mut st, |at, idx| {
+            heap.push(FleetCoreEvent::FollowUpSpawn { at, idx });
+        }) {
+            // A follow-up can land before `now` (its turn finished well
+            // before the next opening): re-resolve the earliest event.
+            continue;
+        }
+        sync_cache_failures(&mut st.failures, &mut st.cache, &mut st.synced, now, sink);
+        // Only spills whose failure instant has been reached re-route
+        // before this arrival; later ones stay pooled (a follow-up spawn
+        // can pull `now` backwards below a buffered spill's instant).
+        let (due, rest): (Vec<Spill>, Vec<Spill>) =
+            std::mem::take(&mut pool).into_iter().partition(|s| s.at <= now);
+        pool = rest;
+        let processed = !due.is_empty();
+        if processed {
+            sessions_process_due(&mut st, due, sink);
+        }
+        match heap.pop_request() {
+            Some(i) => sessions_route_and_account(&mut st, i, sink),
+            None => {
+                if pool.is_empty() && !processed {
+                    break;
+                }
+                // Re-queued spills are back in the pending queues; advance
+                // again to finalize (and possibly re-spill) them.
+            }
+        }
+    }
+    Ok(assemble_sessions(st, sink))
+}

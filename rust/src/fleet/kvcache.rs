@@ -204,6 +204,79 @@ mod tests {
     }
 
     #[test]
+    fn zero_token_budget_caches_nothing() {
+        // A zero budget must behave like a disabled cache, not divide by
+        // zero or wedge the eviction loop (`lru_victim` returns None on an
+        // empty group and the loop breaks).
+        let mut c = KvPrefixCache::new(2, 0);
+        c.insert(0, 1, 1);
+        c.insert(1, 2, 4096);
+        assert_eq!(c.locate(1), None);
+        assert_eq!(c.locate(2), None);
+        assert_eq!(c.used_tokens(0), 0);
+        assert_eq!(c.used_tokens(1), 0);
+        assert_eq!(c.entries(0), 0);
+        assert_eq!(c.remove(1), None);
+        // A sub-token GB budget floors to zero capacity tokens.
+        assert_eq!(KvPrefixCache::tokens_for_budget(1e-10, 1000.0), 0);
+    }
+
+    #[test]
+    fn exact_fit_at_budget_boundary() {
+        let mut c = KvPrefixCache::new(1, 1000);
+        // An entry exactly the size of the budget is admitted, not evicted
+        // by its own insert's fit loop.
+        c.insert(0, 1, 1000);
+        assert_eq!(c.locate(1), Some((0, 1000)));
+        assert_eq!(c.used_tokens(0), 1000);
+        // One token over forces the resident entry out; the group never
+        // overshoots its budget even transiently in the accounting.
+        c.insert(0, 2, 1);
+        assert_eq!(c.locate(1), None, "full-budget entry evicted for the newcomer");
+        assert_eq!(c.locate(2), Some((0, 1)));
+        assert_eq!(c.used_tokens(0), 1);
+        // Refreshing a session at exactly the remaining headroom fits:
+        // remove-before-insert frees its own tokens first.
+        c.insert(0, 2, 1000);
+        assert_eq!(c.locate(2), Some((0, 1000)));
+        assert_eq!(c.used_tokens(0), 1000);
+    }
+
+    #[test]
+    fn group_invalidation_racing_in_flight_kv_migrate() {
+        // A kv_migrate in flight when the source group dies: the migrate
+        // path removes the prefix from the source, ships it, and installs
+        // it on the destination.  The invalidation must neither double-free
+        // the moved entry nor resurrect it on the dead group.
+        let mut c = KvPrefixCache::new(2, usize::MAX);
+        c.insert(0, 7, 500);
+        c.insert(0, 8, 200);
+        // Migration starts: the prefix leaves the source group's store.
+        assert_eq!(c.remove(7), Some((0, 500)));
+        // The source fails mid-transfer: only the still-resident entry is
+        // invalidated; the in-flight prefix is not counted twice.
+        assert_eq!(c.invalidate_group(0), 1);
+        assert_eq!(c.used_tokens(0), 0);
+        // The transfer lands: the session now resides on the destination,
+        // untouched by the source's failure.
+        c.insert(1, 7, 500);
+        assert_eq!(c.locate(7), Some((1, 500)));
+        assert_eq!(c.invalidate_group(0), 0, "dead group holds nothing");
+        assert_eq!(c.locate(7), Some((1, 500)));
+
+        // The reverse interleaving: the failure lands before the migrate
+        // claims the prefix.  The remove observes the invalidation (None)
+        // — the caller must fall back to full re-prefill — and the cache
+        // stays consistent for the session's next insert.
+        let mut c = KvPrefixCache::new(2, usize::MAX);
+        c.insert(0, 7, 500);
+        assert_eq!(c.invalidate_group(0), 1);
+        assert_eq!(c.remove(7), None, "invalidated prefix cannot be migrated");
+        c.insert(1, 7, 500);
+        assert_eq!(c.locate(7), Some((1, 500)));
+    }
+
+    #[test]
     fn budget_to_tokens_conversion() {
         // 1 GB at 1000 B/token = 1e6 tokens.
         assert_eq!(KvPrefixCache::tokens_for_budget(1.0, 1000.0), 1_000_000);

@@ -1,0 +1,169 @@
+//! The pre-event-core batch-serial fleet drivers, kept verbatim as the
+//! reference implementation for the differential harness in
+//! `src/fleet/difftest.rs` (and, under the `legacy-core` feature, for
+//! A/B benchmarking).
+//!
+//! Both drivers here call the *same* setup, routing, spill, and assembly
+//! helpers as the event core — the only thing preserved from the old
+//! implementation is the iteration skeleton: the open-loop per-arrival
+//! `for` loop plus drain loop, and the sessions `(arrival bits, index)`
+//! request heap.  Any behavioural difference between the cores is
+//! therefore confined to event *ordering*, which is exactly what the
+//! differential tests pin (byte-identical fingerprints and event logs
+//! across the full scenario cross-product).
+//!
+//! Group advances always run the serial path (`threads = 1`), matching
+//! the pre-refactor code exactly.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::*;
+
+/// The batch-serial twin of [`super::simulate`]: same spec in, same
+/// [`FleetOutcome`] out, legacy iteration skeleton.
+pub fn simulate_legacy(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+) -> Result<FleetOutcome, String> {
+    simulate_with_sink_legacy(spec, prefill, &mut NoopSink)
+}
+
+/// The batch-serial twin of [`super::simulate_with_sink`].
+pub fn simulate_with_sink_legacy(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    sink: &mut dyn FleetEventSink,
+) -> Result<FleetOutcome, String> {
+    if spec.serving.sessions {
+        return simulate_sessions_legacy(spec, prefill, sink);
+    }
+    let mut st = open_setup(spec)?;
+    let mut spills: Vec<Spill> = Vec::new();
+    // Chronological sweep: arrivals are generated in time order, so by the
+    // time a request is routed every batch that could have started before
+    // it is finalized — the router sees exactly the loads a live cluster
+    // would.  Requests spilled by failures are re-routed (or failed)
+    // before the arrival that observed them.
+    for i in 0..st.requests.len() {
+        let arrival = st.requests[i].arrival;
+        event_core::advance_all(
+            &mut st.groups,
+            &mut st.failures,
+            arrival,
+            st.mnt,
+            &st.isls,
+            &st.ledger.ready,
+            prefill,
+            &mut st.first_token,
+            &mut spills,
+            sink,
+            1,
+        );
+        if !spills.is_empty() {
+            // Only spills whose failure instant has been reached are
+            // re-routed now; a batch finalized early whose kill lands
+            // *after* this arrival stays buffered until the clock gets
+            // there (no future knowledge leaks into routing order).
+            let (mut due, rest): (Vec<Spill>, Vec<Spill>) =
+                std::mem::take(&mut spills).into_iter().partition(|s| s.at <= arrival);
+            spills = rest;
+            if !due.is_empty() {
+                open_process_due(&mut st, &mut due, sink);
+            }
+        }
+        open_route_and_account(&mut st, i, sink);
+    }
+    // Drain: finalize every remaining batch; failures can still strike, so
+    // keep re-routing spills until the fleet runs dry (the re-spill cap
+    // bounds this loop).
+    loop {
+        event_core::advance_all(
+            &mut st.groups,
+            &mut st.failures,
+            f64::INFINITY,
+            st.mnt,
+            &st.isls,
+            &st.ledger.ready,
+            prefill,
+            &mut st.first_token,
+            &mut spills,
+            sink,
+            1,
+        );
+        if spills.is_empty() {
+            break;
+        }
+        let mut due = std::mem::take(&mut spills);
+        open_process_due(&mut st, &mut due, sink);
+    }
+    Ok(assemble_open(st, spec, sink))
+}
+
+/// The batch-serial sessions driver: follow-ups interleave with openings
+/// through the legacy `(arrival bits, index)` request heap.
+fn simulate_sessions_legacy(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    sink: &mut dyn FleetEventSink,
+) -> Result<FleetOutcome, String> {
+    let mut st = sessions_setup(spec)?;
+    let mut spills: Vec<Spill> = Vec::new();
+    // Arrival events — openings up front, follow-ups as they are
+    // scheduled — ordered by (arrival, index).  Arrivals are non-negative,
+    // so the raw f64 bit pattern sorts identically to the float, and the
+    // index tiebreak reproduces the open-loop sweep's enumeration order.
+    let mut events: BinaryHeap<Reverse<(u64, usize)>> = st
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Reverse((r.arrival.to_bits(), i)))
+        .collect();
+
+    loop {
+        // The clock: the earliest unrouted arrival, or a full drain.
+        let now =
+            events.peek().map_or(f64::INFINITY, |Reverse((b, _))| f64::from_bits(*b));
+        event_core::advance_all(
+            &mut st.groups,
+            &mut st.failures,
+            now,
+            st.mnt,
+            &st.charged,
+            &st.ledger.ready,
+            prefill,
+            &mut st.first_token,
+            &mut spills,
+            sink,
+            1,
+        );
+        if sessions_harvest(&mut st, |at, idx| events.push(Reverse((at.to_bits(), idx)))) {
+            // A follow-up can land before `now` (its turn finished well
+            // before the next opening): re-resolve the earliest event.
+            continue;
+        }
+        sync_cache_failures(&mut st.failures, &mut st.cache, &mut st.synced, now, sink);
+        let mut processed_spills = false;
+        if !spills.is_empty() {
+            // Mirror the open-loop sweep: only spills whose failure
+            // instant has been reached re-route before this arrival.
+            let (due, rest): (Vec<Spill>, Vec<Spill>) =
+                std::mem::take(&mut spills).into_iter().partition(|sp| sp.at <= now);
+            spills = rest;
+            if !due.is_empty() {
+                processed_spills = true;
+                sessions_process_due(&mut st, due, sink);
+            }
+        }
+        let Some(Reverse((_, i))) = events.pop() else {
+            if spills.is_empty() && !processed_spills {
+                break;
+            }
+            // Re-queued spills are back in the pending queues; advance
+            // again to finalize (and possibly re-spill) them.
+            continue;
+        };
+        sessions_route_and_account(&mut st, i, sink);
+    }
+    Ok(assemble_sessions(st, sink))
+}

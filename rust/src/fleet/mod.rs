@@ -81,6 +81,13 @@ pub mod router;
 pub mod sweep;
 pub mod topology;
 
+mod event_core;
+#[cfg(any(test, feature = "legacy-core"))]
+pub mod legacy;
+
+#[cfg(test)]
+mod difftest;
+
 use std::collections::VecDeque;
 
 pub use kvcache::KvPrefixCache;
@@ -230,8 +237,9 @@ struct Spill {
 
 /// A request whose batch is killed more than this many times is dropped
 /// as failed even with re-queueing on — the bound that keeps pathological
-/// churn (MTTR >> MTBF) from re-queueing forever.
-const MAX_RESPILLS: u32 = 4;
+/// churn (MTTR >> MTBF) from re-queueing forever.  `pub(crate)` because
+/// [`crate::obs::check_lifecycles`] audits re-queue chains against it.
+pub(crate) const MAX_RESPILLS: u32 = 4;
 
 /// One group's failure/repair renewal process: outage windows
 /// `(down_at, repaired_at, serving_at)` sampled lazily from a per-group
@@ -512,6 +520,58 @@ impl FleetFailures {
     }
 }
 
+/// The failure-model view one group's [`GroupSim::advance`] queries while
+/// finalizing batches — the seam that lets the event core advance
+/// independent failure domains on different threads.
+///
+/// * [`FailProbe::None`]: failure injection disabled; every query is a
+///   constant, exactly like the pre-churn path.
+/// * [`FailProbe::Fleet`]: the whole fleet model, DEP coupling included —
+///   the serial path, and the only legal probe when outages couple across
+///   domains (a query then reads *every* stream).
+/// * [`FailProbe::Domain`]: one uncoupled failure domain's own renewal
+///   stream.  Bit-identical to `Fleet` for an uncoupled fleet (both reduce
+///   to `streams[domain_of[g]]`), but borrows only that stream — so
+///   disjoint domains can advance concurrently without sharing RNG state.
+enum FailProbe<'a> {
+    None,
+    Fleet(&'a mut FleetFailures),
+    Domain(&'a mut GroupFailures),
+}
+
+impl<'a> FailProbe<'a> {
+    /// The serial probe: whatever the fleet-level model says (or nothing).
+    fn fleet(failures: Option<&'a mut FleetFailures>) -> FailProbe<'a> {
+        match failures {
+            Some(f) => FailProbe::Fleet(f),
+            None => FailProbe::None,
+        }
+    }
+
+    /// Whether any failure model is attached at all.
+    fn active(&self) -> bool {
+        !matches!(self, FailProbe::None)
+    }
+
+    /// See [`FleetFailures::serving_resume`].
+    fn serving_resume(&mut self, g: usize, t: f64) -> Option<f64> {
+        match self {
+            FailProbe::None => None,
+            FailProbe::Fleet(f) => f.serving_resume(g, t),
+            FailProbe::Domain(s) => s.window_at(t).map(|w| w.2),
+        }
+    }
+
+    /// See [`FleetFailures::next_down_after`].
+    fn next_down_after(&mut self, g: usize, t: f64) -> f64 {
+        match self {
+            FailProbe::None => f64::INFINITY,
+            FailProbe::Fleet(f) => f.next_down_after(g, t),
+            FailProbe::Domain(s) => s.next_down_after(t),
+        }
+    }
+}
+
 /// Per-group online expert re-placement state — the tentpole of the
 /// dynamic-placement loop (see `placement::replacement`).
 ///
@@ -717,6 +777,11 @@ impl GroupSim {
     /// instant), and a failure landing before the batch completes kills
     /// the whole batch — the fused forward dies with the rank — pushing
     /// every member into `spills` for the caller to re-queue or fail.
+    ///
+    /// First-token instants are returned as `(request, instant)` pairs
+    /// rather than written in place: concurrent group advances (the
+    /// parallel event core) cannot share one `&mut [f64]`, and the writes
+    /// are disjoint per request, so the caller applies them in any order.
     fn advance(
         &mut self,
         now: f64,
@@ -727,8 +792,8 @@ impl GroupSim {
         isls_of: &[usize],
         ready: &[f64],
         prefill: &dyn PrefillOffsets,
-        first_token: &mut [f64],
-        mut failures: Option<&mut FleetFailures>,
+        first_token: &mut Vec<(usize, f64)>,
+        probe: &mut FailProbe,
         spills: &mut Vec<Spill>,
         sink: &mut dyn FleetEventSink,
     ) {
@@ -738,14 +803,12 @@ impl GroupSim {
             // Pre-warm-up start, kept so each batch member's share of a
             // recovery warm-up can be attributed (`FleetEvent::WarmupWait`).
             let warm_from = start;
-            if let Some(f) = failures.as_deref_mut() {
-                if let Some(resume) = f.serving_resume(g, start) {
-                    // The group is down (or warming up) at the would-be
-                    // start; serving resumes at `resume`, and the restarted
-                    // process re-enters with the cold-start prior.
-                    start = resume;
-                    self.spt = self.spt0;
-                }
+            if let Some(resume) = probe.serving_resume(g, start) {
+                // The group is down (or warming up) at the would-be
+                // start; serving resumes at `resume`, and the restarted
+                // process re-enters with the cold-start prior.
+                start = resume;
+                self.spt = self.spt0;
             }
             if start > now {
                 break;
@@ -792,8 +855,8 @@ impl GroupSim {
                     sink.emit(FleetEvent::PrefillStart { id: i, t: start, group: g });
                 }
             }
-            if let Some(f) = failures.as_deref_mut() {
-                let kill_at = f.next_down_after(g, start);
+            if probe.active() {
+                let kill_at = probe.next_down_after(g, start);
                 if kill_at < end {
                     // A failure (of this group, or under DEP coupling of
                     // any peer holding its shards) lands mid-batch: the
@@ -816,7 +879,7 @@ impl GroupSim {
                 }
             }
             for (&i, &off) in batch.iter().zip(&offsets) {
-                first_token[i] = start + off;
+                first_token.push((i, start + off));
                 if sink.enabled() {
                     sink.emit(FleetEvent::PrefillEnd { id: i, t: start + off, group: g });
                 }
@@ -1111,9 +1174,14 @@ fn decode_group(
 ///
 /// Deterministic for a given spec: same seed, same routing, same floats —
 /// which is what makes the parallel [`sweep`] driver's output independent
-/// of thread count.
-pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<FleetOutcome, String> {
-    simulate_with_sink(spec, prefill, &mut NoopSink)
+/// of thread count.  Single-threaded; [`simulate_parallel`] runs the same
+/// event core with group advances spread over worker threads, bit-identical
+/// by construction (and by `src/fleet/difftest.rs`).
+pub fn simulate(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+) -> Result<FleetOutcome, String> {
+    event_core::simulate_core(spec, prefill, &mut NoopSink, 1)
 }
 
 /// [`simulate`] with an attached [`FleetEventSink`] receiving the full
@@ -1123,14 +1191,62 @@ pub fn simulate(spec: &ScenarioSpec, prefill: &dyn PrefillOffsets) -> Result<Fle
 /// bit-identical — the sink-on/off fingerprint property pins it.
 pub fn simulate_with_sink(
     spec: &ScenarioSpec,
-    prefill: &dyn PrefillOffsets,
+    prefill: &(dyn PrefillOffsets + Sync),
     sink: &mut dyn FleetEventSink,
 ) -> Result<FleetOutcome, String> {
-    if spec.serving.sessions {
-        // The closed-loop event sweep; the open-loop path below stays
-        // untouched so pre-session results are bit-identical.
-        return simulate_sessions(spec, prefill, sink);
-    }
+    event_core::simulate_core(spec, prefill, sink, 1)
+}
+
+/// [`simulate`] with per-group discrete-event advances parallelized over
+/// up to `threads` worker threads *inside* one simulation (independent
+/// failure domains never share RNG state, so the result — including the
+/// event stream — is bit-identical for every thread count; the
+/// differential tests pin 1/2/8).  `threads <= 1` is exactly [`simulate`].
+pub fn simulate_parallel(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    threads: usize,
+) -> Result<FleetOutcome, String> {
+    event_core::simulate_core(spec, prefill, &mut NoopSink, threads)
+}
+
+/// [`simulate_parallel`] with an attached [`FleetEventSink`]; events from
+/// concurrent group advances are buffered per group and re-emitted in
+/// group order, reproducing the serial emission sequence exactly.
+pub fn simulate_parallel_with_sink(
+    spec: &ScenarioSpec,
+    prefill: &(dyn PrefillOffsets + Sync),
+    sink: &mut dyn FleetEventSink,
+    threads: usize,
+) -> Result<FleetOutcome, String> {
+    event_core::simulate_core(spec, prefill, sink, threads)
+}
+
+/// Everything an open-loop fleet run owns between setup and assembly —
+/// the state both drivers (the event core and the legacy batch-serial
+/// loop) thread through the shared routing/spill/assembly helpers, so the
+/// two cores cannot drift in anything but iteration order.
+struct OpenState {
+    n_groups: usize,
+    slo: Slo,
+    requests: Vec<Request>,
+    /// Prompt tokens to prefill per request (the raw ISLs open-loop).
+    isls: Vec<usize>,
+    mnt: usize,
+    bytes_per_token: f64,
+    groups: Vec<GroupSim>,
+    failures: Option<FleetFailures>,
+    router: ClusterRouter,
+    first_token: Vec<f64>,
+    xr: CrossRack,
+    ledger: ChurnLedger,
+    shed: usize,
+    shed_tokens: usize,
+}
+
+/// Build the open-loop run state a fleet spec describes (workload, groups,
+/// failure model, router, ledgers) — shared verbatim by both cores.
+fn open_setup(spec: &ScenarioSpec) -> Result<OpenState, String> {
     let ScenarioKind::Fleet { n_groups, policy, slo, .. } = &spec.kind else {
         return Err("not a fleet scenario".into());
     };
@@ -1160,149 +1276,123 @@ pub fn simulate_with_sink(
     // bit-for-bit.
     let dynamic_placement = spec.serving.mode == ParallelMode::Dwdp
         && spec.serving.routing_skew > 0.0;
-    let mut groups: Vec<GroupSim> = (0..n_groups)
+    let groups: Vec<GroupSim> = (0..n_groups)
         .map(|g| {
             let dynamic = dynamic_placement.then(|| DynamicPlacement::new(spec, g));
             GroupSim::new(spt0, dynamic)
         })
         .collect();
-    let mut failures = FleetFailures::from_spec(spec, &topo);
-    let mut router = ClusterRouter::with_topology(policy, topo);
-    let mut first_token = vec![0.0f64; requests.len()];
-    let mut xr = CrossRack::default();
-    let mut ledger = ChurnLedger {
+    let failures = FleetFailures::from_spec(spec, &topo);
+    let router = ClusterRouter::with_topology(policy, topo);
+    let first_token = vec![0.0f64; requests.len()];
+    let ledger = ChurnLedger {
         ready: requests.iter().map(|r| r.arrival).collect(),
         respills: vec![0; requests.len()],
         requeued_mask: vec![false; requests.len()],
         failed: 0,
         failed_tokens: 0,
     };
-    let mut spills: Vec<Spill> = Vec::new();
-    let mut shed = 0usize;
-    let mut shed_tokens = 0usize;
+    Ok(OpenState {
+        n_groups,
+        slo,
+        requests,
+        isls,
+        mnt,
+        bytes_per_token,
+        groups,
+        failures,
+        router,
+        first_token,
+        xr: CrossRack::default(),
+        ledger,
+        shed: 0,
+        shed_tokens: 0,
+    })
+}
 
-    // Chronological sweep: arrivals are generated in time order, so by the
-    // time a request is routed every batch that could have started before
-    // it is finalized — the router sees exactly the loads a live cluster
-    // would.  Requests spilled by failures are re-routed (or failed)
-    // before the arrival that observed them.
-    for (i, r) in requests.iter().enumerate() {
-        for g in 0..n_groups {
-            groups[g].advance(
-                r.arrival,
-                g,
-                mnt,
-                &isls,
-                &ledger.ready,
-                prefill,
-                &mut first_token,
-                failures.as_mut(),
-                &mut spills,
-                sink,
-            );
-        }
-        if !spills.is_empty() {
-            // Only spills whose failure instant has been reached are
-            // re-routed now; a batch finalized early whose kill lands
-            // *after* this arrival stays buffered until the clock gets
-            // there (no future knowledge leaks into routing order).
-            let (mut due, rest): (Vec<Spill>, Vec<Spill>) = std::mem::take(&mut spills)
-                .into_iter()
-                .partition(|s| s.at <= r.arrival);
-            spills = rest;
-            if !due.is_empty() {
-                process_spills(
-                    &mut due,
-                    &requests,
-                    &mut ledger,
-                    &mut groups,
-                    &mut failures,
-                    &mut router,
-                    bytes_per_token,
-                    &mut xr,
-                    sink,
-                );
+/// Re-route (or fail) the due spills of an open-loop run — a thin borrow
+/// adapter over [`process_spills`].
+fn open_process_due(st: &mut OpenState, due: &mut Vec<Spill>, sink: &mut dyn FleetEventSink) {
+    process_spills(
+        due,
+        &st.requests,
+        &mut st.ledger,
+        &mut st.groups,
+        &mut st.failures,
+        &mut st.router,
+        st.bytes_per_token,
+        &mut st.xr,
+        sink,
+    );
+}
+
+/// Emit request `i`'s arrival, route it, and account the verdict — the
+/// per-arrival tail both open-loop drivers execute once per request.
+fn open_route_and_account(st: &mut OpenState, i: usize, sink: &mut dyn FleetEventSink) {
+    let (arrival, isl, osl, session) = {
+        let r = &st.requests[i];
+        (r.arrival, r.isl, r.osl, r.session)
+    };
+    if sink.enabled() {
+        sink.emit(FleetEvent::Arrival { id: i, t: arrival, isl, osl, session });
+    }
+    match route_request(
+        i,
+        arrival,
+        &st.requests,
+        &mut st.groups,
+        &mut st.failures,
+        &mut st.router,
+        st.bytes_per_token,
+        &mut st.ledger.ready,
+        &mut st.xr,
+        None,
+        sink,
+    ) {
+        RouteDecision::Admit(_) => {
+            // Only a cross-rack admission moves the ready clock past
+            // the arrival; close its transfer span.
+            if sink.enabled() && st.ledger.ready[i] > arrival {
+                sink.emit(FleetEvent::CrossRackEnd { id: i, t: st.ledger.ready[i] });
             }
         }
-        if sink.enabled() {
-            sink.emit(FleetEvent::Arrival {
-                id: i,
-                t: r.arrival,
-                isl: r.isl,
-                osl: r.osl,
-                session: r.session,
-            });
+        RouteDecision::Shed => {
+            st.shed += 1;
+            st.shed_tokens += isl;
+            if sink.enabled() {
+                sink.emit(FleetEvent::Shed { id: i, t: arrival });
+            }
         }
-        match route_request(
-            i,
-            r.arrival,
-            &requests,
-            &mut groups,
-            &mut failures,
-            &mut router,
-            bytes_per_token,
-            &mut ledger.ready,
-            &mut xr,
-            None,
-            sink,
-        ) {
-            RouteDecision::Admit(_) => {
-                // Only a cross-rack admission moves the ready clock past
-                // the arrival; close its transfer span.
-                if sink.enabled() && ledger.ready[i] > r.arrival {
-                    sink.emit(FleetEvent::CrossRackEnd { id: i, t: ledger.ready[i] });
-                }
-            }
-            RouteDecision::Shed => {
-                shed += 1;
-                shed_tokens += r.isl;
-                if sink.enabled() {
-                    sink.emit(FleetEvent::Shed { id: i, t: r.arrival });
-                }
-            }
-            RouteDecision::Failed => {
-                ledger.failed += 1;
-                ledger.failed_tokens += r.isl;
-                if sink.enabled() {
-                    sink.emit(FleetEvent::Failed { id: i, t: r.arrival });
-                }
+        RouteDecision::Failed => {
+            st.ledger.failed += 1;
+            st.ledger.failed_tokens += isl;
+            if sink.enabled() {
+                sink.emit(FleetEvent::Failed { id: i, t: arrival });
             }
         }
     }
-    // Drain: finalize every remaining batch; failures can still strike, so
-    // keep re-routing spills until the fleet runs dry (the re-spill cap
-    // bounds this loop).
-    loop {
-        for g in 0..n_groups {
-            groups[g].advance(
-                f64::INFINITY,
-                g,
-                mnt,
-                &isls,
-                &ledger.ready,
-                prefill,
-                &mut first_token,
-                failures.as_mut(),
-                &mut spills,
-                sink,
-            );
-        }
-        if spills.is_empty() {
-            break;
-        }
-        process_spills(
-            &mut spills,
-            &requests,
-            &mut ledger,
-            &mut groups,
-            &mut failures,
-            &mut router,
-            bytes_per_token,
-            &mut xr,
-            sink,
-        );
-    }
+}
 
+/// Decode every group's served set and aggregate the [`FleetOutcome`] —
+/// the open-loop epilogue, shared verbatim by both cores.
+fn assemble_open(
+    st: OpenState,
+    spec: &ScenarioSpec,
+    sink: &mut dyn FleetEventSink,
+) -> FleetOutcome {
+    let OpenState {
+        n_groups,
+        slo,
+        requests,
+        groups,
+        mut failures,
+        first_token,
+        xr,
+        ledger,
+        shed,
+        shed_tokens,
+        ..
+    } = st;
     let gen = GenModel::new(&spec.hw, &spec.model, spec.serving.group_size);
     let mut finish = vec![0.0f64; requests.len()];
     let mut completed = vec![false; requests.len()];
@@ -1352,7 +1442,7 @@ pub fn simulate_with_sink(
     if let Some(f) = failures.as_mut() {
         f.emit_group_states(n_groups, horizon, sink);
     }
-    Ok(FleetOutcome {
+    FleetOutcome {
         slo,
         offered: requests.len(),
         admitted: metrics.n(),
@@ -1395,7 +1485,7 @@ pub fn simulate_with_sink(
         turn_latency: LatencyDigest::new(),
         span,
         metrics,
-    })
+    }
 }
 
 /// Invalidate the KV prefixes of every group whose *own* failure domain
@@ -1636,21 +1726,49 @@ fn process_session_spills(
     }
 }
 
-/// [`simulate`]'s closed-loop twin, entered when `serving.sessions` is on:
-/// session openings ride the open-loop stream verbatim, each served turn
-/// installs its KV prefix on the serving group and schedules the follow-up
-/// one think time after the response is predicted to finish streaming, and
-/// follow-ups interleave with openings through a single (arrival, index)
-/// event order.  With an infinite think time no follow-up is ever
-/// scheduled and every float reproduces the open-loop path bit-for-bit.
-fn simulate_sessions(
-    spec: &ScenarioSpec,
-    prefill: &dyn PrefillOffsets,
-    sink: &mut dyn FleetEventSink,
-) -> Result<FleetOutcome, String> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
+/// Everything a closed-loop (sessions) fleet run owns between setup and
+/// assembly — the session twin of [`OpenState`], shared by both cores so
+/// they cannot drift in anything but iteration order.
+struct SessionsState {
+    n_groups: usize,
+    slo: Slo,
+    requests: Vec<Request>,
+    sgen: SessionGen,
+    mnt: usize,
+    bytes_per_token: f64,
+    kv_bytes_per_token: f64,
+    kv_migrate: bool,
+    /// NVLink copy-engine bandwidth pricing intra-rack KV migrations.
+    ce_bw: f64,
+    cache: KvPrefixCache,
+    groups: Vec<GroupSim>,
+    failures: Option<FleetFailures>,
+    router: ClusterRouter,
+    /// Decode-rate estimate for scheduling follow-ups: the user reads the
+    /// response as it streams, then thinks, then sends the next turn.
+    gen_est: GenModel,
+    /// Per-request prompt tokens actually charged to prefill (prefix-hit
+    /// savings deducted at admission, reset when a failure voids them).
+    charged: Vec<usize>,
+    saved: Vec<usize>,
+    hit: Vec<bool>,
+    first_token: Vec<f64>,
+    xr: CrossRack,
+    ledger: ChurnLedger,
+    shed: usize,
+    shed_tokens: usize,
+    kv_transfer_bytes: f64,
+    /// Per-group failure-sync watermark for cache invalidation.
+    synced: Vec<f64>,
+    /// Per-group cursor into `served` for harvesting completed turns.
+    harvested: Vec<usize>,
+    next_id: u64,
+    follow_ups: usize,
+}
 
+/// Build the closed-loop run state a fleet spec describes — the session
+/// workload and KV prefix cache on top of the open-loop machinery.
+fn sessions_setup(spec: &ScenarioSpec) -> Result<SessionsState, String> {
     let ScenarioKind::Fleet { n_groups, n_requests, arrival, osl_dist, policy, slo, horizon } =
         &spec.kind
     else {
@@ -1661,7 +1779,7 @@ fn simulate_sessions(
     let base =
         OpenLoopGen::new(arrival.clone(), IslDist::from_serving(s), *osl_dist, s.seed);
     let mut sgen = SessionGen::new(base, s.seed, s.session_turns.max(1), s.think_time);
-    let mut requests = if *horizon > 0.0 {
+    let requests = if *horizon > 0.0 {
         sgen.initial_until(*horizon, *n_requests)
     } else {
         sgen.initial_take(*n_requests)
@@ -1674,201 +1792,200 @@ fn simulate_sessions(
     let bytes_per_token = spec.model.hidden as f64 * spec.model.act_bytes;
     let kv_bytes_per_token = spec.model.kv_bytes_per_token();
     let capacity = KvPrefixCache::tokens_for_budget(s.kv_capacity_gb, kv_bytes_per_token);
-    let mut cache = KvPrefixCache::new(n_groups, capacity);
+    let cache = KvPrefixCache::new(n_groups, capacity);
 
     let lm = GroupLatencyModel::new(&spec.hw, &spec.model, s);
     let isl0 = s.isl.max(1);
     let spt0 = lm.prefill_offsets(&[isl0])[0].max(0.0) / isl0 as f64;
     let dynamic_placement = s.mode == ParallelMode::Dwdp && s.routing_skew > 0.0;
-    let mut groups: Vec<GroupSim> = (0..n_groups)
+    let groups: Vec<GroupSim> = (0..n_groups)
         .map(|g| {
             GroupSim::new(spt0, dynamic_placement.then(|| DynamicPlacement::new(spec, g)))
         })
         .collect();
-    let mut failures = FleetFailures::from_spec(spec, &topo);
-    let mut router = ClusterRouter::with_topology(policy, topo);
-    // Decode-rate estimate for scheduling follow-ups: the user reads the
-    // response as it streams, then thinks, then sends the next turn.
+    let failures = FleetFailures::from_spec(spec, &topo);
+    let router = ClusterRouter::with_topology(policy, topo);
     let gen_est = GenModel::new(&spec.hw, &spec.model, s.group_size);
 
     let n0 = requests.len();
-    // Per-request prompt tokens actually charged to prefill (prefix-hit
-    // savings deducted at admission, reset when a failure voids them).
-    let mut charged: Vec<usize> = requests.iter().map(|r| r.isl).collect();
-    let mut saved: Vec<usize> = vec![0; n0];
-    let mut hit: Vec<bool> = vec![false; n0];
-    let mut first_token = vec![0.0f64; n0];
-    let mut xr = CrossRack::default();
-    let mut ledger = ChurnLedger {
+    let charged: Vec<usize> = requests.iter().map(|r| r.isl).collect();
+    let ledger = ChurnLedger {
         ready: requests.iter().map(|r| r.arrival).collect(),
         respills: vec![0; n0],
         requeued_mask: vec![false; n0],
         failed: 0,
         failed_tokens: 0,
     };
-    let mut spills: Vec<Spill> = Vec::new();
-    let mut shed = 0usize;
-    let mut shed_tokens = 0usize;
-    let mut kv_transfer_bytes = 0.0f64;
-    // Per-group failure-sync watermark for cache invalidation.
-    let mut synced = vec![0.0f64; n_groups];
-    // Per-group cursor into `served` for harvesting completed turns.
-    let mut harvested = vec![0usize; n_groups];
-    let mut next_id = requests.iter().map(|r| r.id).max().unwrap_or(0) + 1;
-    let mut follow_ups = 0usize;
+    let next_id = requests.iter().map(|r| r.id).max().unwrap_or(0) + 1;
+    Ok(SessionsState {
+        n_groups,
+        slo,
+        requests,
+        sgen,
+        mnt,
+        bytes_per_token,
+        kv_bytes_per_token,
+        kv_migrate: s.kv_migrate,
+        ce_bw: spec.hw.ce_bw,
+        cache,
+        groups,
+        failures,
+        router,
+        gen_est,
+        charged,
+        saved: vec![0; n0],
+        hit: vec![false; n0],
+        first_token: vec![0.0f64; n0],
+        xr: CrossRack::default(),
+        ledger,
+        shed: 0,
+        shed_tokens: 0,
+        kv_transfer_bytes: 0.0,
+        synced: vec![0.0f64; n_groups],
+        harvested: vec![0usize; n_groups],
+        next_id,
+        follow_ups: 0,
+    })
+}
 
-    // Arrival events — openings up front, follow-ups as they are
-    // scheduled — ordered by (arrival, index).  Arrivals are non-negative,
-    // so the raw f64 bit pattern sorts identically to the float, and the
-    // index tiebreak reproduces the open-loop sweep's enumeration order.
-    let mut events: BinaryHeap<Reverse<(u64, usize)>> = requests
-        .iter()
-        .enumerate()
-        .map(|(i, r)| Reverse((r.arrival.to_bits(), i)))
-        .collect();
-
-    loop {
-        // The clock: the earliest unrouted arrival, or a full drain.
-        let now =
-            events.peek().map_or(f64::INFINITY, |Reverse((b, _))| f64::from_bits(*b));
-        for g in 0..n_groups {
-            groups[g].advance(
-                now,
-                g,
-                mnt,
-                &charged,
-                &ledger.ready,
-                prefill,
-                &mut first_token,
-                failures.as_mut(),
-                &mut spills,
-                sink,
-            );
-        }
-        // Harvest turns served since the last look: install the session's
-        // KV prefix on the serving group and schedule the follow-up.
-        let mut scheduled = false;
-        for g in 0..n_groups {
-            while harvested[g] < groups[g].served.len() {
-                let i = groups[g].served[harvested[g]];
-                harvested[g] += 1;
-                let r = requests[i].clone();
-                let Some(sid) = r.session else { continue };
-                cache.insert(g, sid, resident_prefix(&r));
-                let plan = sgen.plan(sid);
-                let ctx = (r.isl as f64 + r.osl as f64 / 2.0).round() as usize;
-                let done = first_token[i] + r.osl as f64 * gen_est.step_time(1, ctx);
-                if let Some(f) = sgen.follow_up(&r, &plan, next_id, done) {
-                    next_id += 1;
-                    let idx = requests.len();
-                    events.push(Reverse((f.arrival.to_bits(), idx)));
-                    ledger.ready.push(f.arrival);
-                    ledger.respills.push(0);
-                    ledger.requeued_mask.push(false);
-                    charged.push(f.isl);
-                    saved.push(0);
-                    hit.push(false);
-                    first_token.push(0.0);
-                    requests.push(f);
-                    follow_ups += 1;
-                    scheduled = true;
-                }
-            }
-        }
-        if scheduled {
-            // A follow-up can land before `now` (its turn finished well
-            // before the next opening): re-resolve the earliest event.
-            continue;
-        }
-        sync_cache_failures(&mut failures, &mut cache, &mut synced, now, sink);
-        let mut processed_spills = false;
-        if !spills.is_empty() {
-            // Mirror the open-loop sweep: only spills whose failure
-            // instant has been reached re-route before this arrival.
-            let (due, rest): (Vec<Spill>, Vec<Spill>) =
-                std::mem::take(&mut spills).into_iter().partition(|sp| sp.at <= now);
-            spills = rest;
-            if !due.is_empty() {
-                processed_spills = true;
-                process_session_spills(
-                    due,
-                    &requests,
-                    &mut ledger,
-                    &mut groups,
-                    &mut failures,
-                    &mut router,
-                    bytes_per_token,
-                    &mut xr,
-                    &mut cache,
-                    &mut synced,
-                    &mut charged,
-                    &mut saved,
-                    &mut hit,
-                    s.kv_migrate,
-                    kv_bytes_per_token,
-                    spec.hw.ce_bw,
-                    &mut kv_transfer_bytes,
-                    sink,
-                );
-            }
-        }
-        let Some(Reverse((_, i))) = events.pop() else {
-            if spills.is_empty() && !processed_spills {
-                break;
-            }
-            // Re-queued spills are back in the pending queues; advance
-            // again to finalize (and possibly re-spill) them.
-            continue;
-        };
-        let at = requests[i].arrival;
-        if sink.enabled() {
-            let r = &requests[i];
-            sink.emit(FleetEvent::Arrival {
-                id: i,
-                t: at,
-                isl: r.isl,
-                osl: r.osl,
-                session: r.session,
-            });
-        }
-        match route_session(
-            i,
-            at,
-            &requests,
-            &mut groups,
-            &mut failures,
-            &mut router,
-            bytes_per_token,
-            &mut ledger.ready,
-            &mut xr,
-            &mut cache,
-            &mut charged,
-            &mut saved,
-            &mut hit,
-            s.kv_migrate,
-            kv_bytes_per_token,
-            spec.hw.ce_bw,
-            &mut kv_transfer_bytes,
-            sink,
-        ) {
-            RouteDecision::Admit(_) => {}
-            RouteDecision::Shed => {
-                shed += 1;
-                shed_tokens += requests[i].isl;
-                if sink.enabled() {
-                    sink.emit(FleetEvent::Shed { id: i, t: at });
-                }
-            }
-            RouteDecision::Failed => {
-                ledger.failed += 1;
-                ledger.failed_tokens += requests[i].isl;
-                if sink.enabled() {
-                    sink.emit(FleetEvent::Failed { id: i, t: at });
-                }
+/// Harvest turns served since the last look: install each session's KV
+/// prefix on its serving group and schedule the follow-up one think time
+/// after the response is predicted to finish streaming.  New arrivals are
+/// announced through `schedule(arrival, index)` — the only place the two
+/// drivers differ (the legacy `(bits, index)` request heap vs the typed
+/// event heap).  Returns whether anything was scheduled.
+fn sessions_harvest(st: &mut SessionsState, mut schedule: impl FnMut(f64, usize)) -> bool {
+    let mut scheduled = false;
+    for g in 0..st.n_groups {
+        while st.harvested[g] < st.groups[g].served.len() {
+            let i = st.groups[g].served[st.harvested[g]];
+            st.harvested[g] += 1;
+            let r = st.requests[i].clone();
+            let Some(sid) = r.session else { continue };
+            st.cache.insert(g, sid, resident_prefix(&r));
+            let plan = st.sgen.plan(sid);
+            let ctx = (r.isl as f64 + r.osl as f64 / 2.0).round() as usize;
+            let done = st.first_token[i] + r.osl as f64 * st.gen_est.step_time(1, ctx);
+            if let Some(f) = st.sgen.follow_up(&r, &plan, st.next_id, done) {
+                st.next_id += 1;
+                let idx = st.requests.len();
+                schedule(f.arrival, idx);
+                st.ledger.ready.push(f.arrival);
+                st.ledger.respills.push(0);
+                st.ledger.requeued_mask.push(false);
+                st.charged.push(f.isl);
+                st.saved.push(0);
+                st.hit.push(false);
+                st.first_token.push(0.0);
+                st.requests.push(f);
+                st.follow_ups += 1;
+                scheduled = true;
             }
         }
     }
+    scheduled
+}
 
+/// Re-route (or fail) the due spills of a sessions run — a thin borrow
+/// adapter over [`process_session_spills`].
+fn sessions_process_due(st: &mut SessionsState, due: Vec<Spill>, sink: &mut dyn FleetEventSink) {
+    process_session_spills(
+        due,
+        &st.requests,
+        &mut st.ledger,
+        &mut st.groups,
+        &mut st.failures,
+        &mut st.router,
+        st.bytes_per_token,
+        &mut st.xr,
+        &mut st.cache,
+        &mut st.synced,
+        &mut st.charged,
+        &mut st.saved,
+        &mut st.hit,
+        st.kv_migrate,
+        st.kv_bytes_per_token,
+        st.ce_bw,
+        &mut st.kv_transfer_bytes,
+        sink,
+    );
+}
+
+/// Emit request `i`'s arrival, route it through the session path, and
+/// account the verdict — the per-arrival tail both drivers execute once
+/// per opening or follow-up.
+fn sessions_route_and_account(st: &mut SessionsState, i: usize, sink: &mut dyn FleetEventSink) {
+    let at = st.requests[i].arrival;
+    if sink.enabled() {
+        let r = &st.requests[i];
+        sink.emit(FleetEvent::Arrival {
+            id: i,
+            t: at,
+            isl: r.isl,
+            osl: r.osl,
+            session: r.session,
+        });
+    }
+    match route_session(
+        i,
+        at,
+        &st.requests,
+        &mut st.groups,
+        &mut st.failures,
+        &mut st.router,
+        st.bytes_per_token,
+        &mut st.ledger.ready,
+        &mut st.xr,
+        &mut st.cache,
+        &mut st.charged,
+        &mut st.saved,
+        &mut st.hit,
+        st.kv_migrate,
+        st.kv_bytes_per_token,
+        st.ce_bw,
+        &mut st.kv_transfer_bytes,
+        sink,
+    ) {
+        RouteDecision::Admit(_) => {}
+        RouteDecision::Shed => {
+            st.shed += 1;
+            st.shed_tokens += st.requests[i].isl;
+            if sink.enabled() {
+                sink.emit(FleetEvent::Shed { id: i, t: at });
+            }
+        }
+        RouteDecision::Failed => {
+            st.ledger.failed += 1;
+            st.ledger.failed_tokens += st.requests[i].isl;
+            if sink.enabled() {
+                sink.emit(FleetEvent::Failed { id: i, t: at });
+            }
+        }
+    }
+}
+
+/// Decode every group's served set and aggregate the [`FleetOutcome`] —
+/// the sessions epilogue, shared verbatim by both cores.
+fn assemble_sessions(st: SessionsState, sink: &mut dyn FleetEventSink) -> FleetOutcome {
+    let SessionsState {
+        n_groups,
+        slo,
+        requests,
+        groups,
+        mut failures,
+        gen_est,
+        charged,
+        saved,
+        hit,
+        first_token,
+        xr,
+        ledger,
+        shed,
+        shed_tokens,
+        kv_transfer_bytes,
+        follow_ups,
+        ..
+    } = st;
     let mut finish = vec![0.0f64; requests.len()];
     let mut completed = vec![false; requests.len()];
     for (g, gs) in groups.iter().enumerate() {
@@ -1924,7 +2041,7 @@ fn simulate_sessions(
     if let Some(f) = failures.as_mut() {
         f.emit_group_states(n_groups, horizon, sink);
     }
-    Ok(FleetOutcome {
+    FleetOutcome {
         slo,
         offered: requests.len(),
         admitted: metrics.n(),
@@ -1964,7 +2081,7 @@ fn simulate_sessions(
         turn_latency,
         span,
         metrics,
-    })
+    }
 }
 
 /// [`simulate`] with the closed-form per-group prefill model — the fast

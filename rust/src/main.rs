@@ -24,7 +24,10 @@ use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig
 use dwdp::contention::contention_distribution;
 use dwdp::coordinator::GroupLatencyModel;
 use dwdp::experiments::{self, calib};
-use dwdp::fleet::{available_threads, fleet_workload, run_sweep, ClusterPolicy, SweepPoint};
+use dwdp::fleet::{
+    available_threads, fleet_workload, run_sweep, simulate as fleet_simulate,
+    simulate_parallel as fleet_simulate_parallel, ClusterPolicy, SweepPoint,
+};
 use dwdp::placement::ExpertPlacement;
 use dwdp::serving::registry::{self, RunArtifact};
 use dwdp::serving::{run_fleet_analytic_logged, Fidelity, RunReport, ServingStack};
@@ -55,6 +58,7 @@ fn run(args: &[String]) -> i32 {
         "serve" => serve(&flags),
         "fleet" => fleet_cmd(&flags),
         "bench" => bench_cmd(&flags),
+        "golden" => golden_cmd(&flags),
         "lint" => lint_cmd(&flags),
         "info" => {
             info();
@@ -500,6 +504,25 @@ fn bench_cmd(flags: &HashMap<String, String>) -> i32 {
     b.bench("smoke/latency_model_prefill_batch4", || {
         lm.prefill_offsets(&[8192, 7200, 6800, 6600])
     });
+    // The event-driven fleet core end to end, serial vs in-sim threaded —
+    // the pair the perf trajectory watches for a serialized-core
+    // regression (`--check` gates median_ns per case).
+    let fleet_spec = match experiments::fleet::fleet_scenario(ParallelMode::Dwdp, 4)
+        .requests(32)
+        .rate(20.0)
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let flm = GroupLatencyModel::new(&fleet_spec.hw, &fleet_spec.model, &fleet_spec.serving);
+    b.bench("fleet/event_core_g4_r32_serial", || fleet_simulate(&fleet_spec, &flm));
+    b.bench("fleet/event_core_g4_r32_threads4", || {
+        fleet_simulate_parallel(&fleet_spec, &flm, 4)
+    });
     b.finish();
 
     let mut suite = BenchSuite::new(&name);
@@ -554,14 +577,129 @@ fn bench_cmd(flags: &HashMap<String, String>) -> i32 {
     }
     suite.wall_seconds = t0.elapsed().as_secs_f64();
     match suite.write(".") {
-        Ok(path) => {
-            eprintln!("wrote {path}");
-            0
-        }
+        Ok(path) => eprintln!("wrote {path}"),
         Err(e) => {
             eprintln!("bench: could not write BENCH_{name}.json: {e}");
-            1
+            return 1;
         }
+    }
+    match flags.get("check") {
+        Some(baseline) => bench_gate(&suite, baseline),
+        None => 0,
+    }
+}
+
+/// The perf-trajectory gate behind `bench --check BASELINE.json`: compare
+/// the suite just measured against the committed baseline and exit
+/// non-zero on any regression past `dwdp::bench::gate_threshold_pct`
+/// (see `dwdp::bench::gate_against_baseline` for the rules; a baseline
+/// with a non-null `pending` field passes vacuously so the gate can be
+/// committed before the first CI-measured numbers).
+fn bench_gate(suite: &BenchSuite, baseline_path: &str) -> i32 {
+    let raw = match std::fs::read_to_string(baseline_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench gate: cannot read {baseline_path}: {e}");
+            return 1;
+        }
+    };
+    let baseline = match Json::parse(&raw) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench gate: {baseline_path} is not valid JSON: {e}");
+            return 1;
+        }
+    };
+    let pct = dwdp::bench::gate_threshold_pct();
+    let gate = dwdp::bench::gate_against_baseline(&suite.to_json(), &baseline, pct);
+    for n in &gate.notes {
+        eprintln!("bench gate: note: {n}");
+    }
+    for r in &gate.regressions {
+        eprintln!("bench gate: REGRESSION: {r}");
+    }
+    if gate.passed() {
+        eprintln!("bench gate: OK against {baseline_path} (threshold {pct}%)");
+        0
+    } else {
+        eprintln!(
+            "bench gate: FAILED against {baseline_path} ({} regression(s); threshold {pct}%)",
+            gate.regressions.len()
+        );
+        1
+    }
+}
+
+/// `golden` — verify (default) or `--update` the committed golden
+/// fingerprint corpus under `rust/tests/golden/` (see
+/// `dwdp::serving::golden`).
+fn golden_cmd(flags: &HashMap<String, String>) -> i32 {
+    use dwdp::serving::golden::{self, GoldenStatus};
+    golden::pin_quick();
+    let dir = flags
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(golden::corpus_dir);
+    let update = flags.contains_key("update");
+    if update {
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            eprintln!("golden: cannot create {}: {e}", dir.display());
+            return 1;
+        }
+    }
+    let (mut written, mut matched, mut skipped) = (0usize, 0usize, 0usize);
+    let mut bad: Vec<String> = Vec::new();
+    for entry in registry::registry() {
+        if update {
+            match golden::render(entry) {
+                Ok(Some(doc)) => {
+                    let path = dir.join(format!("{}.fingerprint.json", entry.id));
+                    if let Err(e) = std::fs::write(&path, doc) {
+                        eprintln!("golden: write {}: {e}", path.display());
+                        return 1;
+                    }
+                    written += 1;
+                    eprintln!("golden: wrote {}", path.display());
+                }
+                Ok(None) => skipped += 1,
+                Err(e) => {
+                    eprintln!("golden: {e}");
+                    return 1;
+                }
+            }
+        } else {
+            match golden::check(entry, &dir) {
+                Ok(GoldenStatus::Match) => matched += 1,
+                Ok(GoldenStatus::NoSpecs) => skipped += 1,
+                Ok(GoldenStatus::Mismatch) => bad.push(format!("{}: MISMATCH", entry.id)),
+                Ok(GoldenStatus::Missing) => bad.push(format!("{}: missing file", entry.id)),
+                Err(e) => {
+                    eprintln!("golden: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    if update {
+        println!(
+            "golden: updated {written} fingerprints in {} ({skipped} specless entries skipped)",
+            dir.display()
+        );
+        return 0;
+    }
+    if bad.is_empty() {
+        println!("golden: {matched} fingerprints match ({skipped} specless entries skipped)");
+        0
+    } else {
+        for line in &bad {
+            eprintln!("golden: {line}");
+        }
+        eprintln!(
+            "golden: {} of {} fingerprints diverge — if intentional, rerun with --update and commit",
+            bad.len(),
+            matched + bad.len()
+        );
+        1
     }
 }
 

@@ -39,7 +39,7 @@ pub enum GroupPhase {
 }
 
 /// One candidate group considered by a routing decision.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RouteCandidate {
     /// Group index.
     pub group: usize,
@@ -56,7 +56,7 @@ pub struct RouteCandidate {
 /// A typed fleet event.  Timestamps `t` are simulation seconds; `id` is
 /// the request's index into the run's request vector (stable across
 /// re-queues and shared with `metrics::RequestRecord::id`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum FleetEvent {
     /// A request entered the fleet (first routing attempt only;
     /// re-queues emit [`FleetEvent::Requeue`] instead).
@@ -359,6 +359,17 @@ impl EventLog {
     /// transfer start paired with an end, and exactly one terminal
     /// outcome — a first token (with queue enter/leave, prefill
     /// start/end, decode start/end), a shed, or a failure.
+    ///
+    /// Re-queue chains are audited too: every `requeue` must follow a
+    /// matching `kill` (at any prefix of the event sequence, re-queues
+    /// never outnumber kills), kills are bounded by the fleet's re-spill
+    /// cap ([`crate::fleet::MAX_RESPILLS`]` + 1` — a killed request is
+    /// re-queued at most `MAX_RESPILLS` times, and the final kill fails
+    /// it), a served request has every kill answered by a re-queue, a
+    /// failed request has at most one unanswered kill (the cap strike;
+    /// zero when the failure happened at routing during an outage), and
+    /// a shed request was never killed at all — so each kill → re-queue
+    /// → … chain contributes exactly one terminal.
     pub fn check_lifecycles(&self) -> Result<LifecycleSummary, String> {
         #[derive(Default)]
         struct Life {
@@ -398,6 +409,33 @@ impl EventLog {
             if n("xfer_start") != n("xfer_end") {
                 return Err(format!("request {id}: unpaired transfer events"));
             }
+            // Re-queue chain audit: walking the event sequence, a
+            // `requeue` may only answer an earlier `kill`.
+            let (mut kills, mut requeues) = (0usize, 0usize);
+            for k in &l.kinds {
+                match *k {
+                    "kill" => kills += 1,
+                    "requeue" => {
+                        requeues += 1;
+                        if requeues > kills {
+                            return Err(format!("request {id}: requeue without a prior kill"));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let cap = crate::fleet::MAX_RESPILLS as usize + 1;
+            if kills > cap {
+                return Err(format!(
+                    "request {id}: {kills} kills exceed the re-spill cap ({cap})"
+                ));
+            }
+            if requeues > cap - 1 {
+                return Err(format!(
+                    "request {id}: {requeues} requeues exceed the re-spill cap ({})",
+                    cap - 1
+                ));
+            }
             let (served, shed, failed) = (n("prefill_end"), n("shed"), n("failed"));
             let terminals = usize::from(served > 0) + shed + failed;
             if terminals != 1 {
@@ -418,10 +456,26 @@ impl EventLog {
                         return Err(format!("request {id}: served but no {k} event"));
                     }
                 }
+                if kills != requeues {
+                    return Err(format!(
+                        "request {id}: served with {kills} kills but {requeues} requeues"
+                    ));
+                }
                 out.admitted += 1;
             } else if shed > 0 {
+                if kills != 0 {
+                    return Err(format!("request {id}: shed after {kills} kills"));
+                }
                 out.shed += 1;
             } else {
+                // At most one unanswered kill: the cap strike.  Zero when
+                // the request failed at routing (fleet-wide outage).
+                if kills - requeues > 1 {
+                    return Err(format!(
+                        "request {id}: failed with {} unanswered kills",
+                        kills - requeues
+                    ));
+                }
                 out.failed += 1;
             }
         }
@@ -508,6 +562,97 @@ mod tests {
         let mut open = EventLog::new();
         open.emit(FleetEvent::Arrival { id: 1, t: 0.0, isl: 1, osl: 1, session: None });
         assert!(open.check_lifecycles().is_err());
+    }
+
+    /// A lifecycle with `chains` nested kill → re-queue cycles before the
+    /// final (served) attempt, timestamps strictly advancing.
+    fn churned_log(chains: usize) -> EventLog {
+        let mut log = EventLog::new();
+        log.emit(FleetEvent::Arrival { id: 3, t: 0.0, isl: 64, osl: 4, session: None });
+        log.emit(FleetEvent::RouteDecision {
+            id: 3,
+            t: 0.0,
+            policy: "round_robin",
+            chosen: Some(0),
+            reason: "cursor".into(),
+            candidates: vec![],
+        });
+        let mut t = 0.0;
+        for c in 0..chains {
+            log.emit(FleetEvent::QueueEnter { id: 3, t, group: c });
+            log.emit(FleetEvent::QueueLeave { id: 3, t: t + 0.5, group: c });
+            log.emit(FleetEvent::PrefillStart { id: 3, t: t + 0.5, group: c });
+            log.emit(FleetEvent::Kill { id: 3, t: t + 1.0, group: c });
+            log.emit(FleetEvent::Requeue { id: 3, t: t + 1.0 });
+            t += 1.0;
+        }
+        log.emit(FleetEvent::QueueEnter { id: 3, t, group: 9 });
+        log.emit(FleetEvent::QueueLeave { id: 3, t: t + 0.5, group: 9 });
+        log.emit(FleetEvent::PrefillStart { id: 3, t: t + 0.5, group: 9 });
+        log.emit(FleetEvent::PrefillEnd { id: 3, t: t + 1.0, group: 9 });
+        log.emit(FleetEvent::DecodeStart { id: 3, t: t + 1.0, group: 9 });
+        log.emit(FleetEvent::DecodeEnd { id: 3, t: t + 2.0, group: 9 });
+        log
+    }
+
+    #[test]
+    fn lifecycle_checker_accepts_nested_requeue_chains_under_cap() {
+        // Up to MAX_RESPILLS kill → re-queue cycles can precede a served
+        // terminal; each chain must tally exactly one admitted request.
+        let cap = crate::fleet::MAX_RESPILLS as usize;
+        for chains in [1, 2, cap] {
+            let s = churned_log(chains).check_lifecycles().expect("chain is legal");
+            assert_eq!(s, LifecycleSummary { admitted: 1, shed: 0, failed: 0 });
+        }
+        // The cap-strike shape: MAX_RESPILLS re-queues, then a final kill
+        // with no answering re-queue, terminating in a failure.
+        let mut log = churned_log(cap);
+        log.events.truncate(log.events.len() - 6); // drop the served attempt
+        log.emit(FleetEvent::QueueEnter { id: 3, t: 99.0, group: 9 });
+        log.emit(FleetEvent::Kill { id: 3, t: 99.5, group: 9 });
+        log.emit(FleetEvent::Failed { id: 3, t: 99.5 });
+        let s = log.check_lifecycles().expect("cap strike is legal");
+        assert_eq!(s, LifecycleSummary { admitted: 0, shed: 0, failed: 1 });
+    }
+
+    #[test]
+    fn lifecycle_checker_rejects_malformed_requeue_chains() {
+        // A re-queue with no prior kill.
+        let mut log = served_log();
+        log.events.insert(1, FleetEvent::Requeue { id: 7, t: 1.0 });
+        assert!(log.check_lifecycles().unwrap_err().contains("without a prior kill"));
+
+        // More kills than the re-spill cap allows.
+        let over = crate::fleet::MAX_RESPILLS as usize + 1;
+        let mut log = churned_log(over);
+        // Kill the final attempt too: MAX_RESPILLS + 2 kills total.
+        log.events.truncate(log.events.len() - 3);
+        log.emit(FleetEvent::Kill { id: 3, t: 99.0, group: 9 });
+        log.emit(FleetEvent::Failed { id: 3, t: 99.0 });
+        assert!(log.check_lifecycles().unwrap_err().contains("re-spill cap"));
+
+        // Served while a kill is still unanswered (the checker must see
+        // the kill → re-queue chain balance, not just counts of each).
+        let mut log = churned_log(1);
+        log.events.retain(|ev| ev.kind() != "requeue");
+        assert!(log.check_lifecycles().unwrap_err().contains("served with"));
+
+        // Shed after a kill: the spill path accounts a shed verdict as
+        // failed, so this shape can never come out of the simulator.
+        let mut log = churned_log(1);
+        log.events.truncate(log.events.len() - 6);
+        log.emit(FleetEvent::Shed { id: 3, t: 99.0 });
+        assert!(log.check_lifecycles().unwrap_err().contains("shed after"));
+
+        // Failed with two unanswered kills: a kill must re-queue or fail
+        // immediately, never stack.
+        let mut log = churned_log(1);
+        log.events.retain(|ev| ev.kind() != "requeue");
+        log.events.truncate(log.events.len() - 6);
+        log.emit(FleetEvent::QueueEnter { id: 3, t: 99.0, group: 9 });
+        log.emit(FleetEvent::Kill { id: 3, t: 99.5, group: 9 });
+        log.emit(FleetEvent::Failed { id: 3, t: 99.5 });
+        assert!(log.check_lifecycles().unwrap_err().contains("unanswered"));
     }
 
     #[test]

@@ -360,6 +360,20 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
     }
 }
 
+/// Assemble the full fleet [`RunReport`] one outcome maps to — exactly
+/// what the analytic/DES backends emit for a fleet scenario, exposed
+/// crate-internally so the fleet differential tests can fingerprint
+/// outcomes from both cores byte-for-byte via `to_json().dump()`.
+pub(crate) fn fleet_report(
+    spec: &ScenarioSpec,
+    backend: &'static str,
+    out: &fleet::FleetOutcome,
+) -> RunReport {
+    let mut report = base_report(spec, backend);
+    fill_fleet_report(&mut report, spec, out);
+    report
+}
+
 fn disagg_sim(spec: &ScenarioSpec) -> Result<DisaggSim, String> {
     match spec.kind {
         ScenarioKind::Disagg { n_ctx_groups, n_gen_gpus, route_policy, .. } => Ok(DisaggSim {
@@ -478,12 +492,14 @@ struct DesPrefill<'a> {
     /// [`PrefillOffsets`] trait is infallible (the analytic model cannot
     /// fail), so the DES adapter parks the error here and the backend
     /// surfaces it after the serving loop returns.
-    err: std::cell::RefCell<Option<String>>,
+    /// A `Mutex` (not `RefCell`) so the adapter stays `Sync`: the fleet
+    /// event core shares the prefill seam across its worker threads.
+    err: std::sync::Mutex<Option<String>>,
 }
 
 impl<'a> DesPrefill<'a> {
     fn new(spec: &'a ScenarioSpec) -> Self {
-        DesPrefill { spec, err: std::cell::RefCell::new(None) }
+        DesPrefill { spec, err: std::sync::Mutex::new(None) }
     }
 
     fn run_batch(&self, serving: &crate::config::ServingConfig, isls: &[usize]) -> Vec<f64> {
@@ -496,7 +512,7 @@ impl<'a> DesPrefill<'a> {
         ) {
             Ok(run) => run,
             Err(e) => {
-                self.err.borrow_mut().get_or_insert(e);
+                self.err.lock().unwrap().get_or_insert(e);
                 return vec![0.0; isls.len()];
             }
         };
@@ -578,7 +594,7 @@ impl ExecutionBackend for DesBackend {
                 }
                 let prefill = DesPrefill::new(spec);
                 let p = disagg_sim(spec)?.run_with(n_requests, arrival_rate, &prefill);
-                if let Some(e) = prefill.err.into_inner() {
+                if let Some(e) = prefill.err.into_inner().unwrap() {
                     return Err(e);
                 }
                 report.n_requests = p.n_requests;
@@ -598,8 +614,12 @@ impl ExecutionBackend for DesBackend {
                     );
                 }
                 let prefill = DesPrefill::new(spec);
-                let out = fleet::simulate(spec, &prefill)?;
-                if let Some(e) = prefill.err.into_inner() {
+                // Per-batch DES prefills are the expensive fidelity, so the
+                // event core's in-simulation parallelism pays off here;
+                // bit-identical to `threads = 1` by construction (and by
+                // the thread-invariance differential tests).
+                let out = fleet::simulate_parallel(spec, &prefill, fleet::available_threads())?;
+                if let Some(e) = prefill.err.into_inner().unwrap() {
                     return Err(e);
                 }
                 fill_fleet_report(&mut report, spec, &out);

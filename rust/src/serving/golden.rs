@@ -1,0 +1,169 @@
+//! Golden-fingerprint corpus: the committed `RunReport::to_json()` of every
+//! registry scenario, replayed byte-for-byte by `tests/golden.rs`.
+//!
+//! The corpus pins the simulator's *observable* behaviour across refactors:
+//! any change to routing, batching, churn accounting, or float arithmetic
+//! shows up as a byte diff against `rust/tests/golden/<id>.fingerprint.json`.
+//! It was generated from the batch-serial fleet core immediately before the
+//! event-driven rewrite, so a passing replay is a proof that the rewrite is
+//! bit-identical — independent of the differential tests in
+//! `src/fleet/difftest.rs`, which compare the two cores against each other.
+//!
+//! * `dwdp-repro golden` verifies the working tree against the corpus.
+//! * `dwdp-repro golden --update` regenerates it (only for *intentional*
+//!   behaviour changes; commit the diff with an explanation).
+//!
+//! Both the CLI and the replay test funnel through [`render`], so the
+//! emitted bytes cannot drift between the two. `DWDP_QUICK=1` is pinned by
+//! [`pin_quick`] before specs are built — quick-path specs are part of the
+//! fingerprint contract.
+
+use std::path::{Path, PathBuf};
+
+use crate::serving::registry::ScenarioEntry;
+use crate::serving::{Fidelity, ServingStack};
+use crate::util::json::obj;
+use crate::util::Json;
+
+/// Spec caps per entry/fidelity keep the corpus replay inside a CI-friendly
+/// budget while still covering every registry entry and both fidelities.
+/// Analytic specs are milliseconds each; DES specs run the full engine.
+const MAX_ANALYTIC_SPECS: usize = 2;
+const MAX_DES_SPECS: usize = 1;
+
+/// Where the corpus lives, relative to the crate (committed in-tree).
+pub fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Corpus file for one registry entry.
+pub fn corpus_path(entry: &ScenarioEntry) -> PathBuf {
+    corpus_dir().join(format!("{}.fingerprint.json", entry.id))
+}
+
+/// Pin the quick experiment paths; fingerprints are defined at
+/// `DWDP_QUICK=1` so local runs match CI regardless of the caller's env.
+pub fn pin_quick() {
+    // det-lint: allow(env-mutation) — fingerprints are defined at quick
+    // scale; the pin makes the corpus environment-independent.
+    std::env::set_var("DWDP_QUICK", "1");
+}
+
+/// Render one entry's fingerprint document, or `Ok(None)` for entries that
+/// publish no machine-checkable specs (`specs_none`, e.g. hardware-survey
+/// tables). A fidelity that refuses a spec (unsupported kind, trace capture)
+/// is pinned too: the error string becomes the fingerprint.
+pub fn render(entry: &ScenarioEntry) -> Result<Option<String>, String> {
+    let specs = (entry.specs)().map_err(|e| format!("{}: specs: {e}", entry.id))?;
+    if specs.is_empty() {
+        return Ok(None);
+    }
+    let mut cases = Vec::new();
+    for (fidelity, tag, cap) in [
+        (Fidelity::Analytic, "analytic", MAX_ANALYTIC_SPECS),
+        (Fidelity::Des, "des", MAX_DES_SPECS),
+    ] {
+        for spec in specs.iter().take(cap) {
+            let mut fields = vec![
+                ("label", Json::Str(spec.label.clone())),
+                ("fidelity", Json::Str(tag.to_string())),
+            ];
+            match ServingStack::new(spec.clone(), fidelity).run() {
+                Ok(report) => fields.push(("report", report.to_json())),
+                Err(e) => fields.push(("error", Json::Str(e))),
+            }
+            cases.push(obj(fields));
+        }
+    }
+    let doc = obj(vec![
+        ("scenario", Json::Str(entry.id.to_string())),
+        ("cases", Json::Arr(cases)),
+    ]);
+    Ok(Some(doc.dump() + "\n"))
+}
+
+/// Outcome of checking one entry against the committed corpus.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GoldenStatus {
+    /// Rendered bytes equal the committed file.
+    Match,
+    /// Rendered bytes differ from the committed file.
+    Mismatch,
+    /// No committed file exists for this entry yet.
+    Missing,
+    /// Entry publishes no specs; nothing to pin.
+    NoSpecs,
+    /// No committed file existed; one was just rendered and written
+    /// ([`bootstrap`] only — commit the new file to arm the gate).
+    Bootstrapped,
+}
+
+/// Compare one entry's freshly rendered fingerprint against the corpus at
+/// `dir` without writing anything.
+pub fn check(entry: &ScenarioEntry, dir: &Path) -> Result<GoldenStatus, String> {
+    let Some(rendered) = render(entry)? else {
+        return Ok(GoldenStatus::NoSpecs);
+    };
+    let path = dir.join(format!("{}.fingerprint.json", entry.id));
+    match std::fs::read_to_string(&path) {
+        Ok(committed) if committed == rendered => Ok(GoldenStatus::Match),
+        Ok(_) => Ok(GoldenStatus::Mismatch),
+        Err(_) => Ok(GoldenStatus::Missing),
+    }
+}
+
+/// Like [`check`], but a missing file is seeded from the fresh render
+/// instead of reported: the first test run on a new checkout writes the
+/// corpus, every later run replays it byte-for-byte. Mismatches are never
+/// overwritten — those need an explicit `golden --update`.
+pub fn bootstrap(entry: &ScenarioEntry, dir: &Path) -> Result<GoldenStatus, String> {
+    let Some(rendered) = render(entry)? else {
+        return Ok(GoldenStatus::NoSpecs);
+    };
+    let path = dir.join(format!("{}.fingerprint.json", entry.id));
+    match std::fs::read_to_string(&path) {
+        Ok(committed) if committed == rendered => Ok(GoldenStatus::Match),
+        Ok(_) => Ok(GoldenStatus::Mismatch),
+        Err(_) => {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("{}: create {}: {e}", entry.id, dir.display()))?;
+            std::fs::write(&path, rendered)
+                .map_err(|e| format!("{}: write {}: {e}", entry.id, path.display()))?;
+            Ok(GoldenStatus::Bootstrapped)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::registry;
+
+    #[test]
+    fn render_is_deterministic_and_skips_specless_entries() {
+        pin_quick();
+        let entries = registry::registry();
+        let none = entries
+            .iter()
+            .find(|e| (e.specs)().map(|s| s.is_empty()).unwrap_or(false))
+            .expect("registry has a specs_none entry");
+        assert_eq!(render(none).unwrap(), None);
+
+        let fig1 = entries.iter().find(|e| e.id == "fig1").expect("fig1 registered");
+        let a = render(fig1).unwrap().expect("fig1 has specs");
+        let b = render(fig1).unwrap().expect("fig1 has specs");
+        assert_eq!(a, b, "same process, same bytes");
+        assert!(a.ends_with('\n'));
+        let doc = Json::parse(a.trim_end()).expect("valid json");
+        assert_eq!(doc.get("scenario").as_str(), Some("fig1"));
+        let cases = doc.get("cases").as_arr().expect("cases array");
+        assert!(!cases.is_empty());
+        for c in cases {
+            assert!(c.get("label").as_str().is_some());
+            let fid = c.get("fidelity").as_str().unwrap();
+            assert!(fid == "analytic" || fid == "des", "{fid}");
+            let pinned = *c.get("report") != Json::Null || *c.get("error") != Json::Null;
+            assert!(pinned, "case pins a report or an error");
+        }
+    }
+}

@@ -32,6 +32,7 @@
 //! the repository root.
 
 pub mod backend;
+pub mod golden;
 pub mod registry;
 pub mod scenario;
 
@@ -39,6 +40,7 @@ pub use backend::{
     run_fleet_analytic_logged, AnalyticBackend, DesBackend, ExecutionBackend, PjrtBackend,
     RunReport,
 };
+pub(crate) use backend::fleet_report;
 pub use scenario::{Scenario, ScenarioKind, ScenarioSpec};
 
 /// The fidelity levels a scenario can run at.

@@ -388,7 +388,8 @@ pub fn usage_text() -> String {
     out.push_str("                   [--mtbf S] [--mttr S] [--requeue]\n");
     out.push_str("                   [--racks R] [--inter-rack-gbps G] [--inter-rack-latency S]\n");
     out.push_str("                   [--rack-blast] [--threads T] [--json FILE]\n");
-    out.push_str("  dwdp-repro bench [--name NAME]\n");
+    out.push_str("  dwdp-repro bench [--name NAME] [--check BASELINE.json]\n");
+    out.push_str("  dwdp-repro golden [--update] [--dir DIR]\n");
     out.push_str("  dwdp-repro lint [--src DIR]\n");
     out.push_str("  dwdp-repro info\n");
     out.push_str("\nscenario ids (dwdp-repro experiment <id>):\n");

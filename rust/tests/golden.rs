@@ -1,0 +1,65 @@
+//! Golden-fingerprint replay: every corpus file under `tests/golden/` must
+//! match a fresh render byte-for-byte; entries without a committed file are
+//! seeded on first run (commit the generated files to arm the gate).
+//!
+//! Once committed, the corpus pins `RunReport::to_json()` across refactors
+//! — in particular it certifies that the event-driven fleet core is
+//! bit-identical to the batch-serial loop it replaced. Regenerate only for
+//! intentional behaviour changes: `dwdp-repro golden --update`.
+
+use dwdp::serving::golden::{self, GoldenStatus};
+use dwdp::serving::registry;
+
+#[test]
+fn golden_corpus_replays_byte_identically() {
+    golden::pin_quick();
+    let dir = golden::corpus_dir();
+    let (mut checked, mut seeded) = (0usize, 0usize);
+    let mut bad: Vec<String> = Vec::new();
+    for entry in registry::registry() {
+        match golden::bootstrap(entry, &dir).unwrap_or_else(|e| panic!("{}: {e}", entry.id)) {
+            GoldenStatus::Match => checked += 1,
+            GoldenStatus::Bootstrapped => seeded += 1,
+            GoldenStatus::NoSpecs => {}
+            GoldenStatus::Mismatch => bad.push(format!(
+                "{}: fingerprint diverged from tests/golden/{}.fingerprint.json",
+                entry.id, entry.id
+            )),
+            GoldenStatus::Missing => unreachable!("bootstrap seeds missing files"),
+        }
+    }
+    if seeded > 0 {
+        eprintln!(
+            "golden: seeded {seeded} fingerprint(s) under {} — commit them to arm the gate",
+            dir.display()
+        );
+    }
+    assert!(
+        bad.is_empty(),
+        "golden corpus diverged — if intentional, regenerate with \
+         `cargo run --release -- golden --update` and commit:\n{}",
+        bad.join("\n")
+    );
+    assert!(checked + seeded > 0, "corpus replayed no entries at all");
+}
+
+#[test]
+fn corpus_dir_has_no_orphan_files() {
+    // Every fingerprint on disk must correspond to a live registry id;
+    // renamed/removed scenarios must not leave stale goldens behind.
+    let dir = golden::corpus_dir();
+    let Ok(files) = std::fs::read_dir(&dir) else {
+        return; // corpus not bootstrapped yet
+    };
+    let ids: Vec<&str> = registry::registry().iter().map(|e| e.id).collect();
+    for f in files {
+        let name = f.unwrap().file_name().to_string_lossy().into_owned();
+        if name == "README.md" {
+            continue;
+        }
+        let Some(id) = name.strip_suffix(".fingerprint.json") else {
+            panic!("unexpected file in tests/golden: {name}");
+        };
+        assert!(ids.contains(&id), "orphan golden for unknown scenario {id:?}");
+    }
+}
