@@ -1,0 +1,114 @@
+//! Memory pressure: expert redundancy, KV residency, and batching under
+//! one per-group HBM budget.
+//!
+//! Redundancy is DWDP's core trade, and it is priced in HBM: every extra
+//! local expert replica is bytes the KV cache no longer gets.  With
+//! `hbm_budget` on, each group partitions the device once — resident
+//! expert weights off the top, a fixed activation headroom, and the rest
+//! is the KV budget shared by in-flight decode contexts and resident
+//! session prefixes.  This example walks that hierarchy end to end, all
+//! at analytic fidelity (instant):
+//! 1. the derived partition itself: how `local_experts` eats the device,
+//! 2. redundancy vs prefix residency at equal load — more replicas,
+//!    fewer resident prefixes, lower hit rate,
+//! 3. an explicit `kv_capacity_gb` override tight enough that batches
+//!    trim, admissions defer, and prefixes preempt,
+//! 4. the host-offload tier: evicted prefixes pulled back over the host
+//!    link instead of being re-prefilled.
+//!
+//! ```sh
+//! cargo run --release --example memory_pressure
+//! ```
+
+use dwdp::config::{HbmBudget, ParallelMode};
+use dwdp::fleet::{simulate_analytic, ClusterPolicy};
+use dwdp::serving::Scenario;
+
+fn fleet() -> Scenario {
+    Scenario::fleet()
+        .mode(ParallelMode::Dwdp)
+        .group(4)
+        .groups(4)
+        .isl(8192)
+        .ratio(0.8)
+        .osl_window(256, 1024)
+        .rate(4.0)
+        .requests(64)
+        .sessions(true)
+        .session_turns(4)
+        .think_time(0.5)
+        .cluster_policy(ClusterPolicy::PrefixAffinity)
+        .hbm_budget(true)
+        .seed(7)
+}
+
+fn main() {
+    // 1. The partition: weights + headroom + KV = the device, per rank.
+    println!("== The derived per-rank HBM partition ==");
+    for local in [64usize, 96, 128] {
+        let spec = fleet().local_experts(local).build().expect("budget scenario");
+        let b = HbmBudget::derive(&spec.hw, &spec.model, &spec.serving);
+        println!(
+            "  local={local:>3}: weights {:>6.1} GB + headroom {:>5.1} GB + KV {:>6.1} GB \
+             = {:>6.1} GB",
+            b.weight_bytes / 1e9,
+            b.headroom_bytes / 1e9,
+            b.kv_bytes / 1e9,
+            b.total_bytes / 1e9,
+        );
+    }
+
+    // 2. Redundancy squeezes prefix residency at equal load.
+    println!("\n== Redundancy vs KV residency (derived budget, equal load) ==");
+    for local in [64usize, 96, 128] {
+        let spec = fleet().local_experts(local).build().expect("redundancy scenario");
+        let o = simulate_analytic(&spec).expect("redundancy run");
+        println!(
+            "  local={local:>3}: hits {:>3}/{:<3}  saved {:>7} tokens  \
+             KV peak {:>5.2} GB/rank  deferred {:>3}",
+            o.prefix_hits,
+            o.follow_ups,
+            o.prefix_tokens_saved,
+            o.hbm_kv_peak_bytes / 1e9,
+            o.deferred_admissions,
+        );
+    }
+    println!("  -> every replica bought is prefix residency sold.");
+
+    // 3. An explicit override tight enough to defer and preempt.
+    println!("\n== Explicit kv_capacity_gb override, local=64 ==");
+    for kv_gb in [2.0f64, 0.5] {
+        let spec = fleet().kv_capacity_gb(kv_gb).build().expect("override scenario");
+        let o = simulate_analytic(&spec).expect("override run");
+        println!(
+            "  kv={kv_gb:>4} GB: hits {:>3}/{:<3}  deferred {:>3}  preempted {:>7} tokens",
+            o.prefix_hits,
+            o.follow_ups,
+            o.deferred_admissions,
+            o.kv_preempted_tokens,
+        );
+    }
+
+    // 4. The host tier prices evicted-then-reused prefixes over
+    // `LinkTier::Host` instead of paying full re-prefill.
+    println!("\n== Host-offload tier at kv=0.5 GB ==");
+    for (name, offload) in [("drop + re-prefill", false), ("host-offload", true)] {
+        let spec = fleet()
+            .kv_capacity_gb(0.5)
+            .host_offload(offload)
+            .build()
+            .expect("offload scenario");
+        let o = simulate_analytic(&spec).expect("offload run");
+        println!(
+            "  {name:>18}: saved {:>7} tokens  host fetches {:>3} ({:>6.3} GB)",
+            o.prefix_tokens_saved,
+            o.host_fetches,
+            o.host_fetch_bytes / 1e9,
+        );
+    }
+    println!(
+        "\nNext: `dwdp-repro experiment memory_pressure`, or \
+         `dwdp-repro fleet --sessions --policy affinity --hbm-budget --kv-capacity 0.5 \
+         --host-offload --json membudget.json`."
+    );
+}

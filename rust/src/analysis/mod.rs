@@ -29,8 +29,8 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::config::{
-    apply_json_overrides, serving_override_json, HardwareConfig, PaperModelConfig, ParallelMode,
-    ServingConfig,
+    apply_json_overrides, serving_override_json, HardwareConfig, HbmBudget, PaperModelConfig,
+    ParallelMode, ServingConfig,
 };
 use crate::dwdp::{plan_bytes, ChunkSpec, CompiledProgram};
 use crate::serving::registry;
@@ -382,6 +382,42 @@ pub fn lint_spec(spec: &ScenarioSpec) -> Vec<LintFinding> {
         ));
     }
 
+    // Unified HBM budget: the derived partition must leave room for what
+    // the knobs ask of it.  Both rules are scoped to `hbm_budget` on — with
+    // the budget off the cache is free-floating by design and these combos
+    // are legal (if suspicious) legacy configurations.
+    if s.hbm_budget {
+        let budget = HbmBudget::derive(&spec.hw, &spec.model, s);
+        if budget.weight_bytes >= budget.total_bytes {
+            out.push(finding(
+                Severity::Error,
+                "weight-footprint-over-hbm",
+                loc,
+                format!(
+                    "resident expert weights {:.1} GB/rank overflow the {:.1} GB device \
+                     (local_experts {}): redundancy leaves nothing for KV or activations",
+                    budget.weight_bytes / 1e9,
+                    budget.total_bytes / 1e9,
+                    s.local_experts
+                ),
+            ));
+        }
+        let group_kv_bytes = budget.kv_bytes * s.group_size as f64;
+        if s.kv_capacity_gb > 0.0 && s.kv_capacity_gb * 1e9 > group_kv_bytes {
+            out.push(finding(
+                Severity::Error,
+                "kv-capacity-over-hbm",
+                loc,
+                format!(
+                    "kv_capacity_gb {} exceeds the {:.3} GB the group's HBM leaves \
+                     after weights and headroom",
+                    s.kv_capacity_gb,
+                    group_kv_bytes / 1e9
+                ),
+            ));
+        }
+    }
+
     // Re-placement interval beyond the horizon: the epoch boundary can
     // never fire within the work the scenario offers.
     let replace_active =
@@ -462,6 +498,11 @@ pub fn lint_override_roundtrip() -> Result<(), String> {
         think_time: 18.0,
         kv_migrate: true,
         kv_capacity_gb: 19.0,
+        hbm_budget: true,
+        hbm_headroom_frac: 0.21,
+        host_offload: true,
+        host_gbps: 22.0,
+        host_latency: 23e-6,
         seed: 20,
     };
     let json = serving_override_json(&probe);
@@ -965,6 +1006,64 @@ mod tests {
                 .any(|f| f.rule == "kv-migrate-without-sessions" && f.severity == Severity::Error),
             "{findings:?}"
         );
+    }
+
+    /// Mutation tests for the unified-HBM-budget rules: a sane budgeted
+    /// config lints clean; mutating the KV override past HBM-after-weights
+    /// or the redundancy past the device each trips its rule; with the
+    /// budget off both mutations are out of the rules' scope.
+    #[test]
+    fn spec_linter_flags_hbm_budget_overcommit() {
+        let build = |budget: bool, kv_gb: f64, local: usize| {
+            crate::serving::Scenario::fleet()
+                .mode(ParallelMode::Dwdp)
+                .group(4)
+                .groups(2)
+                .sessions(true)
+                .hbm_budget(budget)
+                .kv_capacity_gb(kv_gb)
+                .local_experts(local)
+                .build()
+                .unwrap()
+        };
+        let ok = build(true, 2.0, 64);
+        let findings = lint_spec(&ok);
+        assert!(
+            !findings.iter().any(|f| f.severity == Severity::Error),
+            "sane budget must lint clean: {findings:?}"
+        );
+        // Mutation 1: a per-group KV override far past what the device
+        // leaves after weights and headroom.
+        let over = build(true, 1e4, 64);
+        assert!(
+            lint_spec(&over)
+                .iter()
+                .any(|f| f.rule == "kv-capacity-over-hbm" && f.severity == Severity::Error),
+            "{:?}",
+            lint_spec(&over)
+        );
+        // Mutation 2: redundancy whose resident weights alone overflow the
+        // device.
+        let heavy = build(true, 0.0, 192);
+        assert!(
+            lint_spec(&heavy)
+                .iter()
+                .any(|f| f.rule == "weight-footprint-over-hbm" && f.severity == Severity::Error),
+            "{:?}",
+            lint_spec(&heavy)
+        );
+        // Budget off: both combos are legacy free-floating configs, out of
+        // scope for the budget rules.
+        for spec in [build(false, 1e4, 64), build(false, 0.0, 192)] {
+            assert!(
+                !lint_spec(&spec)
+                    .iter()
+                    .any(|f| f.rule == "kv-capacity-over-hbm"
+                        || f.rule == "weight-footprint-over-hbm"),
+                "{:?}",
+                lint_spec(&spec)
+            );
+        }
     }
 
     #[test]

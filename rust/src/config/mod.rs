@@ -279,6 +279,59 @@ impl PaperModelConfig {
     pub fn kv_bytes_per_token(&self) -> f64 {
         (self.kv_lora_rank + self.qk_rope_dim) as f64 * self.kv_bytes * self.n_layers as f64
     }
+
+    /// Bytes of one rank's resident expert weights under redundant
+    /// placement: `local` experts per rank, replicated for every MoE
+    /// layer.  This is the weight side of the per-group HBM budget (and
+    /// the shard a recovering rank re-pulls after a failure).
+    pub fn resident_expert_bytes(&self, local: usize) -> f64 {
+        local.max(1) as f64 * self.expert_bytes() * self.n_moe_layers() as f64
+    }
+}
+
+/// The per-rank HBM partition a serving config implies — the single
+/// memory hierarchy expert redundancy, the KV cache, and batch formation
+/// all draw from (the `hbm_budget` serving knob).
+///
+/// Derivation: resident expert weights come off the top (`local_experts`
+/// x per-expert bytes x MoE layers — redundancy is priced in HBM, the
+/// core DWDP trade), a fixed fraction is reserved as activation headroom
+/// (attention weights, activations, workspace), and whatever remains is
+/// the KV budget for in-flight decode contexts and resident session
+/// prefixes.  `kv_bytes` clamps at zero when weights + headroom overflow
+/// the device — the analysis linter flags both that and an explicit
+/// `kv_capacity_gb` over-ask.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmBudget {
+    /// HBM capacity per GPU, bytes.
+    pub total_bytes: f64,
+    /// Resident expert weights per rank.
+    pub weight_bytes: f64,
+    /// Activation headroom reserved off the top (`hbm_headroom_frac`).
+    pub headroom_bytes: f64,
+    /// What remains for KV, clamped at zero on overflow.
+    pub kv_bytes: f64,
+}
+
+impl HbmBudget {
+    /// Derive the partition from the three configs.
+    pub fn derive(
+        hw: &HardwareConfig,
+        model: &PaperModelConfig,
+        serving: &ServingConfig,
+    ) -> HbmBudget {
+        let total_bytes = hw.hbm_bytes;
+        let weight_bytes = model.resident_expert_bytes(serving.local_experts);
+        let headroom_bytes = serving.hbm_headroom_frac * total_bytes;
+        let kv_bytes = (total_bytes - weight_bytes - headroom_bytes).max(0.0);
+        HbmBudget { total_bytes, weight_bytes, headroom_bytes, kv_bytes }
+    }
+
+    /// Group-wide KV budget in tokens: the per-rank KV bytes of every
+    /// rank in the group, divided by the model's per-token KV footprint.
+    pub fn kv_budget_tokens(&self, group_size: usize, kv_bytes_per_token: f64) -> usize {
+        (self.kv_bytes * group_size as f64 / kv_bytes_per_token.max(1e-12)).floor() as usize
+    }
 }
 
 /// Per-experiment serving configuration.
@@ -365,6 +418,28 @@ pub struct ServingConfig {
     pub kv_migrate: bool,
     /// Per-group KV-prefix cache budget in GB (0 = unbounded).
     pub kv_capacity_gb: f64,
+    /// Unified per-group HBM budget ([`HbmBudget`]): derive the KV
+    /// capacity from what `hbm_bytes` leaves after resident expert
+    /// weights and activation headroom, trim/defer batches whose decode
+    /// contexts would outgrow it, and preempt prefix residency under
+    /// weight-side pressure.  Off — the default — keeps the free-floating
+    /// `kv_capacity_gb` model, bit-identical to the pre-budget paths.
+    /// When on, a positive `kv_capacity_gb` still wins as an explicit
+    /// override of the derived KV budget.
+    pub hbm_budget: bool,
+    /// Activation headroom reserved out of the HBM budget, as a fraction
+    /// of `hbm_bytes` (attention weights, activations, workspace).  Only
+    /// meaningful with `hbm_budget`.
+    pub hbm_headroom_frac: f64,
+    /// Host-offload tier: prefixes evicted or preempted from the group
+    /// KV cache spill to host memory and are re-fetched over
+    /// [`crate::fleet::LinkTier::Host`] instead of being re-prefilled.
+    pub host_offload: bool,
+    /// Host link bandwidth in GB/s (PCIe / C2C; an order of magnitude
+    /// below NVLink, comparable to the inter-rack spine).
+    pub host_gbps: f64,
+    /// Per-transfer host link latency, seconds.
+    pub host_latency: f64,
     /// RNG seed for the whole experiment.
     pub seed: u64,
 }
@@ -398,6 +473,11 @@ impl ServingConfig {
             think_time: 2.0,
             kv_migrate: false,
             kv_capacity_gb: 0.0,
+            hbm_budget: false,
+            hbm_headroom_frac: 0.1,
+            host_offload: false,
+            host_gbps: 40.0,
+            host_latency: 1e-5,
             seed: 0,
         }
     }
@@ -496,6 +576,36 @@ impl ServingConfig {
                 ));
             }
         }
+        if self.hbm_budget {
+            if !(0.0..1.0).contains(&self.hbm_headroom_frac) {
+                return Err(format!(
+                    "hbm_headroom_frac must be in [0,1), got {}",
+                    self.hbm_headroom_frac
+                ));
+            }
+            // The kv_capacity_gb override must be sane even without
+            // sessions: the budget bounds open-loop decode contexts too.
+            if self.kv_capacity_gb.is_nan() || self.kv_capacity_gb < 0.0 {
+                return Err(format!(
+                    "kv_capacity_gb must be >= 0 GB (0 = derive from hbm_bytes), got {}",
+                    self.kv_capacity_gb
+                ));
+            }
+        }
+        if self.host_offload {
+            if !(self.host_gbps.is_finite() && self.host_gbps > 0.0) {
+                return Err(format!(
+                    "host_offload needs a finite host_gbps > 0, got {}",
+                    self.host_gbps
+                ));
+            }
+            if !(self.host_latency.is_finite() && self.host_latency >= 0.0) {
+                return Err(format!(
+                    "host_latency must be finite and >= 0 seconds, got {}",
+                    self.host_latency
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -524,6 +634,7 @@ pub fn apply_json_overrides(
             "flops_fp8" => hw.flops_fp8 = get("FLOP/s")?,
             "sol_fraction" => hw.sol_fraction = get("0..1")?,
             "hbm_bw" => hw.hbm_bw = get("B/s")?,
+            "hbm_bytes" => hw.hbm_bytes = get("bytes")?,
             "nvlink_bw_dir" => hw.nvlink_bw_dir = get("B/s")?,
             "ce_bw" => hw.ce_bw = get("B/s")?,
             "ce_inflight" => hw.ce_inflight = get("count")? as usize,
@@ -572,6 +683,11 @@ pub fn apply_json_overrides(
             "think_time" => serving.think_time = get("seconds")?,
             "kv_migrate" => serving.kv_migrate = v.as_bool().ok_or(format!("{k}: bool"))?,
             "kv_capacity_gb" => serving.kv_capacity_gb = get("GB")?,
+            "hbm_budget" => serving.hbm_budget = v.as_bool().ok_or(format!("{k}: bool"))?,
+            "hbm_headroom_frac" => serving.hbm_headroom_frac = get("0..1")?,
+            "host_offload" => serving.host_offload = v.as_bool().ok_or(format!("{k}: bool"))?,
+            "host_gbps" => serving.host_gbps = get("GB/s")?,
+            "host_latency" => serving.host_latency = get("seconds")?,
             "seed" => serving.seed = get("u64")? as u64,
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -613,6 +729,11 @@ pub fn serving_override_json(s: &ServingConfig) -> Json {
         ("think_time", Json::Num(s.think_time)),
         ("kv_migrate", Json::Bool(s.kv_migrate)),
         ("kv_capacity_gb", Json::Num(s.kv_capacity_gb)),
+        ("hbm_budget", Json::Bool(s.hbm_budget)),
+        ("hbm_headroom_frac", Json::Num(s.hbm_headroom_frac)),
+        ("host_offload", Json::Bool(s.host_offload)),
+        ("host_gbps", Json::Num(s.host_gbps)),
+        ("host_latency", Json::Num(s.host_latency)),
         ("seed", Json::Num(s.seed as f64)),
     ])
 }
@@ -795,7 +916,9 @@ mod tests {
                 "racks": 4, "inter_rack_gbps": 50.0, "inter_rack_latency": 5e-6,
                 "rack_blast_radius": true,
                 "sessions": true, "session_turns": 6, "think_time": 1.5,
-                "kv_migrate": true, "kv_capacity_gb": 2.5}"#,
+                "kv_migrate": true, "kv_capacity_gb": 2.5,
+                "hbm_bytes": 1.5e11, "hbm_budget": true, "hbm_headroom_frac": 0.2,
+                "host_offload": true, "host_gbps": 55.0, "host_latency": 2e-5}"#,
         )
         .unwrap();
         apply_json_overrides(&j, &mut hw, &mut m, &mut s).unwrap();
@@ -816,6 +939,12 @@ mod tests {
         assert_eq!(s.think_time, 1.5);
         assert!(s.kv_migrate);
         assert_eq!(s.kv_capacity_gb, 2.5);
+        assert_eq!(hw.hbm_bytes, 1.5e11);
+        assert!(s.hbm_budget);
+        assert_eq!(s.hbm_headroom_frac, 0.2);
+        assert!(s.host_offload);
+        assert_eq!(s.host_gbps, 55.0);
+        assert_eq!(s.host_latency, 2e-5);
 
         let bad = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
         assert!(apply_json_overrides(&bad, &mut hw, &mut m, &mut s).is_err());
@@ -827,5 +956,83 @@ mod tests {
         // (512 + 64) * 1 B * 61 layers ≈ 35 KB/token — the MLA win.
         let b = m.kv_bytes_per_token();
         assert!((35_000.0..36_000.0).contains(&b), "{b}");
+    }
+
+    #[test]
+    fn hbm_budget_knobs_validate() {
+        let m = PaperModelConfig::deepseek_r1();
+        // Off: the new knobs are inert, garbage values are ignored.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.hbm_headroom_frac = 7.0;
+        s.host_gbps = -1.0;
+        s.validate(&m).unwrap();
+        // On: the headroom fraction must leave room for weights + KV.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.hbm_budget = true;
+        s.validate(&m).unwrap();
+        s.hbm_headroom_frac = 1.0;
+        assert!(s.validate(&m).is_err());
+        s.hbm_headroom_frac = -0.1;
+        assert!(s.validate(&m).is_err());
+        s.hbm_headroom_frac = 0.0;
+        s.validate(&m).unwrap();
+        // A budgeted run still accepts (and validates) the explicit
+        // kv_capacity_gb override, sessions or not.
+        s.kv_capacity_gb = -2.0;
+        assert!(s.validate(&m).is_err());
+        s.kv_capacity_gb = 2.0;
+        s.validate(&m).unwrap();
+        // Host tier needs a usable link.
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.host_offload = true;
+        s.validate(&m).unwrap();
+        s.host_gbps = 0.0;
+        assert!(s.validate(&m).is_err());
+        s.host_gbps = f64::NAN;
+        assert!(s.validate(&m).is_err());
+        s.host_gbps = 40.0;
+        s.host_latency = -1e-6;
+        assert!(s.validate(&m).is_err());
+        s.host_latency = f64::INFINITY;
+        assert!(s.validate(&m).is_err());
+        s.host_latency = 0.0;
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn hbm_budget_partitions_the_device() {
+        let hw = HardwareConfig::gb200();
+        let m = PaperModelConfig::deepseek_r1();
+        let mut s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        s.validate(&m).unwrap();
+        // 64 resident experts x ~24.8 MB x 58 MoE layers ≈ 92 GB of the
+        // 186 GB device; 10% headroom leaves ~75 GB per rank for KV.
+        let b = HbmBudget::derive(&hw, &m, &s);
+        assert_eq!(b.total_bytes, hw.hbm_bytes);
+        assert!((90.0e9..95.0e9).contains(&b.weight_bytes), "{}", b.weight_bytes);
+        assert!((b.headroom_bytes - 18.6e9).abs() < 1e6);
+        assert!((70.0e9..80.0e9).contains(&b.kv_bytes), "{}", b.kv_bytes);
+        // The partition conserves: weights + headroom + KV == total.
+        let sum = b.weight_bytes + b.headroom_bytes + b.kv_bytes;
+        assert!((sum - b.total_bytes).abs() < 1.0, "{sum}");
+        // Group-wide token budget: 4 ranks of KV over ~35 KB/token.
+        let tokens = b.kv_budget_tokens(s.group_size, m.kv_bytes_per_token());
+        let expect = b.kv_bytes * 4.0 / m.kv_bytes_per_token();
+        assert_eq!(tokens, expect.floor() as usize);
+        // Redundancy eats the cache: at 2x replication the weights alone
+        // nearly fill HBM, and past device size KV clamps to zero.
+        s.local_experts = 128;
+        let b2 = HbmBudget::derive(&hw, &m, &s);
+        assert!(b2.weight_bytes > b.weight_bytes);
+        assert!(b2.kv_bytes < b.kv_bytes);
+        s.local_experts = 192;
+        let b3 = HbmBudget::derive(&hw, &m, &s);
+        assert!(b3.weight_bytes > hw.hbm_bytes);
+        assert_eq!(b3.kv_bytes, 0.0);
+        // resident_expert_bytes matches the recovery-shard formula.
+        assert_eq!(
+            m.resident_expert_bytes(64),
+            64.0 * m.expert_bytes() * m.n_moe_layers() as f64
+        );
     }
 }

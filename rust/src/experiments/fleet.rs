@@ -1,7 +1,8 @@
 //! Fleet-scale regenerators: the cluster frontier, burst robustness,
-//! trace-replay, re-placement, failure-injection, and closed-loop session
-//! scenarios (`fleet_frontier`, `fleet_burst`, `fleet_trace`,
-//! `replacement_skew`, `fleet_churn`, `sessions` in the registry).
+//! trace-replay, re-placement, failure-injection, closed-loop session,
+//! and unified-HBM-budget scenarios (`fleet_frontier`, `fleet_burst`,
+//! `fleet_trace`, `replacement_skew`, `fleet_churn`, `sessions`,
+//! `memory_pressure` in the registry).
 //!
 //! These go beyond the paper's single-deployment §5.3 sweep: they stress
 //! DWDP's no-sync independence claim at cluster granularity, under the
@@ -547,6 +548,22 @@ pub fn sessions_scenario(policy: ClusterPolicy, think: f64) -> Scenario {
         .cluster_policy(policy)
 }
 
+/// Scenario for the unified-HBM-budget pressure sweep: the closed-loop
+/// session base under `hbm_budget`, so resident expert redundancy
+/// (`local_experts`), the KV budget (derived from the device when
+/// `kv_gb == 0`, an explicit per-group override otherwise), and context
+/// length all draw from one per-group memory hierarchy.  The host-offload
+/// tier is on: preempted/evicted prefixes are re-fetched over
+/// `LinkTier::Host` instead of re-prefilled.
+pub fn memory_pressure_scenario(local: usize, kv_gb: f64, isl: usize) -> Scenario {
+    sessions_scenario(ClusterPolicy::PrefixAffinity, 0.5)
+        .isl(isl)
+        .local_experts(local)
+        .hbm_budget(true)
+        .kv_capacity_gb(kv_gb)
+        .host_offload(true)
+}
+
 const SESSIONS_HEADER: [&str; 9] = [
     "scenario",
     "offered",
@@ -638,6 +655,106 @@ pub fn sessions() -> Table {
         if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
     ];
     row.resize(SESSIONS_HEADER.len(), "-".into());
+    t.row(row);
+    t
+}
+
+const MEMORY_HEADER: [&str; 10] = [
+    "scenario",
+    "served",
+    "hit rate (%)",
+    "p99 TTFT (ms)",
+    "TPS/GPU",
+    "hbm weight (GB/rank)",
+    "hbm kv peak (GB/rank)",
+    "deferred",
+    "host fetches",
+    "goodput (%)",
+];
+
+/// `memory_pressure` — the unified-HBM-budget sweep: expert redundancy ×
+/// KV budget × context length over the closed-loop session base, all
+/// drawing from one per-group memory hierarchy.  The redundancy axis runs
+/// the derived budget (what the device leaves after weights + headroom);
+/// the budget axis pins redundancy and shrinks an explicit per-group
+/// override; the context axis doubles the ISL at mid redundancy.  Rows
+/// where the budget never binds print "-" for the memory extras (the
+/// zero-delta contract: an unbounded budget is byte-identical to the
+/// pre-budget fleet).  The final row re-checks sweep determinism across
+/// thread counts with the budget enabled.
+pub fn memory_pressure() -> Table {
+    let mut points = Vec::new();
+    for &local in &[64usize, 96, 128] {
+        let spec = memory_pressure_scenario(local, 0.0, 8192)
+            .build()
+            .expect("memory_pressure redundancy axis");
+        points.push(SweepPoint::new(
+            &format!("DWDP4 x4 local={local} kv=derived"),
+            spec,
+            Fidelity::Analytic,
+        ));
+    }
+    for &kv in &[2.0, 0.5] {
+        let spec = memory_pressure_scenario(64, kv, 8192)
+            .build()
+            .expect("memory_pressure budget axis");
+        points.push(SweepPoint::new(
+            &format!("DWDP4 x4 local=64 kv={kv}GB"),
+            spec,
+            Fidelity::Analytic,
+        ));
+    }
+    let spec = memory_pressure_scenario(96, 0.0, 16384)
+        .build()
+        .expect("memory_pressure context axis");
+    points.push(SweepPoint::new(
+        "DWDP4 x4 local=96 kv=derived isl=16k",
+        spec,
+        Fidelity::Analytic,
+    ));
+    let parallel = run_sweep(&points, available_threads());
+    let serial = run_sweep(&points, 1);
+    let bit_identical = parallel.iter().zip(&serial).all(|(a, b)| match (a, b) {
+        (Ok(a), Ok(b)) => a.to_json().dump() == b.to_json().dump(),
+        (Err(a), Err(b)) => a == b,
+        _ => false,
+    });
+    let mut t = Table::new(&MEMORY_HEADER).with_title(
+        "Memory pressure: one HBM budget across redundancy x KV residency x context length",
+    );
+    for (p, r) in points.iter().zip(&parallel) {
+        match r {
+            Ok(r) => {
+                let hit_rate = if r.follow_ups > 0 {
+                    r.prefix_hits as f64 / r.follow_ups as f64 * 100.0
+                } else {
+                    0.0
+                };
+                t.row(vec![
+                    p.label.clone(),
+                    r.n_requests.to_string(),
+                    f(hit_rate, 1),
+                    f(r.p99_ttft * 1e3, 0),
+                    f(r.tps_per_gpu, 1),
+                    extra(r, "hbm weight (GB/rank)").to_string(),
+                    extra(r, "hbm kv peak (GB/rank)").to_string(),
+                    extra(r, "deferred admissions").to_string(),
+                    extra(r, "host fetches").to_string(),
+                    f(r.goodput * 100.0, 1),
+                ]);
+            }
+            Err(e) => {
+                let mut row = vec![format!("{} (failed: {e})", p.label)];
+                row.resize(MEMORY_HEADER.len(), "-".into());
+                t.row(row);
+            }
+        }
+    }
+    let mut row = vec![
+        "sweep determinism (1 thread vs all cores)".to_string(),
+        if bit_identical { "bit-identical" } else { "MISMATCH" }.to_string(),
+    ];
+    row.resize(MEMORY_HEADER.len(), "-".into());
     t.row(row);
     t
 }
@@ -753,6 +870,15 @@ pub fn registry_specs(id: &str) -> Result<Vec<ScenarioSpec>, String> {
                     .requeue_on_failure(true)
                     .slo(1e4, 1e4),
             );
+        }
+        "memory_pressure" => {
+            for &local in &[64usize, 96, 128] {
+                scns.push(memory_pressure_scenario(local, 0.0, 8192));
+            }
+            for &kv in &[2.0, 0.5] {
+                scns.push(memory_pressure_scenario(64, kv, 8192));
+            }
+            scns.push(memory_pressure_scenario(96, 0.0, 16384));
         }
         other => return Err(format!("no fleet spec enumerator for '{other}'")),
     }
@@ -988,6 +1114,94 @@ mod tests {
         ] {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
+    }
+
+    #[test]
+    fn memory_pressure_table_covers_the_sweep_and_stays_deterministic() {
+        std::env::set_var("DWDP_QUICK", "1");
+        let t = memory_pressure();
+        // 3 redundancy rows + 2 budget rows + 1 context row + determinism.
+        assert_eq!(t.n_rows(), 7);
+        let text = t.render();
+        for needle in [
+            "local=64",
+            "local=128",
+            "kv=derived",
+            "kv=0.5GB",
+            "isl=16k",
+            "bit-identical",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    /// The unified-HBM-budget acceptance criterion: under a finite device
+    /// budget, raising expert redundancy (`local_experts`) strictly
+    /// squeezes the KV side of the hierarchy — the prefix-hit rate falls
+    /// monotonically and admissions start deferring — at identical
+    /// offered load.  Uses the tiny model on a shrunken device so all
+    /// three redundancy levels land in the pressured regime.
+    #[test]
+    fn raising_redundancy_squeezes_prefix_residency_under_one_budget() {
+        use crate::config::PaperModelConfig;
+        use crate::util::Json;
+        let run = |local: usize| {
+            // Tiny device: 2 MB of HBM, 10% headroom; resident weights are
+            // 165,888 B x local, KV is 320 B/token, so the derived group
+            // budgets are ~18.4k / ~14.2k / ~5.9k tokens at local 2/4/8 —
+            // all under the ~16 x 2080-token working set per group.
+            let overrides = Json::parse(r#"{"hbm_bytes": 2e6}"#).unwrap();
+            let spec = Scenario::fleet()
+                .model(PaperModelConfig::tiny())
+                .mode(ParallelMode::Dwdp)
+                .group(4)
+                .groups(3)
+                .isl(2048)
+                .mnt(16384)
+                .osl(32)
+                .rate(40.0)
+                .requests(48)
+                .seed(11)
+                .sessions(true)
+                .session_turns(4)
+                .think_time(0.05)
+                .cluster_policy(ClusterPolicy::PrefixAffinity)
+                .local_experts(local)
+                .hbm_budget(true)
+                .json_overrides(overrides)
+                .build()
+                .unwrap();
+            simulate_analytic(&spec).unwrap()
+        };
+        let lo = run(2);
+        let mid = run(4);
+        let hi = run(8);
+        assert_eq!(lo.offered, hi.offered, "identical closed-loop plans");
+        assert!(lo.follow_ups > 0 && hi.follow_ups > 0);
+        let rate = |o: &crate::fleet::FleetOutcome| {
+            o.prefix_hits as f64 / o.follow_ups.max(1) as f64
+        };
+        assert!(
+            rate(&lo) >= rate(&mid) && rate(&mid) >= rate(&hi),
+            "hit rate must fall with redundancy: {} {} {}",
+            rate(&lo),
+            rate(&mid),
+            rate(&hi)
+        );
+        assert!(
+            rate(&lo) > rate(&hi),
+            "hit rate must fall strictly across the sweep: {} vs {}",
+            rate(&lo),
+            rate(&hi)
+        );
+        assert!(
+            hi.deferred_admissions > 0,
+            "the tightest budget must defer admissions"
+        );
+        // The weight side grows exactly with redundancy, and the report
+        // surfaces it per rank.
+        assert!(hi.hbm_weight_bytes > lo.hbm_weight_bytes);
+        assert_eq!(hi.hbm_weight_bytes, PaperModelConfig::tiny().resident_expert_bytes(8));
     }
 
     /// The PR-6 acceptance criterion, part 1: at equal offered load the

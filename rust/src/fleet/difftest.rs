@@ -5,8 +5,9 @@
 //! iteration skeleton differs (one time-ordered event heap vs the old
 //! per-arrival `for` loop / sessions request heap).  These tests assert
 //! the refactor is *behaviour-preserving to the byte*: for every point of
-//! the scenario cross-product — sessions × churn × racks × all five
-//! cluster policies — and for worker thread counts 1/2/8, the two cores
+//! the scenario cross-product — sessions × churn × racks × HBM-budget
+//! pressure × all five cluster policies — and for worker thread counts
+//! 1/2/8, the two cores
 //! produce byte-identical `RunReport::to_json()` fingerprints and
 //! element-identical [`EventLog`] streams.
 //!
@@ -35,16 +36,21 @@ struct GridPoint {
     churn: bool,
     racks: usize,
     policy: ClusterPolicy,
+    /// Unified HBM budget on, squeezed hard enough (a ~3k-token KV cap
+    /// against ~1k-token contexts) that admission trimming, cache
+    /// eviction, and host-tier fetches all fire on both cores.
+    budget: bool,
 }
 
 impl GridPoint {
     fn label(&self) -> String {
         format!(
-            "sessions={} churn={} racks={} policy={}",
+            "sessions={} churn={} racks={} policy={} budget={}",
             self.sessions,
             self.churn,
             self.racks,
-            self.policy.name()
+            self.policy.name(),
+            self.budget
         )
     }
 
@@ -80,6 +86,9 @@ impl GridPoint {
                 s = s.kv_migrate(true);
             }
         }
+        if self.budget {
+            s = s.hbm_budget(true).kv_capacity_gb(1e-3).host_offload(true);
+        }
         s.build().expect("grid spec builds")
     }
 }
@@ -102,8 +111,18 @@ fn grid() -> Vec<GridPoint> {
         for &churn in &[false, true] {
             for &racks in &[1usize, 3] {
                 for &policy in &POLICIES {
-                    points.push(GridPoint { sessions, churn, racks, policy });
+                    points.push(GridPoint { sessions, churn, racks, policy, budget: false });
                 }
+            }
+        }
+    }
+    // Memory-pressure points: the tight KV cap only has machinery to
+    // exercise where decode contexts and prefix caches exist, so the
+    // budget axis rides on the sessions half of the grid.
+    for &churn in &[false, true] {
+        for &racks in &[1usize, 3] {
+            for &policy in &POLICIES {
+                points.push(GridPoint { sessions: true, churn, racks, policy, budget: true });
             }
         }
     }
@@ -210,6 +229,7 @@ fn legacy_feature_gate_compiles_the_reference_core() {
         churn: false,
         racks: 1,
         policy: ClusterPolicy::RoundRobin,
+        budget: false,
     }
     .spec();
     let lm = GroupLatencyModel::new(&spec.hw, &spec.model, &spec.serving);

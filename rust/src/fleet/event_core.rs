@@ -189,6 +189,7 @@ impl AdvanceTask<'_> {
         now: f64,
         mnt: usize,
         isls_of: &[usize],
+        ctx_of: &[usize],
         ready: &[f64],
         prefill: &(dyn PrefillOffsets + Sync),
         record: bool,
@@ -205,6 +206,7 @@ impl AdvanceTask<'_> {
                     *g,
                     mnt,
                     isls_of,
+                    ctx_of,
                     ready,
                     prefill,
                     &mut self.first_token,
@@ -219,6 +221,7 @@ impl AdvanceTask<'_> {
                     *g,
                     mnt,
                     isls_of,
+                    ctx_of,
                     ready,
                     prefill,
                     &mut self.first_token,
@@ -244,6 +247,7 @@ pub(super) fn advance_all(
     now: f64,
     mnt: usize,
     isls_of: &[usize],
+    ctx_of: &[usize],
     ready: &[f64],
     prefill: &(dyn PrefillOffsets + Sync),
     first_token: &mut [f64],
@@ -257,7 +261,8 @@ pub(super) fn advance_all(
         for (g, gs) in groups.iter_mut().enumerate() {
             let mut probe = FailProbe::fleet(failures.as_mut());
             gs.advance(
-                now, g, mnt, isls_of, ready, prefill, &mut pairs, &mut probe, spills, sink,
+                now, g, mnt, isls_of, ctx_of, ready, prefill, &mut pairs, &mut probe, spills,
+                sink,
             );
         }
         for (i, t) in pairs {
@@ -315,7 +320,7 @@ pub(super) fn advance_all(
         for chunk in tasks.chunks_mut(per) {
             scope.spawn(move || {
                 for task in chunk.iter_mut() {
-                    task.run(now, mnt, isls_of, ready, prefill, record);
+                    task.run(now, mnt, isls_of, ctx_of, ready, prefill, record);
                 }
             });
         }
@@ -381,6 +386,7 @@ fn simulate_open_core(
             now,
             st.mnt,
             &st.isls,
+            &st.ctxs,
             &st.ledger.ready,
             prefill,
             &mut st.first_token,
@@ -441,6 +447,7 @@ fn simulate_sessions_core(
             now,
             st.mnt,
             &st.charged,
+            &st.ctxs,
             &st.ledger.ready,
             prefill,
             &mut st.first_token,
@@ -460,6 +467,7 @@ fn simulate_sessions_core(
             continue;
         }
         sync_cache_failures(&mut st.failures, &mut st.cache, &mut st.synced, now, sink);
+        sessions_sync_budget(&mut st, now, sink);
         // Only spills whose failure instant has been reached re-route
         // before this arrival; later ones stay pooled (a follow-up spawn
         // can pull `now` backwards below a buffered spill's instant).

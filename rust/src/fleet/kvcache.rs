@@ -16,6 +16,12 @@
 //!   not survive the failure), so churn costs re-prefill on top of the
 //!   requeue/shed machinery — the cache-shaped axis of graceful
 //!   degradation.
+//! * Under the unified HBM budget (`hbm_budget`), weight-side pressure —
+//!   a migration epoch transiently double-holding expert shards —
+//!   LRU-preempts resident prefixes ([`KvPrefixCache::preempt_to`]); with
+//!   `host_offload` on, evicted and preempted prefixes spill to a host
+//!   tier and are re-fetched over `LinkTier::Host` instead of being
+//!   re-prefilled.
 //!
 //! Determinism: per-group entries live in `BTreeMap`s so iteration (and
 //! therefore LRU tie-breaking and eviction order) is identical across runs
@@ -41,6 +47,11 @@ pub struct KvPrefixCache {
     used_tokens: Vec<usize>,
     /// Per-group capacity in KV tokens (`usize::MAX` = unbounded).
     capacity_tokens: usize,
+    /// Host-offload tier: session id → tokens.  Populated by capacity
+    /// evictions and weight-pressure preemptions when offload is enabled;
+    /// a session holds at most one copy across HBM and host.
+    host: BTreeMap<u64, usize>,
+    host_offload: bool,
     clock: u64,
 }
 
@@ -51,8 +62,16 @@ impl KvPrefixCache {
             resident: BTreeMap::new(),
             used_tokens: vec![0; n_groups],
             capacity_tokens,
+            host: BTreeMap::new(),
+            host_offload: false,
             clock: 0,
         }
+    }
+
+    /// Enable the host-offload tier: evicted/preempted prefixes spill to
+    /// host memory instead of vanishing.
+    pub fn enable_host_offload(&mut self) {
+        self.host_offload = true;
     }
 
     /// Capacity in tokens from a per-group budget in GB and the model's
@@ -76,6 +95,8 @@ impl KvPrefixCache {
     /// an entry larger than the whole group capacity is not cached at all.
     pub fn insert(&mut self, group: usize, session: u64, tokens: usize) {
         self.remove(session);
+        // The fresh turn's context supersedes any host-resident copy too.
+        self.host.remove(&session);
         if tokens > self.capacity_tokens {
             return;
         }
@@ -123,6 +144,40 @@ impl KvPrefixCache {
         dropped.len()
     }
 
+    /// Weight-side pressure: LRU-preempt `group`'s resident prefixes until
+    /// its usage fits `target_tokens` (the KV budget minus, e.g., a
+    /// migration epoch's transient double-residency).  Preempted entries
+    /// spill to the host tier when offload is enabled.  Returns
+    /// `(entries, tokens)` preempted.
+    pub fn preempt_to(&mut self, group: usize, target_tokens: usize) -> (usize, usize) {
+        let mut entries = 0;
+        let mut tokens = 0;
+        while self.used_tokens[group] > target_tokens {
+            let Some(victim) = self.lru_victim(group) else { break };
+            let t = self.per_group[group].get(&victim).map(|e| e.tokens).unwrap_or(0);
+            self.evict(group, victim);
+            entries += 1;
+            tokens += t;
+        }
+        (entries, tokens)
+    }
+
+    /// Tokens of `session`'s prefix resident on the host tier, if any.
+    pub fn host_locate(&self, session: u64) -> Option<usize> {
+        self.host.get(&session).copied()
+    }
+
+    /// Claim `session`'s host-resident prefix (the re-fetch path):
+    /// removes the host copy and returns its tokens.
+    pub fn host_take(&mut self, session: u64) -> Option<usize> {
+        self.host.remove(&session)
+    }
+
+    /// Entries resident on the host tier.
+    pub fn host_entries(&self) -> usize {
+        self.host.len()
+    }
+
     pub fn used_tokens(&self, group: usize) -> usize {
         self.used_tokens[group]
     }
@@ -143,6 +198,9 @@ impl KvPrefixCache {
     fn evict(&mut self, group: usize, session: u64) {
         if let Some(e) = self.per_group[group].remove(&session) {
             self.used_tokens[group] -= e.tokens;
+            if self.host_offload {
+                self.host.insert(session, e.tokens);
+            }
         }
         self.resident.remove(&session);
     }
@@ -274,6 +332,62 @@ mod tests {
         assert_eq!(c.remove(7), None, "invalidated prefix cannot be migrated");
         c.insert(1, 7, 500);
         assert_eq!(c.locate(7), Some((1, 500)));
+    }
+
+    #[test]
+    fn preemption_is_lru_ordered_and_counted() {
+        let mut c = KvPrefixCache::new(2, usize::MAX);
+        c.insert(0, 1, 400);
+        c.insert(0, 2, 300);
+        c.insert(0, 3, 300);
+        c.insert(1, 4, 500);
+        c.touch(1); // session 2 becomes the LRU victim, then 3
+        // Squeeze group 0 down to 450 tokens: preempts 2 then 3.
+        let (entries, tokens) = c.preempt_to(0, 450);
+        assert_eq!((entries, tokens), (2, 600));
+        assert_eq!(c.locate(2), None);
+        assert_eq!(c.locate(3), None);
+        assert_eq!(c.locate(1), Some((0, 400)));
+        assert_eq!(c.used_tokens(0), 400);
+        // Other groups are untouched; a satisfied target is a no-op.
+        assert_eq!(c.locate(4), Some((1, 500)));
+        assert_eq!(c.preempt_to(0, 450), (0, 0));
+        // Target zero drains the group even with no offload tier.
+        assert_eq!(c.preempt_to(0, 0), (1, 400));
+        assert_eq!(c.entries(0), 0);
+    }
+
+    #[test]
+    fn host_tier_catches_evictions_and_preemptions() {
+        let mut c = KvPrefixCache::new(1, 1000);
+        c.enable_host_offload();
+        c.insert(0, 1, 600);
+        c.insert(0, 2, 600); // capacity-evicts session 1 to host
+        assert_eq!(c.locate(1), None);
+        assert_eq!(c.host_locate(1), Some(600));
+        assert_eq!(c.host_entries(), 1);
+        // Weight pressure spills the rest.
+        assert_eq!(c.preempt_to(0, 0), (1, 600));
+        assert_eq!(c.host_locate(2), Some(600));
+        assert_eq!(c.host_entries(), 2);
+        // The fetch path claims the copy exactly once.
+        assert_eq!(c.host_take(1), Some(600));
+        assert_eq!(c.host_take(1), None);
+        // A fresh turn's insert supersedes a stale host copy — at most
+        // one copy per session across the two tiers.
+        c.insert(0, 2, 700);
+        assert_eq!(c.host_locate(2), None);
+        assert_eq!(c.locate(2), Some((0, 700)));
+        // Failure invalidation destroys HBM contents without offloading
+        // them (a dead group cannot stage its cache out).
+        assert_eq!(c.invalidate_group(0), 1);
+        assert_eq!(c.host_locate(2), None);
+        // Without offload enabled, evictions simply vanish.
+        let mut c2 = KvPrefixCache::new(1, 100);
+        c2.insert(0, 1, 80);
+        c2.insert(0, 2, 80);
+        assert_eq!(c2.host_entries(), 0);
+        assert_eq!(c2.host_locate(1), None);
     }
 
     #[test]

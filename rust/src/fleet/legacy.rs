@@ -53,6 +53,7 @@ pub fn simulate_with_sink_legacy(
             arrival,
             st.mnt,
             &st.isls,
+            &st.ctxs,
             &st.ledger.ready,
             prefill,
             &mut st.first_token,
@@ -84,6 +85,7 @@ pub fn simulate_with_sink_legacy(
             f64::INFINITY,
             st.mnt,
             &st.isls,
+            &st.ctxs,
             &st.ledger.ready,
             prefill,
             &mut st.first_token,
@@ -130,6 +132,7 @@ fn simulate_sessions_legacy(
             now,
             st.mnt,
             &st.charged,
+            &st.ctxs,
             &st.ledger.ready,
             prefill,
             &mut st.first_token,
@@ -143,6 +146,7 @@ fn simulate_sessions_legacy(
             continue;
         }
         sync_cache_failures(&mut st.failures, &mut st.cache, &mut st.synced, now, sink);
+        sessions_sync_budget(&mut st, now, sink);
         let mut processed_spills = false;
         if !spills.is_empty() {
             // Mirror the open-loop sweep: only spills whose failure

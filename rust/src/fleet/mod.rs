@@ -70,6 +70,24 @@
 //! — or think time infinite, when no user ever returns — the fleet is
 //! bit-identical to the open-loop path.
 //!
+//! **Unified HBM budget** (the `hbm_budget`/`hbm_headroom_frac`/
+//! `host_offload` serving knobs, [`crate::config::HbmBudget`]): with
+//! `hbm_budget` on, every group's memory is one finite hierarchy derived
+//! from `HardwareConfig::hbm_bytes` — resident expert weights (redundancy
+//! x local experts x per-expert bytes) come off the top, a headroom
+//! fraction is reserved for activations, and the remainder is the KV
+//! budget shared by in-flight decode contexts and resident session
+//! prefixes (`kv_capacity_gb > 0` still wins as an explicit override).
+//! Batch formation trims a batch whose next member's decode context would
+//! outgrow the remaining budget (the member's admission is deferred to
+//! the next batch boundary), migration epochs transiently double-hold
+//! weight bytes and therefore LRU-preempt resident prefixes at the next
+//! serial budget sync, and — with `host_offload` — preempted or evicted
+//! prefixes spill to a host tier and are re-fetched over
+//! [`LinkTier::Host`] instead of being re-prefilled.  Off — the default —
+//! every path is bit-identical to the free-floating `kv_capacity_gb`
+//! model.
+//!
 //! Entry points: describe the cluster with
 //! [`crate::serving::Scenario::fleet`] and run it through a
 //! [`crate::serving::ServingStack`] (the backends dispatch here), or call
@@ -93,9 +111,9 @@ use std::collections::VecDeque;
 pub use kvcache::KvPrefixCache;
 pub use router::{ClusterPolicy, ClusterRouter, GroupLoad, RouteCtx, RouteDecision};
 pub use sweep::{available_threads, rack_axis, run_sweep, SweepPoint};
-pub use topology::{LinkTier, RackTopology};
+pub use topology::{host_seconds, LinkTier, RackTopology};
 
-use crate::config::{HardwareConfig, ParallelMode};
+use crate::config::{HardwareConfig, HbmBudget, ParallelMode};
 use crate::coordinator::{GenModel, GroupLatencyModel, PrefillOffsets};
 use crate::metrics::{LatencyDigest, RequestRecord, ServingMetrics, Slo};
 use crate::obs::{EventLog, FleetEvent, FleetEventSink, GroupPhase, NoopSink};
@@ -164,6 +182,29 @@ pub struct FleetOutcome {
     pub prefix_tokens_saved: usize,
     /// KV-cache bytes shipped between groups by `kv_migrate` re-steers.
     pub kv_transfer_bytes: f64,
+    /// Batch trims under the HBM budget: a queued member's decode context
+    /// would have outgrown the group's remaining KV budget, so its
+    /// admission into the batch was deferred to the next batch boundary
+    /// (0 with `hbm_budget` off).
+    pub deferred_admissions: usize,
+    /// Prefix tokens LRU-preempted out of group KV caches by weight-side
+    /// pressure (migration epochs transiently double-holding shards).
+    pub kv_preempted_tokens: usize,
+    /// Resident expert weight bytes per rank under the HBM budget (0.0
+    /// with `hbm_budget` off).
+    pub hbm_weight_bytes: f64,
+    /// Peak per-rank KV bytes across groups — in-flight decode contexts
+    /// plus resident prefixes (0.0 with `hbm_budget` off).
+    pub hbm_kv_peak_bytes: f64,
+    /// Peak group KV usage in tokens, per group (the conservation
+    /// property audits `weights + peak KV + headroom <= hbm_bytes` per
+    /// group from this).
+    pub per_group_kv_peak_tokens: Vec<usize>,
+    /// Prefixes pulled back from the host-offload tier instead of being
+    /// re-prefilled.
+    pub host_fetches: usize,
+    /// KV bytes those fetches shipped over the host link.
+    pub host_fetch_bytes: f64,
     /// Follow-up turns the closed loop offered (0 with sessions off or an
     /// infinite think time).
     pub follow_ups: usize,
@@ -344,9 +385,7 @@ impl FleetFailures {
         // per-group outages within a rack are therefore knowingly priced
         // at the optimistic intra-rack tier; the blast-radius knob is the
         // exact model for correlated loss.
-        let shard_bytes = s.local_experts.max(1) as f64
-            * spec.model.expert_bytes()
-            * spec.model.n_moe_layers() as f64;
+        let shard_bytes = spec.model.resident_expert_bytes(s.local_experts);
         let report = placement::MigrationReport {
             per_rank_bytes: vec![shard_bytes; s.group_size],
             total_bytes: shard_bytes * s.group_size as f64,
@@ -750,10 +789,42 @@ struct GroupSim {
     /// Request indices whose prefill completed on this group.
     served: Vec<usize>,
     tokens: usize,
+    /// Group KV budget in tokens under the HBM budget (`usize::MAX` with
+    /// `hbm_budget` off, so the trim below never fires).
+    kv_cap_tokens: usize,
+    /// Serial mirror of the prefix cache's resident tokens on this group.
+    /// Updated only between advances (`sessions_sync_budget`): a
+    /// concurrent `advance` must never touch the cache itself, so it
+    /// prices admission against this snapshot.  Stays 0 open-loop.
+    cache_tokens: usize,
+    /// KV tokens transiently displaced by an in-flight migration epoch's
+    /// weight copies; applied as LRU preemption at the next serial budget
+    /// sync, then cleared.
+    squeeze_tokens: usize,
+    /// Prefix tokens displaced by a solo-head admission that outgrew the
+    /// remaining KV budget (the progress guarantee of the trim): the
+    /// serial budget sync preempts the cache by exactly this much, so
+    /// the conservation invariant `batch KV + resident prefixes <= cap`
+    /// holds for every recorded peak.
+    overdraft_tokens: usize,
+    /// KV bytes per token, for converting migrated weight bytes into
+    /// squeezed KV tokens.
+    kv_bpt: f64,
+    /// Peak observed KV usage in tokens: the in-flight batch's decode
+    /// contexts plus resident prefixes at batch formation.
+    kv_peak_tokens: usize,
+    /// Batch trims: a queued member's decode context would have outgrown
+    /// the remaining KV budget, so its admission was deferred.
+    deferred: usize,
 }
 
 impl GroupSim {
-    fn new(spt0: f64, dynamic: Option<DynamicPlacement>) -> GroupSim {
+    fn new(
+        spt0: f64,
+        dynamic: Option<DynamicPlacement>,
+        kv_cap_tokens: usize,
+        kv_bpt: f64,
+    ) -> GroupSim {
         GroupSim {
             pending: VecDeque::new(),
             pending_tokens: 0,
@@ -764,6 +835,13 @@ impl GroupSim {
             dynamic,
             served: Vec::new(),
             tokens: 0,
+            kv_cap_tokens,
+            cache_tokens: 0,
+            squeeze_tokens: 0,
+            overdraft_tokens: 0,
+            kv_bpt,
+            kv_peak_tokens: 0,
+            deferred: 0,
         }
     }
 
@@ -790,6 +868,10 @@ impl GroupSim {
         // Prompt tokens to prefill per request: the raw ISLs open-loop,
         // the *charged* ISLs (prefix-hit savings deducted) under sessions.
         isls_of: &[usize],
+        // Decode-context KV tokens per request (raw ISL + OSL — a prefix
+        // hit saves prefill compute, not KV residency).  Priced against
+        // the group's remaining KV budget under `hbm_budget`.
+        ctx_of: &[usize],
         ready: &[f64],
         prefill: &dyn PrefillOffsets,
         first_token: &mut Vec<(usize, f64)>,
@@ -813,8 +895,11 @@ impl GroupSim {
             if start > now {
                 break;
             }
+            let kv_free = self.kv_cap_tokens.saturating_sub(self.cache_tokens);
             let mut batch: Vec<usize> = Vec::new();
             let mut tokens = 0usize;
+            let mut kv_used = 0usize;
+            let mut deferred: Option<usize> = None;
             while let Some(&i) = self.pending.front() {
                 if ready[i] > start {
                     break;
@@ -822,11 +907,44 @@ impl GroupSim {
                 if !batch.is_empty() && tokens + isls_of[i] > mnt {
                     break;
                 }
+                if !batch.is_empty() && kv_used + ctx_of[i] > kv_free {
+                    // The next member's decode context would outgrow the
+                    // group's remaining KV budget: trim the batch here and
+                    // defer that admission to the next batch boundary.  A
+                    // solo head always admits, so progress is guaranteed
+                    // even when one context alone exceeds the budget.
+                    deferred = Some(i);
+                    break;
+                }
                 batch.push(i);
                 tokens += isls_of[i];
+                kv_used += ctx_of[i];
                 self.pending.pop_front();
             }
             self.pending_tokens -= tokens;
+            if let Some(i) = deferred {
+                self.deferred += 1;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::AdmissionDefer {
+                        id: i,
+                        t: start,
+                        group: g,
+                        tokens: ctx_of[i],
+                    });
+                }
+            }
+            let overdraft =
+                (kv_used + self.cache_tokens).saturating_sub(self.kv_cap_tokens);
+            if overdraft > 0 {
+                // A solo head larger than the free budget admits anyway
+                // (progress), displacing resident prefixes.  The serial
+                // budget sync preempts the cache by the overdraft; the
+                // snapshot drops now so later batches in this advance
+                // price against the post-preemption residency.
+                self.overdraft_tokens += overdraft;
+                self.cache_tokens = self.cache_tokens.saturating_sub(overdraft);
+            }
+            self.kv_peak_tokens = self.kv_peak_tokens.max(kv_used + self.cache_tokens);
             let isls: Vec<usize> = batch.iter().map(|&i| isls_of[i]).collect();
             let offsets = match self.dynamic.as_mut() {
                 Some(d) => {
@@ -892,8 +1010,17 @@ impl GroupSim {
                 // group cannot start its next batch until the slowest
                 // rank's pulls complete.
                 let epochs_before = d.replacements;
+                let bytes_before = d.migration_bytes;
                 let stall = d.on_batch_done(batch.len());
                 self.free_at += stall;
+                if self.kv_cap_tokens != usize::MAX && d.replacements > epochs_before {
+                    // The epoch's in-flight weight copies transiently
+                    // double-hold HBM on this group; the displaced bytes
+                    // squeeze the KV budget until the next serial budget
+                    // sync preempts the prefix cache down to fit.
+                    let migrated = d.migration_bytes - bytes_before;
+                    self.squeeze_tokens += (migrated / self.kv_bpt.max(1e-12)).ceil() as usize;
+                }
                 if sink.enabled() && d.replacements > epochs_before {
                     sink.emit(FleetEvent::PlacementEpoch { group: g, t: end });
                     sink.emit(FleetEvent::Migration { group: g, t: end, seconds: stall });
@@ -1222,6 +1349,24 @@ pub fn simulate_parallel_with_sink(
     event_core::simulate_core(spec, prefill, sink, threads)
 }
 
+/// The per-group KV budget in tokens under the unified HBM budget: the
+/// explicit `kv_capacity_gb` override when set, otherwise the budget
+/// [`HbmBudget`] derives from the device (HBM minus resident expert
+/// weights minus activation headroom, summed over the group's ranks).
+/// `usize::MAX` with `hbm_budget` off, so the admission trim never fires
+/// and every path stays bit-identical to the unbudgeted fleet.
+fn group_kv_cap_tokens(spec: &ScenarioSpec, kv_bpt: f64) -> usize {
+    let s = &spec.serving;
+    if !s.hbm_budget {
+        return usize::MAX;
+    }
+    if s.kv_capacity_gb > 0.0 {
+        KvPrefixCache::tokens_for_budget(s.kv_capacity_gb, kv_bpt)
+    } else {
+        HbmBudget::derive(&spec.hw, &spec.model, s).kv_budget_tokens(s.group_size, kv_bpt)
+    }
+}
+
 /// Everything an open-loop fleet run owns between setup and assembly —
 /// the state both drivers (the event core and the legacy batch-serial
 /// loop) thread through the shared routing/spill/assembly helpers, so the
@@ -1232,6 +1377,9 @@ struct OpenState {
     requests: Vec<Request>,
     /// Prompt tokens to prefill per request (the raw ISLs open-loop).
     isls: Vec<usize>,
+    /// Decode-context KV tokens per request (ISL + OSL), priced against
+    /// the group KV budget under `hbm_budget`.
+    ctxs: Vec<usize>,
     mnt: usize,
     bytes_per_token: f64,
     groups: Vec<GroupSim>,
@@ -1253,6 +1401,7 @@ fn open_setup(spec: &ScenarioSpec) -> Result<OpenState, String> {
     let (n_groups, policy, slo) = (*n_groups, *policy, *slo);
     let requests = fleet_workload(spec)?;
     let isls: Vec<usize> = requests.iter().map(|r| r.isl).collect();
+    let ctxs: Vec<usize> = requests.iter().map(|r| r.isl + r.osl).collect();
     let mnt = spec.serving.max_num_tokens;
     // Rack tiers: group→rack assignment, inter-rack link pricing, and the
     // per-request home rack.  Flat (racks = 1) keeps every penalty at
@@ -1276,10 +1425,12 @@ fn open_setup(spec: &ScenarioSpec) -> Result<OpenState, String> {
     // bit-for-bit.
     let dynamic_placement = spec.serving.mode == ParallelMode::Dwdp
         && spec.serving.routing_skew > 0.0;
+    let kv_bpt = spec.model.kv_bytes_per_token();
+    let kv_cap_tokens = group_kv_cap_tokens(spec, kv_bpt);
     let groups: Vec<GroupSim> = (0..n_groups)
         .map(|g| {
             let dynamic = dynamic_placement.then(|| DynamicPlacement::new(spec, g));
-            GroupSim::new(spt0, dynamic)
+            GroupSim::new(spt0, dynamic, kv_cap_tokens, kv_bpt)
         })
         .collect();
     let failures = FleetFailures::from_spec(spec, &topo);
@@ -1297,6 +1448,7 @@ fn open_setup(spec: &ScenarioSpec) -> Result<OpenState, String> {
         slo,
         requests,
         isls,
+        ctxs,
         mnt,
         bytes_per_token,
         groups,
@@ -1480,6 +1632,23 @@ fn assemble_open(
         prefix_hits: 0,
         prefix_tokens_saved: 0,
         kv_transfer_bytes: 0.0,
+        deferred_admissions: groups.iter().map(|g| g.deferred).sum(),
+        kv_preempted_tokens: 0,
+        hbm_weight_bytes: if spec.serving.hbm_budget {
+            spec.model.resident_expert_bytes(spec.serving.local_experts)
+        } else {
+            0.0
+        },
+        hbm_kv_peak_bytes: if spec.serving.hbm_budget {
+            groups.iter().map(|g| g.kv_peak_tokens).max().unwrap_or(0) as f64
+                * spec.model.kv_bytes_per_token()
+                / spec.serving.group_size.max(1) as f64
+        } else {
+            0.0
+        },
+        per_group_kv_peak_tokens: groups.iter().map(|g| g.kv_peak_tokens).collect(),
+        host_fetches: 0,
+        host_fetch_bytes: 0.0,
         follow_ups: 0,
         follow_up_ttft: LatencyDigest::new(),
         turn_latency: LatencyDigest::new(),
@@ -1520,6 +1689,51 @@ fn sync_cache_failures(
     }
 }
 
+/// Serial budget sync, called by both drivers between advances (right
+/// after [`sync_cache_failures`], on the same clock): apply any
+/// migration-epoch squeeze as LRU preemption of resident prefixes, then
+/// mirror each group's resident-token count into its [`GroupSim`] so the
+/// next — possibly concurrent — advance prices decode admission against
+/// the remaining KV budget without ever touching the cache itself.
+fn sessions_sync_budget(st: &mut SessionsState, t: f64, sink: &mut dyn FleetEventSink) {
+    // Skip the infinite drain clock exactly like `sync_cache_failures`:
+    // past the last arrival there is no admission left to price, and a
+    // preemption event needs a finite instant.
+    if !st.hbm_budget_on || !t.is_finite() {
+        return;
+    }
+    for g in 0..st.n_groups {
+        let squeeze = st.groups[g].squeeze_tokens;
+        if squeeze > 0 {
+            st.groups[g].squeeze_tokens = 0;
+            let target = st.groups[g].kv_cap_tokens.saturating_sub(squeeze);
+            let (_, tokens) = st.cache.preempt_to(g, target);
+            if tokens > 0 {
+                st.kv_preempted_tokens += tokens;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::KvPreempt { group: g, t, tokens });
+                }
+            }
+        }
+        let overdraft = st.groups[g].overdraft_tokens;
+        if overdraft > 0 {
+            // A solo-head admission overdrew the budget: preempt the
+            // prefixes it displaced (LRU, whole entries) so residency
+            // returns under the cap the admission already charged.
+            st.groups[g].overdraft_tokens = 0;
+            let target = st.cache.used_tokens(g).saturating_sub(overdraft);
+            let (_, tokens) = st.cache.preempt_to(g, target);
+            if tokens > 0 {
+                st.kv_preempted_tokens += tokens;
+                if sink.enabled() {
+                    sink.emit(FleetEvent::KvPreempt { group: g, t, tokens });
+                }
+            }
+        }
+        st.groups[g].cache_tokens = st.cache.used_tokens(g);
+    }
+}
+
 /// Re-position `idx` in a ready-ordered pending queue after its ready time
 /// moved (a `kv_migrate` transfer landing after admission).
 fn reposition(q: &mut VecDeque<usize>, idx: usize, ready: &[f64]) {
@@ -1554,6 +1768,11 @@ fn route_session(
     kv_bytes_per_token: f64,
     ce_bw: f64,
     kv_transfer_bytes: &mut f64,
+    // `(bandwidth B/s, latency s)` of the host-offload link; `None` with
+    // `host_offload` off.
+    host_link: Option<(f64, f64)>,
+    host_fetches: &mut usize,
+    host_fetch_bytes: &mut f64,
     sink: &mut dyn FleetEventSink,
 ) -> RouteDecision {
     let r = &requests[idx];
@@ -1582,6 +1801,40 @@ fn route_session(
     };
     let RouteDecision::Admit(g) = decision else { return decision };
     let (Some(sid), Some((cg, cached))) = (r.session, resident) else {
+        // No HBM-resident prefix anywhere.  A copy preempted or evicted
+        // to the host tier earlier can still spare the re-prefill: pull
+        // it back over the host link — same accounting as a KV
+        // migration, priced at host bandwidth plus latency.
+        if let (Some((bw, lat)), Some(sid)) =
+            (host_link, r.session.filter(|_| r.is_follow_up()))
+        {
+            if let Some(tokens) = cache.host_take(sid) {
+                let prefix = tokens.min(r.isl);
+                if prefix > 0 {
+                    charged[idx] = r.isl - prefix;
+                    saved[idx] = prefix;
+                    groups[g].pending_tokens -= prefix;
+                    let bytes = prefix as f64 * kv_bytes_per_token;
+                    *host_fetches += 1;
+                    *host_fetch_bytes += bytes;
+                    let secs = host_seconds(bw, lat, bytes);
+                    let at = (now + secs).max(ready[idx]);
+                    if at > ready[idx] {
+                        ready[idx] = at;
+                        reposition(&mut groups[g].pending, idx, ready);
+                    }
+                    if sink.enabled() {
+                        sink.emit(FleetEvent::HostFetch {
+                            id: idx,
+                            t: now,
+                            group: g,
+                            bytes,
+                            seconds: secs,
+                        });
+                    }
+                }
+            }
+        }
         if xfer_open && sink.enabled() {
             sink.emit(FleetEvent::CrossRackEnd { id: idx, t: ready[idx] });
         }
@@ -1671,6 +1924,9 @@ fn process_session_spills(
     kv_bytes_per_token: f64,
     ce_bw: f64,
     kv_transfer_bytes: &mut f64,
+    host_link: Option<(f64, f64)>,
+    host_fetches: &mut usize,
+    host_fetch_bytes: &mut f64,
     sink: &mut dyn FleetEventSink,
 ) {
     due.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.idx.cmp(&b.idx)));
@@ -1712,6 +1968,9 @@ fn process_session_spills(
             kv_bytes_per_token,
             ce_bw,
             kv_transfer_bytes,
+            host_link,
+            host_fetches,
+            host_fetch_bytes,
             sink,
         ) {
             RouteDecision::Admit(_) => ledger.requeued_mask[s.idx] = true,
@@ -1734,6 +1993,9 @@ struct SessionsState {
     slo: Slo,
     requests: Vec<Request>,
     sgen: SessionGen,
+    /// Decode-context KV tokens per request (ISL + OSL), priced against
+    /// the group KV budget under `hbm_budget`; grows with follow-ups.
+    ctxs: Vec<usize>,
     mnt: usize,
     bytes_per_token: f64,
     kv_bytes_per_token: f64,
@@ -1764,6 +2026,19 @@ struct SessionsState {
     harvested: Vec<usize>,
     next_id: u64,
     follow_ups: usize,
+    /// The `hbm_budget` gate, mirrored from the spec for the sync helper
+    /// and assembly (which no longer see it).
+    hbm_budget_on: bool,
+    /// Ranks per group, for per-rank peak-KV conversion at assembly.
+    group_size: usize,
+    /// Resident expert weight bytes per rank (0.0 with the budget off).
+    hbm_weight_bytes: f64,
+    /// `(bandwidth B/s, latency s)` of the host-offload link; `None` with
+    /// `host_offload` off.
+    host_link: Option<(f64, f64)>,
+    kv_preempted_tokens: usize,
+    host_fetches: usize,
+    host_fetch_bytes: f64,
 }
 
 /// Build the closed-loop run state a fleet spec describes — the session
@@ -1791,8 +2066,19 @@ fn sessions_setup(spec: &ScenarioSpec) -> Result<SessionsState, String> {
     let topo = RackTopology::from_serving(s, n_groups);
     let bytes_per_token = spec.model.hidden as f64 * spec.model.act_bytes;
     let kv_bytes_per_token = spec.model.kv_bytes_per_token();
-    let capacity = KvPrefixCache::tokens_for_budget(s.kv_capacity_gb, kv_bytes_per_token);
-    let cache = KvPrefixCache::new(n_groups, capacity);
+    // With the unified HBM budget the cache capacity *is* the group KV
+    // budget (explicit `kv_capacity_gb` override, else derived from the
+    // device); off, the free-floating `kv_capacity_gb` model is untouched.
+    let kv_cap_tokens = group_kv_cap_tokens(spec, kv_bytes_per_token);
+    let capacity = if s.hbm_budget {
+        kv_cap_tokens
+    } else {
+        KvPrefixCache::tokens_for_budget(s.kv_capacity_gb, kv_bytes_per_token)
+    };
+    let mut cache = KvPrefixCache::new(n_groups, capacity);
+    if s.host_offload {
+        cache.enable_host_offload();
+    }
 
     let lm = GroupLatencyModel::new(&spec.hw, &spec.model, s);
     let isl0 = s.isl.max(1);
@@ -1800,7 +2086,12 @@ fn sessions_setup(spec: &ScenarioSpec) -> Result<SessionsState, String> {
     let dynamic_placement = s.mode == ParallelMode::Dwdp && s.routing_skew > 0.0;
     let groups: Vec<GroupSim> = (0..n_groups)
         .map(|g| {
-            GroupSim::new(spt0, dynamic_placement.then(|| DynamicPlacement::new(spec, g)))
+            GroupSim::new(
+                spt0,
+                dynamic_placement.then(|| DynamicPlacement::new(spec, g)),
+                kv_cap_tokens,
+                kv_bytes_per_token,
+            )
         })
         .collect();
     let failures = FleetFailures::from_spec(spec, &topo);
@@ -1809,6 +2100,7 @@ fn sessions_setup(spec: &ScenarioSpec) -> Result<SessionsState, String> {
 
     let n0 = requests.len();
     let charged: Vec<usize> = requests.iter().map(|r| r.isl).collect();
+    let ctxs: Vec<usize> = requests.iter().map(|r| r.isl + r.osl).collect();
     let ledger = ChurnLedger {
         ready: requests.iter().map(|r| r.arrival).collect(),
         respills: vec![0; n0],
@@ -1822,6 +2114,7 @@ fn sessions_setup(spec: &ScenarioSpec) -> Result<SessionsState, String> {
         slo,
         requests,
         sgen,
+        ctxs,
         mnt,
         bytes_per_token,
         kv_bytes_per_token,
@@ -1845,6 +2138,21 @@ fn sessions_setup(spec: &ScenarioSpec) -> Result<SessionsState, String> {
         harvested: vec![0usize; n_groups],
         next_id,
         follow_ups: 0,
+        hbm_budget_on: s.hbm_budget,
+        group_size: s.group_size,
+        hbm_weight_bytes: if s.hbm_budget {
+            spec.model.resident_expert_bytes(s.local_experts)
+        } else {
+            0.0
+        },
+        host_link: if s.host_offload {
+            Some((s.host_gbps * 1e9, s.host_latency))
+        } else {
+            None
+        },
+        kv_preempted_tokens: 0,
+        host_fetches: 0,
+        host_fetch_bytes: 0.0,
     })
 }
 
@@ -1874,6 +2182,7 @@ fn sessions_harvest(st: &mut SessionsState, mut schedule: impl FnMut(f64, usize)
                 st.ledger.respills.push(0);
                 st.ledger.requeued_mask.push(false);
                 st.charged.push(f.isl);
+                st.ctxs.push(f.isl + f.osl);
                 st.saved.push(0);
                 st.hit.push(false);
                 st.first_token.push(0.0);
@@ -1907,6 +2216,9 @@ fn sessions_process_due(st: &mut SessionsState, due: Vec<Spill>, sink: &mut dyn 
         st.kv_bytes_per_token,
         st.ce_bw,
         &mut st.kv_transfer_bytes,
+        st.host_link,
+        &mut st.host_fetches,
+        &mut st.host_fetch_bytes,
         sink,
     );
 }
@@ -1944,6 +2256,9 @@ fn sessions_route_and_account(st: &mut SessionsState, i: usize, sink: &mut dyn F
         st.kv_bytes_per_token,
         st.ce_bw,
         &mut st.kv_transfer_bytes,
+        st.host_link,
+        &mut st.host_fetches,
+        &mut st.host_fetch_bytes,
         sink,
     ) {
         RouteDecision::Admit(_) => {}
@@ -1983,7 +2298,14 @@ fn assemble_sessions(st: SessionsState, sink: &mut dyn FleetEventSink) -> FleetO
         shed,
         shed_tokens,
         kv_transfer_bytes,
+        kv_bytes_per_token,
         follow_ups,
+        hbm_budget_on,
+        group_size,
+        hbm_weight_bytes,
+        kv_preempted_tokens,
+        host_fetches,
+        host_fetch_bytes,
         ..
     } = st;
     let mut finish = vec![0.0f64; requests.len()];
@@ -2076,6 +2398,19 @@ fn assemble_sessions(st: SessionsState, sink: &mut dyn FleetEventSink) -> FleetO
         prefix_hits,
         prefix_tokens_saved,
         kv_transfer_bytes,
+        deferred_admissions: groups.iter().map(|g| g.deferred).sum(),
+        kv_preempted_tokens,
+        hbm_weight_bytes,
+        hbm_kv_peak_bytes: if hbm_budget_on {
+            groups.iter().map(|g| g.kv_peak_tokens).max().unwrap_or(0) as f64
+                * kv_bytes_per_token
+                / group_size.max(1) as f64
+        } else {
+            0.0
+        },
+        per_group_kv_peak_tokens: groups.iter().map(|g| g.kv_peak_tokens).collect(),
+        host_fetches,
+        host_fetch_bytes,
         follow_ups,
         follow_up_ttft,
         turn_latency,
@@ -2835,6 +3170,76 @@ mod tests {
             dropped.admitted_tokens,
             dropped.prefill_tokens + dropped.prefix_tokens_saved
         );
+    }
+
+    #[test]
+    fn unbounded_hbm_budget_is_budget_off_bit_for_bit() {
+        // The zero-delta gate at the core level: `hbm_budget` over a
+        // device that never binds must reproduce the budget-off run's
+        // full report fingerprint, float for float.
+        let build = |budget: bool| {
+            let mut s = session_fleet(ClusterPolicy::PrefixAffinity);
+            if budget {
+                s = s.hbm_budget(true).host_offload(true).json_overrides(
+                    crate::util::Json::parse(r#"{"hbm_bytes": 1e18}"#).unwrap(),
+                );
+            }
+            s.build().unwrap()
+        };
+        let (off_spec, on_spec) = (build(false), build(true));
+        let off = simulate_analytic(&off_spec).unwrap();
+        let on = simulate_analytic(&on_spec).unwrap();
+        assert_eq!(on.deferred_admissions, 0);
+        assert_eq!(on.kv_preempted_tokens, 0);
+        assert_eq!(on.host_fetches, 0);
+        assert_eq!(
+            crate::serving::fleet_report(&off_spec, "analytic", &off).to_json().dump(),
+            crate::serving::fleet_report(&on_spec, "analytic", &on).to_json().dump(),
+            "an unbounded HBM budget moved the report fingerprint"
+        );
+    }
+
+    #[test]
+    fn hbm_pressure_defers_admissions_and_spills_prefixes_to_host() {
+        // A 1e-3 GB KV slice (3125 tokens at the tiny model's 320 B/token)
+        // against ~2k-token contexts: batches trim to one context, evicted
+        // prefixes land on the host tier, and follow-ups pull them back
+        // over the host link instead of re-prefilling.
+        let spec = session_fleet(ClusterPolicy::PrefixAffinity)
+            .hbm_budget(true)
+            .kv_capacity_gb(1e-3)
+            .host_offload(true)
+            .build()
+            .unwrap();
+        let out = simulate_analytic(&spec).unwrap();
+        assert_eq!(out.offered, out.admitted + out.shed + out.failed);
+        assert_eq!(out.admitted_tokens, out.prefill_tokens + out.prefix_tokens_saved);
+        assert!(out.deferred_admissions > 0, "the KV cap never trimmed a batch");
+        assert!(out.host_fetches > 0, "no evicted prefix was pulled off the host tier");
+        assert!(out.host_fetch_bytes > 0.0);
+        assert_eq!(
+            out.hbm_weight_bytes,
+            spec.model.resident_expert_bytes(spec.serving.local_experts)
+        );
+        // The recorded peak respects the explicit cap, per group.
+        let cap = KvPrefixCache::tokens_for_budget(
+            spec.serving.kv_capacity_gb,
+            spec.model.kv_bytes_per_token(),
+        );
+        for (g, &peak) in out.per_group_kv_peak_tokens.iter().enumerate() {
+            assert!(peak > 0, "group {g}: pressure test never used KV");
+            assert!(peak <= cap, "group {g}: peak {peak} over cap {cap}");
+        }
+        // Budget-off on the same scenario: none of the machinery fires.
+        let off = simulate_analytic(
+            &session_fleet(ClusterPolicy::PrefixAffinity).build().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(off.deferred_admissions, 0);
+        assert_eq!(off.kv_preempted_tokens, 0);
+        assert_eq!(off.host_fetches, 0);
+        assert_eq!(off.hbm_weight_bytes, 0.0);
+        assert_eq!(off.hbm_kv_peak_bytes, 0.0);
     }
 
     #[test]

@@ -39,6 +39,22 @@ pub enum LinkTier {
     IntraRack,
     /// Different racks: the IB/Ethernet spine.
     InterRack,
+    /// Host memory behind PCIe/C2C: the offload tier KV prefixes spill to
+    /// when the group HBM budget preempts them (`host_offload`).
+    Host,
+}
+
+/// Seconds to pull `bytes` back from the host-offload tier over the
+/// host link (`bw_bps` B/s of PCIe/C2C bandwidth plus a fixed
+/// per-transfer `latency`) — [`LinkTier::Host`] pricing, the same shape
+/// as [`RackTopology::inter_rack_seconds`] for the spine.  Callers feed
+/// it the serving knobs: `host_seconds(serving.host_gbps * 1e9,
+/// serving.host_latency, bytes)`.
+pub fn host_seconds(bw_bps: f64, latency: f64, bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    bytes / bw_bps + latency
 }
 
 /// The fleet's rack layout plus the inter-rack link parameters.
@@ -181,6 +197,21 @@ mod tests {
         let p = t.cross_penalty(1e9);
         assert!((p - (0.1 + 1e-5)).abs() < 1e-12, "{p}");
         assert_eq!(t.cross_penalty(0.0), 0.0);
+    }
+
+    #[test]
+    fn host_tier_prices_bandwidth_plus_latency() {
+        let s = ServingConfig::default_context(ParallelMode::Dwdp, 4);
+        assert_eq!(s.host_gbps, 40.0);
+        let (bw, lat) = (s.host_gbps * 1e9, 1e-5);
+        let secs = host_seconds(bw, lat, 4e10);
+        assert!((secs - (1.0 + 1e-5)).abs() < 1e-9, "{secs}");
+        assert_eq!(host_seconds(bw, lat, 0.0), 0.0);
+        // The host tier sits below the NVLink copy engine and roughly at
+        // spine speed — the ordering the offload pricing depends on.
+        let t = RackTopology { n_groups: 4, racks: 2, inter_bw: 25e9, inter_latency: 3e-6 };
+        assert!(host_seconds(bw, lat, 1e9) > 1e9 / 750e9);
+        assert!(host_seconds(bw, lat, 1e9) < 10.0 * t.inter_rack_seconds(1e9));
     }
 
     #[test]

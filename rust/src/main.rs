@@ -396,6 +396,21 @@ fn fleet_cmd(flags: &HashMap<String, String>) -> i32 {
         if let Some(gb) = flags.get("kv-capacity").and_then(|s| s.parse().ok()) {
             scn = scn.kv_capacity_gb(gb);
         }
+        if flags.contains_key("hbm-budget") {
+            scn = scn.hbm_budget(true);
+        }
+        if let Some(frac) = flags.get("hbm-headroom").and_then(|s| s.parse().ok()) {
+            scn = scn.hbm_headroom_frac(frac);
+        }
+        if flags.contains_key("host-offload") {
+            scn = scn.host_offload(true);
+        }
+        if let Some(gbps) = flags.get("host-gbps").and_then(|s| s.parse().ok()) {
+            scn = scn.host_gbps(gbps);
+        }
+        if let Some(lat) = flags.get("host-latency").and_then(|s| s.parse().ok()) {
+            scn = scn.host_latency(lat);
+        }
         if let Some(p) = flags.get("policy") {
             match ClusterPolicy::parse(p, max_wait) {
                 Some(policy) => scn = scn.cluster_policy(policy),
@@ -523,6 +538,22 @@ fn bench_cmd(flags: &HashMap<String, String>) -> i32 {
     b.bench("fleet/event_core_g4_r32_threads4", || {
         fleet_simulate_parallel(&fleet_spec, &flm, 4)
     });
+    // The unified-HBM-budget path: sessions + derived KV cap + admission
+    // trimming + host offload, so the budget bookkeeping shows up in the
+    // perf trajectory next to the unbudgeted core above.
+    let budget_spec = match experiments::fleet::memory_pressure_scenario(64, 0.5, 8192)
+        .requests(32)
+        .rate(20.0)
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let blm = GroupLatencyModel::new(&budget_spec.hw, &budget_spec.model, &budget_spec.serving);
+    b.bench("fleet/event_core_g4_r32_hbm_budget", || fleet_simulate(&budget_spec, &blm));
     b.finish();
 
     let mut suite = BenchSuite::new(&name);
@@ -554,6 +585,13 @@ fn bench_cmd(flags: &HashMap<String, String>) -> i32 {
                 .rate(20.0)
                 .seed(7)
                 .racks(2),
+        ),
+        (
+            "fleet/dwdp4_hbm_budget",
+            experiments::fleet::memory_pressure_scenario(64, 0.5, 8192)
+                .requests(48)
+                .rate(20.0)
+                .seed(7),
         ),
     ];
     for (label, scn) in sweeps {

@@ -114,6 +114,16 @@ pub enum FleetEvent {
     Migration { group: usize, t: f64, seconds: f64 },
     /// A group outage wiped its resident KV prefixes.
     CacheInvalidate { group: usize, t: f64 },
+    /// Weight-side HBM pressure (a migration epoch's in-flight copies)
+    /// LRU-preempted `tokens` of resident KV prefixes off the group.
+    KvPreempt { group: usize, t: f64, tokens: usize },
+    /// The request's decode context (`tokens` KV tokens) would have
+    /// outgrown the group's remaining KV budget: the forming batch was
+    /// trimmed and this admission deferred to the next batch boundary.
+    AdmissionDefer { id: usize, t: f64, group: usize, tokens: usize },
+    /// A preempted/evicted KV prefix was pulled back from the host
+    /// offload tier over the host link instead of being re-prefilled.
+    HostFetch { id: usize, t: f64, group: usize, bytes: f64, seconds: f64 },
 }
 
 impl FleetEvent {
@@ -139,9 +149,11 @@ impl FleetEvent {
             | Kill { id, .. }
             | Requeue { id, .. }
             | Shed { id, .. }
-            | Failed { id, .. } => Some(id),
+            | Failed { id, .. }
+            | AdmissionDefer { id, .. }
+            | HostFetch { id, .. } => Some(id),
             GroupState { .. } | PlacementEpoch { .. } | Migration { .. }
-            | CacheInvalidate { .. } => None,
+            | CacheInvalidate { .. } | KvPreempt { .. } => None,
         }
     }
 
@@ -170,7 +182,10 @@ impl FleetEvent {
             | GroupState { t, .. }
             | PlacementEpoch { t, .. }
             | Migration { t, .. }
-            | CacheInvalidate { t, .. } => t,
+            | CacheInvalidate { t, .. }
+            | KvPreempt { t, .. }
+            | AdmissionDefer { t, .. }
+            | HostFetch { t, .. } => t,
         }
     }
 
@@ -200,6 +215,9 @@ impl FleetEvent {
             PlacementEpoch { .. } => "placement_epoch",
             Migration { .. } => "migration",
             CacheInvalidate { .. } => "cache_invalidate",
+            KvPreempt { .. } => "kv_preempt",
+            AdmissionDefer { .. } => "admission_defer",
+            HostFetch { .. } => "host_fetch",
         }
     }
 }
@@ -244,10 +262,10 @@ impl FleetEventSink for EventLog {
 }
 
 /// Per-request TTFT attribution.  `queue` is the residual after the
-/// directly-measured components, so the four parts sum to `ttft` by
+/// directly-measured components, so the five parts sum to `ttft` by
 /// construction; the conservation property additionally checks every
-/// component is non-negative (which *would* fail if warm-up or transfer
-/// time were double-counted).
+/// component is non-negative (which *would* fail if warm-up, transfer,
+/// or memory-wait time were double-counted).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Waterfall {
     /// Time waiting in a pending queue (includes time lost to killed
@@ -258,6 +276,11 @@ pub struct Waterfall {
     pub cross_rack: f64,
     /// This request's share of a recovery warm-up in its final batch.
     pub warmup: f64,
+    /// Time waiting on HBM: from the first admission deferral (the group
+    /// KV budget could not hold the decode context) of the final attempt
+    /// to the batch the request actually entered.  Carved out of the
+    /// queue residual, clamped so both stay non-negative.
+    pub mem_wait: f64,
     /// Batch start to first token.
     pub prefill: f64,
     /// Measured TTFT (first token − arrival), exactly as simulated.
@@ -265,9 +288,9 @@ pub struct Waterfall {
 }
 
 impl Waterfall {
-    /// Sum of the four attribution components.
+    /// Sum of the five attribution components.
     pub fn total(&self) -> f64 {
-        self.queue + self.cross_rack + self.warmup + self.prefill
+        self.queue + self.cross_rack + self.warmup + self.mem_wait + self.prefill
     }
 }
 
@@ -288,6 +311,7 @@ struct ReqAcc {
     xfer: f64,
     xfer_open: Option<f64>,
     warmup: f64,
+    defer_from: Option<f64>,
     prefill_start: Option<f64>,
     prefill_end: Option<f64>,
     group: usize,
@@ -327,6 +351,13 @@ impl EventLog {
                     }
                 }
                 FleetEvent::WarmupWait { seconds, .. } => a.warmup = seconds,
+                FleetEvent::AdmissionDefer { t, .. } => {
+                    // Keep the *first* deferral of the current attempt:
+                    // repeated trims extend the same memory wait.
+                    if a.defer_from.is_none() {
+                        a.defer_from = Some(t);
+                    }
+                }
                 FleetEvent::PrefillStart { t, group, .. } => {
                     a.prefill_start = Some(t);
                     a.group = group;
@@ -334,6 +365,7 @@ impl EventLog {
                 FleetEvent::Kill { .. } => {
                     a.prefill_start = None;
                     a.warmup = 0.0;
+                    a.defer_from = None;
                 }
                 FleetEvent::PrefillEnd { t, .. } => a.prefill_end = Some(t),
                 _ => {}
@@ -344,10 +376,22 @@ impl EventLog {
                 let (arrival, start, end) = (a.arrival?, a.prefill_start?, a.prefill_end?);
                 let ttft = end - arrival;
                 let prefill = end - start;
-                let queue = ttft - a.xfer - a.warmup - prefill;
+                let residual = ttft - a.xfer - a.warmup - prefill;
+                let mem_wait = a
+                    .defer_from
+                    .map(|d| (start - d).clamp(0.0, residual.max(0.0)))
+                    .unwrap_or(0.0);
+                let queue = residual - mem_wait;
                 Some((
                     id,
-                    Waterfall { queue, cross_rack: a.xfer, warmup: a.warmup, prefill, ttft },
+                    Waterfall {
+                        queue,
+                        cross_rack: a.xfer,
+                        warmup: a.warmup,
+                        mem_wait,
+                        prefill,
+                        ttft,
+                    },
                 ))
             })
             .collect()
@@ -543,6 +587,40 @@ mod tests {
         assert_eq!(w.warmup, 0.0, "killed attempt's warm-up must not count");
         assert_eq!(w.prefill, 0.5);
         assert_eq!(w.queue, 2.0, "time lost to the killed attempt is queue residual");
+        assert!((w.total() - w.ttft).abs() < 1e-12);
+    }
+
+    #[test]
+    fn admission_defer_carves_memory_wait_out_of_queue() {
+        let mut log = EventLog::new();
+        log.emit(FleetEvent::Arrival { id: 2, t: 0.0, isl: 64, osl: 8, session: None });
+        log.emit(FleetEvent::QueueEnter { id: 2, t: 0.0, group: 0 });
+        // Two trims of the same attempt: the wait runs from the first.
+        log.emit(FleetEvent::AdmissionDefer { id: 2, t: 1.0, group: 0, tokens: 72 });
+        log.emit(FleetEvent::AdmissionDefer { id: 2, t: 2.0, group: 0, tokens: 72 });
+        log.emit(FleetEvent::QueueLeave { id: 2, t: 3.0, group: 0 });
+        log.emit(FleetEvent::PrefillStart { id: 2, t: 3.0, group: 0 });
+        log.emit(FleetEvent::PrefillEnd { id: 2, t: 3.5, group: 0 });
+        let w = log.waterfalls()[&2];
+        assert_eq!(w.mem_wait, 2.0, "defer at 1.0 → batch at 3.0");
+        assert_eq!(w.queue, 1.0, "pre-defer wait stays queue residual");
+        assert_eq!(w.prefill, 0.5);
+        assert!((w.total() - w.ttft).abs() < 1e-12);
+        // A kill voids the deferral attribution with the attempt.
+        let mut killed = EventLog::new();
+        killed.emit(FleetEvent::Arrival { id: 4, t: 0.0, isl: 64, osl: 8, session: None });
+        killed.emit(FleetEvent::QueueEnter { id: 4, t: 0.0, group: 0 });
+        killed.emit(FleetEvent::AdmissionDefer { id: 4, t: 0.5, group: 0, tokens: 72 });
+        killed.emit(FleetEvent::QueueLeave { id: 4, t: 1.0, group: 0 });
+        killed.emit(FleetEvent::PrefillStart { id: 4, t: 1.0, group: 0 });
+        killed.emit(FleetEvent::Kill { id: 4, t: 1.5, group: 0 });
+        killed.emit(FleetEvent::Requeue { id: 4, t: 1.5 });
+        killed.emit(FleetEvent::QueueEnter { id: 4, t: 1.5, group: 1 });
+        killed.emit(FleetEvent::QueueLeave { id: 4, t: 2.0, group: 1 });
+        killed.emit(FleetEvent::PrefillStart { id: 4, t: 2.0, group: 1 });
+        killed.emit(FleetEvent::PrefillEnd { id: 4, t: 2.5, group: 1 });
+        let w = killed.waterfalls()[&4];
+        assert_eq!(w.mem_wait, 0.0, "killed attempt's deferral must not count");
         assert!((w.total() - w.ttft).abs() < 1e-12);
     }
 

@@ -358,6 +358,35 @@ fn fill_fleet_report(report: &mut RunReport, spec: &ScenarioSpec, out: &fleet::F
             ));
         }
     }
+    // Unified HBM budget: the memory block appears only when the budget
+    // actually bound somewhere (a deferral, a preemption, or a host
+    // fetch), so an effectively unbounded budget reproduces the
+    // pre-budget report byte-for-byte — the zero-delta contract the
+    // golden corpus pins.
+    if spec.serving.hbm_budget
+        && (out.deferred_admissions > 0 || out.kv_preempted_tokens > 0 || out.host_fetches > 0)
+    {
+        report.extras.push((
+            "hbm weight (GB/rank)".into(),
+            format!("{:.3}", out.hbm_weight_bytes / 1e9),
+        ));
+        report.extras.push((
+            "hbm kv peak (GB/rank)".into(),
+            format!("{:.3}", out.hbm_kv_peak_bytes / 1e9),
+        ));
+        report
+            .extras
+            .push(("deferred admissions".into(), out.deferred_admissions.to_string()));
+        report
+            .extras
+            .push(("kv preempted tokens".into(), out.kv_preempted_tokens.to_string()));
+    }
+    if out.host_fetches > 0 {
+        report.extras.push(("host fetches".into(), out.host_fetches.to_string()));
+        report
+            .extras
+            .push(("host fetch (GB)".into(), format!("{:.3}", out.host_fetch_bytes / 1e9)));
+    }
 }
 
 /// Assemble the full fleet [`RunReport`] one outcome maps to — exactly

@@ -92,6 +92,7 @@ fleet_specs!(
     specs_fleet_churn => "fleet_churn",
     specs_multirack => "multirack",
     specs_sessions => "sessions",
+    specs_memory_pressure => "memory_pressure",
 );
 
 fn run_fig1() -> RunArtifact {
@@ -169,6 +170,9 @@ fn run_multirack() -> RunArtifact {
 }
 fn run_sessions() -> RunArtifact {
     RunArtifact::table(experiments::fleet::sessions())
+}
+fn run_memory_pressure() -> RunArtifact {
+    RunArtifact::table(experiments::fleet::memory_pressure())
 }
 
 static REGISTRY: &[ScenarioEntry] = &[
@@ -347,6 +351,13 @@ static REGISTRY: &[ScenarioEntry] = &[
         run: run_sessions,
         specs: specs_sessions,
     },
+    ScenarioEntry {
+        id: "memory_pressure",
+        title: "unified HBM budget: redundancy vs KV residency vs context length",
+        group: "fleet",
+        run: run_memory_pressure,
+        specs: specs_memory_pressure,
+    },
 ];
 
 /// All registered scenarios, in registration order.
@@ -382,6 +393,8 @@ pub fn usage_text() -> String {
     out.push_str("                   [--policy rr|lot|slo|rlf|affinity] [--max-wait W]\n");
     out.push_str("                   [--sessions] [--turns N] [--think-time S]\n");
     out.push_str("                   [--kv-migrate] [--kv-capacity GB]\n");
+    out.push_str("                   [--hbm-budget] [--hbm-headroom F] [--host-offload]\n");
+    out.push_str("                   [--host-gbps G] [--host-latency S]\n");
     out.push_str("                   [--replay FILE.json] [--record-trace FILE.json]\n");
     out.push_str("                   [--trace PERFETTO_OUT.json] [--fidelity analytic|des]\n");
     out.push_str("                   [--skew Z] [--replace N] [--local-experts L]\n");
@@ -423,7 +436,8 @@ mod tests {
         }
         // PR 2's fleet layer registers through the same table, as do
         // PR 3's re-placement sweep, PR 4's churn scenario, PR 5's
-        // rack-tiered topology sweep, and PR 6's closed-loop sessions.
+        // rack-tiered topology sweep, PR 6's closed-loop sessions, and
+        // the unified-HBM-budget pressure sweep.
         for id in [
             "fleet_frontier",
             "fleet_burst",
@@ -432,11 +446,12 @@ mod tests {
             "fleet_churn",
             "multirack",
             "sessions",
+            "memory_pressure",
         ] {
             assert!(find(id).is_some(), "missing scenario {id}");
             assert_eq!(find(id).unwrap().group, "fleet");
         }
-        assert_eq!(registry().len(), 25);
+        assert_eq!(registry().len(), 26);
     }
 
     #[test]
@@ -462,6 +477,8 @@ mod tests {
         assert!(text.contains("--inter-rack-gbps"));
         assert!(text.contains("--sessions"));
         assert!(text.contains("--think-time"));
+        assert!(text.contains("--hbm-budget"));
+        assert!(text.contains("--host-offload"));
         assert!(text.contains("dwdp-repro bench"));
         assert!(text.contains("--replay"));
         assert!(text.contains("--trace PERFETTO_OUT.json"));

@@ -129,6 +129,11 @@ pub struct Scenario {
     think_time: Option<f64>,
     kv_migrate: Option<bool>,
     kv_capacity_gb: Option<f64>,
+    hbm_budget: Option<bool>,
+    hbm_headroom_frac: Option<f64>,
+    host_offload: Option<bool>,
+    host_gbps: Option<f64>,
+    host_latency: Option<f64>,
     seed: Option<u64>,
     // Workload / fleet.
     requests: usize,
@@ -189,6 +194,11 @@ impl Scenario {
             think_time: None,
             kv_migrate: None,
             kv_capacity_gb: None,
+            hbm_budget: None,
+            hbm_headroom_frac: None,
+            host_offload: None,
+            host_gbps: None,
+            host_latency: None,
             seed: None,
             requests: if target == BuildTarget::Context { 2 } else { 64 },
             target,
@@ -423,9 +433,45 @@ impl Scenario {
         self
     }
 
-    /// Per-group KV-prefix cache budget in GB (0 = unbounded).
+    /// Per-group KV-prefix cache budget in GB (0 = unbounded; with
+    /// [`Scenario::hbm_budget`] on, 0 means *derived from the device*).
     pub fn kv_capacity_gb(mut self, gb: f64) -> Self {
         self.kv_capacity_gb = Some(gb);
+        self
+    }
+
+    /// Unify each group's memory onto one HBM budget: resident expert
+    /// weights and activation headroom come off `hw.hbm_bytes`, and the
+    /// remainder bounds both decode contexts and resident KV prefixes.
+    /// Off (the default) the fleet is bit-identical to the free-floating
+    /// `kv_capacity_gb` model.
+    pub fn hbm_budget(mut self, on: bool) -> Self {
+        self.hbm_budget = Some(on);
+        self
+    }
+
+    /// Fraction of HBM reserved for activations under the HBM budget.
+    pub fn hbm_headroom_frac(mut self, frac: f64) -> Self {
+        self.hbm_headroom_frac = Some(frac);
+        self
+    }
+
+    /// Spill preempted/evicted KV prefixes to a host tier and re-fetch
+    /// them over the host link instead of re-prefilling.
+    pub fn host_offload(mut self, on: bool) -> Self {
+        self.host_offload = Some(on);
+        self
+    }
+
+    /// Host-offload link bandwidth, GB/s.
+    pub fn host_gbps(mut self, gbps: f64) -> Self {
+        self.host_gbps = Some(gbps);
+        self
+    }
+
+    /// Host-offload per-transfer latency, seconds.
+    pub fn host_latency(mut self, seconds: f64) -> Self {
+        self.host_latency = Some(seconds);
         self
     }
 
@@ -604,6 +650,21 @@ impl Scenario {
         }
         if let Some(v) = self.kv_capacity_gb {
             serving.kv_capacity_gb = v;
+        }
+        if let Some(v) = self.hbm_budget {
+            serving.hbm_budget = v;
+        }
+        if let Some(v) = self.hbm_headroom_frac {
+            serving.hbm_headroom_frac = v;
+        }
+        if let Some(v) = self.host_offload {
+            serving.host_offload = v;
+        }
+        if let Some(v) = self.host_gbps {
+            serving.host_gbps = v;
+        }
+        if let Some(v) = self.host_latency {
+            serving.host_latency = v;
         }
         if let Some(v) = self.seed {
             serving.seed = v;

@@ -5,7 +5,7 @@
 //! DESIGN.md §2).  Each property runs across many seeds and fails with the
 //! seed in the message for reproduction.
 
-use dwdp::config::{HardwareConfig, PaperModelConfig, ParallelMode, ServingConfig};
+use dwdp::config::{HardwareConfig, HbmBudget, PaperModelConfig, ParallelMode, ServingConfig};
 use dwdp::coordinator::{ContextBatcher, GroupLatencyModel, RoutePolicy, Router};
 use dwdp::dwdp::{build_copy_plan, plan_bytes};
 use dwdp::fleet::{
@@ -14,7 +14,7 @@ use dwdp::fleet::{
 use dwdp::model::Category;
 use dwdp::placement::{migration_cost, migration_fetches, target_placement, ExpertPlacement};
 use dwdp::serving::{run_fleet_analytic_logged, Fidelity, Scenario, ScenarioSpec, ServingStack};
-use dwdp::util::Rng;
+use dwdp::util::{Json, Rng};
 use dwdp::workload::{ArrivalProcess, IslDist, OpenLoopGen, OslDist, Request, WorkloadTrace};
 
 const CASES: u64 = 60;
@@ -799,6 +799,12 @@ fn prop_sessions_token_conservation() {
             // A tight cache budget forces LRU eviction mid-run.
             scn = scn.kv_capacity_gb(1e-3);
         }
+        if seed % 4 == 1 {
+            // The unified HBM budget over a deliberately tiny KV slice:
+            // admission trimming, prefix preemption, and host-tier
+            // fetches must not leak a single token either.
+            scn = scn.hbm_budget(true).kv_capacity_gb(1e-3).host_offload(true);
+        }
         if churn {
             scn = scn.mtbf(0.5 + rng.f64() * 4.0).mttr(0.05 + rng.f64() * 2.0).requeue_on_failure(true);
         }
@@ -828,6 +834,11 @@ fn prop_sessions_token_conservation() {
         assert!(out.prefix_hits <= out.follow_ups, "seed {seed}");
         if !spec.serving.kv_migrate {
             assert_eq!(out.kv_transfer_bytes, 0.0, "seed {seed}: phantom KV transfer");
+        }
+        if !spec.serving.hbm_budget {
+            assert_eq!(out.deferred_admissions, 0, "seed {seed}: deferral without a budget");
+            assert_eq!(out.kv_preempted_tokens, 0, "seed {seed}: preempt without a budget");
+            assert_eq!(out.host_fetches, 0, "seed {seed}: host fetch without a budget");
         }
         for r in &out.metrics.records {
             assert!(r.first_token >= r.arrival, "seed {seed}: {r:?}");
@@ -884,10 +895,138 @@ fn prop_fleet_sweep_thread_invariance_with_sessions() {
     }
 }
 
+/// Property (fleet): an unbounded HBM budget is budget-off, bit for bit —
+/// switching `hbm_budget` on over a device too large to ever bind must
+/// not move a single float in the `RunReport::to_json()` fingerprint,
+/// across all five cluster policies, sessions on/off, and churn on/off.
+/// This is the zero-delta contract of the unified memory hierarchy: the
+/// committed golden corpus pins the budget-off fingerprints, so this
+/// transitively pins the unbounded-budget path to the goldens too.
+#[test]
+fn prop_unbounded_hbm_budget_is_bit_identical_to_budget_off() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(21_000 + seed);
+        let n_groups = 1 + rng.below(4) as usize;
+        let rate = 2.0 + rng.f64() * 20.0;
+        let policy = match seed % 5 {
+            0 => ClusterPolicy::SloAdmission { max_wait: 0.01 + rng.f64() },
+            1 => ClusterPolicy::RoundRobin,
+            2 => ClusterPolicy::LeastOutstandingTokens,
+            3 => ClusterPolicy::RackLocalFirst,
+            _ => ClusterPolicy::PrefixAffinity,
+        };
+        let sessions = seed % 5 == 4 || seed % 2 == 0;
+        let churn = seed % 3 == 0;
+        let requests = 8 + rng.below(28) as usize;
+        let turns = 1 + rng.below(4) as usize;
+        let think = rng.f64() * 0.5;
+        let cv2 = 1.0 + (seed % 6) as f64;
+        let scenario = |budget: bool| {
+            let mut s = tiny_fleet_scenario(n_groups)
+                .arrival(ArrivalProcess::GammaBurst { rate, cv2 })
+                .cluster_policy(policy)
+                .requests(requests)
+                .seed(seed);
+            if sessions {
+                s = s.sessions(true).session_turns(turns).think_time(think);
+            }
+            if churn {
+                s = s.mtbf(1.5).mttr(0.4).requeue_on_failure(true);
+            }
+            if budget {
+                // A device so large the derived KV budget never binds:
+                // trimming, preemption, and the host tier all stay idle.
+                s = s
+                    .hbm_budget(true)
+                    .host_offload(true)
+                    .json_overrides(Json::parse(r#"{"hbm_bytes": 1e18}"#).unwrap());
+            }
+            s.build().unwrap_or_else(|e| panic!("seed {seed}: {e}"))
+        };
+        let off = ServingStack::new(scenario(false), Fidelity::Analytic)
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let on = ServingStack::new(scenario(true), Fidelity::Analytic)
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(
+            off.to_json().dump(),
+            on.to_json().dump(),
+            "seed {seed}: an unbounded HBM budget moved the fingerprint"
+        );
+    }
+}
+
+/// Property (fleet): the unified HBM budget conserves device memory —
+/// for every group, resident expert weights + the peak KV actually
+/// reached (in-flight decode contexts plus resident prefixes, per rank)
+/// + the reserved activation headroom fit inside `hbm_bytes`, across
+/// redundancy levels, loads, and host-offload on/off.  The sweep must
+/// also produce real pressure (deferrals, preemptions, or host fetches)
+/// somewhere, or the invariant would hold vacuously.
+#[test]
+fn prop_hbm_budget_conserves_device_memory() {
+    let mut pressured = 0usize;
+    for seed in 0..20 {
+        let mut rng = Rng::new(22_000 + seed);
+        let local = [2usize, 4, 8][seed as usize % 3];
+        let n_groups = 1 + rng.below(3) as usize;
+        let rate = 5.0 + rng.f64() * 25.0;
+        let spec = tiny_fleet_scenario(n_groups)
+            .mode(ParallelMode::Dwdp)
+            .arrival(ArrivalProcess::GammaBurst { rate, cv2: 1.0 + rng.f64() * 5.0 })
+            .cluster_policy(ClusterPolicy::PrefixAffinity)
+            .sessions(true)
+            .session_turns(1 + rng.below(4) as usize)
+            .think_time(rng.f64() * 0.3)
+            .local_experts(local)
+            .hbm_budget(true)
+            .host_offload(seed % 2 == 0)
+            .requests(12 + rng.below(24) as usize)
+            .seed(seed)
+            .json_overrides(Json::parse(r#"{"hbm_bytes": 2e6}"#).unwrap())
+            .build()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let out = simulate_analytic(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let budget = HbmBudget::derive(&spec.hw, &spec.model, &spec.serving);
+        assert_eq!(
+            out.hbm_weight_bytes, budget.weight_bytes,
+            "seed {seed}: reported weight footprint disagrees with the derivation"
+        );
+        let kv_bpt = spec.model.kv_bytes_per_token();
+        let ranks = spec.serving.group_size as f64;
+        assert_eq!(out.per_group_kv_peak_tokens.len(), n_groups, "seed {seed}");
+        for (g, &peak) in out.per_group_kv_peak_tokens.iter().enumerate() {
+            let kv_bytes = peak as f64 * kv_bpt / ranks;
+            assert!(
+                out.hbm_weight_bytes + kv_bytes + budget.headroom_bytes
+                    <= spec.hw.hbm_bytes + 1e-6,
+                "seed {seed} group {g}: weights {} + peak KV {kv_bytes} + headroom {} \
+                 overflow the {} B device",
+                out.hbm_weight_bytes,
+                budget.headroom_bytes,
+                spec.hw.hbm_bytes
+            );
+        }
+        assert!(
+            out.hbm_kv_peak_bytes <= budget.kv_bytes + 1e-6,
+            "seed {seed}: per-rank KV peak {} exceeds the KV slice {}",
+            out.hbm_kv_peak_bytes,
+            budget.kv_bytes
+        );
+        if !spec.serving.host_offload {
+            assert_eq!(out.host_fetches, 0, "seed {seed}: host fetch with the tier off");
+            assert_eq!(out.host_fetch_bytes, 0.0, "seed {seed}");
+        }
+        pressured += out.deferred_admissions + out.kv_preempted_tokens + out.host_fetches;
+    }
+    assert!(pressured > 0, "the pressure sweep never bound the budget");
+}
+
 /// One randomized fleet spec that exercises the full event surface:
 /// every cluster policy, sessions on/off, churn on/off, flat and tiered
-/// rack topologies, KV migration, and tight cache budgets.  Deterministic
-/// in `seed` so a failure reproduces.
+/// rack topologies, KV migration, tight cache budgets, and unified-HBM
+/// memory pressure.  Deterministic in `seed` so a failure reproduces.
 fn obs_fleet_spec(seed: u64) -> ScenarioSpec {
     let mut rng = Rng::new(18_000 + seed);
     let n_groups = 2 + rng.below(4) as usize;
@@ -914,6 +1053,12 @@ fn obs_fleet_spec(seed: u64) -> ScenarioSpec {
             .kv_migrate(seed % 3 == 0);
         if seed % 6 == 0 {
             scn = scn.kv_capacity_gb(1e-3);
+        }
+        if seed % 4 == 2 {
+            // Unified-HBM-budget pressure: admission-defer, KV-preempt,
+            // and host-fetch events enter the log (and the waterfall's
+            // memory-wait component becomes non-trivial).
+            scn = scn.hbm_budget(true).kv_capacity_gb(1e-3).host_offload(true);
         }
     }
     if seed % 3 != 2 {
@@ -978,10 +1123,10 @@ fn prop_event_log_lifecycles_are_complete() {
 }
 
 /// Property (obs): TTFT attribution conserves — for every admitted
-/// request the queue + cross-rack + warm-up + prefill components are
-/// individually non-negative and sum to the measured TTFT, and the
-/// waterfall TTFTs are exactly the simulator's recorded TTFTs (so the
-/// attribution describes the same run it claims to).
+/// request the queue + cross-rack + warm-up + memory-wait + prefill
+/// components are individually non-negative and sum to the measured
+/// TTFT, and the waterfall TTFTs are exactly the simulator's recorded
+/// TTFTs (so the attribution describes the same run it claims to).
 #[test]
 fn prop_ttft_waterfall_conserves_for_every_admitted_request() {
     for seed in 0..20 {
@@ -995,6 +1140,7 @@ fn prop_ttft_waterfall_conserves_for_every_admitted_request() {
                 ("queue", w.queue),
                 ("cross_rack", w.cross_rack),
                 ("warmup", w.warmup),
+                ("mem_wait", w.mem_wait),
                 ("prefill", w.prefill),
             ] {
                 assert!(v >= -1e-9, "seed {seed} req {id}: negative {name} component {v}");
